@@ -1,0 +1,87 @@
+//! Design-space exploration: sweep core count × memory bandwidth over the
+//! GA100 template, evaluate GPT-3 prefill/decode and perf-per-cost, and
+//! print the Pareto frontier — the §IV/§V workflow as a library user would
+//! script it.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use llmcompass::area::die_mm2;
+use llmcompass::cost::{die_cost_usd, memory_cost_usd, CostParams};
+use llmcompass::graph::layer::Phase;
+use llmcompass::graph::{inference::Simulator, ModelConfig};
+use llmcompass::hardware::{presets, InterconnectSpec, SystemSpec};
+use llmcompass::util::table::Table;
+
+#[derive(Clone)]
+struct Point {
+    cores: u64,
+    bw_tbs: f64,
+    prefill_ms: f64,
+    decode_ms: f64,
+    cost: f64,
+    perf_per_dollar: f64,
+}
+
+fn main() {
+    let sim = Simulator::new();
+    let model = ModelConfig::gpt3_175b();
+    let costp = CostParams::default();
+
+    let mut points: Vec<Point> = Vec::new();
+    for &cores in &[32u64, 64, 96, 128] {
+        for &bw in &[1.0f64, 1.5, 2.0, 3.0] {
+            let mut dev = presets::ga100();
+            dev.name = format!("ga100-c{cores}-bw{bw}");
+            dev.core_count = cores;
+            dev.memory.bandwidth_bytes_per_s = bw * 1e12;
+            let area = die_mm2(&dev);
+            let cost = die_cost_usd(&costp, area) + memory_cost_usd(&costp, &dev);
+            let sys = SystemSpec {
+                device: dev,
+                device_count: 4,
+                interconnect: InterconnectSpec::nvlink_like(600e9),
+            };
+            let pre = sim.layer(&sys, &model, Phase::Prefill { batch: 8, seq: 2048 }).total_s;
+            let dec = sim.layer(&sys, &model, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+            // Perf: inverse of a 2048-in/256-out request latency proxy.
+            let req = pre + 256.0 * dec;
+            points.push(Point {
+                cores,
+                bw_tbs: bw,
+                prefill_ms: pre * 1e3,
+                decode_ms: dec * 1e3,
+                cost,
+                perf_per_dollar: 1.0 / (req * cost),
+            });
+        }
+    }
+
+    let mut t = Table::new(&["cores", "BW TB/s", "prefill ms", "decode ms", "cost $", "perf/$ (norm)", "pareto"])
+        .with_title("design space: GA100 template, core count x memory bandwidth (per GPT-3 layer, TP=4)");
+    let best_ppd = points.iter().map(|p| p.perf_per_dollar).fold(0.0, f64::max);
+    for p in &points {
+        // Pareto: no other point is strictly better in (latency, cost).
+        let req = p.prefill_ms + 256.0 * p.decode_ms;
+        let dominated = points.iter().any(|q| {
+            let qreq = q.prefill_ms + 256.0 * q.decode_ms;
+            qreq < req && q.cost < p.cost
+        });
+        t.row(vec![
+            p.cores.to_string(),
+            format!("{:.1}", p.bw_tbs),
+            format!("{:.1}", p.prefill_ms),
+            format!("{:.3}", p.decode_ms),
+            format!("{:.0}", p.cost),
+            format!("{:.2}", p.perf_per_dollar / best_ppd),
+            if dominated { "" } else { "*" }.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "* = Pareto-optimal in (request latency, cost). Paper §V: pruning compute \
+         (fewer cores) keeps decode flat — visible in the decode column."
+    );
+    println!("mapper: {} rounds across {} unique shapes", sim.mapper.total_rounds(), sim.mapper.cache_len());
+}

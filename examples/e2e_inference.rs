@@ -1,0 +1,122 @@
+//! End-to-end driver: all three layers composing on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+//!
+//! 1. Loads the AOT-compiled gpt-mini model (Pallas kernels → JAX → HLO
+//!    text) into the PJRT CPU runtime — Python is not involved.
+//! 2. Serves a synthetic batched request trace through the Layer-3
+//!    coordinator, reporting per-request latency and aggregate throughput.
+//! 3. Calibrates a CPU device description from operator micro-probes and
+//!    compares the *measured* serving throughput with what the LLMCompass
+//!    performance model *predicts* for the same model on that description —
+//!    the paper's Fig. 5h–l experiment, end to end, on hardware we own.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use llmcompass::calibrate;
+use llmcompass::coordinator::{queue, Coordinator};
+use llmcompass::graph::layer::Phase;
+use llmcompass::graph::{inference::Simulator, ModelConfig};
+use llmcompass::hardware::{DType, SystemSpec};
+use llmcompass::runtime::Runtime;
+use llmcompass::util::fmt_seconds;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // --- serve a batched trace through the coordinator -------------------
+    let mut coord = Coordinator::new(dir)?;
+    let model_meta = {
+        let rt = Runtime::new(dir)?;
+        rt.manifest().model.clone()
+    };
+    println!(
+        "model: gpt-mini ({} layers, d={}, {} heads, vocab {}, {:.1}M params) on PJRT CPU",
+        model_meta.layers,
+        model_meta.d_model,
+        model_meta.heads,
+        model_meta.vocab,
+        model_meta.n_params as f64 / 1e6
+    );
+    let n_req = 8;
+    let max_out = 8;
+    let trace = queue::synthetic_trace(n_req, coord.vocab() as i32, coord.prefill_seq, max_out, 7);
+    println!(
+        "serving {n_req} requests, batch={}, prompt={} tokens, ≤{max_out} output tokens…",
+        coord.batch, coord.prefill_seq
+    );
+    let rep = coord.serve(&trace)?;
+    let decode_steps: u64 = rep.tokens_generated;
+    println!(
+        "measured: {} tokens in {:.2}s → {:.2} tok/s | prefill {:.2}s, decode {:.2}s | p50 {:.2}s p95 {:.2}s",
+        rep.tokens_generated,
+        rep.total_s,
+        rep.tokens_per_s(),
+        rep.prefill_s,
+        rep.decode_s,
+        rep.latency_percentile(50.0),
+        rep.latency_percentile(95.0)
+    );
+
+    // --- predict the same workload with the performance model -------------
+    println!("\ncalibrating CPU device description from operator micro-probes…");
+    let mut rt = Runtime::new(dir)?;
+    let meas = calibrate::measure_operators(&mut rt, 2)?;
+    let dev = calibrate::tune_cpu_device(
+        calibrate::fit_cpu_device(&meas, llmcompass::util::pool::default_threads() as u64),
+        &meas,
+    );
+    let sys = SystemSpec::single(dev);
+    let sim = Simulator::new();
+    let model = ModelConfig {
+        name: "gpt-mini".into(),
+        layers: model_meta.layers,
+        d_model: model_meta.d_model,
+        heads: model_meta.heads,
+        d_ff: model_meta.d_ff,
+        vocab: model_meta.vocab,
+        dtype: DType::FP32,
+        ..ModelConfig::gpt_small()
+    };
+    let batches = (n_req as u64).div_ceil(coord.batch as u64);
+    let pre_s = sim.prefill(&sys, &model, coord.batch as u64, coord.prefill_seq as u64, model.layers);
+    let dec_s = sim.decode(
+        &sys,
+        &model,
+        coord.batch as u64,
+        coord.prefill_seq as u64 + max_out as u64 / 2,
+        model.layers,
+    );
+    let predicted_total = batches as f64 * (pre_s + max_out as f64 * dec_s);
+    let predicted_tps = decode_steps as f64 / predicted_total;
+    println!(
+        "predicted: prefill {}/batch, decode {}/token → {:.2} tok/s",
+        fmt_seconds(pre_s),
+        fmt_seconds(dec_s),
+        predicted_tps
+    );
+    let ratio = rep.tokens_per_s() / predicted_tps;
+    println!(
+        "measured/predicted throughput ratio: {ratio:.2} (1.0 = perfect; paper-style \
+         validation, see EXPERIMENTS.md)"
+    );
+
+    // --- simulate the same serving scenario at datacenter scale -----------
+    let gpt3 = ModelConfig::gpt3_175b();
+    let a100x4 = llmcompass::hardware::presets::system("a100x4").unwrap();
+    let pre = sim.layer(&a100x4, &gpt3, Phase::Prefill { batch: 8, seq: 2048 }).total_s;
+    println!(
+        "\nfor scale: the same simulator puts one GPT-3 layer prefill (b=8, s=2048) on \
+         4xA100 at {} — {}x the gpt-mini stack on this CPU",
+        fmt_seconds(pre),
+        (pre_s / pre) as u64
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Quickstart: the LLMCompass library API in one file.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the full evaluation loop the paper describes: describe hardware →
+//! simulate operators and Transformer phases → inspect area and cost.
+
+use llmcompass::area;
+use llmcompass::cost::{device_cost, CostParams};
+use llmcompass::graph::layer::Phase;
+use llmcompass::graph::{inference::Simulator, ModelConfig};
+use llmcompass::hardware::{presets, DType};
+use llmcompass::perf::Op;
+use llmcompass::util::fmt_seconds;
+
+fn main() {
+    // 1. Describe hardware — presets cover Table I; any field is editable.
+    let sys = presets::system("a100x4").expect("preset");
+    println!(
+        "system: 4x {} — {:.0} TFLOPS FP16 matrix, {:.1} TB/s HBM each",
+        sys.device.name,
+        sys.device.peak_matrix_flops() / 1e12,
+        sys.device.memory.bandwidth_bytes_per_s / 1e12
+    );
+
+    // 2. Simulate a single operator: the mapper searches tilings/schedules.
+    let sim = Simulator::new();
+    let gemm = Op::Matmul { b: 1, m: 2048, k: 12288, n: 12288, dtype: DType::FP16, batched_b: false };
+    let r = sim.op_latency(&sys, &gemm);
+    println!(
+        "\nGEMM 2048x12288x12288 fp16: {} ({:.0}% of roofline, {} mapper rounds)\n  best mapping: {}",
+        fmt_seconds(r.latency_s),
+        r.roofline_fraction() * 100.0,
+        r.mapper_rounds,
+        r.mapping_desc
+    );
+
+    // 3. Simulate a GPT-3 layer in both inference phases (paper Fig. 2).
+    let gpt3 = ModelConfig::gpt3_175b();
+    let prefill = sim.layer(&sys, &gpt3, Phase::Prefill { batch: 8, seq: 2048 });
+    let decode = sim.layer(&sys, &gpt3, Phase::Decode { batch: 8, kv_len: 3072 });
+    println!(
+        "\nGPT-3 layer (b=8, s=2048, TP=4): prefill {} | decode {}/token",
+        fmt_seconds(prefill.total_s),
+        fmt_seconds(decode.total_s)
+    );
+    println!("top prefill ops:");
+    let mut ops = prefill.breakdown.clone();
+    ops.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (name, s) in ops.iter().take(3) {
+        println!("  {name:<14} {}", fmt_seconds(*s));
+    }
+
+    // 4. End-to-end request latency (decode integrated over KV growth).
+    let e2e = sim.e2e_latency(&sys, &gpt3, 8, 2048, 256, gpt3.layers);
+    println!("\nfull GPT-3, in=2048, out=256, b=8: {}", fmt_seconds(e2e));
+
+    // 5. Area and cost (paper §III-D).
+    let dev = presets::a100();
+    let breakdown = area::die_breakdown(&area::AreaParams::default(), &dev, 600e9);
+    let cost = device_cost(&CostParams::default(), &dev);
+    println!(
+        "\n{}: modeled die {:.0} mm² (cores {:.0} mm²), die ${:.0} + memory ${:.0} = ${:.0}",
+        dev.name,
+        breakdown.total_mm2(),
+        breakdown.core_total_mm2(),
+        cost.die_cost_usd,
+        cost.memory_cost_usd,
+        cost.total_usd()
+    );
+    println!("\nNext: `llmcompass experiment --list` regenerates every paper figure/table.");
+}

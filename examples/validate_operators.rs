@@ -1,0 +1,59 @@
+//! Operator validation walkthrough: measure every AOT operator artifact on
+//! the PJRT CPU backend, fit + tune the CPU device description, and print
+//! the predicted-vs-measured table (the Fig. 5 pipeline as a script).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example validate_operators
+//! ```
+
+use llmcompass::calibrate;
+use llmcompass::graph::inference::Simulator;
+use llmcompass::runtime::Runtime;
+use llmcompass::util::stats;
+use llmcompass::util::table::Table;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut rt = Runtime::new(dir)?;
+    println!("measuring {} operator artifacts on {}…", rt.manifest().artifacts.len(), rt.platform());
+    let meas = calibrate::measure_operators(&mut rt, 3)?;
+
+    let initial =
+        calibrate::fit_cpu_device(&meas, llmcompass::util::pool::default_threads() as u64);
+    println!(
+        "initial fit: matrix peak {:.1} GFLOP/s, bw {:.2} GB/s — tuning…",
+        initial.peak_matrix_flops() / 1e9,
+        initial.memory.bandwidth_bytes_per_s / 1e9
+    );
+    let dev = calibrate::tune_cpu_device(initial, &meas);
+
+    let sim = Simulator::new();
+    let mut t = Table::new(&["artifact", "measured", "predicted", "ratio"])
+        .with_title("predicted vs measured (tuned CPU device)");
+    let mut ms = Vec::new();
+    let mut ps = Vec::new();
+    for m in &meas {
+        let Some(pred) = calibrate::predict(&sim, &dev, &m.name) else { continue };
+        ms.push(m.seconds);
+        ps.push(pred);
+        t.row(vec![
+            m.name.clone(),
+            llmcompass::util::fmt_seconds(m.seconds),
+            llmcompass::util::fmt_seconds(pred),
+            format!("{:.2}", pred / m.seconds),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "mean |error| {:.1}%, trend ρ = {:.2} across {} operators",
+        stats::mean_rel_error(&ps, &ms) * 100.0,
+        stats::spearman(&ms, &ps),
+        ms.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts + manifest.
+
+Python runs once, here; the Rust runtime loads the text artifacts via
+`HloModuleProto::from_text_file` and executes them through PJRT. HLO text
+(not `.serialize()`) is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts emitted (see the manifest for the authoritative list):
+  * `init`            — () → flat f32 parameter vector of gpt-mini
+  * `prefill_b{B}_s{S}` — (flat, tokens i32[B,S]) → (logits, kv_k, kv_v)
+  * `decode_b{B}`     — (flat, token i32[B], kv_k, kv_v, pos i32) → (…)
+  * operator kernels for the Fig.-5-style calibration sweep:
+    `matmul_{M}x{K}x{N}`, `softmax_{M}x{N}`, `layernorm_{M}x{N}`,
+    `gelu_{N}`, `attention_{M}x{N}x{D}`
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import kernels, model
+
+# Calibration sweep sizes — small enough for interpret-mode CPU execution,
+# wide enough to expose the latency trends of paper Fig. 5.
+MATMUL_SIZES = [
+    (16, 768, 768),
+    (64, 768, 768),
+    (256, 768, 768),
+    (1024, 768, 768),
+    (256, 256, 256),
+    (512, 512, 512),
+    (1024, 1024, 1024),
+]
+SOFTMAX_SIZES = [(64, 512), (256, 1024), (1024, 1024), (4096, 256)]
+LAYERNORM_SIZES = [(64, 768), (256, 768), (1024, 768), (4096, 768)]
+GELU_SIZES = [1 << 14, 1 << 17, 1 << 20]
+ATTENTION_SIZES = [(64, 64, 64), (128, 128, 64), (256, 256, 64)]
+
+# Serving model shapes.
+PREFILL_BATCHES = [(4, 64)]
+DECODE_BATCHES = [4]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text with a tuple root."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arg_meta(args):
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+
+
+def build_artifacts(out_dir: str, quick: bool = False) -> dict:
+    """Lower every artifact into `out_dir`; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = model.Config()
+    manifest = {
+        "model": {
+            "layers": cfg.layers,
+            "d_model": cfg.d_model,
+            "heads": cfg.heads,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+            "n_params": int(model.n_params(cfg)),
+        },
+        "artifacts": [],
+    }
+
+    def emit(name, fn, *arg_specs):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": name, "file": fname, "args": _arg_meta(arg_specs)}
+        )
+        print(f"  {name}: {len(text) / 1024:.0f} KiB")
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    # --- serving model ------------------------------------------------------
+    nparams = model.n_params(cfg)
+    emit("init", lambda: (model.init_flat(cfg),))
+    kv_shape = (cfg.layers, DECODE_BATCHES[0], cfg.max_seq, cfg.d_model)
+    for b, s in PREFILL_BATCHES:
+        emit(
+            f"prefill_b{b}_s{s}",
+            functools.partial(model.prefill, cfg),
+            _spec((nparams,), f32),
+            _spec((b, s), i32),
+        )
+    for b in DECODE_BATCHES:
+        emit(
+            f"decode_b{b}",
+            functools.partial(model.decode, cfg),
+            _spec((nparams,), f32),
+            _spec((b,), i32),
+            _spec(kv_shape, f32),
+            _spec(kv_shape, f32),
+            _spec((), i32),
+        )
+
+    # --- calibration operators ---------------------------------------------
+    matmuls = MATMUL_SIZES[:3] if quick else MATMUL_SIZES
+    for m, k, n in matmuls:
+        emit(
+            f"matmul_{m}x{k}x{n}",
+            lambda a, b: (kernels.matmul(a, b),),
+            _spec((m, k), f32),
+            _spec((k, n), f32),
+        )
+    for m, n in SOFTMAX_SIZES if not quick else SOFTMAX_SIZES[:2]:
+        emit(
+            f"softmax_{m}x{n}",
+            lambda x: (kernels.softmax(x),),
+            _spec((m, n), f32),
+        )
+    for m, n in LAYERNORM_SIZES if not quick else LAYERNORM_SIZES[:2]:
+        emit(
+            f"layernorm_{m}x{n}",
+            lambda x, g, b: (kernels.layernorm(x, g, b),),
+            _spec((m, n), f32),
+            _spec((n,), f32),
+            _spec((n,), f32),
+        )
+    for n in GELU_SIZES if not quick else GELU_SIZES[:1]:
+        emit(f"gelu_{n}", lambda x: (kernels.gelu(x),), _spec((n,), f32))
+    for m, n, d in ATTENTION_SIZES if not quick else ATTENTION_SIZES[:1]:
+        emit(
+            f"attention_{m}x{n}x{d}",
+            lambda q, k, v: (kernels.attention(q, k, v),),
+            _spec((m, d), f32),
+            _spec((n, d), f32),
+            _spec((n, d), f32),
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true", help="skip the larger sweep sizes")
+    args = ap.parse_args()
+    manifest = build_artifacts(args.out, quick=args.quick)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+All kernels run with `interpret=True` — the CPU PJRT backend cannot execute
+Mosaic (real-TPU) custom-calls. Correctness is pinned to `ref.py` by the
+pytest suite in `python/tests/`.
+"""
+
+from .matmul import matmul, matmul_vmem_bytes, pick_block
+from .softmax import softmax
+from .layernorm import layernorm
+from .gelu import gelu
+from .attention import attention
+
+__all__ = [
+    "matmul",
+    "matmul_vmem_bytes",
+    "pick_block",
+    "softmax",
+    "layernorm",
+    "gelu",
+    "attention",
+]

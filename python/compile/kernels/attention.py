@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: fused causal attention (FlashAttention-style
+online-softmax blocking, re-thought for a TPU VMEM schedule).
+
+The paper's GPU comparators implement attention with threadblock tiling of
+Q against K/V in shared memory; here the same insight — never materialize
+the (m × n) score matrix in HBM — is expressed with a (q-block, kv-block)
+Pallas grid: each step holds one Q block and one K/V block in VMEM and
+maintains the online-softmax running max/denominator and the output
+accumulator in scratch. Causality is enforced with a right-aligned mask so
+the kernel serves both prefill (m == n) and decode (m == 1, n == kv_len).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import pick_block
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, kv_steps, bq, bkv, n, m,
+                 scale, causal):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        # Right-aligned causal mask: query row (global) r sees key col c
+        # iff c <= r + (n - m).
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        cols = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(cols <= rows + (n - m), s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    correction = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * correction[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "causal"))
+def attention(q, k, v, bq=128, bkv=128, causal=True):
+    """Fused attention for one head: q (m, d), k/v (n, d) → (m, d)."""
+    m, d = q.shape
+    n, d2 = k.shape
+    assert d == d2 and v.shape == (n, d)
+    bq = pick_block(m, bq)
+    bkv = pick_block(n, bkv)
+    kv_steps = n // bkv
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            kv_steps=kv_steps,
+            bq=bq,
+            bkv=bkv,
+            n=n,
+            m=m,
+            scale=scale,
+            causal=causal,
+        ),
+        grid=(m // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((bkv, d), lambda qi, ki: (ki, 0)),
+            pl.BlockSpec((bkv, d), lambda qi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda qi, ki: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Layer-1 Pallas kernel: elementwise GELU (tanh approximation [26]),
+processed in 1-D VMEM blocks."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    y = 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gelu(x, block=131072):
+    """Elementwise GELU over a 1-D array."""
+    (n,) = x.shape
+    b = pick_block(n, block)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)

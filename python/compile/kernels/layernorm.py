@@ -1,0 +1,41 @@
+"""Layer-1 Pallas kernel: row-blocked LayerNorm.
+
+Two-pass-in-registers structure over a (block_rows × n) VMEM block: mean
+and variance in float32, then normalize + scale/shift — the same
+reduction-then-normalize schedule the Rust vecop model costs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) / jnp.sqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def layernorm(x, gamma, beta, block_rows=512, eps=1e-5):
+    """LayerNorm over the last axis of a 2-D array; gamma/beta: (n,)."""
+    m, n = x.shape
+    br = pick_block(m, block_rows)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: block-tiled matmul.
+
+TPU-thinking version of the operator LLMCompass models in §III-B1: the
+(m, n, k) grid expresses the HBM↔VMEM schedule via BlockSpecs — each grid
+step holds one (bm × bk) A block and one (bk × bn) B block in VMEM-class
+scratch and accumulates a (bm × bn) C block in float32, exactly the
+local-buffer-resident-accumulator schedule the Rust simulator's "scheme 1"
+models. `interpret=True` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime can run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    """One (mi, ni, ki) grid step: acc += A_block @ B_block."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(ki == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pick_block(extent, preferred):
+    """Largest divisor of `extent` that is ≤ `preferred` — Pallas blocks
+    must tile the problem exactly."""
+    b = max(1, min(extent, preferred))
+    while extent % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a, b, bm=256, bk=256, bn=256):
+    """C = A @ B via the Pallas block-tiled kernel.
+
+    a: (m, k), b: (k, n). Requested block sizes are clamped to divisors of
+    the problem extents.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = pick_block(m, bm)
+    bk = pick_block(k, bk)
+    bn = pick_block(n, bn)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a, b)
+
+
+def matmul_vmem_bytes(m, k, n, bm=256, bk=256, bn=256, elem_bytes=4):
+    """Estimated VMEM footprint of one grid step (for the §Perf roofline
+    discussion in DESIGN.md): A block + B block + fp32 accumulator."""
+    bm = pick_block(m, bm)
+    bk = pick_block(k, bk)
+    bn = pick_block(n, bn)
+    return (bm * bk + bk * bn) * elem_bytes + bm * bn * 4

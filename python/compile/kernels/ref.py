@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+checks `assert_allclose(kernel(...), ref(...))` across shape/dtype sweeps.
+This is the *core correctness signal* for Layer 1: the AOT path lowers the
+kernels into the same HLO the Rust runtime executes, so kernel == ref means
+the artifacts compute the right numbers.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """C = A @ B with float32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def softmax(x):
+    """Row-wise softmax over the last axis (numerically stable)."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu(x):
+    """GELU with the tanh approximation [Hendrycks & Gimpel 2016]."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def attention(q, k, v, scale=None):
+    """Scaled dot-product attention for one head.
+
+    q: (m, d), k: (n, d), v: (n, d) -> (m, d).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    s = jnp.matmul(q, k.T, preferred_element_type=jnp.float32) * scale
+    p = softmax(s)
+    return jnp.matmul(p.astype(q.dtype), v, preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def causal_attention(q, k, v, scale=None):
+    """Causal attention: query i attends to keys ≤ i (queries right-aligned
+    against the keys, so the last query sees every key)."""
+    m, d = q.shape[-2], q.shape[-1]
+    n = k.shape[-2]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    s = jnp.matmul(q, k.T, preferred_element_type=jnp.float32) * scale
+    offs = n - m
+    mask = jnp.arange(n)[None, :] <= (jnp.arange(m)[:, None] + offs)
+    s = jnp.where(mask, s, jnp.finfo(jnp.float32).min)
+    p = softmax(s)
+    return jnp.matmul(p.astype(q.dtype), v, preferred_element_type=jnp.float32).astype(q.dtype)

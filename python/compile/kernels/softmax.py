@@ -1,0 +1,40 @@
+"""Layer-1 Pallas kernel: row-blocked online softmax.
+
+Implements the online normalizer algorithm [Milakov & Gimelshein 2018] the
+paper cites for its Softmax model: a single streaming pass over the row
+maintains the running max `m` and running sum `l`, then the row is
+normalized. Rows are processed in (block_rows × n) VMEM blocks — the
+column (reduction) axis stays whole per block, matching how the Rust
+simulator's vecop model assigns one row per lane with a log-tree reduce.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax(x, block_rows=512):
+    """Row-wise softmax over the last axis of a 2-D array."""
+    m, n = x.shape
+    br = pick_block(m, block_rows)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,210 @@
+"""Layer-2: the JAX Transformer model (build-time only).
+
+A GPT-style decoder-only model assembled from the Layer-1 Pallas kernels
+(block-tiled matmul, layernorm, GELU, fused attention). Weights travel as a
+single flat f32 vector so the AOT artifacts have a stable, simple ABI for
+the Rust runtime: one `init` artifact materializes the vector, and the
+`prefill` / `decode` artifacts take it as their first argument.
+
+The KV cache is explicit state: `prefill` returns it, `decode` consumes and
+returns it, with a static `max_seq` capacity and a `pos` scalar marking the
+filled prefix — the Rust coordinator owns this state between calls, so
+Python never runs at serving time.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+@dataclass(frozen=True)
+class Config:
+    """Model hyperparameters. The default is "gpt-mini" (~17M parameters in
+    the layer stack): big enough to exercise every kernel, small enough
+    that interpret-mode Pallas serves tokens in interactive time on CPU.
+    The *simulated* model (GPT-3 175B) lives in the Rust layer; this is the
+    model the end-to-end example actually executes."""
+
+    layers: int = 6
+    d_model: int = 384
+    heads: int = 6
+    d_ff: int = 1536
+    vocab: int = 8192
+    max_seq: int = 128
+
+    @property
+    def d_head(self):
+        return self.d_model // self.heads
+
+
+def param_spec(cfg: Config):
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    spec = [
+        ("wte", (cfg.vocab, cfg.d_model)),
+        ("wpe", (cfg.max_seq, cfg.d_model)),
+        ("ln_f_g", (cfg.d_model,)),
+        ("ln_f_b", (cfg.d_model,)),
+    ]
+    for i in range(cfg.layers):
+        spec += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    return spec
+
+
+def n_params(cfg: Config):
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_spec(cfg))
+
+
+def unpack(cfg: Config, flat):
+    """Slice the flat vector into the named parameter dict (static)."""
+    out = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        size = 1
+        for d in shape:
+            size *= d
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_flat(cfg: Config, seed: int = 0):
+    """Materialize the flat parameter vector (scaled-normal init). Runs
+    inside jit so the AOT `init` artifact carries no big constants."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        size = 1
+        for d in shape:
+            size *= d
+        if name.endswith(("_g",)):
+            chunks.append(jnp.ones((size,), jnp.float32))
+        elif name.endswith(("_b",)):
+            chunks.append(jnp.zeros((size,), jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name in ("wte", "wpe") else 1.0 / (fan_in ** 0.5)
+            chunks.append(jax.random.normal(sub, (size,), jnp.float32) * std)
+    return jnp.concatenate(chunks)
+
+
+def _attention_block(cfg: Config, p, i, x, kv_k, kv_v, pos, q_len):
+    """Shared attention block. x: (b, q_len, d). kv_k/kv_v: (layers, b,
+    max_seq, d) with positions [0, pos) already filled; this call writes
+    positions [pos, pos + q_len) and attends causally over [0, pos+q_len).
+    Returns (attn_out, kv_k, kv_v)."""
+    b = x.shape[0]
+    d = cfg.d_model
+    rows = b * q_len
+
+    h = kernels.layernorm(x.reshape(rows, d), p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+    qkv = kernels.matmul(h, p[f"l{i}.wqkv"])  # (rows, 3d)
+    q, k, v = jnp.split(qkv.reshape(b, q_len, 3 * d), 3, axis=-1)
+
+    # Append K/V at positions [pos, pos + q_len) of layer i's cache.
+    kv_k = kv_k.at[i].set(jax.lax.dynamic_update_slice_in_dim(kv_k[i], k, pos, axis=1))
+    kv_v = kv_v.at[i].set(jax.lax.dynamic_update_slice_in_dim(kv_v[i], v, pos, axis=1))
+
+    # Attend over the filled prefix [0, pos + q_len).
+    dh = cfg.d_head
+    n = cfg.max_seq
+    q_h = q.reshape(b, q_len, cfg.heads, dh).transpose(0, 2, 1, 3)  # (b,h,q,dh)
+    k_h = kv_k[i].reshape(b, n, cfg.heads, dh).transpose(0, 2, 1, 3)  # (b,h,n,dh)
+    v_h = kv_v[i].reshape(b, n, cfg.heads, dh).transpose(0, 2, 1, 3)
+
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bhqd,bhnd->bhqn", q_h, k_h) * scale
+    # Causal + validity mask: query at global position pos+qi sees keys ≤ it.
+    qpos = pos + jnp.arange(q_len)[:, None]  # (q,1)
+    kpos = jnp.arange(n)[None, :]  # (1,n)
+    mask = kpos <= qpos  # (q, n)
+    s = jnp.where(mask[None, None], s, -1e30)
+    # Row-wise softmax through the Pallas kernel (rows = b·h·q).
+    probs = kernels.softmax(s.reshape(b * cfg.heads * q_len, n)).reshape(s.shape)
+    o = jnp.einsum("bhqn,bhnd->bhqd", probs, v_h)
+    o = o.transpose(0, 2, 1, 3).reshape(rows, d)
+    out = kernels.matmul(o, p[f"l{i}.wo"])
+    return out.reshape(b, q_len, d), kv_k, kv_v
+
+
+def _mlp_block(cfg: Config, p, i, x):
+    b, q_len, d = x.shape
+    rows = b * q_len
+    h = kernels.layernorm(x.reshape(rows, d), p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+    h = kernels.matmul(h, p[f"l{i}.w1"])
+    h = kernels.gelu(h.reshape(rows * cfg.d_ff)).reshape(rows, cfg.d_ff)
+    h = kernels.matmul(h, p[f"l{i}.w2"])
+    return h.reshape(b, q_len, d)
+
+
+def _forward(cfg: Config, flat, tokens, kv_k, kv_v, pos, q_len):
+    p = unpack(cfg, flat)
+    b = tokens.shape[0]
+    x = p["wte"][tokens]  # (b, q_len, d)
+    positions = pos + jnp.arange(q_len)
+    x = x + p["wpe"][positions][None]
+    for i in range(cfg.layers):
+        a, kv_k, kv_v = _attention_block(cfg, p, i, x, kv_k, kv_v, pos, q_len)
+        x = x + a
+        x = x + _mlp_block(cfg, p, i, x)
+    h = kernels.layernorm(
+        x.reshape(b * q_len, cfg.d_model), p["ln_f_g"], p["ln_f_b"]
+    ).reshape(b, q_len, cfg.d_model)
+    # Logits for the last position only (what generation needs).
+    last = h[:, -1, :]  # (b, d)
+    logits = kernels.matmul(last, p["wte"].T)  # (b, vocab)
+    return logits, kv_k, kv_v
+
+
+def empty_kv(cfg: Config, batch):
+    shape = (cfg.layers, batch, cfg.max_seq, cfg.d_model)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def prefill(cfg: Config, flat, tokens):
+    """Process a (b, s) prompt: returns (last-token logits (b, vocab),
+    kv_k, kv_v) with positions [0, s) of the KV cache filled."""
+    b, s = tokens.shape
+    kv_k, kv_v = empty_kv(cfg, b)
+    return _forward(cfg, flat, tokens, kv_k, kv_v, 0, s)
+
+
+def decode(cfg: Config, flat, token, kv_k, kv_v, pos):
+    """Generate one step: token (b,) int32, pos = number of cached
+    positions. Returns (logits (b, vocab), kv_k, kv_v)."""
+    return _forward(cfg, flat, token[:, None], kv_k, kv_v, pos, 1)
+
+
+def reference_generate(cfg: Config, flat, prompt, n_tokens):
+    """Greedy generation loop in Python — the oracle the Rust coordinator's
+    token stream is checked against in integration tests."""
+    logits, kv_k, kv_v = prefill(cfg, flat, prompt)
+    out = []
+    pos = prompt.shape[1]
+    for _ in range(n_tokens):
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+        logits, kv_k, kv_v = decode(cfg, flat, tok, kv_k, kv_v, pos)
+        pos += 1
+    return jnp.stack(out, axis=1)  # (b, n_tokens)
+
+
+def prefill_jit(cfg: Config):
+    return jax.jit(functools.partial(prefill, cfg))
+
+
+def decode_jit(cfg: Config):
+    return jax.jit(functools.partial(decode, cfg))

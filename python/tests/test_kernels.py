@@ -1,0 +1,191 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-jnp oracle,
+swept over shapes, block sizes, and dtypes."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.kernels import ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - env without hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def rand(*shape, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# --- matmul ---------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 8, 8), (32, 64, 16), (64, 64, 64), (128, 256, 64), (100, 60, 28), (1, 384, 384)],
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b = rand(m, k, seed=1), rand(k, n, seed=2)
+    got = kernels.matmul(a, b)
+    want = ref.matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 64, 32), (128, 128, 128), (7, 13, 5)])
+def test_matmul_block_size_invariance(bm, bk, bn):
+    a, b = rand(64, 96, seed=3), rand(96, 48, seed=4)
+    got = kernels.matmul(a, b, bm=bm, bk=bk, bn=bn)
+    want = ref.matmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16():
+    a = rand(32, 64, seed=5).astype(jnp.bfloat16)
+    b = rand(64, 32, seed=6).astype(jnp.bfloat16)
+    got = kernels.matmul(a, b)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_matmul_vmem_estimate_positive():
+    assert kernels.matmul_vmem_bytes(512, 512, 512) > 0
+    # fp32 128³ blocking: (128·128)·2 inputs ·4B + 128² ·4B accumulator.
+    assert kernels.matmul_vmem_bytes(128, 128, 128) == (128 * 128 * 2) * 4 + 128 * 128 * 4
+
+
+def test_pick_block_divides():
+    for extent in [1, 7, 64, 100, 384]:
+        for pref in [1, 8, 128]:
+            b = kernels.pick_block(extent, pref)
+            assert extent % b == 0 and 1 <= b <= max(pref, 1)
+
+
+# --- softmax ----------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(1, 8), (16, 128), (64, 1000), (128, 64), (333, 17)])
+def test_softmax_matches_ref(m, n):
+    x = rand(m, n, seed=7)
+    got = kernels.softmax(x)
+    want = ref.softmax(jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got).sum(-1), np.ones(m), rtol=1e-5)
+
+
+def test_softmax_extreme_values_stable():
+    x = np.array([[1e4, 1e4 - 1.0, -1e4], [0.0, 0.0, 0.0]], np.float32)
+    got = np.asarray(kernels.softmax(x))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got[1], [1 / 3] * 3, rtol=1e-6)
+
+
+# --- layernorm ---------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n", [(4, 16), (64, 384), (256, 768), (100, 35)])
+def test_layernorm_matches_ref(m, n):
+    x = rand(m, n, seed=8)
+    g = rand(n, seed=9) * 0.1 + 1.0
+    b = rand(n, seed=10) * 0.1
+    got = kernels.layernorm(x, g, b)
+    want = ref.layernorm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_standardized():
+    x = rand(32, 512, seed=11) * 5.0 + 3.0
+    got = np.asarray(kernels.layernorm(x, np.ones(512, np.float32), np.zeros(512, np.float32)))
+    np.testing.assert_allclose(got.mean(-1), np.zeros(32), atol=1e-4)
+    np.testing.assert_allclose(got.std(-1), np.ones(32), atol=1e-3)
+
+
+# --- gelu ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [8, 1000, 16384])
+def test_gelu_matches_ref(n):
+    x = rand(n, seed=12) * 3.0
+    got = kernels.gelu(x)
+    want = ref.gelu(jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_gelu_known_values():
+    x = np.array([0.0, 100.0, -100.0], np.float32)
+    got = np.asarray(kernels.gelu(x))
+    np.testing.assert_allclose(got, [0.0, 100.0, 0.0], atol=1e-4)
+
+
+# --- attention -----------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,d", [(8, 8, 16), (64, 64, 64), (32, 128, 64), (16, 64, 32)])
+def test_attention_causal_matches_ref(m, n, d):
+    q, k, v = rand(m, d, seed=13), rand(n, d, seed=14), rand(n, d, seed=15)
+    got = kernels.attention(q, k, v, causal=True)
+    want = ref.causal_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("bq,bkv", [(8, 8), (16, 64), (64, 16)])
+def test_attention_block_size_invariance(bq, bkv):
+    q, k, v = rand(64, 32, seed=16), rand(64, 32, seed=17), rand(64, 32, seed=18)
+    got = kernels.attention(q, k, v, bq=bq, bkv=bkv, causal=True)
+    want = ref.causal_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_noncausal_matches_ref():
+    q, k, v = rand(32, 16, seed=19), rand(48, 16, seed=20), rand(48, 16, seed=21)
+    got = kernels.attention(q, k, v, causal=False)
+    want = ref.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_decode_shape():
+    # m=1 decode against a long KV prefix.
+    q, k, v = rand(1, 64, seed=22), rand(128, 64, seed=23), rand(128, 64, seed=24)
+    got = kernels.attention(q, k, v, causal=True)
+    want = ref.causal_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# --- hypothesis sweeps -----------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        bm=st.sampled_from([8, 16, 32, 128]),
+    )
+    def test_matmul_hypothesis(m, k, n, bm):
+        a, b = rand(m, k, seed=m * 1000 + k), rand(k, n, seed=n)
+        got = kernels.matmul(a, b, bm=bm)
+        np.testing.assert_allclose(
+            got, ref.matmul(jnp.asarray(a), jnp.asarray(b)), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 200), n=st.integers(2, 300))
+    def test_softmax_hypothesis(m, n):
+        x = rand(m, n, seed=m * 301 + n)
+        got = kernels.softmax(x)
+        np.testing.assert_allclose(got, ref.softmax(jnp.asarray(x)), rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 64), n=st.integers(2, 128))
+    def test_layernorm_hypothesis(m, n):
+        x = rand(m, n, seed=m * 77 + n)
+        g = np.ones(n, np.float32)
+        b = np.zeros(n, np.float32)
+        got = kernels.layernorm(x, g, b)
+        np.testing.assert_allclose(
+            got, ref.layernorm(jnp.asarray(x), jnp.asarray(g), jnp.asarray(b)),
+            rtol=1e-3, atol=1e-4,
+        )

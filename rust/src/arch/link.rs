@@ -1,0 +1,86 @@
+//! Device-device link model (paper §III-B2, Eq. 1–2), following AHEAD [1]
+//! and LogGP [3]:
+//!
+//! ```text
+//! T  = L + O + n̂ / B                          (Eq. 1)
+//! n̂ = ⌈n / MaxPayload⌉ · Flit_size + n        (Eq. 2)
+//! ```
+//!
+//! where `L` is link latency, `O` the per-transfer overhead, `B` the link
+//! bandwidth, and `n̂` the wire bytes after packet framing (one header flit
+//! per MaxPayload-sized packet; 16 B flits / 256 B payloads for NVLink).
+
+use crate::hardware::InterconnectSpec;
+
+/// Wire bytes for a transfer of `n` payload bytes (Eq. 2).
+pub fn wire_bytes(ic: &InterconnectSpec, n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let packets = (n + ic.max_payload_bytes - 1) / ic.max_payload_bytes;
+    packets * ic.flit_bytes + n
+}
+
+/// Latency in seconds to move `n` bytes across one link (Eq. 1).
+pub fn transfer_time(ic: &InterconnectSpec, n: u64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    ic.link_latency_s + ic.overhead_s + wire_bytes(ic, n) as f64 / ic.link_bandwidth_bytes_per_s
+}
+
+/// Effective bandwidth (payload bytes / time) for a transfer of `n` bytes —
+/// approaches `B / (1 + flit/MaxPayload)` asymptotically.
+pub fn effective_bandwidth(ic: &InterconnectSpec, n: u64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    n as f64 / transfer_time(ic, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nvlink() -> InterconnectSpec {
+        InterconnectSpec::nvlink_like(600e9)
+    }
+
+    #[test]
+    fn framing_overhead_matches_eq2() {
+        let ic = nvlink();
+        // 256 B payload → exactly one packet → +16 B flit.
+        assert_eq!(wire_bytes(&ic, 256), 256 + 16);
+        // 257 B → two packets → +32 B.
+        assert_eq!(wire_bytes(&ic, 257), 257 + 32);
+        assert_eq!(wire_bytes(&ic, 0), 0);
+    }
+
+    #[test]
+    fn latency_floor_for_tiny_messages() {
+        let ic = nvlink();
+        let t = transfer_time(&ic, 1);
+        assert!(t >= ic.link_latency_s + ic.overhead_s);
+        assert!(t < ic.link_latency_s + ic.overhead_s + 1e-9);
+    }
+
+    #[test]
+    fn asymptotic_efficiency() {
+        let ic = nvlink();
+        let eff = effective_bandwidth(&ic, 1 << 30);
+        // 16/256 = 6.25% framing tax → ~564 GB/s of 600 GB/s.
+        let expected = 600e9 / (1.0 + 16.0 / 256.0);
+        assert!((eff - expected).abs() / expected < 0.01, "eff {eff}");
+    }
+
+    #[test]
+    fn monotone_in_size() {
+        let ic = nvlink();
+        let mut last = 0.0;
+        for n in [1u64, 100, 10_000, 1_000_000, 100_000_000] {
+            let t = transfer_time(&ic, n);
+            assert!(t > last);
+            last = t;
+        }
+    }
+}

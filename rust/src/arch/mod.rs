@@ -1,0 +1,14 @@
+//! Low-level architectural timing models.
+//!
+//! * [`systolic`] — SCALE-Sim-style systolic array cycle counts (weight- and
+//!   output-stationary dataflows), with an analytical fast path, a
+//!   cycle-walk reference used for cross-validation, and a memoizing LUT
+//!   (the paper caches SCALE-Sim results the same way).
+//! * [`vector`] — vector-unit cycle counts for elementwise and reduction
+//!   work, with a per-primitive cost table.
+//! * [`link`] — the LogGP-style link model of paper Eq. 1–2 with
+//!   flit/max-payload framing.
+
+pub mod systolic;
+pub mod vector;
+pub mod link;

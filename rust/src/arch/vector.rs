@@ -1,0 +1,124 @@
+//! Vector-unit timing model.
+//!
+//! Each lane owns a `vector_width`-wide SIMD unit. Elementwise work costs
+//! `ceil(elements / width) × op_cost` cycles; row reductions add a
+//! `log2(width)`-deep shuffle tree plus a serial tail when a row spans
+//! multiple vector iterations. Primitive costs follow typical GPU special-
+//! function-unit throughput ratios (1 for add/mul/fma, 4 for exp/div via
+//! SFU, 6 for tanh).
+
+/// Cost (in vector-unit issue slots) of one primitive applied element-wise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Prim {
+    Add,
+    Mul,
+    Fma,
+    Max,
+    Exp,
+    Div,
+    Sqrt,
+    Tanh,
+    Copy,
+}
+
+impl Prim {
+    pub fn cost(self) -> u64 {
+        match self {
+            Prim::Add | Prim::Mul | Prim::Fma | Prim::Max | Prim::Copy => 1,
+            Prim::Exp | Prim::Div | Prim::Sqrt => 4,
+            Prim::Tanh => 6,
+        }
+    }
+}
+
+/// Cycles for applying `prim` to `elements` elements on one lane of SIMD
+/// width `width`.
+pub fn elementwise_cycles(elements: u64, width: u64, prim: Prim) -> u64 {
+    if elements == 0 {
+        return 0;
+    }
+    let iters = (elements + width - 1) / width;
+    iters * prim.cost()
+}
+
+/// Cycles to reduce `elements` values to one (sum/max) on one lane:
+/// sequential accumulate over vector iterations, then a log2-tree across
+/// the final vector register.
+pub fn reduce_cycles(elements: u64, width: u64, prim: Prim) -> u64 {
+    if elements == 0 {
+        return 0;
+    }
+    let iters = (elements + width - 1) / width;
+    // Accumulate each vector chunk into a running register (iters ops),
+    // then fold the register with a shuffle tree (log2(width) ops).
+    let tree = 64 - u64::leading_zeros(width.max(1)) as u64; // ≈ log2+1
+    (iters + tree) * prim.cost()
+}
+
+/// A composite elementwise pipeline: total issue slots per element, used by
+/// the operator models (e.g. GELU ≈ 2 fma + 1 tanh + 2 mul/add).
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub prims: Vec<(Prim, u64)>,
+}
+
+impl Pipeline {
+    pub fn cost_per_element(&self) -> u64 {
+        self.prims.iter().map(|(p, count)| p.cost() * count).sum()
+    }
+
+    pub fn cycles(&self, elements: u64, width: u64) -> u64 {
+        if elements == 0 {
+            return 0;
+        }
+        let iters = (elements + width - 1) / width;
+        iters * self.cost_per_element()
+    }
+}
+
+/// The tanh-approximated GELU pipeline (paper §III-B3 / [26]):
+/// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))` — ~6 mul/add/fma + 1 tanh.
+pub fn gelu_pipeline() -> Pipeline {
+    Pipeline {
+        prims: vec![(Prim::Mul, 2), (Prim::Fma, 2), (Prim::Tanh, 1), (Prim::Add, 1), (Prim::Mul, 1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elementwise_scales_with_iterations() {
+        assert_eq!(elementwise_cycles(32, 32, Prim::Add), 1);
+        assert_eq!(elementwise_cycles(33, 32, Prim::Add), 2);
+        assert_eq!(elementwise_cycles(64, 32, Prim::Exp), 2 * 4);
+        assert_eq!(elementwise_cycles(0, 32, Prim::Add), 0);
+    }
+
+    #[test]
+    fn reduction_has_tree_tail() {
+        let r = reduce_cycles(32, 32, Prim::Add);
+        // 1 accumulate iteration + ceil(log2(32))+1 = 6 tree steps.
+        assert_eq!(r, 1 + 6);
+        assert!(reduce_cycles(1024, 32, Prim::Add) > elementwise_cycles(1024, 32, Prim::Add));
+    }
+
+    #[test]
+    fn gelu_pipeline_cost() {
+        let p = gelu_pipeline();
+        // 2·1 + 2·1 + 1·6 + 1·1 + 1·1 = 12 slots per element.
+        assert_eq!(p.cost_per_element(), 12);
+        assert_eq!(p.cycles(32, 32), 12);
+        assert_eq!(p.cycles(0, 32), 0);
+    }
+
+    #[test]
+    fn wider_vector_never_slower() {
+        for w in [8u64, 16, 32, 64] {
+            assert!(
+                elementwise_cycles(1000, 2 * w, Prim::Mul) <= elementwise_cycles(1000, w, Prim::Mul)
+            );
+        }
+    }
+}

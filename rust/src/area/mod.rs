@@ -1,0 +1,298 @@
+//! The area model (paper §III-D, Table II, Fig. 6).
+//!
+//! Component areas are estimated at a TSMC-7nm-class node from transistor
+//! counts of open-source designs/generators and annotated die photos, then
+//! composed bottom-up: lanes (vector units, systolic arrays, register
+//! files, per-lane overhead) → cores (+ local buffer, per-core overhead
+//! including a crossbar share) → device (+ global buffer, memory
+//! controller/PHY, device-device interconnect, fixed system logic).
+//!
+//! Calibration: the per-core overhead and effective MAC/SRAM densities are
+//! fitted so the three Table IV dies reproduce the paper's areas
+//! (GA100 826 mm², latency-oriented 478 mm², throughput-oriented 787 mm²)
+//! — mirroring the paper, which likewise back-solves per-lane/per-core
+//! overheads from annotated NVIDIA/AMD die photos. PHY area does not scale
+//! with process (analog), controller area does.
+
+pub mod sram;
+
+use crate::hardware::{DeviceSpec, MemProtocol};
+use crate::util::json::{num, obj, Json};
+
+/// Table II-style component parameters (7 nm, µm²). The FP64/INT32/lane/
+/// HBM rows reproduce the paper's Table II; the derived rows (FP32, FP16
+/// MAC, register file) and the crossbar-inclusive core overhead are
+/// documented fits.
+#[derive(Debug, Clone)]
+pub struct AreaParams {
+    /// 64-bit FPU (Table II: 685,300 transistors).
+    pub fp64_unit_um2: f64,
+    /// 32-bit FPU ≈ half an FP64 unit.
+    pub fp32_unit_um2: f64,
+    /// 32-bit integer ALU (Table II: 177,000 transistors).
+    pub int32_alu_um2: f64,
+    /// One FP16 MAC PE of a systolic array, incl. operand routing —
+    /// effective density fitted to tensor-core area shares.
+    pub fp16_mac_um2: f64,
+    /// Register file, µm² per bit (multi-ported; EMPIRE-style empirical
+    /// model [54]).
+    pub regfile_um2_per_bit: f64,
+    /// Per-lane overhead: control, scheduler slice (Table II: 996,200 t).
+    pub lane_overhead_um2: f64,
+    /// Per-core overhead: instruction front-end + the core's share of the
+    /// core-to-core crossbar (paper: back-solved from die photos).
+    pub core_overhead_um2: f64,
+    /// 1024-bit HBM2e controller (Table II).
+    pub hbm_ctrl_um2: f64,
+    /// 1024-bit HBM2e PHY (Table II; analog, does not scale).
+    pub hbm_phy_um2: f64,
+    /// One PCIe 5.0 channel (controller + PHY), ~4 GB/s per channel.
+    pub pcie5_channel_um2: f64,
+    /// One DDR5 64-bit channel interface.
+    pub ddr5_channel_um2: f64,
+    /// NVLink-class link (PHY + controller) per ~50 GB/s link.
+    pub nvlink_um2: f64,
+    /// Fixed device-level logic: command processors, host interface,
+    /// display/copy engines.
+    pub device_fixed_um2: f64,
+}
+
+impl Default for AreaParams {
+    fn default() -> Self {
+        AreaParams {
+            fp64_unit_um2: 7116.0,
+            fp32_unit_um2: 3558.0,
+            int32_alu_um2: 1838.0,
+            fp16_mac_um2: 1340.0,
+            regfile_um2_per_bit: 0.60,
+            lane_overhead_um2: 10_344.0,
+            core_overhead_um2: 1_660_000.0,
+            hbm_ctrl_um2: 5_740_000.0,
+            hbm_phy_um2: 10_450_000.0,
+            pcie5_channel_um2: 235_000.0,
+            ddr5_channel_um2: 4_800_000.0,
+            nvlink_um2: 2_000_000.0,
+            device_fixed_um2: 25_000_000.0,
+        }
+    }
+}
+
+/// Die-area breakdown in mm² (Fig. 6a categories).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DieBreakdown {
+    pub vector_units_mm2: f64,
+    pub int_units_mm2: f64,
+    pub systolic_mm2: f64,
+    pub regfile_mm2: f64,
+    pub lane_overhead_mm2: f64,
+    pub local_buffer_mm2: f64,
+    pub core_overhead_mm2: f64,
+    pub global_buffer_mm2: f64,
+    pub memory_interface_mm2: f64,
+    pub interconnect_mm2: f64,
+    pub device_fixed_mm2: f64,
+}
+
+impl DieBreakdown {
+    pub fn core_total_mm2(&self) -> f64 {
+        self.vector_units_mm2
+            + self.int_units_mm2
+            + self.systolic_mm2
+            + self.regfile_mm2
+            + self.lane_overhead_mm2
+            + self.local_buffer_mm2
+            + self.core_overhead_mm2
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.core_total_mm2()
+            + self.global_buffer_mm2
+            + self.memory_interface_mm2
+            + self.interconnect_mm2
+            + self.device_fixed_mm2
+    }
+
+    /// (label, mm²) pairs for tables/plots.
+    pub fn rows(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("vector units", self.vector_units_mm2),
+            ("int units", self.int_units_mm2),
+            ("systolic arrays", self.systolic_mm2),
+            ("register files", self.regfile_mm2),
+            ("lane overhead", self.lane_overhead_mm2),
+            ("local buffers", self.local_buffer_mm2),
+            ("core overhead", self.core_overhead_mm2),
+            ("global buffer", self.global_buffer_mm2),
+            ("memory interface", self.memory_interface_mm2),
+            ("device interconnect", self.interconnect_mm2),
+            ("device fixed", self.device_fixed_mm2),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(self
+            .rows()
+            .into_iter()
+            .map(|(k, v)| (k, num(v)))
+            .chain([("total", num(self.total_mm2()))])
+            .collect())
+    }
+}
+
+/// Memory-interface area from bandwidth/capacity and protocol.
+pub fn memory_interface_mm2(p: &AreaParams, dev: &DeviceSpec) -> f64 {
+    let bw = dev.memory.bandwidth_bytes_per_s;
+    let cap_gb = dev.memory.capacity_bytes as f64 / 1e9;
+    match dev.memory.protocol {
+        MemProtocol::HBM2E => {
+            // One 1024-bit HBM2e stack ≈ 410 GB/s and 16 GB.
+            let stacks = (bw / 410e9).ceil().max((cap_gb / 16.0).ceil());
+            stacks * (p.hbm_ctrl_um2 + p.hbm_phy_um2) / 1e6
+        }
+        MemProtocol::PCIE5CXL => {
+            // ~3.94 GB/s per PCIe 5.0 channel (paper: 256 channels → 1 TB/s).
+            let channels = (bw / 3.94e9).ceil();
+            channels * p.pcie5_channel_um2 / 1e6
+        }
+        MemProtocol::DDR5 | MemProtocol::HostDRAM => {
+            // ~40 GB/s per 64-bit DDR5-5200 channel.
+            let channels = (bw / 40e9).ceil();
+            channels * p.ddr5_channel_um2 / 1e6
+        }
+    }
+}
+
+/// Compute the full die breakdown for a device description.
+pub fn die_breakdown(p: &AreaParams, dev: &DeviceSpec, d2d_bw_bytes_per_s: f64) -> DieBreakdown {
+    let cores = dev.core_count as f64;
+    let lanes = dev.core.lane_count as f64;
+    let lane = &dev.core.lane;
+
+    let vector = cores * lanes * lane.vector_width as f64 * p.fp32_unit_um2 / 1e6;
+    // INT32 ALUs: half the vector width per lane (the GA100 ratio of 64
+    // INT32 to 128 FP32 per SM).
+    let ints = cores * lanes * (lane.vector_width as f64 / 2.0) * p.int32_alu_um2 / 1e6;
+    let systolic = cores
+        * lanes
+        * (lane.systolic_rows * lane.systolic_cols * lane.systolic_count) as f64
+        * p.fp16_mac_um2
+        / 1e6;
+    let regfile = cores * lanes * (lane.register_bytes * 8) as f64 * p.regfile_um2_per_bit / 1e6;
+    let lane_ovh = cores * lanes * p.lane_overhead_um2 / 1e6;
+    let local = cores * sram::sram_mm2(p, dev.core.local_buffer_bytes);
+    let core_ovh = cores * p.core_overhead_um2 / 1e6;
+    let global = sram::sram_mm2(p, dev.global_buffer_bytes);
+    let mem_if = memory_interface_mm2(p, dev);
+    // NVLink-class links at ~50 GB/s per link.
+    let links = (d2d_bw_bytes_per_s / 50e9).ceil();
+    let icnt = links * p.nvlink_um2 / 1e6;
+
+    DieBreakdown {
+        vector_units_mm2: vector,
+        int_units_mm2: ints,
+        systolic_mm2: systolic,
+        regfile_mm2: regfile,
+        lane_overhead_mm2: lane_ovh,
+        local_buffer_mm2: local,
+        core_overhead_mm2: core_ovh,
+        global_buffer_mm2: global,
+        memory_interface_mm2: mem_if,
+        interconnect_mm2: icnt,
+        device_fixed_mm2: p.device_fixed_um2 / 1e6,
+    }
+}
+
+/// Convenience: total die area in mm² with default parameters and a
+/// 600 GB/s interconnect.
+pub fn die_mm2(dev: &DeviceSpec) -> f64 {
+    die_breakdown(&AreaParams::default(), dev, 600e9).total_mm2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets;
+
+    #[test]
+    fn table4_die_areas_reproduce() {
+        // Paper Table IV: GA100 826 mm², latency-oriented 478 mm²,
+        // throughput-oriented 787 mm². Require < 7% error.
+        for (name, paper) in
+            [("ga100", 826.0), ("latency-oriented", 478.0), ("throughput-oriented", 787.0)]
+        {
+            let dev = presets::device(name).unwrap();
+            let got = die_mm2(&dev);
+            let err: f64 = (got - paper) / paper;
+            assert!(
+                err.abs() < 0.07,
+                "{name}: model {got:.0} mm² vs paper {paper} mm² ({:+.1}%)",
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn aldebaran_within_paper_error_band() {
+        // Fig. 6a: Aldebaran (MI210 die) ≈ 724 mm²; paper reports 8.1%
+        // model error — require < 12% here. CDNA2 CUs carry a 512 KB
+        // vector register file (128 KB per SIMD lane).
+        let mut dev = presets::mi210();
+        dev.core.lane.register_bytes = 128 * 1024;
+        let got = die_breakdown(&AreaParams::default(), &dev, 300e9).total_mm2();
+        let err: f64 = (got - 724.0) / 724.0;
+        assert!(err.abs() < 0.12, "aldebaran model {got:.0} mm² ({:+.1}% err)", err * 100.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let dev = presets::a100();
+        let b = die_breakdown(&AreaParams::default(), &dev, 600e9);
+        let sum: f64 = b.rows().iter().map(|(_, v)| v).sum();
+        assert!((sum - b.total_mm2()).abs() < 1e-9);
+        assert!(b.core_total_mm2() < b.total_mm2());
+        for (name, v) in b.rows() {
+            assert!(v >= 0.0, "{name} negative");
+        }
+    }
+
+    #[test]
+    fn pruning_cores_shrinks_die_substantially() {
+        // Paper §V-A: latency design reduces die area by 42.1% vs GA100.
+        let ga = die_mm2(&presets::ga100());
+        let lat = die_mm2(&presets::latency_oriented());
+        let shrink = 1.0 - lat / ga;
+        assert!(
+            (0.35..0.50).contains(&shrink),
+            "area shrink {:.1}% (paper: 42.1%)",
+            shrink * 100.0
+        );
+    }
+
+    #[test]
+    fn hbm_vs_pcie_memory_interface() {
+        let p = AreaParams::default();
+        let a100 = presets::a100();
+        let thr = presets::throughput_oriented();
+        let hbm = memory_interface_mm2(&p, &a100);
+        let pcie = memory_interface_mm2(&p, &thr);
+        // 5 HBM stacks ≈ 81 mm²; 254 PCIe channels ≈ 60 mm².
+        assert!((70.0..95.0).contains(&hbm), "hbm {hbm:.1}");
+        assert!((45.0..75.0).contains(&pcie), "pcie {pcie:.1}");
+    }
+
+    #[test]
+    fn design_a_uses_much_less_area_than_b() {
+        // Paper §IV-B: design A (quarter compute) uses 57.8% of B's area.
+        let a = die_mm2(&presets::design('A').unwrap());
+        let b = die_mm2(&presets::design('B').unwrap());
+        let ratio = a / b;
+        assert!((0.45..0.80).contains(&ratio), "A/B area ratio {ratio:.2} (paper 0.578)");
+    }
+
+    #[test]
+    fn json_emission() {
+        let b = die_breakdown(&AreaParams::default(), &presets::a100(), 600e9);
+        let j = b.to_json();
+        assert!(j.get("total").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

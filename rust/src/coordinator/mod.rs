@@ -1,0 +1,267 @@
+//! The serving coordinator: a batched inference loop over the PJRT
+//! runtime.
+//!
+//! This is the Layer-3 "request path": requests enter a queue, the batcher
+//! forms fixed-size batches (the AOT artifacts have static shapes), the
+//! loop runs `prefill` once and `decode` per output token with the KV
+//! cache held as opaque runtime state, and greedy sampling happens here in
+//! Rust. Python is never invoked. The end-to-end example
+//! (`examples/e2e_inference.rs`) drives this and reports latency and
+//! throughput; integration tests check the token stream against the
+//! Python reference generator.
+
+pub mod queue;
+
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub n_tokens: usize,
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Wall time from batch start to this request's last token.
+    pub latency_s: f64,
+    /// Time spent waiting in the queue before its batch started.
+    pub wait_s: f64,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub total_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub tokens_generated: u64,
+}
+
+impl ServeReport {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_s > 0.0 {
+            self.tokens_generated as f64 / self.total_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let lats: Vec<f64> = self.completions.iter().map(|c| c.latency_s).collect();
+        crate::util::stats::percentile(&lats, p)
+    }
+}
+
+/// Greedy argmax over a (batch, vocab) logits tensor; returns one token
+/// per row.
+pub fn argmax_tokens(logits: &HostTensor) -> Result<Vec<i32>> {
+    let data = logits.f32().ok_or_else(|| anyhow!("logits not f32"))?;
+    let shape = logits.shape();
+    if shape.len() != 2 {
+        return Err(anyhow!("logits shape {shape:?} is not 2-D"));
+    }
+    let (b, v) = (shape[0], shape[1]);
+    let mut out = Vec::with_capacity(b);
+    for row in 0..b {
+        let slice = &data[row * v..(row + 1) * v];
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &x) in slice.iter().enumerate() {
+            if x > best_v {
+                best_v = x;
+                best = i;
+            }
+        }
+        out.push(best as i32);
+    }
+    Ok(out)
+}
+
+/// Pad or truncate a prompt to exactly `len` tokens (static artifact
+/// shapes). Shorter prompts are left-padded by cycling the prompt, so the
+/// semantically meaningful tokens stay at the end (nearest to generation).
+pub fn fit_prompt(prompt: &[i32], len: usize) -> Vec<i32> {
+    assert!(len > 0);
+    if prompt.is_empty() {
+        return vec![0; len];
+    }
+    if prompt.len() >= len {
+        return prompt[prompt.len() - len..].to_vec();
+    }
+    let mut out = Vec::with_capacity(len);
+    let pad = len - prompt.len();
+    for i in 0..pad {
+        out.push(prompt[i % prompt.len()]);
+    }
+    out.extend_from_slice(prompt);
+    out
+}
+
+/// The coordinator: owns the runtime, the compiled model artifacts, and
+/// the (one-time-initialized) parameter vector.
+pub struct Coordinator {
+    rt: Runtime,
+    params: HostTensor,
+    pub batch: usize,
+    pub prefill_seq: usize,
+    pub max_seq: usize,
+    prefill_name: String,
+    decode_name: String,
+}
+
+impl Coordinator {
+    /// Build a coordinator over an artifact directory: loads the manifest,
+    /// runs `init` once to materialize weights, and locates the
+    /// prefill/decode artifacts.
+    pub fn new(artifact_dir: &std::path::Path) -> Result<Coordinator> {
+        let mut rt = Runtime::new(artifact_dir)?;
+        let prefill_name = rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.name.starts_with("prefill_"))
+            .ok_or_else(|| anyhow!("no prefill artifact"))?
+            .name
+            .clone();
+        let decode_name = rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.name.starts_with("decode_"))
+            .ok_or_else(|| anyhow!("no decode artifact"))?
+            .name
+            .clone();
+        // prefill args: (params, tokens[b, s]).
+        let meta = rt.manifest().find(&prefill_name).unwrap();
+        let (batch, prefill_seq) = (meta.args[1].shape[0], meta.args[1].shape[1]);
+        let max_seq = rt.manifest().model.max_seq as usize;
+        let params = rt
+            .run("init", &[])?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("init returned nothing"))?;
+        Ok(Coordinator { rt, params, batch, prefill_seq, max_seq, prefill_name, decode_name })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.rt.manifest().model.vocab as usize
+    }
+
+    /// Serve a closed set of requests with fixed-size batching. Returns a
+    /// report with per-request latencies and aggregate throughput.
+    pub fn serve(&mut self, requests: &[Request]) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        let mut report = ServeReport::default();
+        for chunk in requests.chunks(self.batch) {
+            let wait_s = t0.elapsed().as_secs_f64();
+            let bstart = Instant::now();
+
+            // Assemble the (b, s) prompt block, padding the ragged tail
+            // batch by repeating the last request.
+            let mut tokens: Vec<i32> = Vec::with_capacity(self.batch * self.prefill_seq);
+            for i in 0..self.batch {
+                let req = &chunk[i.min(chunk.len() - 1)];
+                tokens.extend(fit_prompt(&req.prompt, self.prefill_seq));
+            }
+            let token_t = HostTensor::I32(tokens, vec![self.batch, self.prefill_seq]);
+
+            // Prefill.
+            let pstart = Instant::now();
+            let mut out = self.rt.run(&self.prefill_name, &[self.params.clone(), token_t])?;
+            report.prefill_s += pstart.elapsed().as_secs_f64();
+            let (logits, kv_k, kv_v) = take3(&mut out)?;
+            let mut kv_k = kv_k;
+            let mut kv_v = kv_v;
+            let mut next = argmax_tokens(&logits)?;
+
+            // Decode loop.
+            let n_steps = chunk.iter().map(|r| r.n_tokens).max().unwrap_or(0);
+            let budget = self.max_seq - self.prefill_seq;
+            let n_steps = n_steps.min(budget);
+            let mut generated: Vec<Vec<i32>> = vec![Vec::new(); chunk.len()];
+            let mut done_at: Vec<Option<f64>> = vec![None; chunk.len()];
+            let mut pos = self.prefill_seq;
+            for step in 0..n_steps {
+                for (i, g) in generated.iter_mut().enumerate() {
+                    if g.len() < chunk[i].n_tokens.min(budget) {
+                        g.push(next[i.min(self.batch - 1)]);
+                        if g.len() == chunk[i].n_tokens.min(budget) {
+                            done_at[i] = Some(bstart.elapsed().as_secs_f64());
+                        }
+                    }
+                }
+                if step + 1 == n_steps {
+                    break;
+                }
+                let dstart = Instant::now();
+                let tok_t = HostTensor::I32(next.clone(), vec![self.batch]);
+                let mut out = self.rt.run(
+                    &self.decode_name,
+                    &[
+                        self.params.clone(),
+                        tok_t,
+                        kv_k,
+                        kv_v,
+                        HostTensor::scalar_i32(pos as i32),
+                    ],
+                )?;
+                report.decode_s += dstart.elapsed().as_secs_f64();
+                let (logits, k2, v2) = take3(&mut out)?;
+                kv_k = k2;
+                kv_v = v2;
+                next = argmax_tokens(&logits)?;
+                pos += 1;
+            }
+
+            for (i, req) in chunk.iter().enumerate() {
+                report.tokens_generated += generated[i].len() as u64;
+                report.completions.push(Completion {
+                    id: req.id,
+                    tokens: std::mem::take(&mut generated[i]),
+                    latency_s: done_at[i].unwrap_or_else(|| bstart.elapsed().as_secs_f64()),
+                    wait_s,
+                });
+            }
+        }
+        report.total_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}
+
+fn take3(out: &mut Vec<HostTensor>) -> Result<(HostTensor, HostTensor, HostTensor)> {
+    if out.len() != 3 {
+        return Err(anyhow!("expected 3 outputs, got {}", out.len()));
+    }
+    let v = std::mem::take(out);
+    let mut it = v.into_iter();
+    Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max_per_row() {
+        let t = HostTensor::F32(vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0], vec![2, 3]);
+        assert_eq!(argmax_tokens(&t).unwrap(), vec![1, 0]);
+        let bad = HostTensor::F32(vec![0.0; 4], vec![4]);
+        assert!(argmax_tokens(&bad).is_err());
+    }
+
+    #[test]
+    fn fit_prompt_pads_and_truncates() {
+        assert_eq!(fit_prompt(&[1, 2, 3], 5), vec![1, 2, 1, 2, 3]);
+        assert_eq!(fit_prompt(&[1, 2, 3, 4, 5, 6], 4), vec![3, 4, 5, 6]);
+        assert_eq!(fit_prompt(&[], 3), vec![0, 0, 0]);
+        assert_eq!(fit_prompt(&[7], 1), vec![7]);
+    }
+}

@@ -1,0 +1,182 @@
+//! The cost model (paper §III-D): per-die cost from supply-chain wafer
+//! modeling [42] plus memory cost from spot/consumer prices, yielding the
+//! performance/cost rows of Table IV.
+//!
+//! Die cost = wafer price / (dies per wafer × yield). Yield uses Murphy's
+//! model with a mature-7nm defect density; dies per wafer uses the usual
+//! 300 mm geometric packing estimate. IP, masks, and packaging are
+//! excluded, as in the paper.
+
+use crate::hardware::{DeviceSpec, MemProtocol};
+
+/// Wafer/process economics. Defaults are a mature TSMC-7nm-class process:
+/// public wafer price ≈ $9,346 (CSET supply-chain estimates) and defect
+/// density 0.03 /cm² — the value under which the model reproduces the
+/// paper's $151 / $80 / $142 die costs for GA100 / latency / throughput.
+#[derive(Debug, Clone)]
+pub struct CostParams {
+    pub wafer_price_usd: f64,
+    pub wafer_diameter_mm: f64,
+    /// Defects per cm² (Murphy yield model).
+    pub defect_density_per_cm2: f64,
+    /// Edge/packing loss factor for rectangular dies on a round wafer.
+    pub packing_efficiency: f64,
+    /// $/GB of HBM2e (consumer estimates [33]: ~$7/GB).
+    pub hbm2e_usd_per_gb: f64,
+    /// $/GB of commodity DDR5 (DRAM spot prices [65]: ~$0.30/GB).
+    pub ddr5_usd_per_gb: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            wafer_price_usd: 9346.0,
+            wafer_diameter_mm: 300.0,
+            defect_density_per_cm2: 0.03,
+            packing_efficiency: 0.90,
+            hbm2e_usd_per_gb: 7.0,
+            ddr5_usd_per_gb: 0.30,
+        }
+    }
+}
+
+/// Gross dies per wafer for a die of `die_mm2`.
+pub fn dies_per_wafer(p: &CostParams, die_mm2: f64) -> f64 {
+    assert!(die_mm2 > 0.0);
+    let r = p.wafer_diameter_mm / 2.0;
+    let wafer_area = std::f64::consts::PI * r * r;
+    (wafer_area / die_mm2) * p.packing_efficiency
+}
+
+/// Murphy yield: ((1 − e^{−AD}) / AD)² with A in cm².
+pub fn murphy_yield(p: &CostParams, die_mm2: f64) -> f64 {
+    let ad = (die_mm2 / 100.0) * p.defect_density_per_cm2;
+    if ad <= 0.0 {
+        return 1.0;
+    }
+    let t = (1.0 - (-ad).exp()) / ad;
+    t * t
+}
+
+/// Cost of one good die.
+pub fn die_cost_usd(p: &CostParams, die_mm2: f64) -> f64 {
+    p.wafer_price_usd / (dies_per_wafer(p, die_mm2) * murphy_yield(p, die_mm2))
+}
+
+/// Memory subsystem cost for a device.
+pub fn memory_cost_usd(p: &CostParams, dev: &DeviceSpec) -> f64 {
+    let gb = dev.memory.capacity_bytes as f64 / 1e9;
+    match dev.memory.protocol {
+        MemProtocol::HBM2E => gb * p.hbm2e_usd_per_gb,
+        MemProtocol::DDR5 | MemProtocol::PCIE5CXL | MemProtocol::HostDRAM => {
+            gb * p.ddr5_usd_per_gb
+        }
+    }
+}
+
+/// Full device cost report (Table IV rows).
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    pub die_mm2: f64,
+    pub die_cost_usd: f64,
+    pub memory_cost_usd: f64,
+}
+
+impl CostReport {
+    pub fn total_usd(&self) -> f64 {
+        self.die_cost_usd + self.memory_cost_usd
+    }
+}
+
+/// Compute the cost report for a device (area from the area model).
+pub fn device_cost(p: &CostParams, dev: &DeviceSpec) -> CostReport {
+    let area = crate::area::die_mm2(dev);
+    CostReport {
+        die_mm2: area,
+        die_cost_usd: die_cost_usd(p, area),
+        memory_cost_usd: memory_cost_usd(p, dev),
+    }
+}
+
+/// Performance/cost normalized against a baseline (Table IV bottom row):
+/// `(perf / perf_base) / (cost / cost_base)`.
+pub fn perf_per_cost_normalized(
+    perf: f64,
+    cost: &CostReport,
+    perf_base: f64,
+    cost_base: &CostReport,
+) -> f64 {
+    (perf / perf_base) / (cost.total_usd() / cost_base.total_usd())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets;
+
+    #[test]
+    fn yield_decreases_with_area() {
+        let p = CostParams::default();
+        let y_small = murphy_yield(&p, 100.0);
+        let y_big = murphy_yield(&p, 800.0);
+        assert!(y_small > y_big);
+        assert!(y_small <= 1.0 && y_big > 0.0);
+        assert_eq!(murphy_yield(&p, 0.0), 1.0);
+    }
+
+    #[test]
+    fn table4_die_costs_reproduce() {
+        // Paper Table IV: estimated die cost $151 (GA100, 826 mm²),
+        // $80 (latency, 478 mm²), $142 (throughput, 787 mm²).
+        let p = CostParams::default();
+        for (mm2, paper) in [(826.0, 151.0), (478.0, 80.0), (787.0, 142.0)] {
+            let got = die_cost_usd(&p, mm2);
+            let err: f64 = (got - paper) / paper;
+            assert!(
+                err.abs() < 0.10,
+                "die {mm2} mm²: model ${got:.0} vs paper ${paper} ({:+.1}%)",
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn table4_memory_costs_reproduce() {
+        // $560 for 80 GB HBM2e; $154 for 512 GB DDR5-behind-PCIe.
+        let p = CostParams::default();
+        let ga = memory_cost_usd(&p, &presets::ga100());
+        let thr = memory_cost_usd(&p, &presets::throughput_oriented());
+        assert!((ga - 560.0).abs() < 1.0, "HBM cost {ga}");
+        assert!((thr - 154.0).abs() < 3.0, "DDR cost {thr}");
+    }
+
+    #[test]
+    fn table4_total_costs_and_perf_per_cost() {
+        // Totals: $711 (GA100), $640 (latency), $296 (throughput); with
+        // paper-normalized performance 1 / 0.953 / 1.42 the perf/cost
+        // ratios are 1 / 1.06 / 3.41.
+        let p = CostParams::default();
+        let ga = device_cost(&p, &presets::ga100());
+        let lat = device_cost(&p, &presets::latency_oriented());
+        let thr = device_cost(&p, &presets::throughput_oriented());
+        assert!((ga.total_usd() - 711.0).abs() / 711.0 < 0.08, "GA100 total {}", ga.total_usd());
+        assert!((lat.total_usd() - 640.0).abs() / 640.0 < 0.08, "latency total {}", lat.total_usd());
+        assert!((thr.total_usd() - 296.0).abs() / 296.0 < 0.12, "thr total {}", thr.total_usd());
+
+        let ppc_lat = perf_per_cost_normalized(0.953, &lat, 1.0, &ga);
+        let ppc_thr = perf_per_cost_normalized(1.42, &thr, 1.0, &ga);
+        assert!((ppc_lat - 1.06).abs() < 0.10, "latency perf/cost {ppc_lat:.2}");
+        assert!((ppc_thr - 3.41).abs() < 0.45, "throughput perf/cost {ppc_thr:.2}");
+    }
+
+    #[test]
+    fn cost_monotone_in_area() {
+        let p = CostParams::default();
+        let mut last = 0.0;
+        for mm2 in [50.0, 150.0, 400.0, 826.0] {
+            let c = die_cost_usd(&p, mm2);
+            assert!(c > last);
+            last = c;
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig. 10 — end-to-end performance of the latency-oriented design
+//! normalized to GA100: input-length × output-length heatmap of
+//! 1/latency, batch 16, 4-way tensor parallelism, 48 GPT-3 layers.
+//!
+//! Paper: 95.3% of GA100 performance on average, worst (0.80) at
+//! input 2048 / output 256, ~0.99 at short input / long output.
+
+use super::Ctx;
+use crate::graph::ModelConfig;
+use crate::hardware::{presets, InterconnectSpec, SystemSpec};
+use crate::util::stats;
+use crate::util::table::{write_report, Heatmap};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub const LAYERS: u64 = 48; // half of GPT-3, as in the paper
+pub const BATCH: u64 = 16;
+
+pub fn lengths(quick: bool) -> (Vec<u64>, Vec<u64>) {
+    if quick {
+        (vec![2048, 512], vec![256, 1024, 2048])
+    } else {
+        (
+            vec![2048, 1024, 512, 256],
+            vec![256, 512, 768, 1024, 1280, 1536, 1792, 2048],
+        )
+    }
+}
+
+fn tp4(dev: crate::hardware::DeviceSpec) -> SystemSpec {
+    SystemSpec { device: dev, device_count: 4, interconnect: InterconnectSpec::nvlink_like(600e9) }
+}
+
+/// Compute the normalized-performance grid; also returned for tab4.
+pub fn normalized_grid(ctx: &Ctx) -> (Vec<u64>, Vec<u64>, Vec<Vec<f64>>) {
+    let model = ModelConfig::gpt3_175b();
+    let (ins, outs) = lengths(ctx.quick);
+    let ga = tp4(presets::ga100());
+    let lat = tp4(presets::latency_oriented());
+    // Grid cells are independent; fan them across the thread pool (the
+    // mapper/LUT caches behind `Simulator` are lock-protected and shared).
+    let cells: Vec<(u64, u64)> =
+        ins.iter().flat_map(|&i| outs.iter().map(move |&o| (i, o))).collect();
+    let threads = crate::util::pool::default_threads();
+    let values = crate::util::pool::parallel_map(&cells, threads, |&(s_in, s_out)| {
+        let t_ga = ctx.sim.e2e_latency(&ga, &model, BATCH, s_in, s_out, LAYERS);
+        let t_lat = ctx.sim.e2e_latency(&lat, &model, BATCH, s_in, s_out, LAYERS);
+        t_ga / t_lat // perf = 1/latency, normalized to GA100
+    });
+    let grid: Vec<Vec<f64>> =
+        values.chunks(outs.len()).map(|row| row.to_vec()).collect();
+    (ins, outs, grid)
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let (ins, outs, grid) = normalized_grid(ctx);
+    let h = Heatmap {
+        title:
+            "Fig. 10 — latency-oriented design, perf (1/latency) normalized to GA100 \
+             (rows: input len, cols: output len; b=16, TP=4, 48 layers)",
+        row_labels: ins.iter().map(|v| v.to_string()).collect(),
+        col_labels: outs.iter().map(|v| v.to_string()).collect(),
+        values: grid.clone(),
+        precision: 2,
+    };
+    let mut out = h.render();
+    let flat: Vec<f64> = grid.iter().flatten().copied().collect();
+    let avg = stats::mean(&flat);
+    let (lo, hi) = stats::minmax(&flat);
+    let _ = writeln!(
+        out,
+        "average normalized performance: {avg:.3} (paper: 0.953); range [{lo:.2}, {hi:.2}] \
+         (paper: 0.80 at in=2048/out=256 up to 0.99)"
+    );
+    write_report("fig10.csv", &h.to_csv())?;
+    Ok(out)
+}

@@ -1,0 +1,62 @@
+//! Fig. 11 — decoding latency per GPT-3 layer per token: NVIDIA A100
+//! (108 SM product bin) vs full GA100 vs the latency-oriented design,
+//! across KV lengths.
+//!
+//! Paper: the pruned latency-oriented design achieves *identical* decoding
+//! performance to a GA100 — decode is IO-bound, so halving compute and
+//! SRAM does not hurt (motivating salvaging binned dies for inference).
+
+use super::Ctx;
+use crate::graph::layer::Phase;
+use crate::graph::ModelConfig;
+use crate::hardware::{presets, InterconnectSpec, SystemSpec};
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let model = ModelConfig::gpt3_175b();
+    let batch = 8;
+    let kvs: Vec<u64> =
+        if ctx.quick { vec![2048, 4096] } else { vec![512, 1024, 2048, 3072, 4096] };
+    let devices = [
+        ("a100", presets::a100()),
+        ("ga100", presets::ga100()),
+        ("latency-oriented", presets::latency_oriented()),
+    ];
+
+    let mut t = Table::new(&["kv len", "a100 ms", "ga100 ms", "latency-design ms", "lat/ga"])
+        .with_title("Fig. 11 — decoding latency per GPT-3 layer per token (b=8, TP=4)");
+    let mut csv = String::from("kv_len,a100_s,ga100_s,latency_s\n");
+    let mut ratios = Vec::new();
+    for &kv in &kvs {
+        let mut row = Vec::new();
+        for (_, dev) in &devices {
+            let sys = SystemSpec {
+                device: dev.clone(),
+                device_count: 4,
+                interconnect: InterconnectSpec::nvlink_like(600e9),
+            };
+            row.push(ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s);
+        }
+        let ratio = row[2] / row[1];
+        ratios.push(ratio);
+        t.row(vec![
+            kv.to_string(),
+            format!("{:.3}", row[0] * 1e3),
+            format!("{:.3}", row[1] * 1e3),
+            format!("{:.3}", row[2] * 1e3),
+            format!("{ratio:.3}"),
+        ]);
+        let _ = writeln!(csv, "{kv},{},{},{}", row[0], row[1], row[2]);
+    }
+    let mut out = t.render();
+    let worst = ratios.iter().fold(0.0f64, |a, &b| a.max(b));
+    let _ = writeln!(
+        out,
+        "latency design vs GA100 decode: worst {:.1}% slower (paper: identical)",
+        (worst - 1.0) * 100.0
+    );
+    write_report("fig11.csv", &csv)?;
+    Ok(out)
+}

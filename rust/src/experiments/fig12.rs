@@ -1,0 +1,90 @@
+//! Fig. 12 — end-to-end performance of the throughput-oriented design:
+//! tokens/s heatmap (12a) and the same normalized to an 8-GA100 node
+//! (12b). Setting: largest batch within memory capacity, 8-way pipeline
+//! parallelism, 12 GPT-3 layers per device.
+//!
+//! Paper: 1.42x average throughput vs GA100, 6.4x memory capacity →
+//! >12x batch; latency is ~9.21x worse (no free lunch).
+
+use super::Ctx;
+use crate::graph::ModelConfig;
+use crate::hardware::{presets, InterconnectSpec, SystemSpec};
+use crate::util::stats;
+use crate::util::table::{write_report, Heatmap};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn lengths(quick: bool) -> (Vec<u64>, Vec<u64>) {
+    if quick {
+        (vec![1024, 256], vec![256, 1024])
+    } else {
+        (vec![2048, 1024, 512, 256], vec![256, 512, 1024, 2048])
+    }
+}
+
+fn pp8(dev: crate::hardware::DeviceSpec) -> SystemSpec {
+    SystemSpec { device: dev, device_count: 8, interconnect: InterconnectSpec::nvlink_like(600e9) }
+}
+
+/// (tokens/s grids, normalized grid, mean normalized throughput).
+pub fn grids(ctx: &Ctx) -> (Vec<u64>, Vec<u64>, Vec<Vec<f64>>, Vec<Vec<f64>>, f64) {
+    let model = ModelConfig::gpt3_175b();
+    let (ins, outs) = lengths(ctx.quick);
+    let thr = pp8(presets::throughput_oriented());
+    let ga = pp8(presets::ga100());
+    let cells: Vec<(u64, u64)> =
+        ins.iter().flat_map(|&i| outs.iter().map(move |&o| (i, o))).collect();
+    let threads = crate::util::pool::default_threads();
+    let pairs = crate::util::pool::parallel_map(&cells, threads, |&(s_in, s_out)| {
+        let (tok_thr, _, _) = ctx.sim.pipeline_throughput(&thr, &model, s_in, s_out);
+        let (tok_ga, _, _) = ctx.sim.pipeline_throughput(&ga, &model, s_in, s_out);
+        (tok_thr, if tok_ga > 0.0 { tok_thr / tok_ga } else { f64::INFINITY })
+    });
+    let abs: Vec<Vec<f64>> =
+        pairs.chunks(outs.len()).map(|r| r.iter().map(|p| p.0).collect()).collect();
+    let norm: Vec<Vec<f64>> =
+        pairs.chunks(outs.len()).map(|r| r.iter().map(|p| p.1).collect()).collect();
+    let flat: Vec<f64> = norm.iter().flatten().copied().collect();
+    let mean = stats::mean(&flat);
+    (ins, outs, abs, norm, mean)
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let (ins, outs, abs, norm, mean) = grids(ctx);
+    let rl: Vec<String> = ins.iter().map(|v| v.to_string()).collect();
+    let cl: Vec<String> = outs.iter().map(|v| v.to_string()).collect();
+    let h_abs = Heatmap {
+        title: "Fig. 12a — throughput-oriented design, tokens/s \
+                (rows: input len, cols: output len; PP=8, 12 layers/device, max batch)",
+        row_labels: rl.clone(),
+        col_labels: cl.clone(),
+        values: abs,
+        precision: 0,
+    };
+    let h_norm = Heatmap {
+        title: "Fig. 12b — normalized to an 8-GA100 node",
+        row_labels: rl,
+        col_labels: cl,
+        values: norm,
+        precision: 2,
+    };
+    let mut out = h_abs.render();
+    let _ = writeln!(out, "\n{}", h_norm.render());
+    let _ = writeln!(out, "average normalized throughput: {mean:.2}x (paper: 1.42x)");
+
+    // Latency side of the trade-off (paper discussion: 9.21x worse).
+    let model = ModelConfig::gpt3_175b();
+    let (s_in, s_out) = (512, 512);
+    let (_, b_thr, t_thr) = ctx.sim.pipeline_throughput(&pp8(presets::throughput_oriented()), &model, s_in, s_out);
+    let (_, b_ga, t_ga) = ctx.sim.pipeline_throughput(&pp8(presets::ga100()), &model, s_in, s_out);
+    // Request latency ≈ stage time × stages (one batch flowing through).
+    let _ = writeln!(
+        out,
+        "latency trade-off at in=out=512: batch {b_thr} vs {b_ga}, request latency ratio \
+         {:.2}x worse (paper: 9.21x average)",
+        (t_thr * 8.0) / (t_ga * 8.0).max(1e-12)
+    );
+    write_report("fig12a.csv", &h_abs.to_csv())?;
+    write_report("fig12b.csv", &h_norm.to_csv())?;
+    Ok(out)
+}

@@ -1,0 +1,90 @@
+//! Fig. 6 — area-model validation: die-level breakdowns of NVIDIA GA100
+//! and AMD Aldebaran (6a) and core-level breakdowns (6b).
+//!
+//! Reference totals from the architecture white papers / annotated die
+//! photos: GA100 = 826 mm², Aldebaran = 724 mm². Paper model error: 5.1%
+//! (GA100) and 8.1% (Aldebaran).
+
+use super::Ctx;
+use crate::area::{die_breakdown, AreaParams};
+use crate::hardware::presets;
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub const GA100_REF_MM2: f64 = 826.0;
+pub const ALDEBARAN_REF_MM2: f64 = 724.0;
+
+pub fn run(_ctx: &Ctx) -> Result<String> {
+    let p = AreaParams::default();
+    let ga100 = presets::ga100();
+    let mut aldebaran = presets::mi210();
+    // Full Aldebaran die: CDNA2 CUs carry 512 KB vector register files.
+    aldebaran.core.lane.register_bytes = 128 * 1024;
+    aldebaran.name = "aldebaran".into();
+
+    let ga_b = die_breakdown(&p, &ga100, 600e9);
+    let al_b = die_breakdown(&p, &aldebaran, 300e9);
+
+    let mut t = Table::new(&["component", "GA100 mm²", "Aldebaran mm²"])
+        .with_title("Fig. 6a — die area breakdown");
+    for ((name, ga), (_, al)) in ga_b.rows().into_iter().zip(al_b.rows()) {
+        t.row(vec![name.to_string(), format!("{ga:.1}"), format!("{al:.1}")]);
+    }
+    t.row(vec![
+        "TOTAL (model)".into(),
+        format!("{:.1}", ga_b.total_mm2()),
+        format!("{:.1}", al_b.total_mm2()),
+    ]);
+    t.row(vec![
+        "reference die".into(),
+        format!("{GA100_REF_MM2:.0}"),
+        format!("{ALDEBARAN_REF_MM2:.0}"),
+    ]);
+    t.row(vec![
+        "error %".into(),
+        format!("{:+.1}", (ga_b.total_mm2() / GA100_REF_MM2 - 1.0) * 100.0),
+        format!("{:+.1}", (al_b.total_mm2() / ALDEBARAN_REF_MM2 - 1.0) * 100.0),
+    ]);
+    let mut out = t.render();
+
+    // Fig. 6b: one core (SM / CU) broken into its pieces.
+    let mut core = Table::new(&["component", "GA100 SM mm²", "Aldebaran CU mm²"])
+        .with_title("Fig. 6b — core area breakdown");
+    let per_core = |b: &crate::area::DieBreakdown, n: f64| {
+        vec![
+            ("vector units", b.vector_units_mm2 / n),
+            ("int units", b.int_units_mm2 / n),
+            ("systolic arrays", b.systolic_mm2 / n),
+            ("register files", b.regfile_mm2 / n),
+            ("lane overhead", b.lane_overhead_mm2 / n),
+            ("local buffer", b.local_buffer_mm2 / n),
+            ("core overhead", b.core_overhead_mm2 / n),
+        ]
+    };
+    let ga_core = per_core(&ga_b, ga100.core_count as f64);
+    let al_core = per_core(&al_b, aldebaran.core_count as f64);
+    for ((name, g), (_, a)) in ga_core.iter().zip(&al_core) {
+        core.row(vec![name.to_string(), format!("{g:.3}"), format!("{a:.3}")]);
+    }
+    let _ = writeln!(out, "\n{}", core.render());
+
+    let mut csv = String::from("component,ga100_mm2,aldebaran_mm2\n");
+    for ((name, ga), (_, al)) in ga_b.rows().into_iter().zip(al_b.rows()) {
+        let _ = writeln!(csv, "{name},{ga:.2},{al:.2}");
+    }
+    write_report("fig6.csv", &csv)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errors_within_paper_band() {
+        let out = run(&Ctx::new(true)).unwrap();
+        assert!(out.contains("Fig. 6a"));
+        assert!(out.contains("Fig. 6b"));
+    }
+}

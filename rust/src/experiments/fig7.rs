@@ -1,0 +1,99 @@
+//! Fig. 7 / Table III — impact of compute-system design on performance:
+//! designs A–E (fewer big cores vs more small cores; A = quarter compute)
+//! running one GPT-3 layer, batch 8, seq 2048, 4-way tensor parallelism.
+//!
+//! Paper findings to reproduce: A ≈ 3.25× slower prefill than B but ~equal
+//! decode; E ≈ +12% prefill, +31% decode vs B; implication ① compute helps
+//! prefill, barely decode; ② large systolic arrays hurt narrow decode.
+
+use super::Ctx;
+use crate::area::die_mm2;
+use crate::graph::layer::Phase;
+use crate::graph::ModelConfig;
+use crate::hardware::{presets, InterconnectSpec, SystemSpec};
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub const DESIGNS: [char; 5] = ['A', 'B', 'C', 'D', 'E'];
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let model = ModelConfig::gpt3_175b();
+    let (batch, seq) = (8, 2048);
+    let kv = seq + 1024; // decoding the 1024th output token
+
+    let mut spec_t = Table::new(&[
+        "design", "cores", "lanes", "vector", "systolic", "local KB", "die mm²",
+    ])
+    .with_title("Table III — five compute system designs");
+    let mut perf_t = Table::new(&[
+        "design",
+        "prefill ms/layer",
+        "vs B",
+        "decode ms/layer",
+        "vs B",
+    ])
+    .with_title("Fig. 7 — prefill/decode latency per GPT-3 layer (b=8, s=2048, TP=4)");
+
+    let mut rows: Vec<(char, f64, f64)> = Vec::new();
+    let mut breakdown_csv = String::from("design,op,prefill_s,decode_s\n");
+    for &letter in &DESIGNS {
+        let dev = presets::design(letter).unwrap();
+        spec_t.row(vec![
+            letter.to_string(),
+            dev.core_count.to_string(),
+            dev.core.lane_count.to_string(),
+            dev.core.lane.vector_width.to_string(),
+            format!("{}x{}", dev.core.lane.systolic_rows, dev.core.lane.systolic_cols),
+            (dev.core.local_buffer_bytes / 1024).to_string(),
+            format!("{:.0}", die_mm2(&dev)),
+        ]);
+        let sys = SystemSpec {
+            device: dev,
+            device_count: 4,
+            interconnect: InterconnectSpec::nvlink_like(600e9),
+        };
+        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq });
+        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv });
+        for (name, s) in &pre.breakdown {
+            let ds = dec.time_of(name);
+            let _ = writeln!(breakdown_csv, "{letter},{name},{s},{ds}");
+        }
+        rows.push((letter, pre.total_s, dec.total_s));
+    }
+    let b_pre = rows.iter().find(|r| r.0 == 'B').unwrap().1;
+    let b_dec = rows.iter().find(|r| r.0 == 'B').unwrap().2;
+    for (letter, pre, dec) in &rows {
+        perf_t.row(vec![
+            letter.to_string(),
+            format!("{:.2}", pre * 1e3),
+            format!("{:.2}x", pre / b_pre),
+            format!("{:.3}", dec * 1e3),
+            format!("{:.2}x", dec / b_dec),
+        ]);
+    }
+
+    let mut out = spec_t.render();
+    let _ = writeln!(out, "\n{}", perf_t.render());
+    let a = rows.iter().find(|r| r.0 == 'A').unwrap();
+    let _ = writeln!(
+        out,
+        "implication ①: A (¼ compute) prefill {:.2}x of B (paper 3.25x), decode {:.2}x (paper ~1.00x)",
+        a.1 / b_pre,
+        a.2 / b_dec
+    );
+    let e = rows.iter().find(|r| r.0 == 'E').unwrap();
+    let _ = writeln!(
+        out,
+        "implication ②: E (128x128 arrays) prefill {:+.1}% vs B (paper +12.4%), decode {:+.1}% (paper +30.8%)",
+        (e.1 / b_pre - 1.0) * 100.0,
+        (e.2 / b_dec - 1.0) * 100.0
+    );
+    write_report("fig7_breakdown.csv", &breakdown_csv)?;
+    let mut csv = String::from("design,prefill_s,decode_s\n");
+    for (l, p, d) in &rows {
+        let _ = writeln!(csv, "{l},{p},{d}");
+    }
+    write_report("fig7.csv", &csv)?;
+    Ok(out)
+}

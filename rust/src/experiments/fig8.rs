@@ -1,0 +1,104 @@
+//! Fig. 8 — impact of main-memory bandwidth: sweep 400 → 3200 GB/s on an
+//! otherwise-A100 device, with the per-operator latency breakdown the
+//! paper stacks in its bars.
+//!
+//! Paper findings: prefill gains 14.3% from 800→2000 GB/s then saturates
+//! (+3.5% to 3200); decode speeds up 1.88x over the same range and keeps
+//! gaining (implication ③: decode is much more BW-sensitive).
+
+use super::Ctx;
+use crate::graph::layer::Phase;
+use crate::graph::ModelConfig;
+use crate::hardware::{presets, InterconnectSpec, SystemSpec};
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn bandwidths(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![400e9, 1200e9, 2400e9, 3200e9]
+    } else {
+        vec![400e9, 800e9, 1200e9, 1600e9, 2000e9, 2400e9, 2800e9, 3200e9]
+    }
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let model = ModelConfig::gpt3_175b();
+    let (batch, seq) = (8, 2048);
+    let kv = seq + 1024;
+
+    let mut pre_t = Table::new(&["BW GB/s", "prefill ms", "matmul ms", "vecop ms", "comm ms"])
+        .with_title("Fig. 8a — prefill latency per GPT-3 layer vs memory bandwidth");
+    let mut dec_t = Table::new(&["BW GB/s", "decode ms", "matmul ms", "vecop ms", "comm ms"])
+        .with_title("Fig. 8b — decode latency per GPT-3 layer per token vs memory bandwidth");
+    let mut csv = String::from("bw_gbs,phase,op,seconds\n");
+    let mut series: Vec<(f64, f64, f64)> = Vec::new();
+
+    for bw in bandwidths(ctx.quick) {
+        let mut dev = presets::a100();
+        dev.name = format!("a100-bw{}", (bw / 1e9) as u64);
+        dev.memory.bandwidth_bytes_per_s = bw;
+        let sys = SystemSpec {
+            device: dev,
+            device_count: 4,
+            interconnect: InterconnectSpec::nvlink_like(600e9),
+        };
+        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq });
+        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv });
+        let split = |rep: &crate::graph::inference::LayerReport| {
+            let mm: f64 = rep
+                .breakdown
+                .iter()
+                .filter(|(n, _)| n.contains("proj") || n.contains("_K_V") || n.contains("mul"))
+                .map(|(_, s)| s)
+                .sum();
+            let comm: f64 = rep
+                .breakdown
+                .iter()
+                .filter(|(n, _)| n.starts_with("AllReduce"))
+                .map(|(_, s)| s)
+                .sum();
+            let vec = rep.total_s - mm - comm;
+            (mm, vec, comm)
+        };
+        let (pm, pv, pc) = split(&pre);
+        let (dm, dv, dc) = split(&dec);
+        pre_t.row(vec![
+            format!("{:.0}", bw / 1e9),
+            format!("{:.2}", pre.total_s * 1e3),
+            format!("{:.2}", pm * 1e3),
+            format!("{:.2}", pv * 1e3),
+            format!("{:.2}", pc * 1e3),
+        ]);
+        dec_t.row(vec![
+            format!("{:.0}", bw / 1e9),
+            format!("{:.3}", dec.total_s * 1e3),
+            format!("{:.3}", dm * 1e3),
+            format!("{:.3}", dv * 1e3),
+            format!("{:.3}", dc * 1e3),
+        ]);
+        for (name, s) in &pre.breakdown {
+            let _ = writeln!(csv, "{},prefill,{name},{s}", bw / 1e9);
+        }
+        for (name, s) in &dec.breakdown {
+            let _ = writeln!(csv, "{},decode,{name},{s}", bw / 1e9);
+        }
+        series.push((bw, pre.total_s, dec.total_s));
+    }
+
+    let mut out = pre_t.render();
+    let _ = writeln!(out, "\n{}", dec_t.render());
+    // Implication ③ check against the paper's anchor points (skip in quick
+    // mode where 800/2000 are not sampled).
+    let find = |bw: f64| series.iter().find(|(b, _, _)| (*b - bw).abs() < 1.0);
+    if let (Some(lo), Some(hi)) = (find(800e9), find(2000e9)) {
+        let _ = writeln!(
+            out,
+            "800→2000 GB/s: prefill -{:.1}% (paper 14.3%), decode speedup {:.2}x (paper 1.88x)",
+            (1.0 - hi.1 / lo.1) * 100.0,
+            lo.2 / hi.2
+        );
+    }
+    write_report("fig8.csv", &csv)?;
+    Ok(out)
+}

@@ -1,0 +1,91 @@
+//! Fig. 9 — impact of local-buffer size (and the global-buffer sweep the
+//! paper describes in §IV-D text): A100-spec device, sweeping one buffer
+//! at a time.
+//!
+//! Paper findings: local 64→192 KB improves prefill 18.0% (+5.8% area);
+//! 192 KB→1 MB gains only 0.2% (+28.8% area); decode flat (implications
+//! ④/⑤: buffers help prefill until the systolic arrays saturate).
+
+use super::Ctx;
+use crate::area::die_mm2;
+use crate::graph::layer::Phase;
+use crate::graph::ModelConfig;
+use crate::hardware::{presets, InterconnectSpec, SystemSpec};
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let model = ModelConfig::gpt3_175b();
+    let (batch, seq) = (8, 2048);
+    let kv = seq + 1024;
+
+    let locals_kb: Vec<u64> =
+        if ctx.quick { vec![64, 192, 1024] } else { vec![64, 128, 192, 256, 512, 1024] };
+    let globals_mb: Vec<u64> = if ctx.quick { vec![10, 40, 80] } else { vec![10, 20, 40, 80] };
+
+    let mut lt = Table::new(&["local KB", "prefill ms", "decode ms", "die mm²"])
+        .with_title("Fig. 9 — local buffer size sweep (A100 spec, TP=4)");
+    let mut csv = String::from("kind,size,prefill_s,decode_s,die_mm2\n");
+    let mut local_rows = Vec::new();
+    for &kb in &locals_kb {
+        let mut dev = presets::a100();
+        dev.name = format!("a100-l1-{kb}k");
+        dev.core.local_buffer_bytes = kb * 1024;
+        let area = die_mm2(&dev);
+        let sys = SystemSpec {
+            device: dev,
+            device_count: 4,
+            interconnect: InterconnectSpec::nvlink_like(600e9),
+        };
+        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq }).total_s;
+        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s;
+        lt.row(vec![
+            kb.to_string(),
+            format!("{:.2}", pre * 1e3),
+            format!("{:.3}", dec * 1e3),
+            format!("{:.0}", area),
+        ]);
+        let _ = writeln!(csv, "local,{kb},{pre},{dec},{area}");
+        local_rows.push((kb, pre, dec, area));
+    }
+
+    let mut gt = Table::new(&["global MB", "prefill ms", "decode ms", "die mm²"])
+        .with_title("§IV-D — global buffer size sweep (A100 spec, TP=4)");
+    for &mb in &globals_mb {
+        let mut dev = presets::a100();
+        dev.name = format!("a100-l2-{mb}m");
+        dev.global_buffer_bytes = mb * 1024 * 1024;
+        let area = die_mm2(&dev);
+        let sys = SystemSpec {
+            device: dev,
+            device_count: 4,
+            interconnect: InterconnectSpec::nvlink_like(600e9),
+        };
+        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq }).total_s;
+        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s;
+        gt.row(vec![
+            mb.to_string(),
+            format!("{:.2}", pre * 1e3),
+            format!("{:.3}", dec * 1e3),
+            format!("{:.0}", area),
+        ]);
+        let _ = writeln!(csv, "global,{mb},{pre},{dec},{area}");
+    }
+
+    let mut out = lt.render();
+    let _ = writeln!(out, "\n{}", gt.render());
+    if let (Some(small), Some(base)) = (
+        local_rows.iter().find(|r| r.0 == 64),
+        local_rows.iter().find(|r| r.0 == 192),
+    ) {
+        let _ = writeln!(
+            out,
+            "local 64→192 KB: prefill -{:.1}% (paper 18.0%), decode {:+.1}% (paper ~0%)",
+            (1.0 - base.1 / small.1) * 100.0,
+            (base.2 / small.2 - 1.0) * 100.0
+        );
+    }
+    write_report("fig9.csv", &csv)?;
+    Ok(out)
+}

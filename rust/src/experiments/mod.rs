@@ -1,0 +1,95 @@
+//! Regenerators for every table and figure in the paper's evaluation
+//! (DESIGN.md §4 maps each experiment id to its modules).
+//!
+//! Each experiment prints the paper's rows/series as ASCII tables and
+//! writes CSV under `reports/`. `quick` mode trims sweep points so the
+//! integration tests can exercise every experiment in seconds.
+
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod tab4;
+pub mod variants;
+
+use crate::graph::inference::Simulator;
+use anyhow::Result;
+
+/// Shared context for experiment runs.
+pub struct Ctx {
+    pub sim: Simulator,
+    /// Trim sweeps for fast smoke runs.
+    pub quick: bool,
+    /// Where AOT artifacts live (fig5 measured side).
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl Ctx {
+    pub fn new(quick: bool) -> Ctx {
+        Ctx {
+            sim: Simulator::new(),
+            quick,
+            artifact_dir: std::path::PathBuf::from("artifacts"),
+        }
+    }
+}
+
+/// Experiment registry: (id, description, runner).
+pub fn registry() -> Vec<(&'static str, &'static str, fn(&Ctx) -> Result<String>)> {
+    vec![
+        (
+            "fig5",
+            "Performance-model validation: simulated vs measured operator latency",
+            fig5::run,
+        ),
+        ("fig6", "Area-model validation: GA100/Aldebaran die + core breakdowns", fig6::run),
+        ("fig7", "Compute-system designs A-E: prefill/decode latency (Table III)", fig7::run),
+        ("fig8", "Memory-bandwidth sweep 400-3200 GB/s with operator breakdown", fig8::run),
+        ("fig9", "Local/global buffer size sweeps", fig9::run),
+        ("fig10", "Latency-oriented design: end-to-end perf heatmap vs GA100", fig10::run),
+        ("fig11", "Decoding latency comparison: A100 / GA100 / latency design", fig11::run),
+        ("fig12", "Throughput-oriented design: tokens/s heatmap, PP=8", fig12::run),
+        ("tab4", "Table IV: designs, die area, cost, performance/cost", tab4::run),
+        (
+            "variants",
+            "Ablation: MQA/GQA, parallel blocks, MoE (paper §II-A variant support)",
+            variants::run,
+        ),
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &Ctx) -> Result<String> {
+    for (name, _, f) in registry() {
+        if name == id {
+            return f(ctx);
+        }
+    }
+    anyhow::bail!(
+        "unknown experiment `{id}`; available: {}",
+        registry().iter().map(|(n, _, _)| *n).collect::<Vec<_>>().join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_eval_artifacts() {
+        let ids: Vec<&str> = registry().iter().map(|(n, _, _)| *n).collect();
+        for id in ["fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "tab4"] {
+            assert!(ids.contains(&id), "{id} missing");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let ctx = Ctx::new(true);
+        assert!(run("nope", &ctx).is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! Table IV — comparison with NVIDIA GA100: full specifications, die area
+//! (area model), die + memory cost (cost model), normalized performance
+//! (from the Fig. 10 / Fig. 12 grids), and normalized performance/cost.
+//!
+//! Paper bottom line: latency-oriented 1.06x, throughput-oriented 3.41x
+//! performance per cost vs GA100.
+
+use super::{fig10, fig12, Ctx};
+use crate::cost::{device_cost, perf_per_cost_normalized, CostParams};
+use crate::hardware::presets;
+use crate::util::stats;
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let p = CostParams::default();
+    let lat = presets::latency_oriented();
+    let ga = presets::ga100();
+    let thr = presets::throughput_oriented();
+
+    // Normalized performance: latency design from the Fig. 10 grid mean;
+    // throughput design from the Fig. 12 normalized mean.
+    let (_, _, grid) = fig10::normalized_grid(ctx);
+    let flat: Vec<f64> = grid.iter().flatten().copied().collect();
+    let perf_lat = stats::mean(&flat);
+    let (_, _, _, _, perf_thr) = fig12::grids(ctx);
+
+    let costs = [device_cost(&p, &lat), device_cost(&p, &ga), device_cost(&p, &thr)];
+    let perfs = [perf_lat, 1.0, perf_thr];
+
+    let mut t = Table::new(&["row", "Latency Design", "GA100 (full)", "Throughput Design"])
+        .with_title("Table IV — comparison with NVIDIA GA100");
+    let devs = [&lat, &ga, &thr];
+    let spec_row = |label: &str, f: &dyn Fn(&crate::hardware::DeviceSpec) -> String| {
+        vec![label.to_string(), f(devs[0]), f(devs[1]), f(devs[2])]
+    };
+    t.row(spec_row("core count", &|d| d.core_count.to_string()));
+    t.row(spec_row("lane count", &|d| d.core.lane_count.to_string()));
+    t.row(spec_row("vector width", &|d| d.core.lane.vector_width.to_string()));
+    t.row(spec_row("systolic array", &|d| {
+        format!("{}x{}", d.core.lane.systolic_rows, d.core.lane.systolic_cols)
+    }));
+    t.row(spec_row("local buffer (KB)", &|d| (d.core.local_buffer_bytes / 1024).to_string()));
+    t.row(spec_row("global buffer (MB)", &|d| {
+        (d.global_buffer_bytes / 1024 / 1024).to_string()
+    }));
+    t.row(spec_row("global buffer (B/clk)", &|d| d.global_buffer_bytes_per_clk.to_string()));
+    t.row(spec_row("memory BW (TB/s)", &|d| {
+        format!("{:.0}", d.memory.bandwidth_bytes_per_s / 1e12)
+    }));
+    t.row(spec_row("memory capacity (GB)", &|d| {
+        format!("{:.0}", d.memory.capacity_bytes as f64 / 1e9)
+    }));
+    t.row(spec_row("memory protocol", &|d| d.memory.protocol.name().to_string()));
+    t.row(vec![
+        "die area (mm², model)".into(),
+        format!("{:.0}", costs[0].die_mm2),
+        format!("{:.0}", costs[1].die_mm2),
+        format!("{:.0}", costs[2].die_mm2),
+    ]);
+    t.row(vec![
+        "normalized performance".into(),
+        format!("{:.2}", perfs[0]),
+        "1".into(),
+        format!("{:.2}", perfs[1 + 1]),
+    ]);
+    t.row(vec![
+        "est. die cost".into(),
+        format!("${:.0}", costs[0].die_cost_usd),
+        format!("${:.0}", costs[1].die_cost_usd),
+        format!("${:.0}", costs[2].die_cost_usd),
+    ]);
+    t.row(vec![
+        "est. memory cost".into(),
+        format!("${:.0}", costs[0].memory_cost_usd),
+        format!("${:.0}", costs[1].memory_cost_usd),
+        format!("${:.0}", costs[2].memory_cost_usd),
+    ]);
+    t.row(vec![
+        "est. total cost".into(),
+        format!("${:.0}", costs[0].total_usd()),
+        format!("${:.0}", costs[1].total_usd()),
+        format!("${:.0}", costs[2].total_usd()),
+    ]);
+    let ppc_lat = perf_per_cost_normalized(perfs[0], &costs[0], 1.0, &costs[1]);
+    let ppc_thr = perf_per_cost_normalized(perfs[2], &costs[2], 1.0, &costs[1]);
+    t.row(vec![
+        "normalized perf/cost".into(),
+        format!("{ppc_lat:.2}"),
+        "1".into(),
+        format!("{ppc_thr:.2}"),
+    ]);
+
+    let mut out = t.render();
+    let _ = writeln!(
+        out,
+        "paper reference: die 478/826/787 mm²; cost $640/$711/$296; perf/cost 1.06/1/3.41"
+    );
+    write_report("tab4.csv", &t.to_csv())?;
+    Ok(out)
+}

@@ -1,0 +1,83 @@
+//! Ablation: the model variations the paper claims LLMCompass "seamlessly
+//! supports" (§II-A) — Multi-Query / Grouped-Query Attention, PaLM-style
+//! parallel attention + MLP, and Mixture-of-Experts — evaluated on the
+//! Fig. 5h/i setting (A100 ×4, batch 8, seq 2048, decode at KV 3072).
+//!
+//! The serving-relevant story: MQA collapses the decode KV read and
+//! multiplies the memory-capacity-limited batch, while MoE multiplies
+//! weight traffic only until the routed token count caps the experts
+//! touched.
+
+use super::Ctx;
+use crate::graph::inference::max_batch;
+use crate::graph::layer::Phase;
+use crate::graph::{Attention, ModelConfig};
+use crate::hardware::presets;
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let sys = presets::system("a100x4").unwrap();
+    let a100 = presets::a100();
+    let (batch, seq, kv) = (8, 2048, 3072);
+
+    let mut gqa8 = ModelConfig::gpt3_175b();
+    gqa8.name = "gpt3-gqa8".into();
+    gqa8.attention = Attention::GroupedQuery { groups: 8 };
+    let mut parallel = ModelConfig::gpt3_175b();
+    parallel.name = "gpt3-parallel".into();
+    parallel.parallel_blocks = true;
+
+    let models = vec![
+        ModelConfig::gpt3_175b(),
+        gqa8,
+        ModelConfig::gpt3_palm_style(),
+        parallel,
+        ModelConfig::gpt3_moe(16),
+    ];
+
+    let mut t = Table::new(&[
+        "model",
+        "prefill ms/layer",
+        "decode ms/layer",
+        "KV KiB/token/layer",
+        "params/layer (M)",
+        "max batch (TP=4, 4k ctx)",
+    ])
+    .with_title("§II-A variants on 4xA100 (b=8, s=2048, decode @ KV 3072)");
+    let mut csv = String::from("model,prefill_s,decode_s,kv_bytes,params,max_batch\n");
+    let mut rows = Vec::new();
+    for m in &models {
+        let pre = ctx.sim.layer(&sys, m, Phase::Prefill { batch, seq }).total_s;
+        let dec = ctx.sim.layer(&sys, m, Phase::Decode { batch, kv_len: kv }).total_s;
+        let kv_b = m.kv_bytes_per_token_per_layer();
+        let params = m.params_per_layer();
+        let mb = max_batch(&a100, m, m.layers, 4, 4096);
+        t.row(vec![
+            m.name.clone(),
+            format!("{:.2}", pre * 1e3),
+            format!("{:.3}", dec * 1e3),
+            format!("{:.1}", kv_b as f64 / 1024.0),
+            format!("{:.0}", params as f64 / 1e6),
+            mb.to_string(),
+        ]);
+        let _ = writeln!(csv, "{},{pre},{dec},{kv_b},{params},{mb}", m.name);
+        rows.push((m.name.clone(), pre, dec, mb));
+    }
+
+    let mut out = t.render();
+    let base = &rows[0];
+    let mqa = rows.iter().find(|r| r.0.contains("mqa")).unwrap();
+    let _ = writeln!(
+        out,
+        "MQA + parallel blocks: decode {:.2}x faster per layer; max batch {} vs {} for MHA \
+         (GPT-3 weights alone overflow 4xA100, hence 0) — the variant support the paper \
+         claims in §II-A, exercised end to end.",
+        base.2 / mqa.2,
+        mqa.3,
+        base.3
+    );
+    write_report("variants.csv", &csv)?;
+    Ok(out)
+}

@@ -1,0 +1,356 @@
+//! Operator list for one decoder-only Transformer layer with tensor
+//! parallelism (paper Fig. 2).
+//!
+//! Under `tp`-way tensor parallelism (Megatron-style [59]) the attention
+//! heads and the MLP hidden dimension are split across devices; each layer
+//! needs two all-reduces of the activations — one after the attention
+//! block, one after the MLP block.
+//!
+//! Operator names follow the paper's Fig. 8 breakdown legend:
+//! `Q_K_V`, `Q_mul_K`, `Softmax`, `A_mul_V`, `Wo_proj`, `AllReduce_MHA`,
+//! `LayerNorm_MHA`, `W1_proj`, `GeLU`, `W2_proj`, `AllReduce_FFN`,
+//! `LayerNorm_FFN`.
+
+use super::ModelConfig;
+use crate::perf::Op;
+
+/// Inference phase (paper §II-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Process the whole input prompt, building the KV cache.
+    Prefill { batch: u64, seq: u64 },
+    /// Generate one token; attention reads a KV cache of length `kv_len`.
+    Decode { batch: u64, kv_len: u64 },
+}
+
+impl Phase {
+    /// Rows through the dense projections: batch·seq for prefill, batch
+    /// for decode.
+    pub fn rows(&self) -> u64 {
+        match *self {
+            Phase::Prefill { batch, seq } => batch * seq,
+            Phase::Decode { batch, .. } => batch,
+        }
+    }
+
+    pub fn batch(&self) -> u64 {
+        match *self {
+            Phase::Prefill { batch, .. } | Phase::Decode { batch, .. } => batch,
+        }
+    }
+}
+
+/// One named operator within a layer.
+#[derive(Debug, Clone)]
+pub struct NamedOp {
+    pub name: &'static str,
+    pub op: Op,
+}
+
+/// Build the operator list for one Transformer layer under `tp`-way tensor
+/// parallelism, as executed by **one** device (per-device head and FFN
+/// slices), in execution order.
+pub fn layer_ops(model: &ModelConfig, phase: Phase, tp: u64) -> Vec<NamedOp> {
+    assert!(tp >= 1, "tensor parallelism degree must be ≥ 1");
+    assert!(model.heads % tp == 0, "heads {} not divisible by tp {}", model.heads, tp);
+    let d = model.d_model;
+    let dh = model.d_head();
+    let h_local = model.heads / tp;
+    let ff_local = model.d_ff / tp;
+    let dt = model.dtype;
+    let rows = phase.rows();
+    let batch = phase.batch();
+
+    // Attention geometry: queries per sequence and KV length.
+    let (q_len, kv_len) = match phase {
+        Phase::Prefill { seq, .. } => (seq, seq),
+        Phase::Decode { kv_len, .. } => (1, kv_len),
+    };
+
+    // K/V heads after head-sharing (MQA/GQA); at least one per device.
+    let kv_heads = model.attention.kv_heads(model.heads);
+    let kv_local = (kv_heads / tp).max(1);
+    // Query heads sharing each local K/V head.
+    let group = h_local / kv_local.min(h_local);
+
+    let mut ops: Vec<NamedOp> = Vec::with_capacity(12);
+    let mm = |m: u64, k: u64, n: u64| Op::Matmul { b: 1, m, k, n, dtype: dt, batched_b: false };
+
+    // --- Attention block ----------------------------------------------------
+    ops.push(NamedOp { name: "LayerNorm_MHA", op: Op::LayerNorm { m: rows, n: d, dtype: dt } });
+    // Fused Q/K/V projection: d → (h_local + 2·kv_local)·dh per device
+    // (3·h_local·dh for MHA; shrinks under MQA/GQA).
+    ops.push(NamedOp { name: "Q_K_V", op: mm(rows, d, (h_local + 2 * kv_local) * dh) });
+    // Attention scores: one GEMM per (sequence, K/V head); the `group`
+    // query heads sharing a K/V head stack into the row dimension, which
+    // is exactly why MQA decodes faster — the narrow m=1 GEMM becomes
+    // m=group and the KV cache is read once per group, not per head.
+    ops.push(NamedOp {
+        name: "Q_mul_K",
+        op: Op::Matmul {
+            b: batch * kv_local,
+            m: q_len * group,
+            k: dh,
+            n: kv_len,
+            dtype: dt,
+            batched_b: true,
+        },
+    });
+    ops.push(NamedOp {
+        name: "Softmax",
+        op: Op::Softmax { m: batch * h_local * q_len, n: kv_len, dtype: dt },
+    });
+    // Attention-weighted values: A(q_len·group × kv_len) · V(kv_len × dh).
+    ops.push(NamedOp {
+        name: "A_mul_V",
+        op: Op::Matmul {
+            b: batch * kv_local,
+            m: q_len * group,
+            k: kv_len,
+            n: dh,
+            dtype: dt,
+            batched_b: true,
+        },
+    });
+    // Output projection: h_local·dh → d.
+    ops.push(NamedOp { name: "Wo_proj", op: mm(rows, h_local * dh, d) });
+    if tp > 1 && !model.parallel_blocks {
+        ops.push(NamedOp {
+            name: "AllReduce_MHA",
+            op: Op::AllReduce { bytes: rows * d * dt.bytes(), devices: tp },
+        });
+    }
+
+    // --- MLP block ----------------------------------------------------------
+    if !model.parallel_blocks {
+        // PaLM-style parallel blocks share the attention layernorm.
+        ops.push(NamedOp {
+            name: "LayerNorm_FFN",
+            op: Op::LayerNorm { m: rows, n: d, dtype: dt },
+        });
+    }
+    if model.moe_experts > 1 {
+        // Mixture-of-Experts: each token routes to `moe_active` experts.
+        // Per device, the distinct expert weight matrices touched is
+        // bounded by both the expert count and the routed token count —
+        // for decode (few tokens) only a few experts stream in, for
+        // prefill effectively all of them do.
+        let routed_rows = rows * model.moe_active;
+        let touched = model.moe_experts.min(routed_rows).max(1);
+        let rows_per_expert = (routed_rows + touched - 1) / touched;
+        ops.push(NamedOp { name: "MoE_router", op: mm(rows, d, model.moe_experts) });
+        ops.push(NamedOp {
+            name: "W1_proj",
+            op: Op::Matmul {
+                b: touched,
+                m: rows_per_expert,
+                k: d,
+                n: ff_local,
+                dtype: dt,
+                batched_b: true,
+            },
+        });
+        ops.push(NamedOp {
+            name: "GeLU",
+            op: Op::Gelu { elements: routed_rows * ff_local, dtype: dt },
+        });
+        ops.push(NamedOp {
+            name: "W2_proj",
+            op: Op::Matmul {
+                b: touched,
+                m: rows_per_expert,
+                k: ff_local,
+                n: d,
+                dtype: dt,
+                batched_b: true,
+            },
+        });
+    } else {
+        ops.push(NamedOp { name: "W1_proj", op: mm(rows, d, ff_local) });
+        ops.push(NamedOp { name: "GeLU", op: Op::Gelu { elements: rows * ff_local, dtype: dt } });
+        ops.push(NamedOp { name: "W2_proj", op: mm(rows, ff_local, d) });
+    }
+    if tp > 1 {
+        // With parallel blocks a single all-reduce covers attention + MLP.
+        ops.push(NamedOp {
+            name: "AllReduce_FFN",
+            op: Op::AllReduce { bytes: rows * d * dt.bytes(), devices: tp },
+        });
+    }
+
+    ops
+}
+
+/// Total FLOPs of one layer (sanity/reporting).
+pub fn layer_flops(model: &ModelConfig, phase: Phase, tp: u64) -> f64 {
+    layer_ops(model, phase, tp).iter().map(|o| o.op.flops()).sum()
+}
+
+/// Minimum DRAM traffic of one layer on one device.
+pub fn layer_min_bytes(model: &ModelConfig, phase: Phase, tp: u64) -> f64 {
+    layer_ops(model, phase, tp).iter().map(|o| o.op.min_dram_bytes()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::DType;
+
+    fn gpt3() -> ModelConfig {
+        ModelConfig::gpt3_175b()
+    }
+
+    #[test]
+    fn prefill_op_list_structure() {
+        let ops = layer_ops(&gpt3(), Phase::Prefill { batch: 8, seq: 2048 }, 4);
+        let names: Vec<&str> = ops.iter().map(|o| o.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "LayerNorm_MHA",
+                "Q_K_V",
+                "Q_mul_K",
+                "Softmax",
+                "A_mul_V",
+                "Wo_proj",
+                "AllReduce_MHA",
+                "LayerNorm_FFN",
+                "W1_proj",
+                "GeLU",
+                "W2_proj",
+                "AllReduce_FFN"
+            ]
+        );
+    }
+
+    #[test]
+    fn no_allreduce_without_tp() {
+        let ops = layer_ops(&gpt3(), Phase::Decode { batch: 8, kv_len: 2048 }, 1);
+        assert!(ops.iter().all(|o| o.name != "AllReduce_MHA" && o.name != "AllReduce_FFN"));
+        assert_eq!(ops.len(), 10);
+    }
+
+    #[test]
+    fn prefill_flops_match_analytic() {
+        // Dense-projection FLOPs per layer per token ≈ 2 · 12 d² (whole
+        // layer, summed over tp devices); attention adds 2·2·s·d per token.
+        let m = gpt3();
+        let (b, s, tp) = (8u64, 2048u64, 4u64);
+        let tokens = (b * s) as f64;
+        let d = m.d_model as f64;
+        let dense = 2.0 * 12.0 * d * d * tokens / tp as f64;
+        let attn = 2.0 * 2.0 * (s as f64) * d * tokens / tp as f64;
+        let analytic = dense + attn;
+        let got_matmul: f64 = layer_ops(&m, Phase::Prefill { batch: b, seq: s }, tp)
+            .iter()
+            .filter(|o| matches!(o.op, crate::perf::Op::Matmul { .. }))
+            .map(|o| o.op.flops())
+            .sum();
+        assert!(
+            (got_matmul - analytic).abs() / analytic < 0.01,
+            "matmul flops {got_matmul:.3e} vs analytic {analytic:.3e}"
+        );
+    }
+
+    #[test]
+    fn decode_reads_all_params_and_kv() {
+        // Decode min traffic per device ≥ params/tp + KV/tp.
+        let m = gpt3();
+        let (b, kv, tp) = (8u64, 2048u64, 4u64);
+        let bytes = layer_min_bytes(&m, Phase::Decode { batch: b, kv_len: kv }, tp);
+        let params = m.params_per_layer() as f64 * 2.0 / tp as f64;
+        let kv_bytes = (b * kv) as f64 * m.kv_bytes_per_token_per_layer() as f64 / tp as f64;
+        assert!(bytes > params + kv_bytes * 0.99, "{bytes:.3e} vs {:.3e}", params + kv_bytes);
+        // ... but not wildly more (activations are small at decode).
+        assert!(bytes < (params + kv_bytes) * 1.2);
+    }
+
+    #[test]
+    fn small_model_ops_well_formed() {
+        let m = ModelConfig::gpt_small();
+        let ops = layer_ops(&m, Phase::Prefill { batch: 2, seq: 128 }, 1);
+        for o in &ops {
+            assert!(o.op.flops() >= 0.0);
+            assert!(o.op.min_dram_bytes() > 0.0, "{} has zero traffic", o.name);
+        }
+        let _ = DType::FP16;
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn tp_must_divide_heads() {
+        layer_ops(&gpt3(), Phase::Prefill { batch: 1, seq: 8 }, 7);
+    }
+
+    #[test]
+    fn mqa_shrinks_kv_and_qkv_projection() {
+        let mha = gpt3();
+        let mqa = ModelConfig::gpt3_palm_style();
+        // KV cache per token shrinks by the head count (96x).
+        assert_eq!(
+            mha.kv_bytes_per_token_per_layer(),
+            96 * mqa.kv_bytes_per_token_per_layer()
+        );
+        // Decode KV read traffic shrinks accordingly.
+        let phase = Phase::Decode { batch: 8, kv_len: 2048 };
+        let mha_attn: f64 = layer_ops(&mha, phase, 4)
+            .iter()
+            .filter(|o| o.name == "Q_mul_K" || o.name == "A_mul_V")
+            .map(|o| o.op.min_dram_bytes())
+            .sum();
+        let mqa_attn: f64 = layer_ops(&mqa, phase, 4)
+            .iter()
+            .filter(|o| o.name == "Q_mul_K" || o.name == "A_mul_V")
+            .map(|o| o.op.min_dram_bytes())
+            .sum();
+        assert!(
+            mha_attn / mqa_attn > 10.0,
+            "MQA attention traffic should collapse: {mha_attn:.3e} vs {mqa_attn:.3e}"
+        );
+        // FLOPs stay equal (same scores computed).
+        let f_mha: f64 =
+            layer_ops(&mha, phase, 4).iter().filter(|o| o.name == "Q_mul_K").map(|o| o.op.flops()).sum();
+        let f_mqa: f64 =
+            layer_ops(&mqa, phase, 4).iter().filter(|o| o.name == "Q_mul_K").map(|o| o.op.flops()).sum();
+        assert!((f_mha - f_mqa).abs() / f_mha < 1e-9);
+    }
+
+    #[test]
+    fn parallel_blocks_drop_one_layernorm_and_allreduce() {
+        let palm = ModelConfig::gpt3_palm_style();
+        let ops = layer_ops(&palm, Phase::Prefill { batch: 8, seq: 128 }, 4);
+        let names: Vec<&str> = ops.iter().map(|o| o.name).collect();
+        assert!(!names.contains(&"LayerNorm_FFN"));
+        assert!(!names.contains(&"AllReduce_MHA"));
+        assert!(names.contains(&"AllReduce_FFN"));
+    }
+
+    #[test]
+    fn moe_decode_touches_few_experts() {
+        let moe = ModelConfig::gpt3_moe(64);
+        // 64 experts but only batch=8 tokens routed: W1 reads ≤ 8 experts.
+        let phase = Phase::Decode { batch: 8, kv_len: 128 };
+        let w1 = layer_ops(&moe, phase, 4)
+            .into_iter()
+            .find(|o| o.name == "W1_proj")
+            .unwrap();
+        match w1.op {
+            crate::perf::Op::Matmul { b, batched_b, .. } => {
+                assert_eq!(b, 8);
+                assert!(batched_b);
+            }
+            _ => panic!("W1 not a matmul"),
+        }
+        // Total parameters scale with the expert count.
+        assert!(moe.params_per_layer() > 32 * gpt3().params_per_layer());
+        // Prefill touches all experts.
+        let w1p = layer_ops(&moe, Phase::Prefill { batch: 8, seq: 2048 }, 4)
+            .into_iter()
+            .find(|o| o.name == "W1_proj")
+            .unwrap();
+        match w1p.op {
+            crate::perf::Op::Matmul { b, .. } => assert_eq!(b, 64),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Transformer computational graphs and end-to-end inference simulation
+//! (paper §II, Fig. 2).
+//!
+//! * [`ModelConfig`] — GPT-style decoder-only model hyperparameters.
+//! * [`layer`] — the per-layer operator list (Multi-Head Attention block +
+//!   MLP block, with tensor-parallel all-reduces) for the *prefill* and
+//!   *decoding* phases.
+//! * [`inference`] — simulates layers on a [`crate::hardware::SystemSpec`]
+//!   via the mapper, integrates decode latency over the growing KV cache,
+//!   sizes the maximum batch under memory capacity, and models pipeline-
+//!   parallel throughput.
+
+pub mod layer;
+pub mod inference;
+
+use crate::hardware::DType;
+
+/// Attention variant (paper §II-A: "There are other variations such as
+/// Multi-Query Attention … LLMCompass seamlessly supports all these
+/// possible variations as they share a common set of operators").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attention {
+    /// Multi-Head Attention (GPT-3): one K/V head per Q head.
+    MultiHead,
+    /// Multi-Query Attention (PaLM): all Q heads share one K/V head —
+    /// shrinks the KV cache and its decode read traffic by `heads`×.
+    MultiQuery,
+    /// Grouped-Query Attention: `groups` K/V heads (MHA = heads groups,
+    /// MQA = 1 group).
+    GroupedQuery { groups: u64 },
+}
+
+impl Attention {
+    /// Number of K/V heads given `q_heads` query heads.
+    pub fn kv_heads(self, q_heads: u64) -> u64 {
+        match self {
+            Attention::MultiHead => q_heads,
+            Attention::MultiQuery => 1,
+            Attention::GroupedQuery { groups } => groups.clamp(1, q_heads),
+        }
+    }
+}
+
+/// Decoder-only Transformer hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub layers: u64,
+    pub d_model: u64,
+    pub heads: u64,
+    /// MLP hidden dimension (4·d_model for GPT).
+    pub d_ff: u64,
+    pub vocab: u64,
+    pub dtype: DType,
+    /// Attention variant (KV-head sharing).
+    pub attention: Attention,
+    /// PaLM-style parallel attention + MLP: both blocks read the same
+    /// layernorm output and their results are summed, halving the
+    /// layernorms and letting one all-reduce cover the layer.
+    pub parallel_blocks: bool,
+    /// Mixture-of-Experts: experts per MLP layer and how many are active
+    /// per token (Switch-style = 1 active). `experts = 1` is dense.
+    pub moe_experts: u64,
+    pub moe_active: u64,
+}
+
+impl ModelConfig {
+    /// GPT-3 175B [7]: 96 layers × d_model 12288 × 96 heads.
+    pub fn gpt3_175b() -> ModelConfig {
+        ModelConfig {
+            name: "gpt3-175b".into(),
+            layers: 96,
+            d_model: 12288,
+            heads: 96,
+            d_ff: 4 * 12288,
+            vocab: 50257,
+            dtype: DType::FP16,
+            attention: Attention::MultiHead,
+            parallel_blocks: false,
+            moe_experts: 1,
+            moe_active: 1,
+        }
+    }
+
+    /// A ~117M-parameter GPT (GPT-2-small geometry) — the model the
+    /// end-to-end example actually *executes* through PJRT.
+    pub fn gpt_small() -> ModelConfig {
+        ModelConfig {
+            name: "gpt-small".into(),
+            layers: 12,
+            d_model: 768,
+            heads: 12,
+            d_ff: 4 * 768,
+            vocab: 50257,
+            dtype: DType::FP16,
+            attention: Attention::MultiHead,
+            parallel_blocks: false,
+            moe_experts: 1,
+            moe_active: 1,
+        }
+    }
+
+    /// PaLM-540B-style variant of GPT-3 geometry: multi-query attention +
+    /// parallel attention/MLP blocks (paper §II-A's cited variations),
+    /// used by the `variants` ablation experiment.
+    pub fn gpt3_palm_style() -> ModelConfig {
+        let mut m = Self::gpt3_175b();
+        m.name = "gpt3-mqa-parallel".into();
+        m.attention = Attention::MultiQuery;
+        m.parallel_blocks = true;
+        m
+    }
+
+    /// Switch-Transformer-style MoE on GPT-3 geometry: `experts` experts,
+    /// one active per token.
+    pub fn gpt3_moe(experts: u64) -> ModelConfig {
+        let mut m = Self::gpt3_175b();
+        m.name = format!("gpt3-moe{experts}");
+        m.moe_experts = experts;
+        m.moe_active = 1;
+        m
+    }
+
+    /// Head dimension.
+    pub fn d_head(&self) -> u64 {
+        self.d_model / self.heads
+    }
+
+    /// Parameters in one Transformer layer: Q (d²) + K/V (2·d·kv_dim) +
+    /// output projection (d²) + MLP experts (2·d·d_ff each) +
+    /// layernorm/bias terms (≈4d, negligible).
+    pub fn params_per_layer(&self) -> u64 {
+        let kv_dim = self.attention.kv_heads(self.heads) * self.d_head();
+        2 * self.d_model * self.d_model
+            + 2 * self.d_model * kv_dim
+            + self.moe_experts * 2 * self.d_model * self.d_ff
+            + 4 * self.d_model
+    }
+
+    /// Total parameters in the layer stack (embeddings excluded; <2% for
+    /// GPT-3-scale models, per the paper).
+    pub fn params_total(&self) -> u64 {
+        self.layers * self.params_per_layer()
+    }
+
+    /// Bytes of model weights for `layers_resident` layers at the model
+    /// dtype.
+    pub fn param_bytes(&self, layers_resident: u64) -> u64 {
+        layers_resident * self.params_per_layer() * self.dtype.bytes()
+    }
+
+    /// KV-cache bytes per token per layer: K and V of size
+    /// `kv_heads · d_head` each — MQA/GQA shrink this by the head-sharing
+    /// factor, which is exactly their serving appeal.
+    pub fn kv_bytes_per_token_per_layer(&self) -> u64 {
+        let kv_dim = self.attention.kv_heads(self.heads) * self.d_head();
+        2 * kv_dim * self.dtype.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt3_parameter_count() {
+        let m = ModelConfig::gpt3_175b();
+        // 96 · 12·12288² ≈ 174B (embeddings excluded).
+        let params = m.params_total() as f64;
+        assert!(
+            (params - 174e9).abs() / 174e9 < 0.01,
+            "gpt3 params {params:.3e}"
+        );
+        assert_eq!(m.d_head(), 128);
+    }
+
+    #[test]
+    fn gpt_small_is_about_117m() {
+        let m = ModelConfig::gpt_small();
+        let params = m.params_total() as f64;
+        // layer stack ≈ 85M; embeddings (excluded) add ~38M more.
+        assert!(params > 80e6 && params < 90e6, "{params:.3e}");
+    }
+
+    #[test]
+    fn kv_cache_sizing() {
+        let m = ModelConfig::gpt3_175b();
+        // GPT-3 KV: 2·12288·2 B = 48 KiB per token per layer;
+        // ×96 layers = 4.5 MiB per token.
+        assert_eq!(m.kv_bytes_per_token_per_layer(), 49152);
+        let per_token_all_layers = m.kv_bytes_per_token_per_layer() * m.layers;
+        assert_eq!(per_token_all_layers, 4718592);
+    }
+
+    #[test]
+    fn five_a100_needed_for_gpt3_params() {
+        // Paper §I: "a minimum of five NVIDIA A100s solely to accommodate
+        // the model parameters (in half precision)".
+        let m = ModelConfig::gpt3_175b();
+        let bytes = m.param_bytes(m.layers) as f64;
+        let per_a100 = 80e9;
+        let needed = (bytes / per_a100).ceil() as u64;
+        assert_eq!(needed, 5);
+    }
+}

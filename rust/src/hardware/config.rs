@@ -1,0 +1,81 @@
+//! Load / save hardware descriptions as JSON files.
+//!
+//! `resolve` accepts either a preset name (`a100`, `ga100x8`, `design-C`)
+//! or a path to a JSON file produced by [`save_system`] / hand-written; the
+//! calibration harness writes `hardware/cpu.json` this way.
+
+use super::{presets, SystemSpec};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Resolve a system spec from a preset name or a JSON file path.
+pub fn resolve(name_or_path: &str) -> Result<SystemSpec, String> {
+    if let Some(sys) = presets::system(name_or_path) {
+        return Ok(sys);
+    }
+    let p = Path::new(name_or_path);
+    if p.exists() {
+        return load_system(p);
+    }
+    Err(format!(
+        "unknown hardware `{name_or_path}` (not a preset — see `hardware --list` — and not a file)"
+    ))
+}
+
+/// Load a `SystemSpec` from a JSON file. The file may contain either a full
+/// system object (with `device` / `device_count`) or a bare device object
+/// (interpreted as a single-device system).
+pub fn load_system(path: &Path) -> Result<SystemSpec, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    if v.get("device").is_some() {
+        SystemSpec::from_json(&v)
+    } else {
+        super::DeviceSpec::from_json(&v).map(SystemSpec::single)
+    }
+    .map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Save a `SystemSpec` to a pretty-printed JSON file.
+pub fn save_system(sys: &SystemSpec, path: &Path) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    }
+    std::fs::write(path, sys.to_json().to_string_pretty()).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_preset() {
+        assert_eq!(resolve("a100x4").unwrap().device_count, 4);
+        assert!(resolve("not-a-thing").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let sys = presets::system("mi210").unwrap();
+        let dir = std::env::temp_dir().join("llmcompass-test-config");
+        let path = dir.join("mi210.json");
+        save_system(&sys, &path).unwrap();
+        let loaded = resolve(path.to_str().unwrap()).unwrap();
+        assert_eq!(sys, loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bare_device_file_becomes_single_system() {
+        let dev = presets::a100();
+        let dir = std::env::temp_dir().join("llmcompass-test-config2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dev.json");
+        std::fs::write(&path, dev.to_json().to_string_pretty()).unwrap();
+        let sys = load_system(&path).unwrap();
+        assert_eq!(sys.device_count, 1);
+        assert_eq!(sys.device, dev);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,412 @@
+//! The hardware description template (paper §III-A, Fig. 3).
+//!
+//! A **system** is multiple **devices** on a device-device interconnect.
+//! Each device has cores + a shared global buffer + off-chip main memory.
+//! Each **core** has lanes sharing a local buffer; each **lane** has its own
+//! vector unit, systolic array, registers, and control.
+//!
+//! LLMCompass does not distinguish cache from scratchpad — buffers are
+//! explicitly managed by the mapper. Main memory may be HBM, DDR, or CXL;
+//! all are described by `(bandwidth, capacity, protocol)`.
+
+pub mod presets;
+pub mod config;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Numeric data type of a tensor / operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    FP32,
+    FP16,
+    BF16,
+    INT8,
+}
+
+impl DType {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::FP32 => 4,
+            DType::FP16 | DType::BF16 => 2,
+            DType::INT8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::FP32 => "fp32",
+            DType::FP16 => "fp16",
+            DType::BF16 => "bf16",
+            DType::INT8 => "int8",
+        }
+    }
+
+    pub fn parse(v: &str) -> Option<DType> {
+        match v {
+            "fp32" | "f32" => Some(DType::FP32),
+            "fp16" | "f16" => Some(DType::FP16),
+            "bf16" => Some(DType::BF16),
+            "int8" | "i8" => Some(DType::INT8),
+            _ => None,
+        }
+    }
+}
+
+/// Main-memory technology; drives the cost model and PHY area.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemProtocol {
+    HBM2E,
+    DDR5,
+    /// DRAM behind PCIe 5.0 / CXL channels (the throughput-oriented design).
+    PCIE5CXL,
+    /// Host DRAM as seen by the calibrated CPU device.
+    HostDRAM,
+}
+
+impl MemProtocol {
+    pub fn name(self) -> &'static str {
+        match self {
+            MemProtocol::HBM2E => "HBM2E",
+            MemProtocol::DDR5 => "DDR5",
+            MemProtocol::PCIE5CXL => "PCIe5.0/CXL",
+            MemProtocol::HostDRAM => "HostDRAM",
+        }
+    }
+
+    pub fn parse(v: &str) -> Option<MemProtocol> {
+        match v {
+            "HBM2E" | "hbm2e" => Some(MemProtocol::HBM2E),
+            "DDR5" | "ddr5" => Some(MemProtocol::DDR5),
+            "PCIe5.0/CXL" | "pcie5" | "cxl" => Some(MemProtocol::PCIE5CXL),
+            "HostDRAM" | "host" => Some(MemProtocol::HostDRAM),
+            _ => None,
+        }
+    }
+}
+
+/// One lane: vector unit + systolic array + registers + control logic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneSpec {
+    /// FP32 SIMD lanes of the vector unit (FLOPs/cycle = 2× this, FMA).
+    pub vector_width: u64,
+    /// Systolic array height (rows of PEs).
+    pub systolic_rows: u64,
+    /// Systolic array width (columns of PEs).
+    pub systolic_cols: u64,
+    /// Number of systolic arrays per lane (TPUv3 has 2 MXUs per core).
+    pub systolic_count: u64,
+    /// Register file per lane, bytes.
+    pub register_bytes: u64,
+}
+
+impl LaneSpec {
+    /// Peak MACs/cycle from the systolic array(s).
+    pub fn systolic_macs_per_cycle(&self) -> u64 {
+        self.systolic_rows * self.systolic_cols * self.systolic_count
+    }
+
+    /// Peak vector FLOPs/cycle. One FLOP per SIMD lane per cycle — this is
+    /// the convention under which Table I's A100 row (width 32 × 4 lanes ×
+    /// 108 cores @ 1.41 GHz) reproduces the datasheet 19.5 TFLOPS FP32.
+    pub fn vector_flops_per_cycle(&self) -> u64 {
+        self.vector_width
+    }
+}
+
+/// One core: multiple lanes sharing a local buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreSpec {
+    pub lane_count: u64,
+    pub lane: LaneSpec,
+    /// Local buffer (L1/shared-memory class) bytes.
+    pub local_buffer_bytes: u64,
+    /// Local buffer bandwidth, bytes per clock (all lanes combined).
+    pub local_buffer_bytes_per_clk: u64,
+}
+
+impl CoreSpec {
+    pub fn systolic_macs_per_cycle(&self) -> u64 {
+        self.lane_count * self.lane.systolic_macs_per_cycle()
+    }
+
+    pub fn vector_flops_per_cycle(&self) -> u64 {
+        self.lane_count * self.lane.vector_flops_per_cycle()
+    }
+}
+
+/// Off-chip main memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemorySpec {
+    /// Sustained bandwidth, bytes/second.
+    pub bandwidth_bytes_per_s: f64,
+    /// Capacity in bytes.
+    pub capacity_bytes: u64,
+    pub protocol: MemProtocol,
+}
+
+/// One device (GPU / TPU core / accelerator die).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Core clock, Hz.
+    pub frequency_hz: f64,
+    pub core_count: u64,
+    pub core: CoreSpec,
+    /// Global buffer (L2-class) bytes.
+    pub global_buffer_bytes: u64,
+    /// Global buffer bandwidth, bytes per clock (device-wide).
+    pub global_buffer_bytes_per_clk: u64,
+    pub memory: MemorySpec,
+    /// Kernel launch + framework overhead per operator launch, seconds.
+    pub launch_overhead_s: f64,
+}
+
+impl DeviceSpec {
+    /// Peak systolic (matrix) throughput in FLOP/s (1 MAC = 2 FLOPs).
+    pub fn peak_matrix_flops(&self) -> f64 {
+        2.0 * self.core_count as f64
+            * self.core.systolic_macs_per_cycle() as f64
+            * self.frequency_hz
+    }
+
+    /// Peak vector throughput in FLOP/s.
+    pub fn peak_vector_flops(&self) -> f64 {
+        self.core_count as f64 * self.core.vector_flops_per_cycle() as f64 * self.frequency_hz
+    }
+
+    /// Global buffer bandwidth in bytes/s.
+    pub fn global_buffer_bw(&self) -> f64 {
+        self.global_buffer_bytes_per_clk as f64 * self.frequency_hz
+    }
+
+    /// Local buffer bandwidth in bytes/s (per core).
+    pub fn local_buffer_bw(&self) -> f64 {
+        self.core.local_buffer_bytes_per_clk as f64 * self.frequency_hz
+    }
+
+    /// Total on-chip SRAM (local buffers + global buffer), bytes.
+    pub fn total_sram_bytes(&self) -> u64 {
+        self.core_count * self.core.local_buffer_bytes + self.global_buffer_bytes
+    }
+
+    /// Machine-balance arithmetic intensity (FLOP/byte) at which the device
+    /// transitions from memory- to compute-bound.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_matrix_flops() / self.memory.bandwidth_bytes_per_s
+    }
+
+    /// A cheap structural fingerprint, used to key simulation caches so
+    /// that two descriptions differing only in parameters (same `name`)
+    /// never alias.
+    pub fn fingerprint(&self) -> u64 {
+        let repr = format!("{self:?}");
+        let mut h = 0xcbf29ce484222325u64;
+        for b in repr.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// Device-device interconnect (NVLink / Infinity Link class).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterconnectSpec {
+    /// Per-direction link bandwidth, bytes/second.
+    pub link_bandwidth_bytes_per_s: f64,
+    /// Link latency `L`, seconds (Eq. 1).
+    pub link_latency_s: f64,
+    /// Per-transfer software/protocol overhead `O`, seconds (Eq. 1).
+    pub overhead_s: f64,
+    /// Flit size in bytes (Eq. 2; 16 B for NVLink).
+    pub flit_bytes: u64,
+    /// Max payload per packet in bytes (Eq. 2; 256 B for NVLink).
+    pub max_payload_bytes: u64,
+}
+
+impl InterconnectSpec {
+    /// NVLink-style defaults for a given per-direction bandwidth.
+    pub fn nvlink_like(bandwidth_bytes_per_s: f64) -> Self {
+        InterconnectSpec {
+            link_bandwidth_bytes_per_s: bandwidth_bytes_per_s,
+            link_latency_s: 1.0e-6,
+            overhead_s: 1.5e-6,
+            flit_bytes: 16,
+            max_payload_bytes: 256,
+        }
+    }
+}
+
+/// A full system: `device_count` identical devices, fully connected.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemSpec {
+    pub device: DeviceSpec,
+    pub device_count: u64,
+    pub interconnect: InterconnectSpec,
+}
+
+impl SystemSpec {
+    pub fn single(device: DeviceSpec) -> Self {
+        SystemSpec {
+            device,
+            device_count: 1,
+            interconnect: InterconnectSpec::nvlink_like(600e9),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization
+// ---------------------------------------------------------------------------
+
+impl DeviceSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("frequency_mhz", num(self.frequency_hz / 1e6)),
+            ("core_count", num(self.core_count as f64)),
+            ("lane_count", num(self.core.lane_count as f64)),
+            ("vector_width", num(self.core.lane.vector_width as f64)),
+            ("systolic_rows", num(self.core.lane.systolic_rows as f64)),
+            ("systolic_cols", num(self.core.lane.systolic_cols as f64)),
+            ("systolic_count", num(self.core.lane.systolic_count as f64)),
+            ("register_kb", num(self.core.lane.register_bytes as f64 / 1024.0)),
+            ("local_buffer_kb", num(self.core.local_buffer_bytes as f64 / 1024.0)),
+            (
+                "local_buffer_bytes_per_clk",
+                num(self.core.local_buffer_bytes_per_clk as f64),
+            ),
+            ("global_buffer_mb", num(self.global_buffer_bytes as f64 / (1024.0 * 1024.0))),
+            ("global_buffer_bytes_per_clk", num(self.global_buffer_bytes_per_clk as f64)),
+            ("memory_bandwidth_gbs", num(self.memory.bandwidth_bytes_per_s / 1e9)),
+            ("memory_capacity_gb", num(self.memory.capacity_bytes as f64 / 1e9)),
+            ("memory_protocol", s(self.memory.protocol.name())),
+            ("launch_overhead_us", num(self.launch_overhead_s * 1e6)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<DeviceSpec, String> {
+        let e = |x: crate::util::json::JsonError| x.msg;
+        Ok(DeviceSpec {
+            name: v.req_str("name").map_err(e)?.to_string(),
+            frequency_hz: v.req_f64("frequency_mhz").map_err(e)? * 1e6,
+            core_count: v.req_u64("core_count").map_err(e)?,
+            core: CoreSpec {
+                lane_count: v.req_u64("lane_count").map_err(e)?,
+                lane: LaneSpec {
+                    vector_width: v.req_u64("vector_width").map_err(e)?,
+                    systolic_rows: v.req_u64("systolic_rows").map_err(e)?,
+                    systolic_cols: v.req_u64("systolic_cols").map_err(e)?,
+                    systolic_count: v.opt_f64("systolic_count", 1.0) as u64,
+                    register_bytes: (v.opt_f64("register_kb", 256.0) * 1024.0) as u64,
+                },
+                local_buffer_bytes: (v.req_f64("local_buffer_kb").map_err(e)? * 1024.0) as u64,
+                local_buffer_bytes_per_clk: v.opt_f64("local_buffer_bytes_per_clk", 128.0) as u64,
+            },
+            global_buffer_bytes: (v.req_f64("global_buffer_mb").map_err(e)? * 1024.0 * 1024.0)
+                as u64,
+            global_buffer_bytes_per_clk: v.req_u64("global_buffer_bytes_per_clk").map_err(e)?,
+            memory: MemorySpec {
+                bandwidth_bytes_per_s: v.req_f64("memory_bandwidth_gbs").map_err(e)? * 1e9,
+                capacity_bytes: (v.req_f64("memory_capacity_gb").map_err(e)? * 1e9) as u64,
+                protocol: MemProtocol::parse(v.req_str("memory_protocol").map_err(e)?)
+                    .ok_or_else(|| "unknown memory_protocol".to_string())?,
+            },
+            launch_overhead_s: v.opt_f64("launch_overhead_us", 4.0) * 1e-6,
+        })
+    }
+}
+
+impl SystemSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("device", self.device.to_json()),
+            ("device_count", num(self.device_count as f64)),
+            (
+                "interconnect",
+                obj(vec![
+                    (
+                        "link_bandwidth_gbs",
+                        num(self.interconnect.link_bandwidth_bytes_per_s / 1e9),
+                    ),
+                    ("link_latency_us", num(self.interconnect.link_latency_s * 1e6)),
+                    ("overhead_us", num(self.interconnect.overhead_s * 1e6)),
+                    ("flit_bytes", num(self.interconnect.flit_bytes as f64)),
+                    ("max_payload_bytes", num(self.interconnect.max_payload_bytes as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SystemSpec, String> {
+        let e = |x: crate::util::json::JsonError| x.msg;
+        let dev = v.get("device").ok_or("missing `device`")?;
+        let ic = v.get("interconnect").ok_or("missing `interconnect`")?;
+        Ok(SystemSpec {
+            device: DeviceSpec::from_json(dev)?,
+            device_count: v.req_u64("device_count").map_err(e)?,
+            interconnect: InterconnectSpec {
+                link_bandwidth_bytes_per_s: ic.req_f64("link_bandwidth_gbs").map_err(e)? * 1e9,
+                link_latency_s: ic.opt_f64("link_latency_us", 1.0) * 1e-6,
+                overhead_s: ic.opt_f64("overhead_us", 1.5) * 1e-6,
+                flit_bytes: ic.opt_f64("flit_bytes", 16.0) as u64,
+                max_payload_bytes: ic.opt_f64("max_payload_bytes", 256.0) as u64,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use presets::a100;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::FP32.bytes(), 4);
+        assert_eq!(DType::FP16.bytes(), 2);
+        assert_eq!(DType::BF16.bytes(), 2);
+        assert_eq!(DType::INT8.bytes(), 1);
+        assert_eq!(DType::parse("bf16"), Some(DType::BF16));
+        assert_eq!(DType::parse("nope"), None);
+    }
+
+    #[test]
+    fn a100_peak_numbers_match_datasheet() {
+        let d = a100();
+        // FP16 tensor core peak: 312 TFLOPS (dense).
+        let tf = d.peak_matrix_flops() / 1e12;
+        assert!((tf - 312.0).abs() / 312.0 < 0.01, "matrix peak {tf} TFLOPS");
+        // FP32 CUDA-core peak: 19.5 TFLOPS.
+        let vf = d.peak_vector_flops() / 1e12;
+        assert!((vf - 19.5).abs() / 19.5 < 0.01, "vector peak {vf} TFLOPS");
+        // L2 bandwidth ~7 TB/s.
+        assert!(d.global_buffer_bw() > 6e12);
+        // Ridge point ≈ 312e12/2e12 ≈ 156 FLOP/B.
+        assert!((d.ridge_point() - 156.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn json_roundtrip_device() {
+        let d = a100();
+        let j = d.to_json();
+        let d2 = DeviceSpec::from_json(&j).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn json_roundtrip_system() {
+        let sys = presets::system("a100x4").unwrap();
+        let j = sys.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let sys2 = SystemSpec::from_json(&parsed).unwrap();
+        assert_eq!(sys, sys2);
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        let err = DeviceSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("frequency_mhz"), "got: {err}");
+    }
+}

@@ -1,0 +1,292 @@
+//! Hardware presets: the three validated commercial devices of Table I, the
+//! five compute-system designs of Table III, and the latency-/throughput-
+//! oriented proposals of Table IV.
+
+use super::*;
+
+/// NVIDIA A100 SXM4 80 GB (Table I, col 1).
+///
+/// 108 SMs × 4 processing blocks (lanes) × {32-wide FP32 SIMD + one tensor
+/// core modeled as a 16×16 systolic array} @ 1410 MHz; 192 KB unified
+/// L1/shared per SM; 40 MB L2 at 5120 B/clk; 80 GB HBM2e at 2 TB/s.
+pub fn a100() -> DeviceSpec {
+    DeviceSpec {
+        name: "a100".into(),
+        frequency_hz: 1410e6,
+        core_count: 108,
+        core: CoreSpec {
+            lane_count: 4,
+            lane: LaneSpec {
+                vector_width: 32,
+                systolic_rows: 16,
+                systolic_cols: 16,
+                systolic_count: 1,
+                register_bytes: 64 * 1024, // 256 KB RF per SM / 4 lanes
+            },
+            local_buffer_bytes: 192 * 1024,
+            local_buffer_bytes_per_clk: 128,
+        },
+        global_buffer_bytes: 40 * 1024 * 1024,
+        global_buffer_bytes_per_clk: 5120,
+        memory: MemorySpec {
+            bandwidth_bytes_per_s: 2.0e12,
+            capacity_bytes: 80_000_000_000,
+            protocol: MemProtocol::HBM2E,
+        },
+        launch_overhead_s: 4.0e-6,
+    }
+}
+
+/// AMD MI210 (Table I, col 2). 104 CUs @ 1700 MHz; matrix cores modeled as
+/// 16×16 systolic arrays; 64 GB HBM2e at 1.6 TB/s.
+pub fn mi210() -> DeviceSpec {
+    DeviceSpec {
+        name: "mi210".into(),
+        frequency_hz: 1700e6,
+        core_count: 104,
+        core: CoreSpec {
+            lane_count: 4,
+            lane: LaneSpec {
+                vector_width: 16,
+                systolic_rows: 16,
+                systolic_cols: 16,
+                systolic_count: 1,
+                register_bytes: 64 * 1024,
+            },
+            local_buffer_bytes: 80 * 1024,
+            local_buffer_bytes_per_clk: 128,
+        },
+        global_buffer_bytes: 8 * 1024 * 1024,
+        global_buffer_bytes_per_clk: 4096,
+        memory: MemorySpec {
+            bandwidth_bytes_per_s: 1.6e12,
+            capacity_bytes: 64_000_000_000,
+            protocol: MemProtocol::HBM2E,
+        },
+        launch_overhead_s: 6.0e-6,
+    }
+}
+
+/// One Google TPUv3 core (Table I, col 3; each chip has two cores).
+///
+/// The paper folds TPUv3's HBM into the *global buffer* row (16384 MB at
+/// 490 B/clk ≈ 460 GB/s per core) and leaves main-memory rows empty; we
+/// model it the same way: global buffer = HBM, and `memory` mirrors the
+/// same HBM so capacity checks still work.
+pub fn tpuv3() -> DeviceSpec {
+    DeviceSpec {
+        name: "tpuv3".into(),
+        frequency_hz: 940e6,
+        core_count: 2,
+        core: CoreSpec {
+            lane_count: 1,
+            lane: LaneSpec {
+                vector_width: 4 * 128,
+                systolic_rows: 128,
+                systolic_cols: 128,
+                systolic_count: 2, // two MXUs per core
+                register_bytes: 512 * 1024,
+            },
+            local_buffer_bytes: 8192 * 1024,
+            local_buffer_bytes_per_clk: 512,
+        },
+        global_buffer_bytes: 16384 * 1024 * 1024,
+        global_buffer_bytes_per_clk: 490,
+        memory: MemorySpec {
+            bandwidth_bytes_per_s: 490.0 * 940e6,
+            capacity_bytes: 16_384 * 1024 * 1024,
+            protocol: MemProtocol::HBM2E,
+        },
+        launch_overhead_s: 12.0e-6,
+    }
+}
+
+/// Full NVIDIA GA100 die (the baseline of Table IV): all 128 SMs enabled
+/// and the full 48 MB L2 (A100 products bin to 108 SMs / 40 MB).
+pub fn ga100() -> DeviceSpec {
+    let mut d = a100();
+    d.name = "ga100".into();
+    d.core_count = 128;
+    d.global_buffer_bytes = 48 * 1024 * 1024;
+    d
+}
+
+/// Table III: five compute-system designs A–E. B–E hold total systolic MACs
+/// and total buffer constant while trading core count against core size; A
+/// has a quarter of the compute.
+pub fn design(letter: char) -> Option<DeviceSpec> {
+    let (cores, lanes, vw, sys, local_kb) = match letter.to_ascii_uppercase() {
+        'A' => (128u64, 4u64, 8u64, 8u64, 192u64),
+        'B' => (128, 4, 32, 16, 192),
+        'C' => (128, 1, 128, 32, 192),
+        'D' => (32, 1, 512, 64, 768),
+        'E' => (8, 1, 2048, 128, 3072),
+        _ => return None,
+    };
+    let mut d = ga100();
+    d.name = format!("design-{}", letter.to_ascii_uppercase());
+    d.core_count = cores;
+    d.core.lane_count = lanes;
+    d.core.lane.vector_width = vw;
+    d.core.lane.systolic_rows = sys;
+    d.core.lane.systolic_cols = sys;
+    // Register file size scales with vector width (paper §IV-B).
+    d.core.lane.register_bytes = 64 * 1024 * vw.max(8) / 32;
+    d.core.local_buffer_bytes = local_kb * 1024;
+    Some(d)
+}
+
+/// Table IV latency-oriented design: half the cores and half the L2 of a
+/// GA100, same HBM2e memory system.
+pub fn latency_oriented() -> DeviceSpec {
+    let mut d = ga100();
+    d.name = "latency-oriented".into();
+    d.core_count = 64;
+    d.global_buffer_bytes = 24 * 1024 * 1024;
+    d.global_buffer_bytes_per_clk = 2560;
+    d
+}
+
+/// Table IV throughput-oriented design: 64 cores with 32×32 systolic arrays
+/// and 768 KB local buffers; 512 GB DRAM behind 256 PCIe 5.0 channels at an
+/// aggregate 1 TB/s.
+pub fn throughput_oriented() -> DeviceSpec {
+    let mut d = ga100();
+    d.name = "throughput-oriented".into();
+    d.core_count = 64;
+    d.core.lane.systolic_rows = 32;
+    d.core.lane.systolic_cols = 32;
+    d.core.local_buffer_bytes = 768 * 1024;
+    d.global_buffer_bytes = 48 * 1024 * 1024;
+    d.global_buffer_bytes_per_clk = 5120;
+    d.memory = MemorySpec {
+        bandwidth_bytes_per_s: 1.0e12,
+        capacity_bytes: 512_000_000_000,
+        protocol: MemProtocol::PCIE5CXL,
+    };
+    d
+}
+
+/// Look up a device preset by name.
+pub fn device(name: &str) -> Option<DeviceSpec> {
+    match name {
+        "a100" => Some(a100()),
+        "mi210" => Some(mi210()),
+        "tpuv3" => Some(tpuv3()),
+        "ga100" => Some(ga100()),
+        "latency" | "latency-oriented" => Some(latency_oriented()),
+        "throughput" | "throughput-oriented" => Some(throughput_oriented()),
+        _ => {
+            if let Some(rest) = name.strip_prefix("design-") {
+                rest.chars().next().and_then(design)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Look up a system preset: `<device>x<count>` (e.g. `a100x4`, `ga100x8`),
+/// or a bare device name for a single-device system.
+pub fn system(name: &str) -> Option<SystemSpec> {
+    if let Some((dev_name, count)) = name.rsplit_once('x') {
+        if let (Some(dev), Ok(n)) = (device(dev_name), count.parse::<u64>()) {
+            let link_bw = match dev_name {
+                "mi210" => 300e9,
+                "tpuv3" => 162.5e9,
+                _ => 600e9,
+            };
+            return Some(SystemSpec {
+                device: dev,
+                device_count: n,
+                interconnect: InterconnectSpec::nvlink_like(link_bw),
+            });
+        }
+    }
+    device(name).map(SystemSpec::single)
+}
+
+/// All preset names (for `--list` and exhaustive tests).
+pub fn all_device_names() -> Vec<&'static str> {
+    vec![
+        "a100",
+        "mi210",
+        "tpuv3",
+        "ga100",
+        "design-A",
+        "design-B",
+        "design-C",
+        "design-D",
+        "design-E",
+        "latency-oriented",
+        "throughput-oriented",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in all_device_names() {
+            let d = device(name).unwrap_or_else(|| panic!("missing preset {name}"));
+            assert!(d.frequency_hz > 0.0);
+            assert!(d.core_count > 0);
+            assert!(d.memory.bandwidth_bytes_per_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn table3_designs_hold_compute_constant() {
+        // B–E: same total systolic MACs/cycle and same total local buffer.
+        let b = design('B').unwrap();
+        let total_macs =
+            |d: &DeviceSpec| d.core_count * d.core.systolic_macs_per_cycle();
+        let total_buf = |d: &DeviceSpec| d.core_count * d.core.local_buffer_bytes;
+        for l in ['C', 'D', 'E'] {
+            let d = design(l).unwrap();
+            assert_eq!(total_macs(&d), total_macs(&b), "design {l} MACs");
+            assert_eq!(total_buf(&d), total_buf(&b), "design {l} buffer");
+        }
+        // A has a quarter of B's compute.
+        let a = design('A').unwrap();
+        assert_eq!(total_macs(&a) * 4, total_macs(&b));
+        assert!(design('F').is_none());
+    }
+
+    #[test]
+    fn tpuv3_peak_bf16() {
+        // One TPUv3 chip (2 cores): ~123 TFLOPS BF16.
+        let d = tpuv3();
+        let tf = d.peak_matrix_flops() / 1e12;
+        assert!((tf - 123.2).abs() / 123.2 < 0.02, "tpuv3 {tf} TFLOPS");
+    }
+
+    #[test]
+    fn table4_designs() {
+        let lat = latency_oriented();
+        assert_eq!(lat.core_count, 64);
+        assert_eq!(lat.memory.protocol, MemProtocol::HBM2E);
+        let thr = throughput_oriented();
+        assert_eq!(thr.memory.capacity_bytes, 512_000_000_000);
+        assert_eq!(thr.memory.protocol, MemProtocol::PCIE5CXL);
+        // Throughput design quadruples per-core systolic capability vs GA100.
+        assert_eq!(
+            thr.core.lane.systolic_rows * thr.core.lane.systolic_cols,
+            4 * 16 * 16
+        );
+    }
+
+    #[test]
+    fn system_lookup() {
+        let sys = system("a100x4").unwrap();
+        assert_eq!(sys.device_count, 4);
+        assert_eq!(sys.interconnect.link_bandwidth_bytes_per_s, 600e9);
+        let sys = system("mi210x2").unwrap();
+        assert_eq!(sys.interconnect.link_bandwidth_bytes_per_s, 300e9);
+        let sys = system("ga100").unwrap();
+        assert_eq!(sys.device_count, 1);
+        assert!(system("bogusx4").is_none());
+    }
+}

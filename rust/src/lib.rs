@@ -1,0 +1,46 @@
+//! # LLMCompass — a hardware evaluation framework for LLM inference
+//!
+//! Reproduction of *"A Hardware Evaluation Framework for Large Language
+//! Model Inference"* (Zhang, Ning, Prabhakar, Wentzlaff; Princeton, 2023).
+//!
+//! LLMCompass evaluates the performance, area, and cost of parameterized
+//! hardware designs running Transformer inference workloads. The crate is
+//! organized as:
+//!
+//! * [`hardware`] — the hardware description template (system → device →
+//!   core → lane) and presets for real devices (A100, MI210, TPUv3) and the
+//!   paper's proposed designs.
+//! * [`arch`] — low-level architectural timing models: systolic array
+//!   (SCALE-Sim style), vector unit, and LogGP-style links.
+//! * [`perf`] — the operator performance model: tile-by-tile matmul
+//!   simulation with a mapping/scheduling parameter search (the *mapper*),
+//!   vector-op models (softmax/layernorm/GELU), and communication
+//!   primitives (ring all-reduce, peer-to-peer).
+//! * [`graph`] — Transformer computational graphs (prefill/decode, tensor &
+//!   pipeline parallelism) and end-to-end latency/throughput simulation.
+//! * [`area`] / [`cost`] — the area model (component transistor counts,
+//!   SRAM, PHYs) and the cost model (wafer economics, memory prices,
+//!   performance/cost).
+//! * [`runtime`] / [`calibrate`] / [`coordinator`] — the executable side:
+//!   load AOT-compiled JAX/Pallas artifacts via PJRT, time them, calibrate
+//!   a CPU device description, and serve batched inference end-to-end.
+//! * [`experiments`] — regenerators for every table and figure in the
+//!   paper's evaluation section.
+//! * [`util`] — self-contained substrates (JSON, CLI, tables, PRNG, thread
+//!   pool, property testing, stats) — the offline build environment has no
+//!   serde/clap/criterion/proptest, so these are built from scratch.
+
+pub mod util;
+pub mod hardware;
+pub mod arch;
+pub mod perf;
+pub mod graph;
+pub mod area;
+pub mod cost;
+pub mod runtime;
+pub mod calibrate;
+pub mod coordinator;
+pub mod experiments;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,406 @@
+//! `llmcompass` — CLI for the LLMCompass hardware evaluation framework.
+//!
+//! Subcommands:
+//! * `hardware`   — list / show hardware descriptions (Table I presets,
+//!   Table III designs, Table IV proposals, JSON files)
+//! * `simulate`   — simulate one operator or a Transformer layer/request
+//! * `area`       — die area breakdown (Fig. 6) and Table II parameters
+//! * `cost`       — die + memory cost (Table IV economics)
+//! * `experiment` — regenerate a paper table/figure (`--list` for ids)
+//! * `calibrate`  — measure AOT artifacts, fit the CPU device description
+//! * `serve`      — run the batched-serving coordinator on a synthetic
+//!   trace through PJRT (the end-to-end request path)
+
+use llmcompass::experiments::{self, Ctx};
+use llmcompass::graph::layer::Phase;
+use llmcompass::graph::{inference::Simulator, ModelConfig};
+use llmcompass::hardware::{config, presets, DType};
+use llmcompass::util::cli::Command;
+use llmcompass::util::table::Table;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "hardware" => cmd_hardware(rest),
+        "simulate" => cmd_simulate(rest),
+        "area" => cmd_area(rest),
+        "cost" => cmd_cost(rest),
+        "experiment" => cmd_experiment(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "serve" => cmd_serve(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "llmcompass {} — hardware evaluation framework for LLM inference\n\n\
+         usage: llmcompass <command> [options]\n\n\
+         commands:\n\
+         \x20 hardware    list/show hardware descriptions\n\
+         \x20 simulate    simulate an operator or a transformer layer\n\
+         \x20 area        die area breakdown\n\
+         \x20 cost        die + memory cost\n\
+         \x20 experiment  regenerate a paper table/figure\n\
+         \x20 calibrate   fit a CPU device description from AOT artifacts\n\
+         \x20 serve       run the batched serving coordinator (PJRT)\n\n\
+         run `llmcompass <command> --help` for options",
+        llmcompass::VERSION
+    );
+}
+
+type R = Result<(), String>;
+
+fn err<E: std::fmt::Display>(e: E) -> String {
+    format!("error: {e}")
+}
+
+fn cmd_hardware(raw: &[String]) -> R {
+    let cmd = Command::new("hardware", "list or show hardware descriptions")
+        .opt("show", None, "preset name or JSON path to display")
+        .opt("save", None, "write the shown system to a JSON file")
+        .flag("list", "list all presets (Table I / III / IV)");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    if a.flag("list") || a.get("show").is_none() {
+        let mut t = Table::new(&["name", "cores", "systolic", "mem BW", "capacity", "protocol"])
+            .with_title("hardware presets (Table I devices, Table III designs, Table IV proposals)");
+        for name in presets::all_device_names() {
+            let d = presets::device(name).unwrap();
+            t.row(vec![
+                name.to_string(),
+                d.core_count.to_string(),
+                format!(
+                    "{}x{}x{}",
+                    d.core.lane_count, d.core.lane.systolic_rows, d.core.lane.systolic_cols
+                ),
+                format!("{:.1} TB/s", d.memory.bandwidth_bytes_per_s / 1e12),
+                format!("{:.0} GB", d.memory.capacity_bytes as f64 / 1e9),
+                d.memory.protocol.name().to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        println!("systems: `<name>x<count>` (e.g. a100x4, ga100x8); files: any JSON path");
+        return Ok(());
+    }
+    let name = a.get("show").unwrap();
+    let sys = config::resolve(name)?;
+    println!("{}", sys.to_json().to_string_pretty());
+    if let Some(path) = a.get("save") {
+        config::save_system(&sys, std::path::Path::new(path))?;
+        println!("saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(raw: &[String]) -> R {
+    let cmd = Command::new("simulate", "simulate an operator or transformer workload")
+        .opt("hardware", Some("a100x4"), "system preset or JSON path")
+        .opt("op", None, "operator: matmul MxKxN | softmax MxN | layernorm MxN | gelu N")
+        .opt("phase", Some("prefill"), "layer phase: prefill | decode | e2e")
+        .opt("model", Some("gpt3-175b"), "model: gpt3-175b | gpt-small")
+        .opt("batch", Some("8"), "batch size")
+        .opt("seq", Some("2048"), "input sequence length")
+        .opt("out-tokens", Some("1024"), "output tokens (decode kv offset / e2e length)")
+        .opt("layers", None, "layer count (default: whole model)")
+        .opt("dtype", Some("fp16"), "fp32 | fp16 | bf16 | int8");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    let sys = config::resolve(a.get_or("hardware", "a100x4"))?;
+    let sim = Simulator::new();
+    let dtype = DType::parse(a.get_or("dtype", "fp16")).ok_or("bad --dtype")?;
+
+    if let Some(op_spec) = a.get("op") {
+        let dims: Vec<u64> = a
+            .positional
+            .first()
+            .map(|d| d.split('x').filter_map(|v| v.parse().ok()).collect())
+            .unwrap_or_default();
+        let op = match (op_spec, dims.as_slice()) {
+            ("matmul", [m, k, n]) => llmcompass::perf::Op::Matmul {
+                b: 1,
+                m: *m,
+                k: *k,
+                n: *n,
+                dtype,
+                batched_b: false,
+            },
+            ("softmax", [m, n]) => llmcompass::perf::Op::Softmax { m: *m, n: *n, dtype },
+            ("layernorm", [m, n]) => llmcompass::perf::Op::LayerNorm { m: *m, n: *n, dtype },
+            ("gelu", [n]) => llmcompass::perf::Op::Gelu { elements: *n, dtype },
+            _ => return Err("usage: simulate --op matmul 256x12288x12288".into()),
+        };
+        let r = sim.op_latency(&sys, &op);
+        println!(
+            "{} on {}: {}  (compute bound {}, memory bound {}, roofline {:.1}%, {} mapper rounds)\n  mapping: {}",
+            op.name(),
+            sys.device.name,
+            llmcompass::util::fmt_seconds(r.latency_s),
+            llmcompass::util::fmt_seconds(r.compute_bound_s),
+            llmcompass::util::fmt_seconds(r.memory_bound_s),
+            r.roofline_fraction() * 100.0,
+            r.mapper_rounds,
+            r.mapping_desc
+        );
+        return Ok(());
+    }
+
+    let model = match a.get_or("model", "gpt3-175b") {
+        "gpt3-175b" => ModelConfig::gpt3_175b(),
+        "gpt-small" => ModelConfig::gpt_small(),
+        other => return Err(format!("unknown model `{other}`")),
+    };
+    let batch = a.get_u64("batch").map_err(|e| e.0)?.unwrap();
+    let seq = a.get_u64("seq").map_err(|e| e.0)?.unwrap();
+    let out_tokens = a.get_u64("out-tokens").map_err(|e| e.0)?.unwrap();
+    let layers = a.get_u64("layers").map_err(|e| e.0)?.unwrap_or(model.layers);
+    match a.get_or("phase", "prefill") {
+        "prefill" => {
+            let rep = sim.layer(&sys, &model, Phase::Prefill { batch, seq });
+            print_layer("prefill", &rep, layers);
+        }
+        "decode" => {
+            let rep = sim.layer(&sys, &model, Phase::Decode { batch, kv_len: seq + out_tokens });
+            print_layer("decode", &rep, layers);
+        }
+        "e2e" => {
+            let t = sim.e2e_latency(&sys, &model, batch, seq, out_tokens, layers);
+            println!(
+                "end-to-end {} layers, b={batch}, in={seq}, out={out_tokens}: {} \
+                 ({:.2} tok/s/request)",
+                layers,
+                llmcompass::util::fmt_seconds(t),
+                out_tokens as f64 / t
+            );
+        }
+        other => return Err(format!("unknown phase `{other}`")),
+    }
+    Ok(())
+}
+
+fn print_layer(phase: &str, rep: &llmcompass::graph::inference::LayerReport, layers: u64) {
+    let title = format!("{phase} latency per layer: {}", llmcompass::util::fmt_seconds(rep.total_s));
+    let mut t = Table::new(&["operator", "latency", "share %"]).with_title(&title);
+    for (name, s) in &rep.breakdown {
+        t.row(vec![
+            name.to_string(),
+            llmcompass::util::fmt_seconds(*s),
+            format!("{:.1}", s / rep.total_s * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "× {layers} layers = {}",
+        llmcompass::util::fmt_seconds(rep.total_s * layers as f64)
+    );
+}
+
+fn cmd_area(raw: &[String]) -> R {
+    let cmd = Command::new("area", "die area breakdown")
+        .opt("hardware", Some("ga100"), "device preset or JSON path")
+        .flag("params", "print the Table II component parameters");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    if a.flag("params") {
+        let p = llmcompass::area::AreaParams::default();
+        let mut t = Table::new(&["parameter", "7nm area (µm²)"])
+            .with_title("Table II — area model parameters");
+        for (k, v) in [
+            ("64-bit FPU", p.fp64_unit_um2),
+            ("32-bit FPU", p.fp32_unit_um2),
+            ("32-bit int ALU", p.int32_alu_um2),
+            ("FP16 systolic MAC", p.fp16_mac_um2),
+            ("per-lane overhead", p.lane_overhead_um2),
+            ("per-core overhead", p.core_overhead_um2),
+            ("1024-bit HBM2e control", p.hbm_ctrl_um2),
+            ("1024-bit HBM2e PHY", p.hbm_phy_um2),
+            ("PCIe 5.0 channel", p.pcie5_channel_um2),
+            ("NVLink-class link", p.nvlink_um2),
+        ] {
+            t.row(vec![k.to_string(), format!("{v:.0}")]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+    let sys = config::resolve(a.get_or("hardware", "ga100"))?;
+    let b = llmcompass::area::die_breakdown(
+        &llmcompass::area::AreaParams::default(),
+        &sys.device,
+        sys.interconnect.link_bandwidth_bytes_per_s,
+    );
+    let title = format!("die breakdown: {}", sys.device.name);
+    let mut t = Table::new(&["component", "mm²", "share %"]).with_title(&title);
+    for (name, v) in b.rows() {
+        t.row(vec![
+            name.to_string(),
+            format!("{v:.1}"),
+            format!("{:.1}", v / b.total_mm2() * 100.0),
+        ]);
+    }
+    t.row(vec!["TOTAL".into(), format!("{:.1}", b.total_mm2()), "100".into()]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_cost(raw: &[String]) -> R {
+    let cmd = Command::new("cost", "die + memory cost").opt(
+        "hardware",
+        Some("ga100"),
+        "device preset or JSON path",
+    );
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    let sys = config::resolve(a.get_or("hardware", "ga100"))?;
+    let p = llmcompass::cost::CostParams::default();
+    let c = llmcompass::cost::device_cost(&p, &sys.device);
+    println!(
+        "{}: die {:.0} mm² → yield {:.1}%, {:.0} gross dies/wafer, die ${:.0}; memory ${:.0}; total ${:.0}",
+        sys.device.name,
+        c.die_mm2,
+        llmcompass::cost::murphy_yield(&p, c.die_mm2) * 100.0,
+        llmcompass::cost::dies_per_wafer(&p, c.die_mm2),
+        c.die_cost_usd,
+        c.memory_cost_usd,
+        c.total_usd()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(raw: &[String]) -> R {
+    let cmd = Command::new("experiment", "regenerate a paper table/figure")
+        .flag("list", "list experiment ids")
+        .flag("quick", "trimmed sweeps (smoke test)")
+        .flag("all", "run every experiment")
+        .opt("artifacts", Some("artifacts"), "artifact directory (fig5)");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    if a.flag("list") || (a.positional.is_empty() && !a.flag("all")) {
+        let mut t = Table::new(&["id", "description"]).with_title("experiments");
+        for (id, desc, _) in experiments::registry() {
+            t.row(vec![id.to_string(), desc.to_string()]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+    let mut ctx = Ctx::new(a.flag("quick"));
+    ctx.artifact_dir = std::path::PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let ids: Vec<String> = if a.flag("all") {
+        experiments::registry().iter().map(|(n, _, _)| n.to_string()).collect()
+    } else {
+        a.positional.clone()
+    };
+    for id in &ids {
+        let start = std::time::Instant::now();
+        match experiments::run(id, &ctx) {
+            Ok(report) => {
+                println!("{report}");
+                println!(
+                    "[{id} done in {} | mapper: {} rounds total, {} cached shapes]\n",
+                    llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),
+                    ctx.sim.mapper.total_rounds(),
+                    ctx.sim.mapper.cache_len()
+                );
+            }
+            Err(e) => eprintln!("[{id}] failed: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(raw: &[String]) -> R {
+    let cmd = Command::new("calibrate", "fit a CPU device description from artifacts")
+        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt("out", Some("hardware/cpu.json"), "output JSON path")
+        .opt("iters", Some("3"), "timing iterations per artifact");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    let iters = a.get_u64("iters").map_err(|e| e.0)?.unwrap() as usize;
+    let (meas, dev) = llmcompass::calibrate::calibrate(
+        std::path::Path::new(a.get_or("artifacts", "artifacts")),
+        std::path::Path::new(a.get_or("out", "hardware/cpu.json")),
+        iters,
+    )
+    .map_err(err)?;
+    let mut t = Table::new(&["artifact", "seconds", "GFLOP/s", "GB/s"])
+        .with_title("measured operators (PJRT CPU)");
+    for m in &meas {
+        t.row(vec![
+            m.name.clone(),
+            llmcompass::util::fmt_seconds(m.seconds),
+            format!("{:.2}", m.flops / m.seconds / 1e9),
+            format!("{:.2}", m.bytes / m.seconds / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "fitted cpu device: {} cores, systolic {}x{}, matrix peak {:.1} GFLOP/s, bw {:.2} GB/s, launch {:.1} us\nwrote {}",
+        dev.core_count,
+        dev.core.lane.systolic_rows,
+        dev.core.lane.systolic_cols,
+        dev.peak_matrix_flops() / 1e9,
+        dev.memory.bandwidth_bytes_per_s / 1e9,
+        dev.launch_overhead_s * 1e6,
+        a.get_or("out", "hardware/cpu.json")
+    );
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> R {
+    let cmd = Command::new("serve", "run the batched serving coordinator over PJRT")
+        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt("requests", Some("16"), "number of synthetic requests")
+        .opt("max-out", Some("8"), "max output tokens per request")
+        .opt("policy", Some("fifo"), "batching policy: fifo | sjf")
+        .opt("seed", Some("42"), "trace seed");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    let mut coord = llmcompass::coordinator::Coordinator::new(std::path::Path::new(
+        a.get_or("artifacts", "artifacts"),
+    ))
+    .map_err(err)?;
+    let n = a.get_u64("requests").map_err(|e| e.0)?.unwrap() as usize;
+    let max_out = a.get_u64("max-out").map_err(|e| e.0)?.unwrap() as usize;
+    let seed = a.get_u64("seed").map_err(|e| e.0)?.unwrap();
+    let policy = match a.get_or("policy", "fifo") {
+        "fifo" => llmcompass::coordinator::queue::Policy::Fifo,
+        "sjf" => llmcompass::coordinator::queue::Policy::ShortestFirst,
+        other => return Err(format!("unknown policy `{other}`")),
+    };
+    let trace = llmcompass::coordinator::queue::synthetic_trace(
+        n,
+        coord.vocab() as i32,
+        coord.prefill_seq,
+        max_out,
+        seed,
+    );
+    let trace = llmcompass::coordinator::queue::order(trace, policy);
+    println!(
+        "serving {n} requests (batch={}, prefill seq={}, policy={policy:?}) on PJRT CPU…",
+        coord.batch, coord.prefill_seq
+    );
+    let rep = coord.serve(&trace).map_err(err)?;
+    println!(
+        "generated {} tokens in {:.2}s → {:.2} tok/s | prefill {:.2}s decode {:.2}s | latency p50 {:.2}s p95 {:.2}s",
+        rep.tokens_generated,
+        rep.total_s,
+        rep.tokens_per_s(),
+        rep.prefill_s,
+        rep.decode_s,
+        rep.latency_percentile(50.0),
+        rep.latency_percentile(95.0),
+    );
+    Ok(())
+}

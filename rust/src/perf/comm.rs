@@ -1,0 +1,111 @@
+//! Communication-primitive models (paper §III-B2).
+//!
+//! LLM inference needs only two primitives: **ring all-reduce** for tensor
+//! parallelism (two per Transformer layer) and **peer-to-peer** for
+//! pipeline parallelism. Both ride on the Eq. 1–2 link model in
+//! [`crate::arch::link`].
+
+use crate::arch::link::transfer_time;
+use crate::hardware::{InterconnectSpec, SystemSpec};
+use crate::perf::OpResult;
+
+/// Ring all-reduce of `bytes` across `devices` (Patarasuk–Yuan [49],
+/// bandwidth-optimal): a reduce-scatter phase and an all-gather phase, each
+/// `devices − 1` steps moving `bytes / devices` per link per step; all
+/// links are active simultaneously, so the wall time is the per-step link
+/// time × 2(g−1).
+pub fn all_reduce(ic: &InterconnectSpec, bytes: u64, devices: u64) -> OpResult {
+    assert!(devices >= 1);
+    if devices == 1 || bytes == 0 {
+        return OpResult {
+            latency_s: 0.0,
+            compute_bound_s: 0.0,
+            memory_bound_s: 0.0,
+            mapper_rounds: 0,
+            mapping_desc: "no-op".into(),
+        };
+    }
+    let chunk = (bytes + devices - 1) / devices;
+    let steps = 2 * (devices - 1);
+    let step_s = transfer_time(ic, chunk);
+    let total = steps as f64 * step_s;
+    // Lower bound: each byte leaves/enters every device once → the classic
+    // 2(g−1)/g · n / B bound.
+    let bw_bound =
+        2.0 * (devices - 1) as f64 / devices as f64 * bytes as f64 / ic.link_bandwidth_bytes_per_s;
+    OpResult {
+        latency_s: total,
+        compute_bound_s: 0.0,
+        memory_bound_s: bw_bound,
+        mapper_rounds: 0,
+        mapping_desc: format!("ring g={devices} chunk={chunk}B steps={steps}"),
+    }
+}
+
+/// Point-to-point transfer (pipeline-parallel stage handoff).
+pub fn peer_to_peer(ic: &InterconnectSpec, bytes: u64) -> OpResult {
+    let t = transfer_time(ic, bytes);
+    OpResult {
+        latency_s: t,
+        compute_bound_s: 0.0,
+        memory_bound_s: bytes as f64 / ic.link_bandwidth_bytes_per_s,
+        mapper_rounds: 0,
+        mapping_desc: format!("p2p {bytes}B"),
+    }
+}
+
+/// Convenience: all-reduce on a system's interconnect across all devices.
+pub fn system_all_reduce(sys: &SystemSpec, bytes: u64) -> OpResult {
+    all_reduce(&sys.interconnect, bytes, sys.device_count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::InterconnectSpec;
+
+    fn nvlink() -> InterconnectSpec {
+        InterconnectSpec::nvlink_like(600e9)
+    }
+
+    #[test]
+    fn single_device_is_free() {
+        let r = all_reduce(&nvlink(), 1 << 20, 1);
+        assert_eq!(r.latency_s, 0.0);
+        assert_eq!(all_reduce(&nvlink(), 0, 8).latency_s, 0.0);
+    }
+
+    #[test]
+    fn approaches_bandwidth_bound_for_large_messages() {
+        let ic = nvlink();
+        let r = all_reduce(&ic, 1 << 30, 4);
+        // Within framing overhead (~6.25%) + step latencies of the bound.
+        assert!(r.latency_s >= r.memory_bound_s);
+        assert!(r.latency_s < r.memory_bound_s * 1.15, "{} vs {}", r.latency_s, r.memory_bound_s);
+    }
+
+    #[test]
+    fn latency_floor_for_small_messages() {
+        let ic = nvlink();
+        let r = all_reduce(&ic, 1024, 4);
+        let floor = 6.0 * (ic.link_latency_s + ic.overhead_s);
+        assert!(r.latency_s >= floor);
+    }
+
+    #[test]
+    fn more_devices_more_steps() {
+        let ic = nvlink();
+        let small = 64 * 1024;
+        let t4 = all_reduce(&ic, small, 4).latency_s;
+        let t8 = all_reduce(&ic, small, 8).latency_s;
+        assert!(t8 > t4, "latency-dominated all-reduce grows with ring size");
+    }
+
+    #[test]
+    fn p2p_matches_link_model() {
+        let ic = nvlink();
+        let r = peer_to_peer(&ic, 1 << 20);
+        assert!(r.latency_s > 0.0);
+        assert!(r.latency_s >= r.memory_bound_s);
+    }
+}

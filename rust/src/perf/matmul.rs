@@ -1,0 +1,578 @@
+//! Tile-by-tile matrix-multiplication simulation (paper §III-B1, Fig. 4).
+//!
+//! A GEMM `C[m,n] = A[m,k] · B[k,n] (+ C)` is simulated in three levels:
+//!
+//! 1. **Main memory → global buffer.** A/B/C are cut into *global tiles*
+//!    small enough for the global buffer. Each step streams one
+//!    `A_tile`/`B_tile` in over main memory and writes `C_tile` back;
+//!    with the software-pipeline (double-buffering) option, IO of step
+//!    *i+1* overlaps compute of step *i*.
+//! 2. **Global buffer → local buffers.** The tile is cut into sub-tiles
+//!    scheduled onto cores in waves. *Schedule scheme 1* gives each core
+//!    its own output sub-tile (reads of a shared `A_sub`/`B_sub` by several
+//!    cores in a wave are **merged**, and the Read-After-Write dependency
+//!    on `C_sub` is kept core-local so partials never round-trip). *Scheme
+//!    2* splits the reduction (k) dimension across cores cooperating on one
+//!    output sub-tile and pays a cross-core reduction at the end.
+//! 3. **Local buffer → lanes → systolic arrays.** Sub-tiles split across
+//!    lanes; per-lane GEMMs go to the systolic-array model
+//!    ([`crate::arch::systolic`]), bounded by local-buffer feed bandwidth.
+
+use crate::arch::systolic::{Array, Dataflow, SystolicLut, Tile};
+use crate::hardware::{DType, DeviceSpec};
+
+/// Which of the two §III-B1 schedule schemes a mapping uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Scheme 1: cores own distinct output sub-tiles.
+    OutputPartitioned,
+    /// Scheme 2: cores split the reduction dimension of one sub-tile.
+    KSplit,
+}
+
+impl Scheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::OutputPartitioned => "scheme1",
+            Scheme::KSplit => "scheme2",
+        }
+    }
+}
+
+/// One point in the mapper's search space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    /// Global-buffer tile (m, k, n).
+    pub gt: (u64, u64, u64),
+    /// Local-buffer sub-tile (m, k, n).
+    pub lt: (u64, u64, u64),
+    pub scheme: Scheme,
+    /// Software pipeline (double buffering) main-memory ↔ global buffer.
+    pub db_global: bool,
+    /// Software pipeline global buffer ↔ local buffers.
+    pub db_local: bool,
+}
+
+impl Mapping {
+    pub fn describe(&self) -> String {
+        format!(
+            "gt={}x{}x{} lt={}x{}x{} {} dbG={} dbL={}",
+            self.gt.0,
+            self.gt.1,
+            self.gt.2,
+            self.lt.0,
+            self.lt.1,
+            self.lt.2,
+            self.scheme.name(),
+            self.db_global as u8,
+            self.db_local as u8
+        )
+    }
+}
+
+/// Problem shape: `b` independent GEMMs (batch). When `batched_b` is false
+/// all batch elements share one `B` (the weight matrix — the usual LLM
+/// case); when true each batch element has its own `B` (attention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Shape {
+    pub b: u64,
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    pub dtype: DType,
+    pub batched_b: bool,
+}
+
+impl Shape {
+    pub fn simple(m: u64, k: u64, n: u64, dtype: DType) -> Shape {
+        Shape { b: 1, m, k, n, dtype, batched_b: false }
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.b as f64 * self.m as f64 * self.k as f64 * self.n as f64
+    }
+}
+
+/// Simulation output for one (shape, mapping) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOutcome {
+    /// Seconds, excluding kernel-launch overhead.
+    pub seconds: f64,
+    /// Main-memory bytes actually moved.
+    pub dram_bytes: f64,
+    /// Average systolic-array utilization while computing.
+    pub systolic_util: f64,
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+/// Chunk classes for a dimension: (count, size) pairs — `d/e` full chunks
+/// of `e` plus an optional ragged remainder.
+fn classes(d: u64, e: u64) -> [(u64, u64); 2] {
+    [(d / e, e), (u64::from(d % e > 0), d % e)]
+}
+
+/// Does the mapping fit the device's buffers? Returns `None` if not.
+/// Double buffering at a level doubles the *streamed* operand footprint
+/// (A and B), which is exactly the paper's noted downside: enabling the
+/// software pipeline halves the maximum usable tile.
+pub fn fits(dev: &DeviceSpec, shape: &Shape, map: &Mapping) -> bool {
+    let e = shape.dtype.bytes();
+    let (gm, gk, gn) = map.gt;
+    let (lm, lk, ln) = map.lt;
+    if gm == 0 || gk == 0 || gn == 0 || lm == 0 || lk == 0 || ln == 0 {
+        return false;
+    }
+    if lm > gm || lk > gk || ln > gn {
+        return false;
+    }
+    let stream_g = (gm * gk + gk * gn) * e;
+    let resident_g = gm * gn * e;
+    let g_need = stream_g * if map.db_global { 2 } else { 1 } + resident_g;
+    if g_need > dev.global_buffer_bytes {
+        return false;
+    }
+    // Local: A_sub + B_sub streamed, C_sub accumulated in FP32.
+    let stream_l = (lm * lk + lk * ln) * e;
+    let resident_l = lm * ln * 4;
+    let l_need = stream_l * if map.db_local { 2 } else { 1 } + resident_l;
+    l_need <= dev.core.local_buffer_bytes
+}
+
+/// Level 3: one core executes an (lm × lk × ln) GEMM chunk. Lanes split the
+/// wider of the m/n extents; the systolic model gives cycles; the local
+/// buffer must also feed operands at `local_buffer_bytes_per_clk`.
+fn core_cycles(dev: &DeviceSpec, dtype: DType, lm: u64, lk: u64, ln: u64, lut: &SystolicLut) -> u64 {
+    let lanes = dev.core.lane_count;
+    let lane = &dev.core.lane;
+    let array = Array {
+        rows: lane.systolic_rows,
+        cols: lane.systolic_cols,
+        dataflow: Dataflow::WeightStationary,
+    };
+    // Split across lanes along n (weight columns) if possible, else m.
+    let (pm, pn) = if ln >= lanes {
+        (lm, ceil_div(ln, lanes))
+    } else if lm >= lanes {
+        (ceil_div(lm, lanes), ln)
+    } else {
+        // Few rows *and* few cols: lanes idle; one lane takes the chunk.
+        (lm, ln)
+    };
+    let mut sys = lut.cycles(Tile { m: pm, k: lk, n: pn }, array);
+    // Multiple systolic arrays per lane split the k folds.
+    if lane.systolic_count > 1 {
+        sys = ceil_div(sys, lane.systolic_count);
+    }
+    // Local-buffer feed: stream A_sub and B_sub once per chunk.
+    let bytes = (lm * lk + lk * ln) * dtype.bytes() as u64;
+    let feed = ceil_div(bytes, dev.core.local_buffer_bytes_per_clk);
+    sys.max(feed)
+}
+
+/// Level 2 state for one global tile: how long the cores take, and how many
+/// bytes cross the global buffer. Returns (cycles, gb_bytes).
+///
+/// `gm/gk/gn` are the actual tile extents (ragged tiles at the problem edge
+/// are smaller), `pack` is the number of batch elements packed into the
+/// tile step (their sub-tiles schedule independently, multiplying the
+/// sub-tile count).
+fn tile_cycles(
+    dev: &DeviceSpec,
+    shape: &Shape,
+    map: &Mapping,
+    gm: u64,
+    gk: u64,
+    gn: u64,
+    pack: u64,
+    lut: &SystolicLut,
+) -> (u64, u64) {
+    let e = shape.dtype.bytes() as u64;
+    let (lm, lk, ln) = map.lt;
+    let cores = dev.core_count;
+    let gb_per_clk = dev.global_buffer_bytes_per_clk.max(1);
+
+    let sub_m = ceil_div(gm, lm);
+    let sub_n = ceil_div(gn, ln);
+    let k_chunks = ceil_div(gk, lk);
+
+    match map.scheme {
+        Scheme::OutputPartitioned => {
+            // Sub-tiles are assigned to cores row-major in waves.
+            let s_total = sub_m * sub_n * pack;
+            let waves = ceil_div(s_total, cores);
+            let mut total_cycles = 0u64;
+            let mut gb_bytes = 0u64;
+            // Full waves repeat with a short pattern (their cost depends on
+            // `lo` only through `lo % sub_n` and `lo % (sub_m·sub_n)`), so
+            // when there are many, evaluate a window and extrapolate the
+            // average — exact for the common aligned cases and within the
+            // pattern's jitter otherwise.
+            const WAVE_WINDOW: u64 = 64;
+            let sampled = waves.min(WAVE_WINDOW);
+            for w in 0..sampled {
+                let lo = w * cores;
+                let hi = (lo + cores).min(s_total); // exclusive
+                let active = hi - lo;
+                // Distinct row blocks (A_subs) and column blocks (B_subs)
+                // touched by this wave — their global-buffer reads merge
+                // (paper: "their memory access to the global buffer should
+                // be merged"). Sub-tiles are numbered row-major, so a span
+                // of `active` consecutive ids touches ⌈(offset+active)/n⌉
+                // row blocks; rows in different batch elements are
+                // distinct, which the same formula covers.
+                let per_elem = sub_m * sub_n;
+                let distinct_rows = (active + lo % sub_n + sub_n - 1) / sub_n;
+                let cols_per_batch = active.min(sub_n);
+                let batches_in_wave = (active + lo % per_elem + per_elem - 1) / per_elem;
+                // Shared B merges within a batch element; batched B (e.g.
+                // attention) cannot merge across elements.
+                let b_blocks = if shape.batched_b {
+                    active.min(batches_in_wave * cols_per_batch)
+                } else {
+                    cols_per_batch
+                };
+                let mut wave_cycles = 0u64;
+                let mut wave_bytes = 0u64;
+                for (ck_count, kk) in classes(gk, lk) {
+                    if ck_count == 0 {
+                        continue;
+                    }
+                    // Global-buffer traffic for one k-chunk of this wave.
+                    let a_bytes = distinct_rows * lm.min(gm) * kk * e;
+                    let b_bytes_each = kk * ln.min(gn) * e;
+                    let bytes = a_bytes + b_blocks * b_bytes_each;
+                    let io = ceil_div(bytes, gb_per_clk);
+                    let comp = core_cycles(dev, shape.dtype, lm.min(gm), kk, ln.min(gn), lut);
+                    let per_chunk = if map.db_local { io.max(comp) } else { io + comp };
+                    wave_cycles += ck_count * per_chunk;
+                    wave_bytes += ck_count * bytes;
+                }
+                // C_sub writeback once per sub-tile after the k loop (RAW
+                // dependency stays core-local under scheme 1).
+                let c_bytes = active * lm.min(gm) * ln.min(gn) * e;
+                wave_cycles += ceil_div(c_bytes, gb_per_clk);
+                wave_bytes += c_bytes;
+                total_cycles += wave_cycles;
+                gb_bytes += wave_bytes;
+            }
+            if waves > sampled {
+                // Scale the sampled window up to the full wave count.
+                total_cycles = total_cycles * waves / sampled;
+                gb_bytes = gb_bytes * waves / sampled;
+            }
+            (total_cycles, gb_bytes)
+        }
+        Scheme::KSplit => {
+            // Cores gang up on output sub-tiles: split cores evenly across
+            // sub-tiles, each group splits the k chunks.
+            let s_total = (sub_m * sub_n * pack).max(1);
+            let group = (cores / s_total).max(1).min(k_chunks);
+            let groups_in_flight = (cores / group).min(s_total);
+            let rounds = ceil_div(s_total, groups_in_flight);
+
+            // Each core streams its own A/B chunks (no merging across
+            // different k); all concurrently active groups share the
+            // global-buffer bandwidth.
+            let mut per_subtile_cycles = 0u64;
+            let mut per_subtile_bytes = 0u64;
+            for (ck_count, kk) in classes(gk, lk) {
+                if ck_count == 0 {
+                    continue;
+                }
+                let bytes = (lm.min(gm) * kk + kk * ln.min(gn)) * e;
+                let concurrent = group.min(ck_count) * groups_in_flight;
+                let io = ceil_div(bytes * concurrent, gb_per_clk);
+                let comp = core_cycles(dev, shape.dtype, lm.min(gm), kk, ln.min(gn), lut);
+                let per_chunk = if map.db_local { io.max(comp) } else { io + comp };
+                per_subtile_cycles += ceil_div(ck_count, group) * per_chunk;
+                per_subtile_bytes += bytes * ck_count;
+            }
+            // Reduction: group partials combine through the global buffer —
+            // each of (group−1) partial C_subs is written (FP32) and read
+            // back, then the vector units add them.
+            let c_elems = lm.min(gm) * ln.min(gn);
+            let red_bytes = (group - 1) * c_elems * 4 * 2;
+            let red_io = ceil_div(red_bytes, gb_per_clk);
+            let vec_add = crate::arch::vector::elementwise_cycles(
+                (group - 1) * c_elems,
+                dev.core.lane.vector_width * dev.core.lane_count,
+                crate::arch::vector::Prim::Add,
+            );
+            // Final writeback.
+            let c_bytes = c_elems * e;
+            let finish = ceil_div(c_bytes, gb_per_clk);
+            let per_subtile = per_subtile_cycles + red_io + vec_add + finish;
+            let total = rounds * per_subtile;
+            let gb_bytes = s_total * (per_subtile_bytes + red_bytes + c_bytes);
+            (total, gb_bytes)
+        }
+    }
+}
+
+/// Level 1 + 0: full simulation of `shape` under `mapping`. Returns `None`
+/// if the mapping does not fit the buffers.
+pub fn simulate(
+    dev: &DeviceSpec,
+    shape: &Shape,
+    map: &Mapping,
+    lut: &SystolicLut,
+) -> Option<SimOutcome> {
+    if !fits(dev, shape, map) {
+        return None;
+    }
+    let e = shape.dtype.bytes() as u64;
+    let (gm, gk, gn) = map.gt;
+
+    // Batch packing: if one batch element's global tile uses only part of
+    // the global buffer, pack several batch elements per step so their
+    // sub-tiles fill the cores (critical for decode attention, where each
+    // per-head GEMM is tiny).
+    let per_batch = (gm.min(shape.m) * gk.min(shape.k) + gk.min(shape.k) * gn.min(shape.n)) * e
+        * if map.db_global { 2 } else { 1 }
+        + gm.min(shape.m) * gn.min(shape.n) * e;
+    let pack = if shape.b > 1 {
+        (dev.global_buffer_bytes / per_batch.max(1)).clamp(1, shape.b)
+    } else {
+        1
+    };
+
+    let freq = dev.frequency_hz;
+    let mem_bw = dev.memory.bandwidth_bytes_per_s;
+
+    let mut compute_s_total = 0.0f64;
+    let mut io_s_total = 0.0f64;
+    let mut max_step_io_s = 0.0f64;
+    let mut dram_bytes = 0.0f64;
+    let mut steps_total = 0u64;
+    let mut pipelined_s = 0.0f64;
+
+    let batch_steps = ceil_div(shape.b, pack);
+
+    // Iterate global-tile classes along each dimension (full + ragged).
+    for (cm, tm) in classes(shape.m, gm) {
+        for (cn, tn) in classes(shape.n, gn) {
+            for (ck, tk) in classes(shape.k, gk) {
+                let count = cm * cn * ck;
+                if count == 0 {
+                    continue;
+                }
+                let steps = count * batch_steps;
+                // Main-memory traffic per step: stream A and B tiles in;
+                // write C out on the last k chunk of each (m,n) tile. A
+                // shared (non-batched) B tile is still re-read per step —
+                // the global buffer only holds the current tile.
+                let a_bytes = pack * tm * tk * e;
+                let b_bytes = if shape.batched_b { pack * tk * tn * e } else { tk * tn * e };
+                // C writeback happens on each (m,n) tile's final k step;
+                // amortize it as a 1/⌈k/gk⌉ share per step to stay
+                // closed-form.
+                let k_tiles_total = ceil_div(shape.k, gk);
+                let c_share = (pack * tm * tn * e) as f64 / k_tiles_total as f64;
+                let (cycles, _gb_bytes) = tile_cycles(dev, shape, map, tm, tk, tn, pack, lut);
+                let compute_s = cycles as f64 / freq;
+                let step_io_bytes = (a_bytes + b_bytes) as f64 + c_share;
+                let io_s = step_io_bytes / mem_bw;
+
+                compute_s_total += steps as f64 * compute_s;
+                io_s_total += steps as f64 * io_s;
+                max_step_io_s = max_step_io_s.max(io_s);
+                dram_bytes += steps as f64 * step_io_bytes;
+                steps_total += steps;
+                pipelined_s += steps as f64 * compute_s.max(io_s);
+            }
+        }
+    }
+
+    let mut seconds = if map.db_global {
+        // Software pipeline: steady state is max(io, compute) per step,
+        // plus one IO fill at the head.
+        pipelined_s + max_step_io_s
+    } else {
+        compute_s_total + io_s_total
+    };
+
+    // Global-buffer-resident fast path: when the whole problem fits in the
+    // global buffer, every operand crosses main memory exactly once
+    // (compulsory traffic) and subsequent tile passes are served on-chip —
+    // the same effect that makes L2-resident GEMMs fast on real GPUs.
+    let b_traffic = if shape.batched_b { shape.b } else { 1 };
+    let problem_bytes = e
+        * (shape.b * shape.m * shape.k
+            + b_traffic * shape.k * shape.n
+            + shape.b * shape.m * shape.n);
+    if problem_bytes <= dev.global_buffer_bytes {
+        let io_once = problem_bytes as f64 / mem_bw;
+        let resident = compute_s_total.max(io_once);
+        if resident < seconds {
+            seconds = resident;
+            dram_bytes = problem_bytes as f64;
+        }
+    }
+
+    let _ = steps_total;
+    // Utilization relative to systolic peak while the kernel runs.
+    let peak = dev.peak_matrix_flops();
+    let util = if seconds > 0.0 { shape.flops() / (seconds * peak) } else { 0.0 };
+
+    Some(SimOutcome { seconds, dram_bytes, systolic_util: util.min(1.0) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets::a100;
+
+    fn lut() -> SystolicLut {
+        SystolicLut::new()
+    }
+
+    fn map_basic() -> Mapping {
+        Mapping {
+            gt: (256, 256, 256),
+            lt: (128, 32, 64),
+            scheme: Scheme::OutputPartitioned,
+            db_global: true,
+            db_local: true,
+        }
+    }
+
+    #[test]
+    fn fits_respects_capacity() {
+        let dev = a100();
+        let shape = Shape::simple(4096, 4096, 4096, DType::FP16);
+        assert!(fits(&dev, &shape, &map_basic()));
+        let huge = Mapping { gt: (8192, 8192, 8192), ..map_basic() };
+        assert!(!fits(&dev, &shape, &huge));
+        let bad_lt = Mapping { lt: (512, 512, 512), ..map_basic() };
+        assert!(!fits(&dev, &shape, &bad_lt));
+        let zero = Mapping { gt: (0, 256, 256), ..map_basic() };
+        assert!(!fits(&dev, &shape, &zero));
+    }
+
+    #[test]
+    fn double_buffering_halves_max_tile() {
+        let dev = a100();
+        let shape = Shape::simple(4096, 4096, 4096, DType::FP16);
+        // A tile that fits without the software pipeline but not with it.
+        let tight = Mapping {
+            gt: (2048, 2048, 3072),
+            lt: (128, 32, 64),
+            scheme: Scheme::OutputPartitioned,
+            db_global: false,
+            db_local: true,
+        };
+        assert!(fits(&dev, &shape, &tight));
+        let tight_db = Mapping { db_global: true, ..tight };
+        assert!(!fits(&dev, &shape, &tight_db));
+    }
+
+    #[test]
+    fn simulation_bounded_by_rooflines() {
+        let dev = a100();
+        let shape = Shape::simple(2048, 2048, 2048, DType::FP16);
+        let out = simulate(&dev, &shape, &map_basic(), &lut()).unwrap();
+        let compute_bound = shape.flops() / dev.peak_matrix_flops();
+        let io_bound = crate::perf::Op::Matmul {
+            b: 1,
+            m: 2048,
+            k: 2048,
+            n: 2048,
+            dtype: DType::FP16,
+            batched_b: false,
+        }
+        .min_dram_bytes()
+            / dev.memory.bandwidth_bytes_per_s;
+        assert!(
+            out.seconds >= compute_bound.max(io_bound) * 0.999,
+            "sim {} vs bounds c={} io={}",
+            out.seconds,
+            compute_bound,
+            io_bound
+        );
+        // And not absurdly slow either (within 20x of roofline).
+        assert!(out.seconds < compute_bound.max(io_bound) * 20.0);
+        assert!(out.systolic_util > 0.0 && out.systolic_util <= 1.0);
+        assert!(out.dram_bytes >= shape.flops() / 2048.0); // > A bytes alone
+    }
+
+    #[test]
+    fn narrow_decode_matmul_is_io_bound() {
+        let dev = a100();
+        // Decode-style: 8×12288×12288 — reading B dominates. A sensible
+        // mapping streams the full k extent per tile so compute overlaps
+        // the weight stream.
+        let shape = Shape::simple(8, 12288, 12288, DType::FP16);
+        let map = Mapping {
+            gt: (8, 8192, 512),
+            lt: (8, 128, 64),
+            scheme: Scheme::KSplit,
+            db_global: true,
+            db_local: true,
+        };
+        let out = simulate(&dev, &shape, &map, &lut()).unwrap();
+        let io_bound = (12288.0 * 12288.0 * 2.0) / dev.memory.bandwidth_bytes_per_s;
+        assert!(out.seconds >= io_bound * 0.9);
+        assert!(out.seconds <= io_bound * 3.0, "decode matmul {}x io bound", out.seconds / io_bound);
+    }
+
+    #[test]
+    fn decode_matmul_mapper_near_io_bound() {
+        // The mapper (not a hand mapping) must get the decode GEMM within
+        // ~2x of its IO roofline — paper implication ③ hinges on this.
+        let dev = a100();
+        let shape = Shape::simple(8, 12288, 12288, DType::FP16);
+        let best = crate::perf::mapper::search(
+            &dev,
+            &shape,
+            crate::perf::mapper::SearchBudget::default(),
+            &lut(),
+        );
+        let io_bound = (12288.0 * 12288.0 * 2.0) / dev.memory.bandwidth_bytes_per_s;
+        let ratio = best.outcome.seconds / io_bound;
+        assert!(ratio < 2.0, "mapper decode GEMM at {ratio:.2}x io bound");
+    }
+
+    #[test]
+    fn batch_packing_helps_small_batched_gemms() {
+        let dev = a100();
+        // 96 heads × (1×128 · 128×2048): tiny per-head GEMMs.
+        let shape =
+            Shape { b: 96, m: 8, k: 128, n: 2048, dtype: DType::FP16, batched_b: true };
+        let map = Mapping {
+            gt: (8, 128, 2048),
+            lt: (8, 128, 64),
+            scheme: Scheme::OutputPartitioned,
+            db_global: true,
+            db_local: true,
+        };
+        let out = simulate(&dev, &shape, &map, &lut()).unwrap();
+        // Without packing this would serialize 96 tile steps; packing must
+        // keep it within ~4x of the IO bound.
+        let io_bound = shape.b as f64 * (8.0 * 128.0 + 128.0 * 2048.0 + 8.0 * 2048.0) * 2.0
+            / dev.memory.bandwidth_bytes_per_s;
+        assert!(out.seconds < io_bound * 6.0, "{} vs {}", out.seconds, io_bound);
+    }
+
+    #[test]
+    fn ksplit_viable_for_few_output_tiles() {
+        let dev = a100();
+        // m=n=128 but k=12288: scheme 1 can use at most 4 cores (2x2
+        // subtiles); scheme 2 should beat it by ganging cores on k.
+        let shape = Shape::simple(128, 12288, 128, DType::FP16);
+        let s1 = Mapping {
+            gt: (128, 2048, 128),
+            lt: (64, 128, 64),
+            scheme: Scheme::OutputPartitioned,
+            db_global: true,
+            db_local: true,
+        };
+        let s2 = Mapping { scheme: Scheme::KSplit, ..s1 };
+        let l = lut();
+        let t1 = simulate(&dev, &shape, &s1, &l).unwrap().seconds;
+        let t2 = simulate(&dev, &shape, &s2, &l).unwrap().seconds;
+        assert!(t2 < t1, "k-split {t2} should beat output-partitioned {t1}");
+    }
+}

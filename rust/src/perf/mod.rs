@@ -1,0 +1,150 @@
+//! The operator performance model (paper §III-B).
+//!
+//! Operators are simulated tile-by-tile across the memory hierarchy:
+//! problems are partitioned into global-buffer tiles, then local-buffer
+//! sub-tiles scheduled onto cores, then lane-level sub-sub-tiles fed to
+//! systolic arrays / vector units. The [`mapper`] parameter-searches the
+//! tiling and scheduling space to find the performance-optimal mapping —
+//! LLMCompass always reports the *best* mapping found, to "fully
+//! demonstrate the hardware capability" of each design.
+
+pub mod matmul;
+pub mod mapper;
+pub mod vecop;
+pub mod comm;
+
+use crate::hardware::DType;
+
+/// The dense operators appearing in Transformer graphs, plus the
+/// communication primitives needed for parallel inference.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// C[b,m,n] = A[b,m,k] · B[k,n] (+ optional per-batch B: `batched_b`).
+    Matmul { b: u64, m: u64, k: u64, n: u64, dtype: DType, batched_b: bool },
+    /// Row-wise softmax over an (m × n) view, n is the reduction dim.
+    Softmax { m: u64, n: u64, dtype: DType },
+    /// Row-wise layer normalization over (m × n).
+    LayerNorm { m: u64, n: u64, dtype: DType },
+    /// Elementwise GELU over `elements` values.
+    Gelu { elements: u64, dtype: DType },
+    /// Ring all-reduce of `bytes` across `devices`.
+    AllReduce { bytes: u64, devices: u64 },
+    /// Point-to-point transfer of `bytes` (pipeline parallelism).
+    PeerToPeer { bytes: u64 },
+}
+
+impl Op {
+    /// Floating-point operations performed (2 per MAC for matmul).
+    pub fn flops(&self) -> f64 {
+        match *self {
+            Op::Matmul { b, m, k, n, .. } => 2.0 * b as f64 * m as f64 * k as f64 * n as f64,
+            // online softmax: max, sub, exp, add (pass 1) + sub, exp, div (pass 2) ≈ 7/elt
+            Op::Softmax { m, n, .. } => 7.0 * m as f64 * n as f64,
+            // mean, var, normalize, scale+shift ≈ 7/elt
+            Op::LayerNorm { m, n, .. } => 7.0 * m as f64 * n as f64,
+            // tanh-approximated GELU ≈ 12/elt
+            Op::Gelu { elements, .. } => 12.0 * elements as f64,
+            Op::AllReduce { bytes, devices } => {
+                // one add per element per reduce-scatter step, fp16 assumed
+                (devices - 1) as f64 * bytes as f64 / 2.0
+            }
+            Op::PeerToPeer { .. } => 0.0,
+        }
+    }
+
+    /// Minimum main-memory traffic in bytes (compulsory reads + writes).
+    pub fn min_dram_bytes(&self) -> f64 {
+        match *self {
+            Op::Matmul { b, m, k, n, dtype, batched_b } => {
+                let e = dtype.bytes() as f64;
+                let bf = b as f64;
+                let b_traffic = if batched_b { bf * k as f64 * n as f64 } else { (k * n) as f64 };
+                e * (bf * (m * k) as f64 + b_traffic + bf * (m * n) as f64)
+            }
+            Op::Softmax { m, n, dtype } | Op::LayerNorm { m, n, dtype } => {
+                2.0 * (m * n) as f64 * dtype.bytes() as f64
+            }
+            Op::Gelu { elements, dtype } => 2.0 * elements as f64 * dtype.bytes() as f64,
+            Op::AllReduce { bytes, .. } => bytes as f64,
+            Op::PeerToPeer { bytes } => bytes as f64,
+        }
+    }
+
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Matmul { .. } => "matmul",
+            Op::Softmax { .. } => "softmax",
+            Op::LayerNorm { .. } => "layernorm",
+            Op::Gelu { .. } => "gelu",
+            Op::AllReduce { .. } => "allreduce",
+            Op::PeerToPeer { .. } => "p2p",
+        }
+    }
+}
+
+/// Result of simulating one operator on one device (or system, for comms).
+#[derive(Debug, Clone)]
+pub struct OpResult {
+    /// Total latency including kernel-launch overhead, seconds.
+    pub latency_s: f64,
+    /// Pure-compute roofline bound, seconds.
+    pub compute_bound_s: f64,
+    /// Pure-memory roofline bound, seconds.
+    pub memory_bound_s: f64,
+    /// Number of mapper search rounds performed.
+    pub mapper_rounds: u64,
+    /// Human-readable description of the chosen mapping.
+    pub mapping_desc: String,
+}
+
+impl OpResult {
+    /// Achieved fraction of the binding roofline (1.0 = at roofline).
+    pub fn roofline_fraction(&self) -> f64 {
+        let bound = self.compute_bound_s.max(self.memory_bound_s);
+        if self.latency_s <= 0.0 {
+            return 0.0;
+        }
+        bound / self.latency_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_flops_and_bytes() {
+        let op = Op::Matmul { b: 1, m: 128, k: 256, n: 64, dtype: DType::FP16, batched_b: false };
+        assert_eq!(op.flops(), 2.0 * 128.0 * 256.0 * 64.0);
+        let bytes = op.min_dram_bytes();
+        assert_eq!(bytes, 2.0 * (128.0 * 256.0 + 256.0 * 64.0 + 128.0 * 64.0));
+    }
+
+    #[test]
+    fn batched_b_counts_all_b_matrices() {
+        let shared = Op::Matmul { b: 4, m: 8, k: 16, n: 32, dtype: DType::FP16, batched_b: false };
+        let batched = Op::Matmul { b: 4, m: 8, k: 16, n: 32, dtype: DType::FP16, batched_b: true };
+        assert!(batched.min_dram_bytes() > shared.min_dram_bytes());
+        assert_eq!(batched.flops(), shared.flops());
+    }
+
+    #[test]
+    fn vector_ops_are_two_pass_io() {
+        let op = Op::Softmax { m: 100, n: 200, dtype: DType::FP32 };
+        assert_eq!(op.min_dram_bytes(), 2.0 * 100.0 * 200.0 * 4.0);
+        assert_eq!(op.name(), "softmax");
+    }
+
+    #[test]
+    fn roofline_fraction_sane() {
+        let r = OpResult {
+            latency_s: 2.0,
+            compute_bound_s: 1.0,
+            memory_bound_s: 0.5,
+            mapper_rounds: 1,
+            mapping_desc: String::new(),
+        };
+        assert_eq!(r.roofline_fraction(), 0.5);
+    }
+}

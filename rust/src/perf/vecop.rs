@@ -1,0 +1,220 @@
+//! Vector-operator performance models: Softmax, LayerNorm, GELU
+//! (paper §III-B3).
+//!
+//! These operators have fewer dimensions than matmul (2-D for
+//! Softmax/LayerNorm, 1-D for GELU), so the mapping space is small: rows
+//! are tiled across cores/lanes and the only real decisions are the row
+//! tile and whether a row must be re-read (when one row's working set
+//! exceeds the local buffer). They do not use the systolic arrays.
+//!
+//! * **Softmax** uses the online algorithm [37]: pass 1 streams the row
+//!   computing the running max and exp-sum together; pass 2 streams the row
+//!   again applying `exp(x−m)/l`. If a whole row tile fits in the local
+//!   buffer the second pass hits SRAM, not DRAM.
+//! * **LayerNorm** is the same two-pass structure (mean/variance, then
+//!   normalize + scale/shift).
+//! * **GELU** is one elementwise pass with the tanh approximation [26].
+
+use crate::arch::vector::{elementwise_cycles, gelu_pipeline, reduce_cycles, Prim};
+use crate::hardware::{DeviceSpec, DType};
+use crate::perf::OpResult;
+
+/// Row-parallel two-pass reduction op (softmax / layernorm commons).
+#[derive(Debug, Clone, Copy)]
+struct TwoPass {
+    /// Vector-issue slots per element for pass 1 (reduction pass).
+    pass1_slots: u64,
+    /// Slots per element for pass 2 (normalize pass).
+    pass2_slots: u64,
+    /// Extra per-row scalar work (e.g. 1/l, rsqrt(var)).
+    per_row_extra: u64,
+}
+
+fn two_pass_latency(dev: &DeviceSpec, m: u64, n: u64, dtype: DType, p: TwoPass) -> OpResult {
+    let e = dtype.bytes() as u64;
+    let freq = dev.frequency_hz;
+    let lanes_total = dev.core_count * dev.core.lane_count;
+    let width = dev.core.lane.vector_width;
+
+    // --- compute side -----------------------------------------------------
+    // Rows are distributed across all lanes. When rows are scarce (decode:
+    // m small), a row is split across the lanes of one core and combined
+    // through the local buffer (one extra tree step).
+    let (rows_per_lane, row_span, split_penalty) = if m >= lanes_total {
+        ((m + lanes_total - 1) / lanes_total, n, 0)
+    } else {
+        // split each row across the lanes of a core
+        let lanes = dev.core.lane_count;
+        let chunk = (n + lanes - 1) / lanes;
+        (
+            (m + dev.core_count - 1) / dev.core_count,
+            chunk,
+            // cross-lane combine via local buffer: a handful of cycles
+            8 + reduce_cycles(lanes, width, Prim::Add),
+        )
+    };
+    let pass1 = reduce_cycles(row_span, width, Prim::Add)
+        + elementwise_cycles(row_span, width, Prim::Exp).saturating_mul(0) // structure only
+        + (row_span + width - 1) / width * (p.pass1_slots - 1).max(0);
+    let pass2 = (row_span + width - 1) / width * p.pass2_slots;
+    let per_row = pass1 + pass2 + p.per_row_extra + split_penalty;
+    let compute_cycles = rows_per_lane * per_row;
+    let compute_s = compute_cycles as f64 / freq;
+
+    // --- memory side --------------------------------------------------------
+    // Pass 1 reads the row from DRAM; pass 2 re-reads it from the local
+    // buffer if a per-lane row tile fits, else from DRAM again; output is
+    // written once.
+    let row_tile_bytes = row_span.min(n) * e;
+    let refetch = row_tile_bytes * 2 > dev.core.local_buffer_bytes; // tile + output
+    let total_elems = (m * n) as f64;
+    let dram_bytes = total_elems * e as f64 * if refetch { 3.0 } else { 2.0 };
+    let io_s = dram_bytes / dev.memory.bandwidth_bytes_per_s;
+
+    // Global-buffer bandwidth can also bound the streaming.
+    let gb_s = total_elems * e as f64 * if refetch { 3.0 } else { 2.0 } / dev.global_buffer_bw();
+
+    let body = compute_s.max(io_s).max(gb_s);
+    let latency = dev.launch_overhead_s + body;
+
+    OpResult {
+        latency_s: latency,
+        compute_bound_s: compute_s,
+        memory_bound_s: io_s,
+        mapper_rounds: 1,
+        mapping_desc: format!(
+            "rows/lane={rows_per_lane} span={row_span} refetch={}",
+            refetch as u8
+        ),
+    }
+}
+
+/// Softmax over an (m × n) tensor, normalizing along n.
+pub fn softmax(dev: &DeviceSpec, m: u64, n: u64, dtype: DType) -> OpResult {
+    two_pass_latency(
+        dev,
+        m,
+        n,
+        dtype,
+        TwoPass {
+            // online pass: max, sub, exp, add ≈ 1+1+4+1
+            pass1_slots: 7,
+            // normalize: sub, exp, mul-by-1/l ≈ 1+4+1
+            pass2_slots: 6,
+            // 1/l division
+            per_row_extra: Prim::Div.cost(),
+        },
+    )
+}
+
+/// LayerNorm over (m × n), normalizing along n.
+pub fn layernorm(dev: &DeviceSpec, m: u64, n: u64, dtype: DType) -> OpResult {
+    two_pass_latency(
+        dev,
+        m,
+        n,
+        dtype,
+        TwoPass {
+            // sum and sum-of-squares in one pass: add, fma
+            pass1_slots: 2,
+            // (x − μ)·rsqrt(σ²+ε)·γ + β: sub, mul, fma
+            pass2_slots: 3,
+            // mean, variance finalize, rsqrt
+            per_row_extra: Prim::Div.cost() * 2 + Prim::Sqrt.cost(),
+        },
+    )
+}
+
+/// Elementwise GELU over `elements` values (tanh approximation).
+pub fn gelu(dev: &DeviceSpec, elements: u64, dtype: DType) -> OpResult {
+    let e = dtype.bytes() as u64;
+    let freq = dev.frequency_hz;
+    let lanes_total = dev.core_count * dev.core.lane_count;
+    let width = dev.core.lane.vector_width;
+
+    let per_lane = (elements + lanes_total - 1) / lanes_total;
+    let compute_cycles = gelu_pipeline().cycles(per_lane, width);
+    let compute_s = compute_cycles as f64 / freq;
+
+    let dram_bytes = 2.0 * elements as f64 * e as f64;
+    let io_s = dram_bytes / dev.memory.bandwidth_bytes_per_s;
+    let gb_s = dram_bytes / dev.global_buffer_bw();
+
+    OpResult {
+        latency_s: dev.launch_overhead_s + compute_s.max(io_s).max(gb_s),
+        compute_bound_s: compute_s,
+        memory_bound_s: io_s,
+        mapper_rounds: 1,
+        mapping_desc: format!("elems/lane={per_lane}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets::a100;
+
+    #[test]
+    fn softmax_latency_at_least_io_bound() {
+        let dev = a100();
+        let r = softmax(&dev, 2048, 2048, DType::FP16);
+        let io = 2.0 * 2048.0 * 2048.0 * 2.0 / dev.memory.bandwidth_bytes_per_s;
+        assert!(r.latency_s >= io);
+        assert!(r.latency_s >= dev.launch_overhead_s);
+        assert!(r.latency_s < io * 20.0 + dev.launch_overhead_s);
+    }
+
+    #[test]
+    fn tiny_ops_dominated_by_launch_overhead() {
+        // Paper §IV-C: during decode, GELU/LayerNorm/Softmax inputs are
+        // small and dominated by kernel-launch overhead.
+        let dev = a100();
+        let r = gelu(&dev, 8 * 12288, DType::FP16);
+        assert!(
+            dev.launch_overhead_s / r.latency_s > 0.5,
+            "launch {} vs total {}",
+            dev.launch_overhead_s,
+            r.latency_s
+        );
+    }
+
+    #[test]
+    fn extreme_reduction_dim_degrades_throughput() {
+        // Paper Fig. 5d: LayerNorm throughput drops as the reduction
+        // dimension grows to an extreme (reduction cost + re-fetch).
+        let dev = a100();
+        let total = 1u64 << 24; // fixed element count
+        let thpt = |n: u64| {
+            let m = total / n;
+            let r = layernorm(&dev, m, n, DType::FP16);
+            total as f64 / r.latency_s
+        };
+        let mid = thpt(4096);
+        let extreme = thpt(1 << 20);
+        assert!(
+            extreme < mid * 0.8,
+            "throughput should droop: mid={mid:.3e} extreme={extreme:.3e}"
+        );
+    }
+
+    #[test]
+    fn more_rows_scale_throughput_until_saturation() {
+        let dev = a100();
+        let lat_small = softmax(&dev, 8, 4096, DType::FP16).latency_s;
+        let lat_big = softmax(&dev, 8192, 4096, DType::FP16).latency_s;
+        // 1024x rows should cost much more than 1x but far less than
+        // 1024x the launch-dominated small case.
+        assert!(lat_big > lat_small * 2.0);
+        assert!(lat_big < lat_small * 1024.0);
+    }
+
+    #[test]
+    fn gelu_compute_reasonable() {
+        let dev = a100();
+        let r = gelu(&dev, 1 << 26, DType::FP16);
+        // Big GELU is IO bound on A100 (12 slots/elt at 19.5 TFLOP-slot/s
+        // vs 4 B/elt at 2 TB/s).
+        assert!(r.memory_bound_s > r.compute_bound_s);
+        assert!(r.roofline_fraction() > 0.5);
+    }
+}

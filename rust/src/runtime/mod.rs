@@ -1,0 +1,301 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. The Rust binary is
+//! self-contained after `make artifacts`: Python never runs on the request
+//! path. Pattern follows /opt/xla-example/load_hlo.
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   → HloModuleProto::from_text_file(artifacts/<name>.hlo.txt)
+//!   → XlaComputation::from_proto → client.compile → executable.execute
+//! ```
+//!
+//! All artifacts are lowered with `return_tuple=True`, so results come back
+//! as one tuple literal that [`Runtime::run`] flattens.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Argument metadata from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact entry from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgMeta>,
+}
+
+/// The serving model's hyperparameters, recorded by the AOT step.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMeta {
+    pub layers: u64,
+    pub d_model: u64,
+    pub heads: u64,
+    pub d_ff: u64,
+    pub vocab: u64,
+    pub max_seq: u64,
+    pub n_params: u64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let m = v.get("model").ok_or_else(|| anyhow!("manifest missing `model`"))?;
+        let g = |key: &str| m.req_u64(key).map_err(|e| anyhow!("manifest model: {e}"));
+        let model = ModelMeta {
+            layers: g("layers")?,
+            d_model: g("d_model")?,
+            heads: g("heads")?,
+            d_ff: g("d_ff")?,
+            vocab: g("vocab")?,
+            max_seq: g("max_seq")?,
+            n_params: g("n_params")?,
+        };
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing `artifacts`"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let args = a
+                .get("args")
+                .and_then(Json::as_arr)
+                .map(|list| {
+                    list.iter()
+                        .map(|arg| ArgMeta {
+                            shape: arg
+                                .get("shape")
+                                .and_then(Json::as_arr)
+                                .map(|s| {
+                                    s.iter()
+                                        .filter_map(|d| d.as_u64())
+                                        .map(|d| d as usize)
+                                        .collect()
+                                })
+                                .unwrap_or_default(),
+                            dtype: arg
+                                .get("dtype")
+                                .and_then(Json::as_str)
+                                .unwrap_or("float32")
+                                .to_string(),
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.push(ArtifactMeta {
+                name: a.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+                file: a.req_str("file").map_err(|e| anyhow!("{e}"))?.to_string(),
+                args,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), model, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// A compiled executable plus its metadata.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Host-side tensor in the runtime's exchange format.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            HostTensor::F32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+            HostTensor::I32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+        })
+    }
+}
+
+/// The PJRT runtime: one CPU client + a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?
+                .clone();
+            let path = self.manifest.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), Executable { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact with host tensors; returns the flattened tuple
+    /// elements as host tensors (all our artifacts return f32 arrays).
+    pub fn run(&mut self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self.load(name)?;
+        if args.len() != exe.meta.args.len() {
+            bail!("artifact `{name}` expects {} args, got {}", exe.meta.args.len(), args.len());
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.exe.execute::<xla::Literal>(&literals)?;
+        let mut out = result[0][0].to_literal_sync()?;
+        let tuple = out.decompose_tuple()?;
+        let mut host = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let v = lit.to_vec::<f32>()?;
+            host.push(HostTensor::F32(v, dims));
+        }
+        Ok(host)
+    }
+
+    /// Execute and time an artifact: returns (result, mean seconds/iter).
+    /// `warmup` iterations exclude compile + first-touch cost.
+    pub fn run_timed(
+        &mut self,
+        name: &str,
+        args: &[HostTensor],
+        warmup: usize,
+        iters: usize,
+    ) -> Result<(Vec<HostTensor>, f64)> {
+        for _ in 0..warmup {
+            self.run(name, args)?;
+        }
+        let start = Instant::now();
+        let mut out = Vec::new();
+        for _ in 0..iters.max(1) {
+            out = self.run(name, args)?;
+        }
+        let secs = start.elapsed().as_secs_f64() / iters.max(1) as f64;
+        Ok((out, secs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime round-trips live in rust/tests/ (they need built
+    // artifacts); here we test manifest parsing and host-tensor plumbing.
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("llmcompass-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "model": {"layers": 6, "d_model": 384, "heads": 6, "d_ff": 1536,
+                         "vocab": 8192, "max_seq": 128, "n_params": 17000000},
+              "artifacts": [
+                {"name": "init", "file": "init.hlo.txt", "args": []},
+                {"name": "matmul_16x768x768", "file": "m.hlo.txt",
+                 "args": [{"shape": [16, 768], "dtype": "float32"},
+                           {"shape": [768, 768], "dtype": "float32"}]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_model, 384);
+        assert_eq!(m.artifacts.len(), 2);
+        let mm = m.find("matmul_16x768x768").unwrap();
+        assert_eq!(mm.args[0].shape, vec![16, 768]);
+        assert_eq!(mm.args[0].elements(), 16 * 768);
+        assert!(m.find("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load(Path::new("/nonexistent-llmcompass")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::F32(vec![0.0; 6], vec![2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.f32().unwrap().len(), 6);
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert!(s.f32().is_none());
+    }
+}

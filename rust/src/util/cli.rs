@@ -1,0 +1,217 @@
+//! A declarative command-line argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments, plus auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option/flag.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `None` means the option is a boolean flag.
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// String option value (falls back to declared default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name} expects a number, got `{v}`"))),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A command with a name, description, and option specs.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    /// Declare a `--key value` option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse raw arguments (excluding program and subcommand names).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for spec in &self.opts {
+            if let Some(d) = &spec.default {
+                args.values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                if name == "help" {
+                    return Err(CliError(self.help()));
+                }
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help())))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{name} takes no value")));
+                    }
+                    args.flags.insert(name.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("option --{name} needs a value")))?,
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Render the help text for this command.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.opts {
+            let kind = if spec.is_flag {
+                String::new()
+            } else if let Some(d) = &spec.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value>".to_string()
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", spec.name, kind, spec.help));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("simulate", "run a simulation")
+            .opt("hardware", Some("a100"), "hardware preset")
+            .opt("batch", Some("8"), "batch size")
+            .opt("out", None, "output path")
+            .flag("verbose", "chatty output")
+    }
+
+    fn v(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&v(&[])).unwrap();
+        assert_eq!(a.get("hardware"), Some("a100"));
+        assert_eq!(a.get_u64("batch").unwrap(), Some(8));
+        assert_eq!(a.get("out"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd()
+            .parse(&v(&["--hardware", "mi210", "--batch=16", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("hardware"), Some("mi210"));
+        assert_eq!(a.get_u64("batch").unwrap(), Some(16));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&v(&["--nope"])).is_err());
+        assert!(cmd().parse(&v(&["--batch"])).is_err());
+        assert!(cmd().parse(&v(&["--batch", "abc"])).unwrap().get_u64("batch").is_err());
+        assert!(cmd().parse(&v(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cmd().help();
+        assert!(h.contains("--hardware"));
+        assert!(h.contains("default: a100"));
+        let err = cmd().parse(&v(&["--help"])).unwrap_err();
+        assert!(err.0.contains("simulate"));
+    }
+}

@@ -1,0 +1,85 @@
+//! Self-contained substrates: JSON, CLI parsing, table/CSV emission, PRNG,
+//! thread pool, a mini property-testing framework, and statistics helpers.
+//!
+//! The build environment is fully offline and its vendored registry carries
+//! no serde/clap/criterion/proptest/rayon, so LLMCompass implements the
+//! pieces it needs from scratch. Each submodule is dependency-free and unit
+//! tested in place.
+
+pub mod json;
+pub mod cli;
+pub mod table;
+pub mod prng;
+pub mod pool;
+pub mod quick;
+pub mod stats;
+
+/// Format a byte count using binary units (KiB/MiB/GiB).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration given in seconds with an adaptive unit (ns/us/ms/s).
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn seconds_formatting() {
+        assert_eq!(fmt_seconds(2.0), "2.000 s");
+        assert_eq!(fmt_seconds(0.5e-3), "500.00 us");
+        assert_eq!(fmt_seconds(3e-9), "3.0 ns");
+        assert_eq!(fmt_seconds(0.25), "250.000 ms");
+    }
+
+    #[test]
+    fn ceil_div_and_round_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(10, 4), 12);
+        assert_eq!(round_up(8, 4), 8);
+    }
+}

@@ -1,0 +1,124 @@
+//! A scoped thread pool (rayon is unavailable offline).
+//!
+//! The mapper's parameter search and the experiment sweeps are
+//! embarrassingly parallel; `parallel_map` fans a work list across
+//! `std::thread` workers using an atomic work-stealing index and returns
+//! results in input order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `LLMCOMPASS_THREADS` env override, else
+/// available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("LLMCOMPASS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item of `items` in parallel, preserving order.
+///
+/// `f` must be `Sync` (shared across workers by reference); items are read
+/// by shared reference. Results are written into per-index slots so no
+/// ordering coordination is needed.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Mutex<Option<R>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        slots.push(Mutex::new(None));
+    }
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Parallel reduce: map each item then fold results with `combine`.
+/// `identity` seeds each worker-local accumulator.
+pub fn parallel_reduce<T, A, F, C>(items: &[T], threads: usize, identity: A, f: F, combine: C) -> A
+where
+    T: Sync,
+    A: Send + Clone,
+    F: Fn(&T) -> A + Sync,
+    C: Fn(A, A) -> A + Sync + Send + Copy,
+{
+    let partials = parallel_map(items, threads, f);
+    partials.into_iter().fold(identity, combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let items = vec![1u32, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+        assert_eq!(parallel_map::<u32, u32, _>(&[], 4, |&x| x), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn every_item_processed_exactly_once() {
+        let count = AtomicU64::new(0);
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&items, 4, |&i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 257);
+        let distinct: HashSet<usize> = out.into_iter().collect();
+        assert_eq!(distinct.len(), 257);
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let items: Vec<u64> = (1..=100).collect();
+        let total = parallel_reduce(&items, 4, 0u64, |&x| x, |a, b| a + b);
+        assert_eq!(total, 5050);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

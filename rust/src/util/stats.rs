@@ -1,0 +1,213 @@
+//! Statistics helpers: mean/σ, percentiles, geometric mean, and the error
+//! metrics used to compare simulated vs measured latencies (paper Fig. 5).
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n−1 denominator); 0 when n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Geometric mean; requires strictly positive inputs.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    assert!(xs.iter().all(|&x| x > 0.0), "geomean requires positive values");
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Percentile with linear interpolation; `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Median (p50).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Relative error |sim − real| / real, as used for the paper's error rates.
+pub fn rel_error(sim: f64, real: f64) -> f64 {
+    assert!(real != 0.0, "relative error vs zero reference");
+    (sim - real).abs() / real.abs()
+}
+
+/// Mean relative error across paired samples (the paper's "average error
+/// rate" metric — e.g. 10.4% across operators, 4.1% for inference).
+pub fn mean_rel_error(sim: &[f64], real: &[f64]) -> f64 {
+    assert_eq!(sim.len(), real.len());
+    if sim.is_empty() {
+        return 0.0;
+    }
+    let errs: Vec<f64> = sim.iter().zip(real).map(|(&s, &r)| rel_error(s, r)).collect();
+    mean(&errs)
+}
+
+/// Spearman rank correlation between two paired samples — used to report
+/// *trend* agreement between simulated and measured latencies (does the
+/// model order the design points correctly?), which survives calibration
+/// error that a mean-relative-error metric punishes.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let rank = |v: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        for (rank_pos, &i) in idx.iter().enumerate() {
+            r[i] = rank_pos as f64;
+        }
+        r
+    };
+    let rx = rank(xs);
+    let ry = rank(ys);
+    let mx = mean(&rx);
+    let my = mean(&ry);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..n {
+        num += (rx[i] - mx) * (ry[i] - my);
+        dx += (rx[i] - mx).powi(2);
+        dy += (ry[i] - my).powi(2);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        return 0.0;
+    }
+    num / (dx * dy).sqrt()
+}
+
+/// Min/max of a slice (NaN-free inputs assumed).
+pub fn minmax(xs: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Online mean/σ accumulator (Welford) for streaming benchmark samples.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935299395).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let xs = [2.0, 8.0];
+        assert!((geomean(&xs) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_metrics() {
+        assert!((rel_error(11.0, 10.0) - 0.1).abs() < 1e-12);
+        let sim = [11.0, 9.0];
+        let real = [10.0, 10.0];
+        assert!((mean_rel_error(&sim, &real) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.stddev() - stddev(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn minmax_works() {
+        assert_eq!(minmax(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+    }
+
+    #[test]
+    fn spearman_detects_monotone_agreement() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((spearman(&xs, &[10.0, 20.0, 30.0, 40.0]) - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &[40.0, 30.0, 20.0, 10.0]) + 1.0).abs() < 1e-12);
+        // Nonlinear but monotone still perfect.
+        assert!((spearman(&xs, &[1.0, 8.0, 27.0, 64.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(spearman(&[1.0], &[2.0]), 1.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! ASCII table, CSV, and heatmap rendering for experiment reports.
+//!
+//! Every experiment regenerator prints the paper's rows/series through this
+//! module and can also dump CSV for plotting.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            let _ = writeln!(out, "== {t} ==");
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
+                let _ = write!(line, " {:<w$} ", cell, w = widths[i]);
+                if i + 1 < ncol {
+                    line.push('|');
+                }
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// Render a 2-D grid of values as a text heatmap (for the paper's Fig. 10 /
+/// Fig. 12 style input-length × output-length matrices).
+pub struct Heatmap<'a> {
+    pub title: &'a str,
+    /// Row labels, outer → printed top to bottom.
+    pub row_labels: Vec<String>,
+    pub col_labels: Vec<String>,
+    /// `values[r][c]`.
+    pub values: Vec<Vec<f64>>,
+    /// printf-style precision for cells.
+    pub precision: usize,
+}
+
+impl<'a> Heatmap<'a> {
+    pub fn render(&self) -> String {
+        assert_eq!(self.values.len(), self.row_labels.len());
+        let mut out = format!("== {} ==\n", self.title);
+        let cellw = self
+            .values
+            .iter()
+            .flatten()
+            .map(|v| format!("{:.p$}", v, p = self.precision).len())
+            .chain(self.col_labels.iter().map(|l| l.len()))
+            .max()
+            .unwrap_or(6)
+            + 1;
+        let roww = self.row_labels.iter().map(|l| l.len()).max().unwrap_or(4) + 1;
+        let _ = write!(out, "{:>roww$} ", "");
+        for c in &self.col_labels {
+            let _ = write!(out, "{c:>cellw$}");
+        }
+        out.push('\n');
+        for (r, label) in self.row_labels.iter().enumerate() {
+            let _ = write!(out, "{label:>roww$} ");
+            for v in &self.values[r] {
+                let _ = write!(out, "{:>cellw$.p$}", v, p = self.precision);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV form with row/col labels.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, ",{}", self.col_labels.join(","));
+        for (r, label) in self.row_labels.iter().enumerate() {
+            let cells: Vec<String> =
+                self.values[r].iter().map(|v| format!("{:.p$}", v, p = self.precision)).collect();
+            let _ = writeln!(out, "{},{}", label, cells.join(","));
+        }
+        out
+    }
+}
+
+/// Write a report file under `reports/`, creating the directory if needed.
+pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["op", "latency"]).with_title("demo");
+        t.row(vec!["matmul".into(), "1.25 ms".into()]);
+        t.row(vec!["softmax".into(), "80 us".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("matmul"));
+        // Header separator present and aligned columns share the pipe offset.
+        let lines: Vec<&str> = s.lines().collect();
+        let pipe_pos: Vec<usize> =
+            lines.iter().filter_map(|l| l.find('|')).collect();
+        assert!(pipe_pos.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new(&["name", "note"]);
+        t.row(vec!["a,b".into(), "say \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let h = Heatmap {
+            title: "norm perf",
+            row_labels: vec!["2048".into(), "1024".into()],
+            col_labels: vec!["256".into(), "512".into()],
+            values: vec![vec![0.8, 0.88], vec![0.87, 0.92]],
+            precision: 2,
+        };
+        let s = h.render();
+        assert!(s.contains("0.88"));
+        let csv = h.to_csv();
+        assert!(csv.starts_with(",256,512"));
+        assert!(csv.contains("1024,0.87,0.92"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: the PJRT runtime executing real AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped with a note otherwise — CI runs
+//! `make test`, which builds them first).
+
+use llmcompass::coordinator::{queue, Coordinator};
+use llmcompass::runtime::{HostTensor, Runtime};
+use std::path::Path;
+
+fn artifact_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn matmul_artifact_computes_correctly() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    // 256x256x256 f32 matmul against a host-side reference.
+    let n = 256usize;
+    let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) * 0.25).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32 - 2.0) * 0.5).collect();
+    let out = rt
+        .run(
+            "matmul_256x256x256",
+            &[
+                HostTensor::F32(a.clone(), vec![n, n]),
+                HostTensor::F32(b.clone(), vec![n, n]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let got = out[0].f32().unwrap();
+    assert_eq!(out[0].shape(), &[n, n]);
+    // Spot-check a few entries against a naive reference.
+    for &(r, c) in &[(0usize, 0usize), (1, 2), (100, 200), (255, 255)] {
+        let mut want = 0.0f64;
+        for k in 0..n {
+            want += a[r * n + k] as f64 * b[k * n + c] as f64;
+        }
+        let g = got[r * n + c] as f64;
+        assert!(
+            (g - want).abs() < 1e-2 * want.abs().max(1.0),
+            "C[{r},{c}] = {g} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn softmax_artifact_rows_sum_to_one() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let (m, n) = (64usize, 512usize);
+    let x: Vec<f32> = (0..m * n).map(|i| ((i % 11) as f32 - 5.0) * 0.3).collect();
+    let out = rt.run("softmax_64x512", &[HostTensor::F32(x, vec![m, n])]).unwrap();
+    let got = out[0].f32().unwrap();
+    for r in 0..m {
+        let s: f32 = got[r * n..(r + 1) * n].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        assert!(got[r * n..(r + 1) * n].iter().all(|&p| p >= 0.0));
+    }
+}
+
+#[test]
+fn init_prefill_decode_roundtrip() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let meta = rt.manifest().model.clone();
+    let params = rt.run("init", &[]).unwrap().remove(0);
+    assert_eq!(params.shape(), &[meta.n_params as usize]);
+    let vals = params.f32().unwrap();
+    assert!(vals.iter().all(|v| v.is_finite()));
+    // Parameters should be mostly non-zero (random init) but contain the
+    // zero-initialized biases.
+    let nonzero = vals.iter().filter(|&&v| v != 0.0).count();
+    assert!(nonzero as f64 > 0.9 * vals.len() as f64 * 0.5);
+
+    // Prefill a b=4, s=64 prompt.
+    let (b, s) = (4usize, 64usize);
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % meta.vocab as usize) as i32).collect();
+    let mut out = rt
+        .run(
+            "prefill_b4_s64",
+            &[params.clone(), HostTensor::I32(tokens, vec![b, s])],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    let logits = out.remove(0);
+    assert_eq!(logits.shape(), &[b, meta.vocab as usize]);
+    let kv_k = out.remove(0);
+    let kv_v = out.remove(0);
+    assert_eq!(
+        kv_k.shape(),
+        &[meta.layers as usize, b, meta.max_seq as usize, meta.d_model as usize]
+    );
+
+    // One decode step at pos=64.
+    let next = llmcompass::coordinator::argmax_tokens(&logits).unwrap();
+    let out2 = rt
+        .run(
+            "decode_b4",
+            &[
+                params,
+                HostTensor::I32(next, vec![b]),
+                kv_k,
+                kv_v,
+                HostTensor::scalar_i32(s as i32),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out2.len(), 3);
+    assert_eq!(out2[0].shape(), &[b, meta.vocab as usize]);
+    assert!(out2[0].f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn coordinator_serves_batch_and_reports() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut coord = Coordinator::new(dir).unwrap();
+    let vocab = coord.vocab() as i32;
+    let reqs = queue::synthetic_trace(5, vocab, 32, 4, 42);
+    let report = coord.serve(&reqs).unwrap();
+    assert_eq!(report.completions.len(), 5);
+    for (c, r) in report.completions.iter().zip(&reqs) {
+        assert_eq!(c.id, r.id);
+        assert_eq!(c.tokens.len(), r.n_tokens.min(64));
+        assert!(c.tokens.iter().all(|&t| t >= 0 && t < vocab));
+        assert!(c.latency_s > 0.0);
+    }
+    assert!(report.tokens_per_s() > 0.0);
+    assert!(report.tokens_generated >= 5);
+
+    // Determinism: the same trace generates the same tokens.
+    let report2 = coord.serve(&reqs).unwrap();
+    for (a, b) in report.completions.iter().zip(&report2.completions) {
+        assert_eq!(a.tokens, b.tokens, "request {} tokens differ across runs", a.id);
+    }
+}

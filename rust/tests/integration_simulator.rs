@@ -1,0 +1,228 @@
+//! Cross-module integration: the full simulator pipeline (hardware →
+//! mapper → graph → e2e) reproducing the paper's architectural
+//! implications ①–⑤ end to end.
+
+use llmcompass::graph::inference::{max_batch, Simulator};
+use llmcompass::graph::layer::{layer_min_bytes, Phase};
+use llmcompass::graph::ModelConfig;
+use llmcompass::hardware::{presets, InterconnectSpec, SystemSpec};
+
+fn tp4(dev: llmcompass::hardware::DeviceSpec) -> SystemSpec {
+    SystemSpec { device: dev, device_count: 4, interconnect: InterconnectSpec::nvlink_like(600e9) }
+}
+
+#[test]
+fn implication_1_compute_helps_prefill_not_decode() {
+    // Design A has 1/4 of design B's compute; same memory system.
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    let a = tp4(presets::design('A').unwrap());
+    let b = tp4(presets::design('B').unwrap());
+    let pre_a = sim.layer(&a, &m, Phase::Prefill { batch: 8, seq: 2048 }).total_s;
+    let pre_b = sim.layer(&b, &m, Phase::Prefill { batch: 8, seq: 2048 }).total_s;
+    let dec_a = sim.layer(&a, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+    let dec_b = sim.layer(&b, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+    // Paper: 3.25x prefill gap, ~0.1% decode gap.
+    let prefill_ratio = pre_a / pre_b;
+    assert!(
+        (2.0..5.0).contains(&prefill_ratio),
+        "prefill A/B = {prefill_ratio:.2} (paper 3.25)"
+    );
+    let decode_ratio = dec_a / dec_b;
+    assert!(
+        (0.95..1.15).contains(&decode_ratio),
+        "decode A/B = {decode_ratio:.3} (paper ~1.001)"
+    );
+}
+
+#[test]
+fn implication_3_decode_bandwidth_sensitivity() {
+    // 800 → 2000 GB/s: paper sees 1.88x decode speedup, 14.3% prefill.
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    let mk = |bw: f64| {
+        let mut d = presets::a100();
+        d.name = format!("a100bw{bw}");
+        d.memory.bandwidth_bytes_per_s = bw;
+        tp4(d)
+    };
+    let lo = mk(800e9);
+    let hi = mk(2000e9);
+    let dec_speedup = sim.layer(&lo, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s
+        / sim.layer(&hi, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+    let pre_speedup = sim.layer(&lo, &m, Phase::Prefill { batch: 8, seq: 2048 }).total_s
+        / sim.layer(&hi, &m, Phase::Prefill { batch: 8, seq: 2048 }).total_s;
+    assert!((1.5..2.6).contains(&dec_speedup), "decode speedup {dec_speedup:.2} (paper 1.88)");
+    assert!(pre_speedup < 1.4, "prefill speedup {pre_speedup:.2} (paper 1.17)");
+    assert!(dec_speedup > pre_speedup, "implication ③ ordering");
+}
+
+#[test]
+fn implication_4_buffers_help_prefill_not_decode() {
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    let mk = |kb: u64| {
+        let mut d = presets::a100();
+        d.name = format!("a100l1{kb}");
+        d.core.local_buffer_bytes = kb * 1024;
+        tp4(d)
+    };
+    let small = mk(64);
+    let big = mk(192);
+    let pre_gain = sim.layer(&small, &m, Phase::Prefill { batch: 8, seq: 2048 }).total_s
+        / sim.layer(&big, &m, Phase::Prefill { batch: 8, seq: 2048 }).total_s;
+    let dec_gain = sim.layer(&small, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s
+        / sim.layer(&big, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+    assert!(pre_gain > 1.05, "prefill gain {pre_gain:.3} (paper 1.22 at 64→192KB)");
+    assert!((0.98..1.05).contains(&dec_gain), "decode flat, got {dec_gain:.3}");
+}
+
+#[test]
+fn latency_design_matches_ga100_decode_but_lags_prefill() {
+    // §V-A: identical decode; prefill suffers (that's the 0.80 corner of
+    // Fig. 10).
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    let ga = tp4(presets::ga100());
+    let lat = tp4(presets::latency_oriented());
+    let dec_ratio = sim.layer(&lat, &m, Phase::Decode { batch: 16, kv_len: 2048 }).total_s
+        / sim.layer(&ga, &m, Phase::Decode { batch: 16, kv_len: 2048 }).total_s;
+    assert!((0.99..1.06).contains(&dec_ratio), "decode ratio {dec_ratio:.3}");
+    let pre_ratio = sim.layer(&lat, &m, Phase::Prefill { batch: 16, seq: 2048 }).total_s
+        / sim.layer(&ga, &m, Phase::Prefill { batch: 16, seq: 2048 }).total_s;
+    assert!(pre_ratio > 1.3, "prefill should lag: {pre_ratio:.2}x (paper ~1.9x worst-case)");
+}
+
+#[test]
+fn decode_layer_io_dominated_on_a100() {
+    // Decode latency ≈ weight+KV traffic / bandwidth (IO-bound claim).
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    let sys = tp4(presets::a100());
+    let lat = sim.layer(&sys, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+    let io = layer_min_bytes(&m, Phase::Decode { batch: 8, kv_len: 3072 }, 4)
+        / sys.device.memory.bandwidth_bytes_per_s;
+    assert!(lat / io < 3.0, "decode at {:.2}x of pure IO bound", lat / io);
+    assert!(lat >= io);
+}
+
+#[test]
+fn throughput_design_trades_latency_for_batch() {
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    // Batch capacity: >12x GA100 (paper §V-B).
+    let b_ga = max_batch(&presets::ga100(), &m, 12, 1, 4096);
+    let b_thr = max_batch(&presets::throughput_oriented(), &m, 12, 1, 4096);
+    assert!(b_thr > 12 * b_ga, "{b_thr} vs {b_ga}");
+    // Throughput wins at PP=8 even with half the bandwidth.
+    let thr_sys = SystemSpec {
+        device: presets::throughput_oriented(),
+        device_count: 8,
+        interconnect: InterconnectSpec::nvlink_like(600e9),
+    };
+    let ga_sys = SystemSpec {
+        device: presets::ga100(),
+        device_count: 8,
+        interconnect: InterconnectSpec::nvlink_like(600e9),
+    };
+    let (tok_thr, _, stage_thr) = sim.pipeline_throughput(&thr_sys, &m, 512, 512);
+    let (tok_ga, _, stage_ga) = sim.pipeline_throughput(&ga_sys, &m, 512, 512);
+    assert!(tok_thr / tok_ga > 1.0, "normalized throughput {:.2}", tok_thr / tok_ga);
+    // And the latency trade-off exists (paper: 9.21x worse).
+    assert!(stage_thr > 2.0 * stage_ga, "latency should degrade materially");
+}
+
+#[test]
+fn mapper_round_count_order_of_magnitude() {
+    // The paper reports 26,400 mapper rounds for a full GPT-3 inference
+    // sim. Our search budget should land within the same order: a full
+    // e2e run stays under ~300k rounds and above ~1k.
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    let sys = tp4(presets::a100());
+    let _ = sim.e2e_latency(&sys, &m, 8, 2048, 1024, 96);
+    let rounds = sim.mapper.total_rounds();
+    assert!(
+        (1_000..400_000).contains(&rounds),
+        "mapper rounds {rounds} out of expected range"
+    );
+}
+
+#[test]
+fn tensor_parallelism_scales_prefill() {
+    let sim = Simulator::new();
+    let m = ModelConfig::gpt3_175b();
+    let t1 = sim
+        .layer(&presets::system("a100").unwrap(), &m, Phase::Prefill { batch: 8, seq: 2048 })
+        .total_s;
+    let t4 = sim.layer(&tp4(presets::a100()), &m, Phase::Prefill { batch: 8, seq: 2048 }).total_s;
+    // 4-way TP should cut compute ~4x minus all-reduce overhead.
+    let speedup = t1 / t4;
+    assert!((2.5..4.2).contains(&speedup), "TP4 prefill speedup {speedup:.2}");
+}
+
+#[test]
+fn published_roofline_shape_fixtures() {
+    // Paper §III-C: "for a Matmul with M=64 and N=K=12288, AMD MI210 is
+    // less than 25% of its roofline performance while a NVIDIA A100 can
+    // achieve 50%" — check the simulator respects who-is-closer-to-
+    // roofline ordering for that exact shape, and that a large square
+    // GEMM on A100 lands at a credible fraction of peak.
+    use llmcompass::hardware::DType;
+    use llmcompass::perf::Op;
+    let sim = Simulator::new();
+    let narrow = |dev: llmcompass::hardware::DeviceSpec| {
+        let sys = SystemSpec {
+            device: dev,
+            device_count: 1,
+            interconnect: InterconnectSpec::nvlink_like(600e9),
+        };
+        sim.op_latency(
+            &sys,
+            &Op::Matmul { b: 1, m: 64, k: 12288, n: 12288, dtype: DType::FP16, batched_b: false },
+        )
+        .roofline_fraction()
+    };
+    let a100_frac = narrow(presets::a100());
+    let mi210_frac = narrow(presets::mi210());
+    // The narrow GEMM is IO-bound on both; what distinguishes them in the
+    // paper is how far from *some* bound each lands. Require the same
+    // ordering: A100 ≥ MI210, both in a physical (0, 1] band.
+    assert!(a100_frac > 0.0 && a100_frac <= 1.0);
+    assert!(mi210_frac > 0.0 && mi210_frac <= 1.0);
+    assert!(
+        a100_frac >= mi210_frac * 0.95,
+        "A100 {a100_frac:.2} should not trail MI210 {mi210_frac:.2} (paper: 50% vs <25%)"
+    );
+
+    // Large square GEMM on A100: paper-scale kernels achieve >=50% of the
+    // 312 TFLOPS tensor peak; our mapper should land in [0.35, 1.0].
+    let sys = SystemSpec {
+        device: presets::a100(),
+        device_count: 1,
+        interconnect: InterconnectSpec::nvlink_like(600e9),
+    };
+    let big = sim.op_latency(
+        &sys,
+        &Op::Matmul { b: 1, m: 4096, k: 4096, n: 4096, dtype: DType::FP16, batched_b: false },
+    );
+    assert!(
+        big.roofline_fraction() > 0.35,
+        "big GEMM at {:.2} of roofline",
+        big.roofline_fraction()
+    );
+}
+
+#[test]
+fn mqa_variant_improves_serving_metrics_end_to_end() {
+    // §II-A variant support, through the full simulator: MQA cuts decode
+    // latency and KV footprint vs MHA on identical hardware.
+    let sim = Simulator::new();
+    let sys = tp4(presets::a100());
+    let mha = ModelConfig::gpt3_175b();
+    let mqa = ModelConfig::gpt3_palm_style();
+    let d_mha = sim.layer(&sys, &mha, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+    let d_mqa = sim.layer(&sys, &mqa, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
+    assert!(d_mqa < d_mha, "MQA decode {d_mqa} should beat MHA {d_mha}");
+    assert!(mqa.kv_bytes_per_token_per_layer() * 96 == mha.kv_bytes_per_token_per_layer());
+}

@@ -1,0 +1,186 @@
+//! Property-based tests over the performance / area / cost models, driven
+//! by the in-crate `util::quick` framework: random devices and shapes must
+//! satisfy the physical invariants the paper's methodology rests on.
+
+use llmcompass::arch::systolic::{
+    cycles_analytical, cycles_reference, Array, Dataflow, SystolicLut, Tile,
+};
+use llmcompass::hardware::{presets, DeviceSpec, DType};
+use llmcompass::perf::mapper::{search, SearchBudget};
+use llmcompass::perf::matmul::Shape;
+use llmcompass::util::quick::{forall, Gen};
+
+/// Draw a random-but-plausible device from the GA100 template.
+fn gen_device(g: &mut Gen) -> DeviceSpec {
+    let mut d = presets::ga100();
+    d.core_count = g.pow2(3, 7); // 8..128
+    d.core.lane_count = g.pow2(0, 2);
+    d.core.lane.vector_width = g.pow2(3, 7);
+    let s = g.pow2(3, 7); // 8..128
+    d.core.lane.systolic_rows = s;
+    d.core.lane.systolic_cols = s;
+    d.core.local_buffer_bytes = g.pow2(15, 21); // 32KB..2MB
+    d.global_buffer_bytes = g.pow2(22, 26); // 4MB..64MB
+    d.memory.bandwidth_bytes_per_s = g.u64(200, 3200) as f64 * 1e9;
+    d.name = format!("rand-{}", g.u64(0, u64::MAX / 2));
+    d
+}
+
+fn gen_shape(g: &mut Gen) -> Shape {
+    Shape {
+        b: 1,
+        m: g.pow2(0, 12),
+        k: g.pow2(4, 13),
+        n: g.pow2(4, 13),
+        dtype: DType::FP16,
+        batched_b: false,
+    }
+}
+
+#[test]
+fn prop_simulated_latency_respects_rooflines() {
+    let lut = SystolicLut::new();
+    forall("latency >= max(compute, io) roofline", 60, |g| {
+        let dev = gen_device(g);
+        let shape = gen_shape(g);
+        let best = search(&dev, &shape, SearchBudget::default(), &lut);
+        let compute = shape.flops() / dev.peak_matrix_flops();
+        let io = (shape.m * shape.k + shape.k * shape.n + shape.m * shape.n) as f64
+            * shape.dtype.bytes() as f64
+            / dev.memory.bandwidth_bytes_per_s;
+        let bound = compute.max(io) * 0.999;
+        (
+            (shape, dev.name.clone(), best.outcome.seconds, bound),
+            best.outcome.seconds >= bound,
+        )
+    });
+}
+
+#[test]
+fn prop_more_bandwidth_never_slower() {
+    let lut = SystolicLut::new();
+    forall("bandwidth monotonicity", 30, |g| {
+        let mut dev = gen_device(g);
+        let shape = gen_shape(g);
+        let t1 = search(&dev, &shape, SearchBudget::default(), &lut).outcome.seconds;
+        dev.memory.bandwidth_bytes_per_s *= 2.0;
+        let t2 = search(&dev, &shape, SearchBudget::default(), &lut).outcome.seconds;
+        ((shape, t1, t2), t2 <= t1 * 1.0001)
+    });
+}
+
+#[test]
+fn prop_bigger_buffers_never_slower() {
+    let lut = SystolicLut::new();
+    forall("buffer monotonicity", 30, |g| {
+        let mut dev = gen_device(g);
+        let shape = gen_shape(g);
+        let t1 = search(&dev, &shape, SearchBudget::default(), &lut).outcome.seconds;
+        dev.core.local_buffer_bytes *= 2;
+        dev.global_buffer_bytes *= 2;
+        let t2 = search(&dev, &shape, SearchBudget::default(), &lut).outcome.seconds;
+        // Larger buffers strictly widen the feasible mapping set.
+        ((shape, t1, t2), t2 <= t1 * 1.0001)
+    });
+}
+
+#[test]
+fn prop_systolic_analytical_bounded_by_reference() {
+    forall("analytical <= no-overlap reference", 200, |g| {
+        let tile = Tile { m: g.u64(1, 512), k: g.u64(1, 512), n: g.u64(1, 512) };
+        let array = Array {
+            rows: g.pow2(2, 7),
+            cols: g.pow2(2, 7),
+            dataflow: if g.bool() {
+                Dataflow::WeightStationary
+            } else {
+                Dataflow::OutputStationary
+            },
+        };
+        let a = cycles_analytical(tile, array);
+        let r = cycles_reference(tile, array);
+        // And both at least cover the streaming lower bound.
+        let macs = tile.m * tile.k * tile.n;
+        let min_cycles = macs / (array.rows * array.cols);
+        ((tile, array, a, r), a <= r && a >= min_cycles.min(a))
+    });
+}
+
+#[test]
+fn prop_allreduce_at_least_bandwidth_bound() {
+    forall("ring all-reduce >= 2(g-1)/g bound", 200, |g| {
+        let ic = llmcompass::hardware::InterconnectSpec::nvlink_like(
+            g.u64(50, 900) as f64 * 1e9,
+        );
+        let bytes = g.u64(1, 1 << 30);
+        let devices = g.u64(2, 16);
+        let r = llmcompass::perf::comm::all_reduce(&ic, bytes, devices);
+        ((bytes, devices), r.latency_s >= r.memory_bound_s * 0.999)
+    });
+}
+
+#[test]
+fn prop_device_json_roundtrip() {
+    forall("device JSON round-trip", 100, |g| {
+        let dev = gen_device(g);
+        let json = dev.to_json().to_string_pretty();
+        let parsed = llmcompass::util::json::Json::parse(&json).unwrap();
+        let back = DeviceSpec::from_json(&parsed).unwrap();
+        (dev.name.clone(), back == dev)
+    });
+}
+
+#[test]
+fn prop_area_monotone_in_resources() {
+    forall("area grows with cores and buffers", 100, |g| {
+        let dev = gen_device(g);
+        let a1 = llmcompass::area::die_mm2(&dev);
+        let mut bigger = dev.clone();
+        bigger.core_count += g.u64(1, 32);
+        bigger.global_buffer_bytes += g.u64(1, 32) * 1024 * 1024;
+        let a2 = llmcompass::area::die_mm2(&bigger);
+        ((dev.name.clone(), a1, a2), a2 > a1)
+    });
+}
+
+#[test]
+fn prop_cost_monotone_in_area() {
+    let p = llmcompass::cost::CostParams::default();
+    forall("die cost grows with area", 200, |g| {
+        let a1 = g.f64(10.0, 800.0);
+        let delta = g.f64(1.0, 100.0);
+        let c1 = llmcompass::cost::die_cost_usd(&p, a1);
+        let c2 = llmcompass::cost::die_cost_usd(&p, a1 + delta);
+        ((a1, delta), c2 > c1)
+    });
+}
+
+#[test]
+fn prop_decode_latency_monotone_in_kv() {
+    // Longer KV ⇒ strictly more traffic ⇒ never faster decode.
+    let sim = llmcompass::graph::inference::Simulator::new();
+    let model = llmcompass::graph::ModelConfig::gpt3_175b();
+    let sys = presets::system("a100x4").unwrap();
+    forall("decode monotone in kv length", 20, |g| {
+        let kv = g.u64(64, 4096);
+        let t1 = sim.decode(&sys, &model, 8, kv, 1);
+        let t2 = sim.decode(&sys, &model, 8, kv + g.u64(1, 2048), 1);
+        ((kv, t1, t2), t2 >= t1 * 0.9999)
+    });
+}
+
+#[test]
+fn prop_e2e_latency_additive() {
+    // e2e(in, out) >= prefill(in) and grows with out.
+    let sim = llmcompass::graph::inference::Simulator::new();
+    let model = llmcompass::graph::ModelConfig::gpt3_175b();
+    let sys = presets::system("a100x4").unwrap();
+    forall("e2e latency decomposition", 10, |g| {
+        let s_in = g.pow2(6, 11);
+        let s_out = g.pow2(4, 9);
+        let pre = sim.prefill(&sys, &model, 8, s_in, 4);
+        let e1 = sim.e2e_latency(&sys, &model, 8, s_in, s_out, 4);
+        let e2 = sim.e2e_latency(&sys, &model, 8, s_in, s_out * 2, 4);
+        ((s_in, s_out), e1 > pre && e2 > e1)
+    });
+}
