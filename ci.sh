@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 gate + formatting, as run by CI (.github/workflows/ci.yml).
+#
+#   ./ci.sh          # build, test, fmt-check
+#   ./ci.sh --fix    # also apply `cargo fmt` instead of just checking
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" == "--fix" ]]; then
+    echo "== cargo fmt =="
+    cargo fmt
+else
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+fi
+
+echo "ci.sh: all green"

@@ -88,6 +88,16 @@ fn main() {
     b.run("mapper_search_decode_gemm", "8x12288x12288 full search", 1, 50, || {
         std::hint::black_box(search(&dev, &decode_shape, SearchBudget::default(), &lut));
     });
+    // Serial vs pooled candidate loop on the same search (identical
+    // result; the speedup is the point — see mapper::search docs).
+    let pooled = SearchBudget::pooled();
+    let note = format!("same search, {} pool threads", pooled.threads);
+    b.run("mapper_search_prefill_pooled", &note, 1, 50, || {
+        std::hint::black_box(search(&dev, &shape, pooled, &lut));
+    });
+    b.run("mapper_search_decode_pooled", &note, 1, 50, || {
+        std::hint::black_box(search(&dev, &decode_shape, pooled, &lut));
+    });
 
     let sim = Simulator::new();
     let sys = presets::system("a100x4").unwrap();
@@ -105,6 +115,25 @@ fn main() {
     b.run("gpt3_e2e_cold_mapper", "96 layers in=2048 out=1024 b=8", 0, 3, || {
         let fresh = Simulator::new();
         std::hint::black_box(fresh.e2e_latency(&sys, &gpt3, 8, 2048, 1024, 96));
+    });
+
+    // Acceptance target for the serving simulator: 1,000 Poisson GPT-3
+    // requests on an 8×A100 node must simulate in well under a minute
+    // (cold mapper each iteration).
+    b.run("serve_1k_gpt3_a100x8", "1000 Poisson requests, cold oracle", 0, 3, || {
+        use llmcompass::serve::{self, Policy, SchedulerConfig, Slo, WorkloadSpec};
+        let fresh = Simulator::pooled();
+        let sys = presets::system("a100x8").unwrap();
+        let cfg = SchedulerConfig::for_system(&sys, &gpt3, Policy::Fcfs);
+        let reqs = serve::workload::generate(&WorkloadSpec::poisson(2.0, 1000, 42));
+        std::hint::black_box(serve::serve_once(
+            &fresh,
+            &sys,
+            &gpt3,
+            &cfg,
+            &reqs,
+            &Slo::interactive(),
+        ));
     });
 
     b.run("json_parse_device", "hardware description", 10, 100_000, || {

@@ -264,4 +264,38 @@ mod tests {
         assert_eq!(fit_prompt(&[], 3), vec![0, 0, 0]);
         assert_eq!(fit_prompt(&[7], 1), vec![7]);
     }
+
+    fn completion(latency_s: f64) -> Completion {
+        Completion { id: 0, tokens: vec![], latency_s, wait_s: 0.0 }
+    }
+
+    #[test]
+    fn latency_percentile_empty_report_is_zero() {
+        let rep = ServeReport::default();
+        assert_eq!(rep.latency_percentile(50.0), 0.0);
+        assert_eq!(rep.latency_percentile(0.0), 0.0);
+        assert_eq!(rep.latency_percentile(100.0), 0.0);
+        assert_eq!(rep.tokens_per_s(), 0.0);
+    }
+
+    #[test]
+    fn latency_percentile_single_completion() {
+        let mut rep = ServeReport::default();
+        rep.completions.push(completion(1.5));
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(rep.latency_percentile(p), 1.5);
+        }
+    }
+
+    #[test]
+    fn latency_percentile_interpolates_unsorted_completions() {
+        let mut rep = ServeReport::default();
+        for l in [4.0, 1.0, 3.0, 2.0] {
+            rep.completions.push(completion(l));
+        }
+        assert_eq!(rep.latency_percentile(0.0), 1.0);
+        assert_eq!(rep.latency_percentile(100.0), 4.0);
+        assert!((rep.latency_percentile(50.0) - 2.5).abs() < 1e-12);
+        assert!(rep.latency_percentile(95.0) <= 4.0);
+    }
 }

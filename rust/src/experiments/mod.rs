@@ -13,6 +13,7 @@ pub mod fig9;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
+pub mod serve_sweep;
 pub mod tab4;
 pub mod variants;
 
@@ -54,6 +55,11 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&Ctx) -> Result<String>
         ("fig11", "Decoding latency comparison: A100 / GA100 / latency design", fig11::run),
         ("fig12", "Throughput-oriented design: tokens/s heatmap, PP=8", fig12::run),
         ("tab4", "Table IV: designs, die area, cost, performance/cost", tab4::run),
+        (
+            "serve",
+            "SLO-aware serving cost sweep: goodput and $/1M-tokens across presets",
+            serve_sweep::run,
+        ),
         (
             "variants",
             "Ablation: MQA/GQA, parallel blocks, MoE (paper §II-A variant support)",

@@ -1,0 +1,116 @@
+//! `serve` — the SLO-aware serving cost sweep: GPT-3-class Poisson traffic
+//! on the paper's hardware presets, reporting TTFT/TPOT tails, goodput,
+//! and $/1M-output-tokens-at-SLO (Table IV's performance/cost comparison,
+//! generalized from isolated batches to traffic).
+//!
+//! Quick mode swaps in the small model and single-device systems so the
+//! integration suite can exercise the whole path in seconds; the full run
+//! sweeps 1,000 GPT-3 requests per (system, rate) point.
+
+use super::Ctx;
+use crate::graph::ModelConfig;
+use crate::serve::metrics::Slo;
+use crate::serve::sweep::{best_per_system, run_sweep, SweepConfig};
+use crate::util::table::{write_report, Table};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let (model, slos) = if ctx.quick {
+        (ModelConfig::gpt_small(), vec![("relaxed", Slo::relaxed())])
+    } else {
+        (
+            ModelConfig::gpt3_175b(),
+            vec![("interactive", Slo::interactive()), ("relaxed", Slo::relaxed())],
+        )
+    };
+
+    let mut out = String::new();
+    let mut csv_all = Table::new(&[
+        "slo", "system", "rate/s", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+        "goodput_tok_s", "attainment", "cluster_usd", "usd_per_mtok",
+    ]);
+    for (slo_name, slo) in &slos {
+        let cfg = if ctx.quick {
+            SweepConfig {
+                systems: vec!["ga100".into(), "throughput-oriented".into()],
+                rates: vec![20.0, 60.0],
+                requests: 48,
+                slo: *slo,
+                policy: crate::serve::Policy::Fcfs,
+                seed: 42,
+            }
+        } else {
+            SweepConfig::paper_default(1000, *slo)
+        };
+        let rows = run_sweep(&ctx.sim, &model, &cfg).map_err(anyhow::Error::msg)?;
+
+        let title = format!(
+            "serve sweep — {} on {} requests, SLO `{slo_name}` (TTFT ≤ {:.1} s, TPOT ≤ {:.2} s)",
+            model.name, cfg.requests, slo.ttft_s, slo.tpot_s
+        );
+        let mut t = Table::new(&[
+            "system", "rate/s", "TTFT p50/p99", "TPOT p50/p99", "goodput tok/s", "SLO %",
+            "$/1M tok",
+        ])
+        .with_title(&title);
+        for r in &rows {
+            let s = &r.summary;
+            t.row(vec![
+                r.system.clone(),
+                format!("{:.1}", r.rate_per_s),
+                format!(
+                    "{} / {}",
+                    crate::util::fmt_seconds(s.ttft_p50_s),
+                    crate::util::fmt_seconds(s.ttft_p99_s)
+                ),
+                format!(
+                    "{} / {}",
+                    crate::util::fmt_seconds(s.tpot_p50_s),
+                    crate::util::fmt_seconds(s.tpot_p99_s)
+                ),
+                format!("{:.1}", s.goodput_tok_s),
+                format!("{:.1}", s.slo_attainment * 100.0),
+                if r.usd_per_mtok.is_finite() {
+                    format!("{:.3}", r.usd_per_mtok)
+                } else {
+                    "inf".into()
+                },
+            ]);
+            csv_all.row(vec![
+                slo_name.to_string(),
+                r.system.clone(),
+                format!("{}", r.rate_per_s),
+                format!("{}", s.ttft_p50_s),
+                format!("{}", s.ttft_p99_s),
+                format!("{}", s.tpot_p50_s),
+                format!("{}", s.tpot_p99_s),
+                format!("{}", s.goodput_tok_s),
+                format!("{}", s.slo_attainment),
+                format!("{}", r.cluster_cost_usd),
+                format!("{}", r.usd_per_mtok),
+            ]);
+        }
+        out.push_str(&t.render());
+
+        let best = best_per_system(&rows);
+        let _ = writeln!(out, "best $/1M tokens at `{slo_name}` SLO:");
+        for b in &best {
+            let _ = writeln!(
+                out,
+                "  {:<24} {:>10} at {:.1} req/s (cluster ${:.0})",
+                b.system,
+                if b.usd_per_mtok.is_finite() {
+                    format!("${:.3}", b.usd_per_mtok)
+                } else {
+                    "unserved".into()
+                },
+                b.rate_per_s,
+                b.cluster_cost_usd
+            );
+        }
+        out.push('\n');
+    }
+    write_report("serve_sweep.csv", &csv_all.to_csv())?;
+    Ok(out)
+}

@@ -43,6 +43,14 @@ impl Simulator {
         Self::default()
     }
 
+    /// A simulator whose mapper fans each candidate search across all
+    /// cores — for single-stream callers (the CLI, the serving oracle).
+    /// Keep [`Simulator::new`] inside experiment sweeps that already
+    /// parallelize over sweep cells.
+    pub fn pooled() -> Self {
+        Simulator { mapper: Mapper::pooled() }
+    }
+
     /// Simulate one operator on the system (device for compute ops, the
     /// interconnect for communication ops). Kernel-launch overhead is
     /// added per operator, as measured by the paper with size-1 inputs.

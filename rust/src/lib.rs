@@ -21,11 +21,16 @@
 //! * [`area`] / [`cost`] — the area model (component transistor counts,
 //!   SRAM, PHYs) and the cost model (wafer economics, memory prices,
 //!   performance/cost).
+//! * [`serve`] — the cluster serving simulator: discrete-event simulation
+//!   of request arrivals (Poisson/bursty/trace replay), continuous
+//!   batching with KV-cache accounting, TTFT/TPOT/goodput metrics, and an
+//!   SLO-aware $/1M-token cost sweep across hardware presets — the layer
+//!   that evaluates designs under traffic instead of isolated batches.
 //! * [`runtime`] / [`calibrate`] / [`coordinator`] — the executable side:
 //!   load AOT-compiled JAX/Pallas artifacts via PJRT, time them, calibrate
 //!   a CPU device description, and serve batched inference end-to-end.
 //! * [`experiments`] — regenerators for every table and figure in the
-//!   paper's evaluation section.
+//!   paper's evaluation section, plus the `serve` traffic sweep.
 //! * [`util`] — self-contained substrates (JSON, CLI, tables, PRNG, thread
 //!   pool, property testing, stats) — the offline build environment has no
 //!   serde/clap/criterion/proptest, so these are built from scratch.
@@ -37,6 +42,7 @@ pub mod perf;
 pub mod graph;
 pub mod area;
 pub mod cost;
+pub mod serve;
 pub mod runtime;
 pub mod calibrate;
 pub mod coordinator;

@@ -8,7 +8,11 @@
 //! * `cost`       — die + memory cost (Table IV economics)
 //! * `experiment` — regenerate a paper table/figure (`--list` for ids)
 //! * `calibrate`  — measure AOT artifacts, fit the CPU device description
-//! * `serve`      — run the batched-serving coordinator on a synthetic
+//! * `serve`      — simulate an inference cluster under traffic: Poisson /
+//!   bursty / replayed arrivals, continuous batching with KV accounting,
+//!   TTFT/TPOT/goodput metrics, and `--sweep` for the SLO-aware
+//!   $/1M-token comparison across presets
+//! * `serve-pjrt` — run the batched-serving coordinator on a synthetic
 //!   trace through PJRT (the end-to-end request path)
 
 use llmcompass::experiments::{self, Ctx};
@@ -33,6 +37,7 @@ fn main() -> ExitCode {
         "experiment" => cmd_experiment(rest),
         "calibrate" => cmd_calibrate(rest),
         "serve" => cmd_serve(rest),
+        "serve-pjrt" => cmd_serve_pjrt(rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -63,7 +68,8 @@ fn print_usage() {
          \x20 cost        die + memory cost\n\
          \x20 experiment  regenerate a paper table/figure\n\
          \x20 calibrate   fit a CPU device description from AOT artifacts\n\
-         \x20 serve       run the batched serving coordinator (PJRT)\n\n\
+         \x20 serve       simulate an inference cluster under traffic (--sweep for $/1M tok)\n\
+         \x20 serve-pjrt  run the batched serving coordinator (PJRT)\n\n\
          run `llmcompass <command> --help` for options",
         llmcompass::VERSION
     );
@@ -360,7 +366,154 @@ fn cmd_calibrate(raw: &[String]) -> R {
 }
 
 fn cmd_serve(raw: &[String]) -> R {
-    let cmd = Command::new("serve", "run the batched serving coordinator over PJRT")
+    let cmd = Command::new("serve", "simulate an inference cluster under traffic")
+        .opt("hardware", Some("a100x8"), "system preset or JSON path")
+        .opt("model", Some("gpt3-175b"), "model: gpt3-175b | gpt-small")
+        .opt("requests", Some("1000"), "number of requests in the trace")
+        .opt("rate", Some("2.0"), "mean arrival rate, requests/second")
+        .opt("arrival", Some("poisson"), "arrival process: poisson | bursty")
+        .opt("burst-mult", Some("8.0"), "bursty: rate multiplier in the burst state")
+        .opt("trace", None, "replay a trace file (`arrival_s,prompt,output` lines)")
+        .opt("policy", Some("fcfs"), "admission policy: fcfs | spf")
+        .opt("max-batch", Some("64"), "max concurrent sequences")
+        .opt("slo-ttft", Some("2.0"), "SLO: max time-to-first-token, seconds")
+        .opt("slo-tpot", Some("0.1"), "SLO: max time-per-output-token, seconds")
+        .opt("seed", Some("42"), "workload seed")
+        .flag(
+            "sweep",
+            "run the SLO-aware $/1M-token sweep across the paper's preset ladder \
+             (uses --model/--requests/--policy/--slo-*/--seed; ignores --hardware, \
+             --rate and the arrival options)",
+        )
+        .flag("pooled", "use the pooled (multi-threaded) mapper search");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    let model = match a.get_or("model", "gpt3-175b") {
+        "gpt3-175b" => ModelConfig::gpt3_175b(),
+        "gpt-small" => ModelConfig::gpt_small(),
+        other => return Err(format!("unknown model `{other}`")),
+    };
+    let slo = llmcompass::serve::Slo {
+        ttft_s: a.get_f64("slo-ttft").map_err(|e| e.0)?.unwrap(),
+        tpot_s: a.get_f64("slo-tpot").map_err(|e| e.0)?.unwrap(),
+    };
+    let requests_n = a.get_u64("requests").map_err(|e| e.0)?.unwrap() as usize;
+    let seed = a.get_u64("seed").map_err(|e| e.0)?.unwrap();
+    let policy = llmcompass::serve::Policy::parse(a.get_or("policy", "fcfs"))
+        .ok_or("bad --policy (fcfs | spf)")?;
+    let sim = if a.flag("pooled") { Simulator::pooled() } else { Simulator::new() };
+    let start = std::time::Instant::now();
+
+    if a.flag("sweep") {
+        if a.get("trace").is_some() {
+            return Err("--sweep generates its own workloads; drop --trace".into());
+        }
+        let mut cfg = llmcompass::serve::sweep::SweepConfig::paper_default(requests_n, slo);
+        cfg.seed = seed;
+        cfg.policy = policy;
+        let rows = llmcompass::serve::sweep::run_sweep(&sim, &model, &cfg)?;
+        let mut t = Table::new(&["system", "rate/s", "goodput tok/s", "SLO %", "$/1M tok"])
+            .with_title("SLO-aware serving sweep");
+        for r in &rows {
+            t.row(vec![
+                r.system.clone(),
+                format!("{:.1}", r.rate_per_s),
+                format!("{:.1}", r.summary.goodput_tok_s),
+                format!("{:.1}", r.summary.slo_attainment * 100.0),
+                if r.usd_per_mtok.is_finite() {
+                    format!("{:.3}", r.usd_per_mtok)
+                } else {
+                    "inf".into()
+                },
+            ]);
+        }
+        println!("{}", t.render());
+        println!("best per system ($/1M output tokens at SLO):");
+        for b in llmcompass::serve::sweep::best_per_system(&rows) {
+            println!(
+                "  {:<24} {:>10} at {:.1} req/s",
+                b.system,
+                if b.usd_per_mtok.is_finite() {
+                    format!("${:.3}", b.usd_per_mtok)
+                } else {
+                    "unserved".into()
+                },
+                b.rate_per_s
+            );
+        }
+        println!("[swept in {}]", llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()));
+        return Ok(());
+    }
+
+    let sys = config::resolve(a.get_or("hardware", "a100x8"))?;
+    let rate = a.get_f64("rate").map_err(|e| e.0)?.unwrap();
+    if !rate.is_finite() || rate <= 0.0 {
+        return Err(format!("--rate must be a positive number, got {rate}"));
+    }
+    let trace = if let Some(path) = a.get("trace") {
+        let text = std::fs::read_to_string(path).map_err(err)?;
+        llmcompass::serve::workload::parse_trace(&text)?
+    } else {
+        let mut spec = llmcompass::serve::WorkloadSpec::poisson(rate, requests_n, seed);
+        if a.get_or("arrival", "poisson") == "bursty" {
+            spec.arrival = llmcompass::serve::Arrival::Bursty {
+                rate_per_s: rate,
+                burst_multiplier: a.get_f64("burst-mult").map_err(|e| e.0)?.unwrap(),
+                mean_phase_requests: 50.0,
+            };
+        }
+        llmcompass::serve::workload::generate(&spec)
+    };
+    let mut cfg = llmcompass::serve::SchedulerConfig::for_system(&sys, &model, policy);
+    cfg.max_batch = a.get_u64("max-batch").map_err(|e| e.0)?.unwrap();
+    if cfg.max_batch == 0 {
+        return Err("--max-batch must be ≥ 1".into());
+    }
+    if cfg.kv_capacity_tokens == 0 {
+        return Err(format!(
+            "model `{}` does not fit `{}` (parameters exceed memory capacity)",
+            model.name, sys.device.name
+        ));
+    }
+    if let Some(big) = trace.iter().find(|r| r.total_tokens() > cfg.kv_capacity_tokens) {
+        return Err(format!(
+            "request {} needs {} KV tokens but the cluster budget is only {}",
+            big.id,
+            big.total_tokens(),
+            cfg.kv_capacity_tokens
+        ));
+    }
+    println!(
+        "serving {} requests of {} on {} x{} (policy {policy:?}, KV budget {} tokens)…",
+        trace.len(),
+        model.name,
+        sys.device.name,
+        sys.device_count,
+        cfg.kv_capacity_tokens
+    );
+    let (summary, stats, _) =
+        llmcompass::serve::serve_once(&sim, &sys, &model, &cfg, &trace, &slo);
+    println!("{}", summary.render());
+    println!(
+        "iterations: {} prefill ({}) + {} decode ({}) | idle {} | peak batch {} | peak KV {} tokens",
+        stats.prefill_iterations,
+        llmcompass::util::fmt_seconds(stats.prefill_busy_s),
+        stats.decode_iterations,
+        llmcompass::util::fmt_seconds(stats.decode_busy_s),
+        llmcompass::util::fmt_seconds(stats.idle_s),
+        stats.peak_batch,
+        stats.peak_kv_tokens
+    );
+    println!(
+        "[simulated in {} wall-clock | mapper: {} rounds, {} cached shapes]",
+        llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),
+        sim.mapper.total_rounds(),
+        sim.mapper.cache_len()
+    );
+    Ok(())
+}
+
+fn cmd_serve_pjrt(raw: &[String]) -> R {
+    let cmd = Command::new("serve-pjrt", "run the batched serving coordinator over PJRT")
         .opt("artifacts", Some("artifacts"), "artifact directory")
         .opt("requests", Some("16"), "number of synthetic requests")
         .opt("max-out", Some("8"), "max output tokens per request")

@@ -29,11 +29,23 @@ pub struct SearchBudget {
     pub gt_per_dim: usize,
     /// Max candidate sizes per local-tile dimension.
     pub lt_per_dim: usize,
+    /// Worker threads for the per-candidate simulation loop (1 = serial).
+    /// Keep 1 when the caller already fans out over `util::pool` (the
+    /// experiment sweeps do), so thread counts do not multiply.
+    pub threads: usize,
 }
 
 impl Default for SearchBudget {
     fn default() -> Self {
-        SearchBudget { gt_per_dim: 4, lt_per_dim: 3 }
+        SearchBudget { gt_per_dim: 4, lt_per_dim: 3, threads: 1 }
+    }
+}
+
+impl SearchBudget {
+    /// Default budget with the candidate loop fanned across all available
+    /// cores — for single-search callers (CLI ops, the serving oracle).
+    pub fn pooled() -> Self {
+        SearchBudget { threads: crate::util::pool::default_threads(), ..Self::default() }
     }
 }
 
@@ -82,10 +94,9 @@ fn candidates(extent: u64, limit: u64, align: u64, max_count: usize) -> Vec<u64>
     out
 }
 
-/// Exhaustively search mappings for `shape` on `dev`; returns the fastest
-/// feasible mapping. Panics only if no mapping fits (which cannot happen:
-/// the minimal systolic-aligned tile always fits any realistic buffer).
-pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &SystolicLut) -> Best {
+/// Enumerate the feasible candidate mappings for `shape` on `dev`, in the
+/// canonical (deterministic) search order.
+fn feasible_candidates(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget) -> Vec<Mapping> {
     let sys_r = dev.core.lane.systolic_rows;
     let sys_c = dev.core.lane.systolic_cols;
 
@@ -99,9 +110,7 @@ pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &Systo
     let lt_k = candidates(shape.k, 256, sys_r, budget.lt_per_dim);
     let lt_n = candidates(shape.n, 256, sys_c, budget.lt_per_dim);
 
-    let mut best: Option<(SimOutcome, Mapping)> = None;
-    let mut rounds = 0u64;
-
+    let mut out = Vec::new();
     for &gm in &gt_m {
         for &gk in &gt_k {
             for &gn in &gt_n {
@@ -136,18 +145,8 @@ pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &Systo
                                             db_global,
                                             db_local,
                                         };
-                                        if !fits(dev, shape, &map) {
-                                            continue;
-                                        }
-                                        rounds += 1;
-                                        if let Some(out) = simulate(dev, shape, &map, lut) {
-                                            let better = match &best {
-                                                None => true,
-                                                Some((b, _)) => out.seconds < b.seconds,
-                                            };
-                                            if better {
-                                                best = Some((out, map));
-                                            }
+                                        if fits(dev, shape, &map) {
+                                            out.push(map);
                                         }
                                     }
                                 }
@@ -155,6 +154,43 @@ pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &Systo
                         }
                     }
                 }
+            }
+        }
+    }
+    out
+}
+
+/// Exhaustively search mappings for `shape` on `dev`; returns the fastest
+/// feasible mapping. Panics only if no mapping fits (which cannot happen:
+/// the minimal systolic-aligned tile always fits any realistic buffer).
+///
+/// With `budget.threads > 1` the per-candidate simulations fan across a
+/// [`crate::util::pool`] scoped pool. The reduction keeps the serial
+/// result bit-for-bit: `parallel_map` preserves candidate order and the
+/// fold takes the *first* strictly-fastest outcome, so ties resolve the
+/// same way in both paths. The [`SystolicLut`] is shared across workers
+/// behind its internal `Mutex`.
+pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &SystolicLut) -> Best {
+    let cands = feasible_candidates(dev, shape, budget);
+    let rounds = cands.len() as u64;
+
+    let outcomes: Vec<Option<SimOutcome>> = if budget.threads > 1 {
+        crate::util::pool::parallel_map(&cands, budget.threads, |map| {
+            simulate(dev, shape, map, lut)
+        })
+    } else {
+        cands.iter().map(|map| simulate(dev, shape, map, lut)).collect()
+    };
+
+    let mut best: Option<(SimOutcome, Mapping)> = None;
+    for (map, out) in cands.iter().zip(outcomes) {
+        if let Some(out) = out {
+            let better = match &best {
+                None => true,
+                Some((b, _)) => out.seconds < b.seconds,
+            };
+            if better {
+                best = Some((out, *map));
             }
         }
     }
@@ -191,6 +227,14 @@ impl Mapper {
             cache: Mutex::new(HashMap::new()),
             total_rounds: Mutex::new(0),
         }
+    }
+
+    /// A mapper whose candidate loop fans across all cores. Memoization is
+    /// unchanged — the cache `Mutex` is only held around lookups/inserts,
+    /// never across a search, so concurrent callers at worst duplicate one
+    /// search and last-write-wins with identical results.
+    pub fn pooled() -> Self {
+        Mapper::new(SearchBudget::pooled())
     }
 
     pub fn matmul(&self, dev: &DeviceSpec, shape: &Shape) -> Best {
@@ -275,6 +319,25 @@ mod tests {
             let shape = Shape::simple(8, 12288, 1024, DType::FP16);
             let best = search(&dev, &shape, SearchBudget::default(), &SystolicLut::new());
             assert!(best.outcome.seconds > 0.0, "design {l}");
+        }
+    }
+
+    #[test]
+    fn pooled_search_matches_serial_exactly() {
+        // Same candidates, order-stable reduction → bit-identical winner.
+        let dev = a100();
+        let lut = SystolicLut::new();
+        for shape in [
+            Shape::simple(2048, 12288, 12288, DType::FP16),
+            Shape::simple(8, 12288, 1024, DType::FP16),
+            Shape::simple(5, 300, 7, DType::FP32),
+        ] {
+            let serial = search(&dev, &shape, SearchBudget::default(), &lut);
+            let budget = SearchBudget { threads: 4, ..SearchBudget::default() };
+            let pooled = search(&dev, &shape, budget, &lut);
+            assert_eq!(serial.rounds, pooled.rounds);
+            assert_eq!(serial.outcome.seconds, pooled.outcome.seconds);
+            assert_eq!(serial.mapping, pooled.mapping);
         }
     }
 

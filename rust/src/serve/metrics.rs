@@ -1,0 +1,208 @@
+//! Serving metrics: per-request TTFT / TPOT / end-to-end latency, tail
+//! percentiles, throughput, and goodput under a service-level objective.
+//!
+//! These are the quantities serving-oriented hardware comparisons actually
+//! rank on (LLM-Inference-Bench): a design that wins on isolated-batch
+//! latency can still lose under load once queueing delay and
+//! time-between-tokens are accounted for. Aggregation reuses
+//! [`crate::util::stats`].
+
+use crate::util::stats;
+
+/// Timeline of one served request (all times in seconds from trace start).
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub prompt_tokens: u64,
+    pub output_tokens: u64,
+    /// When the first output token was emitted (end of its prefill
+    /// iteration); NaN until served.
+    pub first_token_s: f64,
+    /// When the last output token was emitted; NaN until finished.
+    pub finish_s: f64,
+}
+
+impl RequestMetrics {
+    /// Time to first token: queueing delay + prefill.
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// Time per output token after the first (the inter-token pace a
+    /// streaming client observes). Zero-decode requests report 0.
+    pub fn tpot_s(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            0.0
+        } else {
+            (self.finish_s - self.first_token_s) / (self.output_tokens - 1) as f64
+        }
+    }
+
+    /// End-to-end latency from arrival to last token.
+    pub fn e2e_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// A service-level objective on the per-request experience.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// Maximum acceptable time to first token, seconds.
+    pub ttft_s: f64,
+    /// Maximum acceptable time per output token, seconds.
+    pub tpot_s: f64,
+}
+
+impl Slo {
+    /// An interactive chat SLO: first token within 2 s, then ≥ 10 tok/s.
+    pub fn interactive() -> Slo {
+        Slo { ttft_s: 2.0, tpot_s: 0.1 }
+    }
+
+    /// A relaxed batch/offline SLO: first token within 30 s, ≥ 2 tok/s.
+    pub fn relaxed() -> Slo {
+        Slo { ttft_s: 30.0, tpot_s: 0.5 }
+    }
+
+    pub fn met_by(&self, m: &RequestMetrics) -> bool {
+        m.ttft_s() <= self.ttft_s && m.tpot_s() <= self.tpot_s
+    }
+}
+
+/// Aggregate summary of one serving run.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub requests: usize,
+    pub output_tokens: u64,
+    pub makespan_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+    pub e2e_p50_s: f64,
+    pub e2e_p99_s: f64,
+    /// Output tokens per second over the makespan.
+    pub throughput_tok_s: f64,
+    /// Output tokens per second counting only SLO-meeting requests.
+    pub goodput_tok_s: f64,
+    /// Fraction of requests meeting the SLO.
+    pub slo_attainment: f64,
+}
+
+/// Summarize per-request metrics under an SLO. `makespan_s` should be the
+/// scheduler's reported run length (last completion time).
+pub fn summarize(metrics: &[RequestMetrics], slo: &Slo, makespan_s: f64) -> Summary {
+    let ttft: Vec<f64> = metrics.iter().map(RequestMetrics::ttft_s).collect();
+    let tpot: Vec<f64> = metrics.iter().map(RequestMetrics::tpot_s).collect();
+    let e2e: Vec<f64> = metrics.iter().map(RequestMetrics::e2e_s).collect();
+    let output_tokens: u64 = metrics.iter().map(|m| m.output_tokens).sum();
+    let good: Vec<&RequestMetrics> = metrics.iter().filter(|m| slo.met_by(m)).collect();
+    let good_tokens: u64 = good.iter().map(|m| m.output_tokens).sum();
+    let span = makespan_s.max(f64::MIN_POSITIVE);
+    Summary {
+        requests: metrics.len(),
+        output_tokens,
+        makespan_s,
+        ttft_p50_s: stats::percentile(&ttft, 50.0),
+        ttft_p99_s: stats::percentile(&ttft, 99.0),
+        tpot_p50_s: stats::percentile(&tpot, 50.0),
+        tpot_p99_s: stats::percentile(&tpot, 99.0),
+        e2e_p50_s: stats::percentile(&e2e, 50.0),
+        e2e_p99_s: stats::percentile(&e2e, 99.0),
+        throughput_tok_s: output_tokens as f64 / span,
+        goodput_tok_s: good_tokens as f64 / span,
+        slo_attainment: if metrics.is_empty() {
+            0.0
+        } else {
+            good.len() as f64 / metrics.len() as f64
+        },
+    }
+}
+
+impl Summary {
+    /// Multi-line human-readable rendering for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "requests {} | output tokens {} | makespan {:.2} s\n\
+             TTFT p50 {} p99 {} | TPOT p50 {} p99 {} | e2e p50 {} p99 {}\n\
+             throughput {:.1} tok/s | goodput {:.1} tok/s | SLO attainment {:.1}%",
+            self.requests,
+            self.output_tokens,
+            self.makespan_s,
+            crate::util::fmt_seconds(self.ttft_p50_s),
+            crate::util::fmt_seconds(self.ttft_p99_s),
+            crate::util::fmt_seconds(self.tpot_p50_s),
+            crate::util::fmt_seconds(self.tpot_p99_s),
+            crate::util::fmt_seconds(self.e2e_p50_s),
+            crate::util::fmt_seconds(self.e2e_p99_s),
+            self.throughput_tok_s,
+            self.goodput_tok_s,
+            self.slo_attainment * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(arrival: f64, first: f64, finish: f64, out: u64) -> RequestMetrics {
+        RequestMetrics {
+            id: 0,
+            arrival_s: arrival,
+            prompt_tokens: 128,
+            output_tokens: out,
+            first_token_s: first,
+            finish_s: finish,
+        }
+    }
+
+    #[test]
+    fn per_request_quantities() {
+        let m = req(1.0, 1.5, 2.5, 11);
+        assert!((m.ttft_s() - 0.5).abs() < 1e-12);
+        assert!((m.tpot_s() - 0.1).abs() < 1e-12);
+        assert!((m.e2e_s() - 1.5).abs() < 1e-12);
+        // Single-token request: everything came from prefill.
+        let one = req(0.0, 0.4, 0.4, 1);
+        assert_eq!(one.tpot_s(), 0.0);
+        assert!((one.e2e_s() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_gating() {
+        let slo = Slo { ttft_s: 1.0, tpot_s: 0.2 };
+        assert!(slo.met_by(&req(0.0, 0.9, 1.9, 11))); // tpot 0.1
+        assert!(!slo.met_by(&req(0.0, 1.1, 2.0, 11))); // ttft miss
+        assert!(!slo.met_by(&req(0.0, 0.5, 3.5, 11))); // tpot 0.3 miss
+    }
+
+    #[test]
+    fn summary_splits_goodput_from_throughput() {
+        let metrics = vec![
+            req(0.0, 0.5, 1.5, 11),  // meets
+            req(0.0, 5.0, 6.0, 11),  // ttft miss
+            req(0.0, 0.5, 30.5, 11), // tpot miss (3 s/token)
+        ];
+        let slo = Slo { ttft_s: 1.0, tpot_s: 0.2 };
+        let s = summarize(&metrics, &slo, 30.5);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.output_tokens, 33);
+        assert!((s.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
+        assert!((s.throughput_tok_s - 33.0 / 30.5).abs() < 1e-12);
+        assert!((s.goodput_tok_s - 11.0 / 30.5).abs() < 1e-12);
+        assert!(s.goodput_tok_s < s.throughput_tok_s);
+        assert!(s.ttft_p50_s <= s.ttft_p99_s);
+        assert!(s.render().contains("SLO attainment"));
+    }
+
+    #[test]
+    fn empty_summary_is_defined() {
+        let s = summarize(&[], &Slo::interactive(), 0.0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.slo_attainment, 0.0);
+        assert_eq!(s.ttft_p50_s, 0.0);
+        assert_eq!(s.goodput_tok_s, 0.0);
+    }
+}

@@ -1,0 +1,491 @@
+//! The continuous-batching scheduler: a discrete-event simulation of one
+//! inference cluster, with [`crate::graph::inference::Simulator`] as the
+//! latency oracle.
+//!
+//! The engine models iteration-level (Orca/vLLM-style) scheduling:
+//!
+//! * Requests arrive on an open-loop trace and wait in an admission queue.
+//! * Between iterations the scheduler admits waiting requests into the
+//!   running batch, reserving KV-cache memory for their full
+//!   `prompt + output` footprint against the cluster budget (derived from
+//!   device memory capacity minus resident parameters) — conservative
+//!   admission means no preemption/eviction is ever needed.
+//! * An iteration is either a **prefill** of the just-admitted requests
+//!   (which also emits their first output token) or one **decode** step of
+//!   the whole running batch; prefills take priority, which is what keeps
+//!   TTFT bounded under load at some cost to time-between-tokens.
+//! * Iteration latency comes from the analytical simulator through a
+//!   quantizing [`IterOracle`], so a million-token trace touches only a
+//!   handful of unique mapper shapes.
+//!
+//! The clock only ever advances by iteration latencies or idle gaps to the
+//! next arrival, so simulating thousands of requests is dominated by the
+//! (cached) oracle calls, not by the event loop.
+
+use super::metrics::RequestMetrics;
+use super::workload::Request;
+use crate::graph::inference::Simulator;
+use crate::graph::ModelConfig;
+use crate::hardware::SystemSpec;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Admission-ordering policy for the waiting queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// First-come first-served (arrival order).
+    Fcfs,
+    /// Shortest-prompt-first: cheapest prefills jump the queue, trading
+    /// worst-case fairness for lower mean TTFT under prefill pressure.
+    ShortestPromptFirst,
+}
+
+impl Policy {
+    pub fn parse(v: &str) -> Option<Policy> {
+        match v {
+            "fcfs" | "fifo" => Some(Policy::Fcfs),
+            "spf" | "shortest-prompt-first" => Some(Policy::ShortestPromptFirst),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Maximum concurrent sequences in the running batch.
+    pub max_batch: u64,
+    /// Cluster-wide KV-cache budget in tokens (see [`kv_capacity_tokens`]).
+    pub kv_capacity_tokens: u64,
+    pub policy: Policy,
+    /// Maximum requests prefilled in one iteration (bounds padded prefill
+    /// cost per iteration).
+    pub max_prefill_batch: u64,
+}
+
+impl SchedulerConfig {
+    /// Derive a configuration from hardware + model: KV budget from memory
+    /// capacity, batch cap from a target per-iteration concurrency.
+    pub fn for_system(sys: &SystemSpec, model: &ModelConfig, policy: Policy) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: 64,
+            kv_capacity_tokens: kv_capacity_tokens(sys, model),
+            policy,
+            max_prefill_batch: 8,
+        }
+    }
+}
+
+/// Cluster-wide KV-cache token budget under tensor parallelism: every
+/// device holds `params / tp` resident weight bytes and `kv_per_token / tp`
+/// per cached token, so the binding constraint is per-device free memory:
+///
+/// `tokens = tp · (capacity − params/tp) / kv_bytes_per_token`.
+///
+/// Returns 0 when the shard of parameters alone overflows a device.
+pub fn kv_capacity_tokens(sys: &SystemSpec, model: &ModelConfig) -> u64 {
+    let tp = sys.device_count.max(1);
+    let cap = sys.device.memory.capacity_bytes as f64;
+    let params_per_dev = model.param_bytes(model.layers) as f64 / tp as f64;
+    if params_per_dev >= cap {
+        return 0;
+    }
+    let kv_per_token = (model.kv_bytes_per_token_per_layer() * model.layers) as f64;
+    ((cap - params_per_dev) * tp as f64 / kv_per_token).floor() as u64
+}
+
+/// Quantizing latency oracle over the analytical simulator.
+///
+/// Decode latency is affine in the KV length at fixed batch (weights
+/// dominate, attention reads grow linearly), so per power-of-two batch
+/// bucket the oracle samples two KV points and interpolates. Prefill is
+/// cached per (batch bucket, power-of-two sequence bucket). This bounds
+/// the number of distinct mapper searches for an arbitrarily long trace.
+pub struct IterOracle<'a> {
+    sim: &'a Simulator,
+    sys: &'a SystemSpec,
+    model: &'a ModelConfig,
+    /// batch bucket → (latency at KV_LO, slope per KV token).
+    decode_fit: Mutex<HashMap<u64, (f64, f64)>>,
+    /// (batch bucket, seq bucket) → prefill seconds.
+    prefill_cache: Mutex<HashMap<(u64, u64), f64>>,
+}
+
+/// KV sample points for the affine decode fit.
+const KV_LO: u64 = 64;
+const KV_HI: u64 = 4096;
+
+fn pow2_bucket(v: u64) -> u64 {
+    v.max(1).next_power_of_two()
+}
+
+impl<'a> IterOracle<'a> {
+    pub fn new(sim: &'a Simulator, sys: &'a SystemSpec, model: &'a ModelConfig) -> Self {
+        IterOracle {
+            sim,
+            sys,
+            model,
+            decode_fit: Mutex::new(HashMap::new()),
+            prefill_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Latency of one decode iteration for `batch` sequences at mean KV
+    /// length `kv_len`.
+    pub fn decode(&self, batch: u64, kv_len: u64) -> f64 {
+        let b = pow2_bucket(batch);
+        // Take the guard in its own statement so it drops before the
+        // (slow) simulator calls and before re-locking to insert.
+        let cached = self.decode_fit.lock().unwrap().get(&b).copied();
+        let (lo, slope) = match cached {
+            Some(fit) => fit,
+            None => {
+                let l_lo = self.sim.decode(self.sys, self.model, b, KV_LO, self.model.layers);
+                let l_hi = self.sim.decode(self.sys, self.model, b, KV_HI, self.model.layers);
+                let fit = (l_lo, (l_hi - l_lo) / (KV_HI - KV_LO) as f64);
+                self.decode_fit.lock().unwrap().insert(b, fit);
+                fit
+            }
+        };
+        (lo + slope * (kv_len.max(KV_LO) - KV_LO) as f64).max(0.0)
+    }
+
+    /// Latency of one prefill iteration: `batch` prompts padded to the
+    /// bucketed `seq` length.
+    pub fn prefill(&self, batch: u64, seq: u64) -> f64 {
+        let key = (pow2_bucket(batch), pow2_bucket(seq));
+        if let Some(&s) = self.prefill_cache.lock().unwrap().get(&key) {
+            return s;
+        }
+        let s = self.sim.prefill(self.sys, self.model, key.0, key.1, self.model.layers);
+        self.prefill_cache.lock().unwrap().insert(key, s);
+        s
+    }
+
+    /// Number of unique (batch, seq/kv) points simulated so far.
+    pub fn cached_points(&self) -> usize {
+        self.decode_fit.lock().unwrap().len() * 2 + self.prefill_cache.lock().unwrap().len()
+    }
+}
+
+/// Per-iteration accounting of the simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub prefill_iterations: u64,
+    pub decode_iterations: u64,
+    pub prefill_busy_s: f64,
+    pub decode_busy_s: f64,
+    pub idle_s: f64,
+    /// Peak KV tokens reserved at any point (sampled at the per-iteration
+    /// high-water mark, before completions release their reservations).
+    pub peak_kv_tokens: u64,
+    /// Peak concurrent sequences in flight (running + just admitted).
+    pub peak_batch: u64,
+    /// Wall-clock of the simulated run (last completion time).
+    pub makespan_s: f64,
+}
+
+/// One request in flight.
+struct Running {
+    idx: usize,
+    /// Tokens generated so far (first one comes from prefill).
+    generated: u64,
+    /// Current KV footprint in tokens.
+    kv_tokens: u64,
+}
+
+/// Simulate serving `requests` (sorted by arrival) on the cluster.
+/// Returns per-request metrics (in input order) plus run statistics.
+pub fn simulate(
+    oracle: &IterOracle<'_>,
+    cfg: &SchedulerConfig,
+    requests: &[Request],
+) -> (Vec<RequestMetrics>, RunStats) {
+    assert!(cfg.max_batch > 0, "max_batch must be ≥ 1");
+    assert!(cfg.max_prefill_batch > 0, "max_prefill_batch must be ≥ 1");
+    for r in requests {
+        assert!(
+            r.total_tokens() <= cfg.kv_capacity_tokens,
+            "request {} needs {} KV tokens but the cluster budget is {} — \
+             it can never be admitted",
+            r.id,
+            r.total_tokens(),
+            cfg.kv_capacity_tokens
+        );
+    }
+
+    let mut metrics: Vec<RequestMetrics> = requests
+        .iter()
+        .map(|r| RequestMetrics {
+            id: r.id,
+            arrival_s: r.arrival_s,
+            prompt_tokens: r.prompt_tokens,
+            output_tokens: r.output_tokens,
+            first_token_s: f64::NAN,
+            finish_s: f64::NAN,
+        })
+        .collect();
+    let mut stats = RunStats::default();
+
+    let mut t = 0.0f64;
+    let mut next_arrival = 0usize; // index into `requests`
+    let mut waiting: Vec<usize> = Vec::new();
+    let mut running: Vec<Running> = Vec::new();
+    let mut kv_reserved = 0u64;
+    let mut completed = 0usize;
+
+    while completed < requests.len() {
+        // 1. Ingest arrivals up to the current clock, keeping `waiting` in
+        //    policy order as it grows: FCFS appends (arrival order), SPF
+        //    inserts at the (prompt, id)-sorted position — same order a
+        //    stable sort by that key would give, without re-sorting the
+        //    backlog every iteration.
+        while next_arrival < requests.len() && requests[next_arrival].arrival_s <= t {
+            match cfg.policy {
+                Policy::Fcfs => waiting.push(next_arrival),
+                Policy::ShortestPromptFirst => {
+                    let key = (requests[next_arrival].prompt_tokens, next_arrival);
+                    let pos = waiting
+                        .partition_point(|&i| (requests[i].prompt_tokens, i) < key);
+                    waiting.insert(pos, next_arrival);
+                }
+            }
+            next_arrival += 1;
+        }
+
+        // 2. Admit from the waiting queue under the KV budget + batch cap.
+        //    Admission is greedy in queue order (no skipping ahead past a
+        //    request that does not fit — FCFS head-of-line blocking is
+        //    part of what the policy choice is about).
+        let mut admitted: Vec<usize> = Vec::new();
+        while admitted.len() < cfg.max_prefill_batch as usize
+            && !waiting.is_empty()
+            && running.len() + admitted.len() < cfg.max_batch as usize
+        {
+            let cand = waiting[0];
+            let need = requests[cand].total_tokens();
+            if kv_reserved + need > cfg.kv_capacity_tokens {
+                break;
+            }
+            kv_reserved += need;
+            admitted.push(cand);
+            waiting.remove(0);
+        }
+
+        // Peaks are sampled here — reservations for this iteration are all
+        // taken and nothing has completed yet, so this is the true
+        // high-water mark (completions release KV later in the loop).
+        stats.peak_kv_tokens = stats.peak_kv_tokens.max(kv_reserved);
+        stats.peak_batch = stats.peak_batch.max((running.len() + admitted.len()) as u64);
+
+        if !admitted.is_empty() {
+            // 3a. Prefill iteration for the admitted requests (padded to
+            // the longest prompt). Emits each request's first token.
+            let batch = admitted.len() as u64;
+            let max_prompt =
+                admitted.iter().map(|&i| requests[i].prompt_tokens).max().unwrap();
+            let dt = oracle.prefill(batch, max_prompt);
+            t += dt;
+            stats.prefill_iterations += 1;
+            stats.prefill_busy_s += dt;
+            for &i in &admitted {
+                metrics[i].first_token_s = t;
+                if requests[i].output_tokens <= 1 {
+                    // Prefill's own logits were the whole answer.
+                    metrics[i].finish_s = t;
+                    kv_reserved -= requests[i].total_tokens();
+                    completed += 1;
+                } else {
+                    running.push(Running {
+                        idx: i,
+                        generated: 1,
+                        kv_tokens: requests[i].prompt_tokens + 1,
+                    });
+                }
+            }
+        } else if !running.is_empty() {
+            // 3b. One decode step of the whole running batch at its mean
+            // KV length (attention cost is linear in KV, so the mean gives
+            // the right batch total).
+            let batch = running.len() as u64;
+            let mean_kv =
+                running.iter().map(|r| r.kv_tokens).sum::<u64>() / batch;
+            let dt = oracle.decode(batch, mean_kv);
+            t += dt;
+            stats.decode_iterations += 1;
+            stats.decode_busy_s += dt;
+            let mut i = 0;
+            while i < running.len() {
+                running[i].generated += 1;
+                running[i].kv_tokens += 1;
+                if running[i].generated >= requests[running[i].idx].output_tokens {
+                    let done = running.swap_remove(i);
+                    metrics[done.idx].finish_s = t;
+                    kv_reserved -= requests[done.idx].total_tokens();
+                    completed += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        } else {
+            // 3c. Idle: nothing running and nothing admittable. If
+            // requests are waiting but over budget, that is a permanent
+            // stall only if nothing is running — guarded by the assert
+            // above (every request fits an empty cluster).
+            debug_assert!(waiting.is_empty(), "waiting requests with an idle cluster");
+            if next_arrival >= requests.len() {
+                break; // all requests ingested and completed
+            }
+            // Step 1 ingested everything with arrival ≤ t, so the gap is
+            // strictly positive here.
+            stats.idle_s += requests[next_arrival].arrival_s - t;
+            t = requests[next_arrival].arrival_s;
+        }
+    }
+
+    stats.makespan_s = t;
+    (metrics, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets;
+    use crate::serve::workload::{generate, Request, WorkloadSpec};
+
+    fn small_setup() -> (Simulator, SystemSpec, ModelConfig) {
+        (Simulator::new(), presets::system("a100").unwrap(), ModelConfig::gpt_small())
+    }
+
+    #[test]
+    fn kv_capacity_matches_hand_calculation() {
+        let m = ModelConfig::gpt3_175b();
+        let sys = presets::system("a100x8").unwrap();
+        let tokens = kv_capacity_tokens(&sys, &m);
+        // 8 × 80 GB − 350 GB of weights ≈ 290 GB free; 4.5 MiB/token KV.
+        let free = 8.0 * 80e9 - m.param_bytes(m.layers) as f64;
+        let expect = free / (m.kv_bytes_per_token_per_layer() * m.layers) as f64;
+        assert!((tokens as f64 - expect).abs() < 2.0, "{tokens} vs {expect:.0}");
+        // One A100 cannot even hold the weights.
+        assert_eq!(kv_capacity_tokens(&presets::system("a100").unwrap(), &m), 0);
+    }
+
+    #[test]
+    fn oracle_decode_affine_and_monotone_in_kv() {
+        let (sim, sys, model) = small_setup();
+        let oracle = IterOracle::new(&sim, &sys, &model);
+        let l1 = oracle.decode(8, 256);
+        let l2 = oracle.decode(8, 1024);
+        let l3 = oracle.decode(8, 4096);
+        assert!(l1 > 0.0);
+        assert!(l2 >= l1 && l3 >= l2, "decode not monotone: {l1} {l2} {l3}");
+        // Affine: midpoint interpolates exactly.
+        let mid = oracle.decode(8, (256 + 4096) / 2);
+        let lin = l1 + (l3 - l1) * ((256 + 4096) / 2 - 256) as f64 / (4096 - 256) as f64;
+        assert!((mid - lin).abs() < 1e-12);
+        // Bucketing: batches 5..8 share a fit.
+        assert_eq!(oracle.decode(5, 1024), oracle.decode(8, 1024));
+    }
+
+    #[test]
+    fn all_requests_complete_with_sane_timelines() {
+        let (sim, sys, model) = small_setup();
+        let oracle = IterOracle::new(&sim, &sys, &model);
+        let cfg = SchedulerConfig {
+            max_batch: 16,
+            kv_capacity_tokens: kv_capacity_tokens(&sys, &model),
+            policy: Policy::Fcfs,
+            max_prefill_batch: 4,
+        };
+        let reqs = generate(&WorkloadSpec::poisson(20.0, 200, 5));
+        let (metrics, stats) = simulate(&oracle, &cfg, &reqs);
+        assert_eq!(metrics.len(), 200);
+        for m in &metrics {
+            assert!(m.first_token_s.is_finite(), "request {} never prefetched", m.id);
+            assert!(m.finish_s.is_finite(), "request {} never finished", m.id);
+            assert!(m.first_token_s > m.arrival_s);
+            assert!(m.finish_s >= m.first_token_s);
+        }
+        assert!(stats.prefill_iterations > 0 && stats.decode_iterations > 0);
+        assert!(stats.makespan_s >= reqs.last().unwrap().arrival_s);
+        assert!(stats.peak_batch <= 16);
+        assert!(stats.peak_kv_tokens <= cfg.kv_capacity_tokens);
+        // Oracle quantization keeps the simulated shape set tiny.
+        assert!(oracle.cached_points() < 64, "{} oracle points", oracle.cached_points());
+    }
+
+    #[test]
+    fn deterministic_for_same_inputs() {
+        let (sim, sys, model) = small_setup();
+        let oracle = IterOracle::new(&sim, &sys, &model);
+        let cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
+        let reqs = generate(&WorkloadSpec::poisson(10.0, 64, 9));
+        let (a, _) = simulate(&oracle, &cfg, &reqs);
+        let (b, _) = simulate(&oracle, &cfg, &reqs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.first_token_s, y.first_token_s);
+            assert_eq!(x.finish_s, y.finish_s);
+        }
+    }
+
+    #[test]
+    fn spf_prefers_short_prompts_under_backlog() {
+        let (sim, sys, model) = small_setup();
+        let oracle = IterOracle::new(&sim, &sys, &model);
+        // Everything arrives at t=0: a long-prompt request first, then
+        // short ones. SPF should give the short ones earlier first tokens.
+        let mut reqs = vec![Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 2048,
+            output_tokens: 4,
+        }];
+        for i in 1..6u64 {
+            reqs.push(Request {
+                id: i,
+                arrival_s: 0.0,
+                prompt_tokens: 32,
+                output_tokens: 4,
+            });
+        }
+        let mk = |policy| SchedulerConfig {
+            max_batch: 2,
+            kv_capacity_tokens: kv_capacity_tokens(&sys, &model),
+            policy,
+            max_prefill_batch: 1,
+        };
+        let (fcfs, _) = simulate(&oracle, &mk(Policy::Fcfs), &reqs);
+        let (spf, _) = simulate(&oracle, &mk(Policy::ShortestPromptFirst), &reqs);
+        let mean_short_ttft = |ms: &[RequestMetrics]| {
+            ms.iter().skip(1).map(|m| m.first_token_s - m.arrival_s).sum::<f64>() / 5.0
+        };
+        assert!(
+            mean_short_ttft(&spf) < mean_short_ttft(&fcfs),
+            "SPF {:.4} vs FCFS {:.4}",
+            mean_short_ttft(&spf),
+            mean_short_ttft(&fcfs)
+        );
+        // FCFS serves the long prompt first.
+        assert!(fcfs[0].first_token_s <= spf[0].first_token_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "never be admitted")]
+    fn oversized_request_panics_up_front() {
+        let (sim, sys, model) = small_setup();
+        let oracle = IterOracle::new(&sim, &sys, &model);
+        let cfg = SchedulerConfig {
+            max_batch: 4,
+            kv_capacity_tokens: 100,
+            policy: Policy::Fcfs,
+            max_prefill_batch: 4,
+        };
+        let reqs = vec![Request {
+            id: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 200,
+            output_tokens: 10,
+        }];
+        simulate(&oracle, &cfg, &reqs);
+    }
+}

@@ -1,0 +1,267 @@
+//! Workload generation for the cluster serving simulator: open-loop
+//! arrival processes (Poisson, bursty/Markov-modulated) and trace replay,
+//! with configurable prompt/output-length distributions.
+//!
+//! Serving-oriented benchmarks (LLM-Inference-Bench and the production
+//! traces they draw on) show that *when* requests arrive matters as much
+//! as what they ask for: the same aggregate rate delivered smoothly or in
+//! bursts produces very different queueing delay and tail latency. All
+//! generators here are driven by [`crate::util::prng::Rng`], so a seed
+//! fully determines a trace and experiments replay bit-identically.
+
+use crate::util::prng::Rng;
+
+/// One serving request in the open-loop trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt (input) length in tokens.
+    pub prompt_tokens: u64,
+    /// Requested output length in tokens (≥ 1; the first token comes from
+    /// prefill itself).
+    pub output_tokens: u64,
+}
+
+impl Request {
+    /// KV-cache tokens this request holds when fully generated.
+    pub fn total_tokens(&self) -> u64 {
+        self.prompt_tokens + self.output_tokens
+    }
+}
+
+/// Arrival process of the open-loop workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Memoryless arrivals at `rate_per_s`: exponential inter-arrival gaps.
+    Poisson { rate_per_s: f64 },
+    /// Two-state Markov-modulated Poisson process: a calm state at
+    /// `rate_per_s` and a burst state at `burst_multiplier × rate_per_s`,
+    /// with geometric dwell times of `mean_phase_requests` requests per
+    /// state. Models diurnal spikes and thundering herds.
+    Bursty {
+        rate_per_s: f64,
+        burst_multiplier: f64,
+        mean_phase_requests: f64,
+    },
+}
+
+/// Request-length distribution (used for both prompt and output lengths).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthDist {
+    Fixed(u64),
+    /// Uniform over `[lo, hi]` inclusive.
+    Uniform { lo: u64, hi: u64 },
+    /// Skewed toward short requests over `[1, max]` (quadratic-inverse CDF
+    /// via [`Rng::skewed`]) — the shape of interactive chat traces, where
+    /// most turns are short and a heavy tail is long.
+    Skewed { max: u64 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match *self {
+            LengthDist::Fixed(n) => n.max(1),
+            LengthDist::Uniform { lo, hi } => rng.range(lo.max(1), hi.max(lo.max(1))),
+            LengthDist::Skewed { max } => rng.skewed(max.max(1)) + 1,
+        }
+    }
+
+    /// Largest value the distribution can produce (for KV reservations).
+    pub fn max_value(&self) -> u64 {
+        match *self {
+            LengthDist::Fixed(n) => n.max(1),
+            LengthDist::Uniform { lo, hi } => hi.max(lo.max(1)),
+            LengthDist::Skewed { max } => max.max(1),
+        }
+    }
+}
+
+/// A complete workload specification.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub arrival: Arrival,
+    pub prompt: LengthDist,
+    pub output: LengthDist,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// A Poisson workload with chat-shaped lengths — the default for the
+    /// `serve` CLI and the SLO sweep.
+    pub fn poisson(rate_per_s: f64, requests: usize, seed: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            arrival: Arrival::Poisson { rate_per_s },
+            prompt: LengthDist::Uniform { lo: 128, hi: 2048 },
+            output: LengthDist::Skewed { max: 512 },
+            requests,
+            seed,
+        }
+    }
+}
+
+/// Generate the request trace for a spec. Arrivals are monotone in time
+/// and ids are assigned in arrival order.
+pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut in_burst = false;
+    let mut out = Vec::with_capacity(spec.requests);
+    for id in 0..spec.requests as u64 {
+        let rate = match spec.arrival {
+            Arrival::Poisson { rate_per_s } => rate_per_s,
+            Arrival::Bursty { rate_per_s, burst_multiplier, mean_phase_requests } => {
+                // Geometric phase dwell: leave the current state with
+                // probability 1/mean_phase_requests per request.
+                if rng.chance(1.0 / mean_phase_requests.max(1.0)) {
+                    in_burst = !in_burst;
+                }
+                if in_burst {
+                    rate_per_s * burst_multiplier.max(1.0)
+                } else {
+                    rate_per_s
+                }
+            }
+        };
+        assert!(rate > 0.0, "arrival rate must be positive");
+        // Exponential inter-arrival gap: −ln(1−u)/λ, u ∈ [0,1).
+        t += -(1.0 - rng.f64()).ln() / rate;
+        out.push(Request {
+            id,
+            arrival_s: t,
+            prompt_tokens: spec.prompt.sample(&mut rng),
+            output_tokens: spec.output.sample(&mut rng),
+        });
+    }
+    out
+}
+
+/// Parse a replay trace: one request per line, `arrival_s,prompt,output`,
+/// `#`-prefixed comment lines and blank lines ignored. Lines may arrive
+/// unsorted; the result is sorted by arrival time with ids reassigned in
+/// arrival order.
+pub fn parse_trace(text: &str) -> Result<Vec<Request>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() != 3 {
+            return Err(format!(
+                "trace line {}: expected `arrival_s,prompt,output`, got `{line}`",
+                lineno + 1
+            ));
+        }
+        let arrival_s: f64 = fields[0]
+            .parse()
+            .map_err(|_| format!("trace line {}: bad arrival `{}`", lineno + 1, fields[0]))?;
+        let prompt_tokens: u64 = fields[1]
+            .parse()
+            .map_err(|_| format!("trace line {}: bad prompt length `{}`", lineno + 1, fields[1]))?;
+        let output_tokens: u64 = fields[2]
+            .parse()
+            .map_err(|_| format!("trace line {}: bad output length `{}`", lineno + 1, fields[2]))?;
+        if !arrival_s.is_finite() || arrival_s < 0.0 || prompt_tokens == 0 || output_tokens == 0 {
+            return Err(format!(
+                "trace line {}: arrival must be finite and ≥ 0, lengths ≥ 1",
+                lineno + 1
+            ));
+        }
+        out.push(Request { id: 0, arrival_s, prompt_tokens, output_tokens });
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let spec = WorkloadSpec::poisson(4.0, 4000, 11);
+        let reqs = generate(&spec);
+        assert_eq!(reqs.len(), 4000);
+        let span = reqs.last().unwrap().arrival_s;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 4.0).abs() / 4.0 < 0.1, "empirical rate {rate:.2}");
+        // Monotone arrivals, ids in order.
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+            assert_eq!(w[1].id, w[0].id + 1);
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let spec = WorkloadSpec::poisson(2.0, 100, 7);
+        assert_eq!(generate(&spec), generate(&spec));
+        let other = WorkloadSpec { seed: 8, ..spec };
+        assert_ne!(generate(&spec), generate(&other));
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_than_poisson_at_same_rate() {
+        let n = 4000;
+        let poisson = generate(&WorkloadSpec::poisson(4.0, n, 3));
+        let bursty = generate(&WorkloadSpec {
+            arrival: Arrival::Bursty {
+                rate_per_s: 4.0,
+                burst_multiplier: 8.0,
+                mean_phase_requests: 50.0,
+            },
+            ..WorkloadSpec::poisson(4.0, n, 3)
+        });
+        let gaps = |rs: &[Request]| -> Vec<f64> {
+            rs.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect()
+        };
+        // Burstiness shows up as a higher coefficient of variation of the
+        // inter-arrival gaps (Poisson has CV ≈ 1).
+        let cv = |g: &[f64]| stats::stddev(g) / stats::mean(g);
+        let cv_p = cv(&gaps(&poisson));
+        let cv_b = cv(&gaps(&bursty));
+        assert!((cv_p - 1.0).abs() < 0.15, "poisson CV {cv_p:.2}");
+        assert!(cv_b > cv_p, "bursty CV {cv_b:.2} vs poisson {cv_p:.2}");
+    }
+
+    #[test]
+    fn length_dists_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let u = LengthDist::Uniform { lo: 10, hi: 20 }.sample(&mut rng);
+            assert!((10..=20).contains(&u));
+            let s = LengthDist::Skewed { max: 64 }.sample(&mut rng);
+            assert!((1..=64).contains(&s));
+            assert_eq!(LengthDist::Fixed(0).sample(&mut rng), 1);
+        }
+        assert_eq!(LengthDist::Uniform { lo: 10, hi: 20 }.max_value(), 20);
+        assert_eq!(LengthDist::Skewed { max: 64 }.max_value(), 64);
+    }
+
+    #[test]
+    fn parse_trace_roundtrip_and_errors() {
+        let text = "# t,prompt,output\n0.5, 128, 32\n0.1,64,8\n\n1.0,256,1\n";
+        let reqs = parse_trace(text).unwrap();
+        assert_eq!(reqs.len(), 3);
+        // Sorted by arrival with ids reassigned.
+        assert_eq!(reqs[0].arrival_s, 0.1);
+        assert_eq!(reqs[0].prompt_tokens, 64);
+        assert_eq!(reqs[0].id, 0);
+        assert_eq!(reqs[2].arrival_s, 1.0);
+        assert_eq!(reqs[2].id, 2);
+        assert!(parse_trace("1.0,2").is_err());
+        assert!(parse_trace("x,2,3").is_err());
+        assert!(parse_trace("1.0,0,3").is_err());
+        assert!(parse_trace("nan,2,3").is_err());
+        assert!(parse_trace("inf,2,3").is_err());
+        assert!(parse_trace("-1.0,2,3").is_err());
+    }
+}

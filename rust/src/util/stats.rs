@@ -177,6 +177,43 @@ mod tests {
     }
 
     #[test]
+    fn percentile_empty_slice_is_zero() {
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element_is_that_element() {
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.25], p), 7.25);
+        }
+    }
+
+    #[test]
+    fn percentile_endpoints_are_min_and_max_unsorted() {
+        // p=0 / p=100 must return the extremes regardless of input order.
+        let xs = [9.0, -3.0, 4.0, 0.5, 7.0];
+        assert_eq!(percentile(&xs, 0.0), -3.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+        // Interior percentiles are bounded by the extremes and monotone.
+        let mut last = f64::NEG_INFINITY;
+        for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 100.0] {
+            let v = percentile(&xs, p);
+            assert!((-3.0..=9.0).contains(&v));
+            assert!(v >= last, "percentile not monotone at p={p}");
+            last = v;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_rejects_out_of_range_p() {
+        percentile(&[1.0], 101.0);
+    }
+
+    #[test]
     fn error_metrics() {
         assert!((rel_error(11.0, 10.0) - 0.1).abs() < 1e-12);
         let sim = [11.0, 9.0];

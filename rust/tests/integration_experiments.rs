@@ -76,7 +76,7 @@ fn tab4_reproduces_cost_rows() {
 #[test]
 fn fig5_runs_when_artifacts_present() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping fig5 (no artifacts)");
+        eprintln!("skipped: fig5 needs artifacts (run `make artifacts`)");
         return;
     }
     let ctx = Ctx::new(true);

@@ -12,7 +12,7 @@ fn artifact_dir() -> Option<&'static Path> {
     if dir.join("manifest.json").exists() {
         Some(dir)
     } else {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        eprintln!("skipped: PJRT integration test needs artifacts (run `make artifacts`)");
         None
     }
 }

@@ -1,0 +1,191 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment's vendored registry carries no external crates,
+//! so this shim provides the slice of `anyhow` the workspace actually
+//! uses: [`Error`] (a message + context chain), [`Result`], the
+//! [`anyhow!`] / [`bail!`] macros, [`Context`] for `Result`, and
+//! `{:#}`-style chained formatting. It follows the real crate's API shapes
+//! so swapping the genuine `anyhow` back in is a one-line Cargo change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: the top-most message plus a chain of causes.
+///
+/// Deliberately does **not** implement `std::error::Error` (mirroring the
+/// real crate) so the blanket `From<E: std::error::Error>` conversion can
+/// coexist with `From<Error> for Error` from `core`.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = &self.cause;
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = &e.cause;
+        }
+        out
+    }
+
+    /// The innermost cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, colon-separated (anyhow's format).
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our cause chain.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error { msg: it.next().unwrap(), cause: None };
+        for msg in it {
+            err = Error { msg, cause: Some(Box::new(err)) };
+        }
+        err
+    }
+}
+
+/// Anything convertible into [`Error`] — implemented for `Error` itself
+/// and for every std error (the same split the real crate uses).
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoError for E {
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Attach context to the error arm of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: IntoError> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        assert_eq!(format!("{e:#}"), "bad value 7");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading manifest".to_string()).unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        // Context on an already-anyhow Result.
+        let r2: Result<()> = Err(e);
+        let e2 = r2.context("loading artifacts").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "loading artifacts: reading manifest: gone");
+        assert_eq!(e2.root_cause(), "gone");
+        assert!(format!("{e2:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope: {}", 1 + 1);
+            }
+            let n: u32 = "42".parse()?; // std error converts via `?`
+            Ok(n)
+        }
+        assert_eq!(inner(false).unwrap(), 42);
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "nope: 2");
+    }
+}
