@@ -12,6 +12,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Explicit doc-test pass: `cargo test` covers lib doctests too, but this
+# keeps them gated even when someone filters the unit/integration suites.
+echo "== cargo test --doc -q =="
+cargo test --doc -q
+
 if [[ "${1:-}" == "--fix" ]]; then
     echo "== cargo fmt =="
     cargo fmt

@@ -1,0 +1,50 @@
+//! The unified `eval` API: build a scenario in code, round-trip it
+//! through JSON, and evaluate the shipped `scenarios/` suite with a
+//! shared mapper cache.
+//!
+//! Run: `cargo run --release --example eval_scenarios`
+
+use llmcompass::eval::{self, Evaluator, Output, Scenario, Workload};
+use llmcompass::graph::layer::Phase;
+
+fn main() -> Result<(), String> {
+    let ev = Evaluator::new();
+
+    // 1. Builder-constructed: one GPT-3 prefill layer on a 4xA100 node,
+    //    with the device cost riding along.
+    let sc = Scenario::new(
+        "prefill-layer",
+        "a100x4",
+        Workload::Layer {
+            model: "gpt3-175b".into(),
+            phase: Phase::Prefill { batch: 8, seq: 2048 },
+        },
+    )
+    .with_output(Output::Cost);
+    let rep = ev.evaluate(&sc)?;
+    print!("{}", rep.to_json().to_string_pretty());
+
+    // 2. The same scenario survives a JSON round trip bit-for-bit.
+    let again = Scenario::parse(&sc.to_json().to_string_pretty())?;
+    assert_eq!(sc, again, "scenario JSON round trip must be lossless");
+
+    // 3. The shipped suite, fanned across the pool. The evaluator is the
+    //    same one as above, so every already-searched shape is a cache hit.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    let suite = eval::load_suite(&dir)?;
+    let reports = ev.evaluate_suite(&suite, llmcompass::util::pool::default_threads());
+    println!("\nsuite of {} scenarios:", suite.len());
+    for (sc, rep) in suite.iter().zip(&reports) {
+        match rep {
+            Ok(r) => println!("  {:<24} {} output(s) evaluated", sc.name, r.results.len()),
+            Err(e) => println!("  {:<24} failed: {e}", sc.name),
+        }
+    }
+    println!(
+        "mapper totals: {} searches, {} rounds, {} cached shapes",
+        ev.sim.mapper.searches(),
+        ev.sim.mapper.total_rounds(),
+        ev.sim.mapper.cache_len()
+    );
+    Ok(())
+}

@@ -136,6 +136,56 @@ fn main() {
         ));
     });
 
+    // Cold vs cached-mapper suite evaluation through the unified `eval`
+    // API: the same three-scenario suite with a fresh Evaluator per
+    // scenario (every scenario re-searches its shapes) vs one shared
+    // Evaluator (later scenarios hit the mapper cache) — the
+    // cross-scenario caching the `eval` layer exists to exploit.
+    {
+        use llmcompass::eval::{Evaluator, Scenario, Workload};
+        let suite = vec![
+            Scenario::new(
+                "prefill-layer",
+                "a100x4",
+                Workload::Layer {
+                    model: "gpt3-175b".into(),
+                    phase: Phase::Prefill { batch: 8, seq: 2048 },
+                },
+            ),
+            Scenario::new(
+                "decode-layer",
+                "a100x4",
+                Workload::Layer {
+                    model: "gpt3-175b".into(),
+                    phase: Phase::Decode { batch: 8, kv_len: 3072 },
+                },
+            ),
+            Scenario::new(
+                "e2e-request",
+                "a100x4",
+                Workload::Request {
+                    model: "gpt3-175b".into(),
+                    batch: 8,
+                    prefill: 2048,
+                    decode: 1024,
+                    layers: Some(12),
+                },
+            ),
+        ];
+        b.run("eval_suite_cold_mapper", "fresh Evaluator per scenario", 0, 3, || {
+            for sc in &suite {
+                let ev = Evaluator::new();
+                std::hint::black_box(ev.evaluate(sc).unwrap());
+            }
+        });
+        b.run("eval_suite_shared_mapper", "one Evaluator, cache shared", 0, 3, || {
+            let ev = Evaluator::new();
+            for sc in &suite {
+                std::hint::black_box(ev.evaluate(sc).unwrap());
+            }
+        });
+    }
+
     b.run("json_parse_device", "hardware description", 10, 100_000, || {
         let text = presets::a100().to_json().to_string_pretty();
         std::hint::black_box(llmcompass::util::json::Json::parse(&text).unwrap());

@@ -80,7 +80,13 @@ impl Pipeline {
 /// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))` — ~6 mul/add/fma + 1 tanh.
 pub fn gelu_pipeline() -> Pipeline {
     Pipeline {
-        prims: vec![(Prim::Mul, 2), (Prim::Fma, 2), (Prim::Tanh, 1), (Prim::Add, 1), (Prim::Mul, 1)],
+        prims: vec![
+            (Prim::Mul, 2),
+            (Prim::Fma, 2),
+            (Prim::Tanh, 1),
+            (Prim::Add, 1),
+            (Prim::Mul, 1),
+        ],
     }
 }
 

@@ -256,7 +256,11 @@ pub fn tune_cpu_device(initial: DeviceSpec, measurements: &[Measurement]) -> Dev
 }
 
 /// Run the full calibration: measure, fit, tune, save `hardware/cpu.json`.
-pub fn calibrate(artifact_dir: &Path, out_path: &Path, iters: usize) -> Result<(Vec<Measurement>, DeviceSpec)> {
+pub fn calibrate(
+    artifact_dir: &Path,
+    out_path: &Path,
+    iters: usize,
+) -> Result<(Vec<Measurement>, DeviceSpec)> {
     let mut rt = Runtime::new(artifact_dir)?;
     let measurements = measure_operators(&mut rt, iters)?;
     let cores = crate::util::pool::default_threads() as u64;

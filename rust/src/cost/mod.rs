@@ -86,6 +86,17 @@ impl CostReport {
     pub fn total_usd(&self) -> f64 {
         self.die_cost_usd + self.memory_cost_usd
     }
+
+    /// Stable JSON rendering (part of the `eval` report schema).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("die_mm2", num(self.die_mm2)),
+            ("die_cost_usd", num(self.die_cost_usd)),
+            ("memory_cost_usd", num(self.memory_cost_usd)),
+            ("total_usd", num(self.total_usd())),
+        ])
+    }
 }
 
 /// Compute the cost report for a device (area from the area model).
@@ -160,7 +171,11 @@ mod tests {
         let lat = device_cost(&p, &presets::latency_oriented());
         let thr = device_cost(&p, &presets::throughput_oriented());
         assert!((ga.total_usd() - 711.0).abs() / 711.0 < 0.08, "GA100 total {}", ga.total_usd());
-        assert!((lat.total_usd() - 640.0).abs() / 640.0 < 0.08, "latency total {}", lat.total_usd());
+        assert!(
+            (lat.total_usd() - 640.0).abs() / 640.0 < 0.08,
+            "latency total {}",
+            lat.total_usd()
+        );
         assert!((thr.total_usd() - 296.0).abs() / 296.0 < 0.12, "thr total {}", thr.total_usd());
 
         let ppc_lat = perf_per_cost_normalized(0.953, &lat, 1.0, &ga);

@@ -1,0 +1,597 @@
+//! The [`Evaluator`]: one entry point that turns a [`Scenario`] into an
+//! [`EvalReport`] with a stable JSON schema ([`SCHEMA_VERSION`]).
+//!
+//! The evaluator owns the analytical [`Simulator`], so its mapper caches
+//! persist across every scenario it evaluates: a suite of scenarios that
+//! revisit the same (device, GEMM shape) pairs performs strictly fewer
+//! mapper parameter searches than evaluating each scenario with its own
+//! simulator — the cross-scenario caching that makes `--suite` runs take
+//! seconds. [`Evaluator::evaluate_suite`] additionally fans scenarios
+//! across the [`crate::util::pool`] worker threads.
+
+use super::scenario::{Output, Scenario, TrafficSpec, Workload};
+use crate::area::{die_breakdown, AreaParams, DieBreakdown};
+use crate::cost::{device_cost, CostParams, CostReport};
+use crate::graph::inference::{LayerReport, Simulator};
+use crate::graph::ModelConfig;
+use crate::hardware::{config, SystemSpec};
+use crate::perf::OpResult;
+use crate::serve;
+use crate::util::json::{num, obj, s, Json};
+use std::path::{Path, PathBuf};
+
+/// Version of the [`EvalReport::to_json`] schema. Bump on breaking change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Resolve a model name, with the known registry in the error message.
+/// Shared by the evaluator and the CLI's `--model` arguments.
+pub fn model_by_name(name: &str) -> Result<ModelConfig, String> {
+    ModelConfig::by_name(name).ok_or_else(|| {
+        format!("unknown model `{name}` (known: {})", ModelConfig::known_names().join(", "))
+    })
+}
+
+/// Materialize the request trace of a traffic workload: replayed from its
+/// `trace` file when set, generated from the spec otherwise.
+pub fn traffic_requests(t: &TrafficSpec) -> Result<Vec<serve::Request>, String> {
+    if let Some(path) = &t.trace {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read trace {path}: {e}"))?;
+        return serve::workload::parse_trace(&text);
+    }
+    if !t.rate_per_s.is_finite() || t.rate_per_s <= 0.0 {
+        return Err(format!("traffic rate_per_s must be positive, got {}", t.rate_per_s));
+    }
+    let mut spec = serve::WorkloadSpec::poisson(t.rate_per_s, t.requests, t.seed);
+    if let Some(mult) = t.burst_multiplier {
+        spec.arrival = serve::Arrival::Bursty {
+            rate_per_s: t.rate_per_s,
+            burst_multiplier: mult,
+            mean_phase_requests: 50.0,
+        };
+    }
+    Ok(serve::workload::generate(&spec))
+}
+
+/// Serving-level result of a traffic scenario.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub summary: serve::Summary,
+    pub stats: serve::RunStats,
+    pub kv_capacity_tokens: u64,
+    /// Die + memory cost of the whole cluster.
+    pub cluster_cost_usd: f64,
+    /// $ per million output tokens at the SLO (hardware amortized over
+    /// [`serve::sweep::AMORT_SECONDS`]); infinite when nothing met it.
+    pub usd_per_mtok: f64,
+}
+
+/// One requested output, evaluated.
+#[derive(Debug, Clone)]
+pub enum EvalResult {
+    /// `latency` of an op workload.
+    OpLatency { op_name: String, result: OpResult },
+    /// `latency` of a layer workload (per-layer breakdown; `layers` is the
+    /// model depth for the stacked total).
+    LayerLatency { layers: u64, per_layer: LayerReport },
+    /// `latency` of a request workload (end-to-end seconds).
+    RequestLatency { total_s: f64, tokens_per_s_per_request: f64 },
+    /// `throughput` of a request workload (batch × decode tokens / total).
+    Throughput { tokens_per_s: f64 },
+    /// `area` of the device.
+    Area(DieBreakdown),
+    /// `cost` of the device.
+    Cost(CostReport),
+    /// `serving` metrics of a traffic workload.
+    Serving(ServingReport),
+}
+
+impl EvalResult {
+    /// The `results` key this result is filed under.
+    pub fn output_key(&self) -> &'static str {
+        match self {
+            EvalResult::OpLatency { .. }
+            | EvalResult::LayerLatency { .. }
+            | EvalResult::RequestLatency { .. } => "latency",
+            EvalResult::Throughput { .. } => "throughput",
+            EvalResult::Area(_) => "area",
+            EvalResult::Cost(_) => "cost",
+            EvalResult::Serving(_) => "serving",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            EvalResult::OpLatency { op_name, result } => obj(vec![
+                ("kind", s("op")),
+                ("op", s(op_name)),
+                ("latency_s", num(result.latency_s)),
+                ("compute_bound_s", num(result.compute_bound_s)),
+                ("memory_bound_s", num(result.memory_bound_s)),
+                ("roofline_fraction", num(result.roofline_fraction())),
+                ("mapper_rounds", num(result.mapper_rounds as f64)),
+                ("mapping", s(&result.mapping_desc)),
+            ]),
+            EvalResult::LayerLatency { layers, per_layer } => obj(vec![
+                ("kind", s("layer")),
+                ("per_layer_s", num(per_layer.total_s)),
+                ("layers", num(*layers as f64)),
+                ("stack_s", num(per_layer.total_s * *layers as f64)),
+                (
+                    "breakdown",
+                    Json::Arr(
+                        per_layer
+                            .breakdown
+                            .iter()
+                            .map(|(op, sec)| obj(vec![("op", s(op)), ("seconds", num(*sec))]))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            EvalResult::RequestLatency { total_s, tokens_per_s_per_request } => obj(vec![
+                ("kind", s("request")),
+                ("total_s", num(*total_s)),
+                ("tokens_per_s_per_request", num(*tokens_per_s_per_request)),
+            ]),
+            EvalResult::Throughput { tokens_per_s } => {
+                obj(vec![("kind", s("request")), ("tokens_per_s", num(*tokens_per_s))])
+            }
+            EvalResult::Area(b) => b.to_json(),
+            EvalResult::Cost(c) => c.to_json(),
+            EvalResult::Serving(r) => obj(vec![
+                ("kv_capacity_tokens", num(r.kv_capacity_tokens as f64)),
+                ("cluster_cost_usd", num(r.cluster_cost_usd)),
+                ("usd_per_mtok", num(r.usd_per_mtok)),
+                ("summary", r.summary.to_json()),
+                ("stats", r.stats.to_json()),
+            ]),
+        }
+    }
+}
+
+/// The evaluation of one scenario: the resolved system plus one result per
+/// requested output.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub scenario: Scenario,
+    pub system: SystemSpec,
+    /// One entry per requested output, in the scenario's output order.
+    pub results: Vec<EvalResult>,
+}
+
+impl EvalReport {
+    /// Stable-schema JSON: `schema_version`, the scenario as written, the
+    /// resolved hardware, and the results keyed by output name.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema_version", num(SCHEMA_VERSION as f64)),
+            ("scenario", self.scenario.to_json()),
+            (
+                "hardware",
+                obj(vec![
+                    ("device", s(&self.system.device.name)),
+                    ("device_count", num(self.system.device_count as f64)),
+                ]),
+            ),
+            (
+                "results",
+                Json::Obj(
+                    self.results
+                        .iter()
+                        .map(|r| (r.output_key().to_string(), r.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The unified evaluator: resolves a scenario's hardware, runs its
+/// workload, and produces every requested output through the performance,
+/// area, cost, and serving models.
+pub struct Evaluator {
+    /// The analytical simulator; its mapper caches persist across every
+    /// scenario this evaluator touches.
+    pub sim: Simulator,
+    pub area_params: AreaParams,
+    pub cost_params: CostParams,
+}
+
+impl Default for Evaluator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Evaluator {
+    pub fn new() -> Evaluator {
+        Evaluator::with_sim(Simulator::new())
+    }
+
+    /// An evaluator whose mapper fans each candidate search across all
+    /// cores — for single-stream callers (the CLI). Keep [`Evaluator::new`]
+    /// for suite evaluation, which already fans out per scenario.
+    pub fn pooled() -> Evaluator {
+        Evaluator::with_sim(Simulator::pooled())
+    }
+
+    pub fn with_sim(sim: Simulator) -> Evaluator {
+        Evaluator { sim, area_params: AreaParams::default(), cost_params: CostParams::default() }
+    }
+
+    /// Evaluate one scenario into a report.
+    pub fn evaluate(&self, sc: &Scenario) -> Result<EvalReport, String> {
+        let system = config::resolve(&sc.hardware)?;
+        if sc.outputs.is_empty() {
+            return Err(format!("scenario `{}` requests no outputs", sc.name));
+        }
+        let mut results = Vec::with_capacity(sc.outputs.len());
+        for &out in &sc.outputs {
+            let r = self.eval_output(&system, sc, out, &results)?;
+            results.push(r);
+        }
+        Ok(EvalReport { scenario: sc.clone(), system, results })
+    }
+
+    /// Evaluate many scenarios with a shared mapper cache, fanned across
+    /// `threads` pool workers. Per-scenario errors are returned in place,
+    /// so one bad scenario does not sink the suite.
+    pub fn evaluate_suite(
+        &self,
+        scenarios: &[Scenario],
+        threads: usize,
+    ) -> Vec<Result<EvalReport, String>> {
+        crate::util::pool::parallel_map(scenarios, threads, |sc| self.evaluate(sc))
+    }
+
+    fn eval_output(
+        &self,
+        system: &SystemSpec,
+        sc: &Scenario,
+        out: Output,
+        prior: &[EvalResult],
+    ) -> Result<EvalResult, String> {
+        match out {
+            Output::Latency => match &sc.workload {
+                Workload::Op(op) => Ok(EvalResult::OpLatency {
+                    op_name: op.name().to_string(),
+                    result: self.sim.op_latency(system, op),
+                }),
+                Workload::Layer { model, phase } => {
+                    let m = model_by_name(model)?;
+                    Ok(EvalResult::LayerLatency {
+                        layers: m.layers,
+                        per_layer: self.sim.layer(system, &m, *phase),
+                    })
+                }
+                Workload::Request { model, batch, prefill, decode, layers } => {
+                    let m = model_by_name(model)?;
+                    let layers = layers.unwrap_or(m.layers);
+                    let total_s =
+                        self.sim.e2e_latency(system, &m, *batch, *prefill, *decode, layers);
+                    Ok(EvalResult::RequestLatency {
+                        total_s,
+                        tokens_per_s_per_request: *decode as f64 / total_s,
+                    })
+                }
+                Workload::Traffic(_) => Err(format!(
+                    "scenario `{}`: `latency` needs an op/layer/request workload \
+                     (traffic scenarios report `serving`)",
+                    sc.name
+                )),
+                Workload::Hardware => {
+                    Err(format!("scenario `{}`: `latency` needs a workload", sc.name))
+                }
+            },
+            Output::Throughput => match &sc.workload {
+                Workload::Request { model, batch, prefill, decode, layers } => {
+                    // Reuse an already-computed latency result when this
+                    // scenario also requested `latency` — identical
+                    // simulation, no need to run it twice.
+                    let total_s = prior.iter().find_map(|r| match r {
+                        EvalResult::RequestLatency { total_s, .. } => Some(*total_s),
+                        _ => None,
+                    });
+                    let total_s = match total_s {
+                        Some(t) => t,
+                        None => {
+                            let m = model_by_name(model)?;
+                            let layers = layers.unwrap_or(m.layers);
+                            self.sim.e2e_latency(system, &m, *batch, *prefill, *decode, layers)
+                        }
+                    };
+                    Ok(EvalResult::Throughput {
+                        tokens_per_s: (*batch * *decode) as f64 / total_s,
+                    })
+                }
+                _ => Err(format!(
+                    "scenario `{}`: `throughput` needs a request workload",
+                    sc.name
+                )),
+            },
+            Output::Area => Ok(EvalResult::Area(die_breakdown(
+                &self.area_params,
+                &system.device,
+                system.interconnect.link_bandwidth_bytes_per_s,
+            ))),
+            Output::Cost => Ok(EvalResult::Cost(device_cost(&self.cost_params, &system.device))),
+            Output::Serving => match &sc.workload {
+                Workload::Traffic(t) => self.eval_serving(system, sc, t),
+                _ => Err(format!(
+                    "scenario `{}`: `serving` needs a traffic workload",
+                    sc.name
+                )),
+            },
+        }
+    }
+
+    fn eval_serving(
+        &self,
+        system: &SystemSpec,
+        sc: &Scenario,
+        t: &TrafficSpec,
+    ) -> Result<EvalResult, String> {
+        let model = model_by_name(&t.model)?;
+        if t.max_batch == 0 {
+            return Err(format!("scenario `{}`: traffic max_batch must be ≥ 1", sc.name));
+        }
+        let mut cfg = serve::SchedulerConfig::for_system(system, &model, t.policy);
+        cfg.max_batch = t.max_batch;
+        if cfg.kv_capacity_tokens == 0 {
+            return Err(format!(
+                "model `{}` does not fit `{}` (parameters exceed memory capacity)",
+                model.name, system.device.name
+            ));
+        }
+        let requests = traffic_requests(t)?;
+        if let Some(big) = requests.iter().find(|r| r.total_tokens() > cfg.kv_capacity_tokens) {
+            return Err(format!(
+                "request {} needs {} KV tokens but the cluster budget is only {}",
+                big.id,
+                big.total_tokens(),
+                cfg.kv_capacity_tokens
+            ));
+        }
+        let (summary, stats, _) =
+            serve::serve_once(&self.sim, system, &model, &cfg, &requests, &t.slo);
+        let cluster_cost_usd =
+            device_cost(&self.cost_params, &system.device).total_usd() * system.device_count as f64;
+        let usd_per_mtok =
+            serve::sweep::usd_per_mtok_at_slo(cluster_cost_usd, summary.goodput_tok_s);
+        Ok(EvalResult::Serving(ServingReport {
+            summary,
+            stats,
+            kv_capacity_tokens: cfg.kv_capacity_tokens,
+            cluster_cost_usd,
+            usd_per_mtok,
+        }))
+    }
+}
+
+/// Load every `*.json` scenario in a directory (sorted by file name) as
+/// one suite.
+pub fn load_suite(dir: &Path) -> Result<Vec<Scenario>, String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read suite dir {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(format!("no *.json scenario files in {}", dir.display()));
+    }
+    paths.iter().map(|p| Scenario::load(p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layer::Phase;
+    use crate::hardware::DType;
+    use crate::perf::Op;
+
+    fn small_op() -> Op {
+        Op::Matmul { b: 1, m: 256, k: 512, n: 256, dtype: DType::FP16, batched_b: false }
+    }
+
+    fn op_scenario(name: &str, hardware: &str) -> Scenario {
+        Scenario::new(name, hardware, Workload::Op(small_op()))
+    }
+
+    fn traffic_scenario(name: &str, hardware: &str) -> Scenario {
+        let mut t = TrafficSpec::poisson("gpt-small", 25.0, 32);
+        t.slo = crate::serve::Slo::relaxed();
+        t.seed = 7;
+        Scenario::new(name, hardware, Workload::Traffic(t)).with_output(Output::Cost)
+    }
+
+    #[test]
+    fn op_scenario_matches_direct_simulation() {
+        let ev = Evaluator::new();
+        let rep = ev.evaluate(&op_scenario("op", "a100")).unwrap();
+        let EvalResult::OpLatency { op_name, result } = &rep.results[0] else {
+            panic!("expected op latency")
+        };
+        assert_eq!(op_name, "matmul");
+        let sys = crate::hardware::presets::system("a100").unwrap();
+        let direct = ev.sim.op_latency(&sys, &small_op());
+        assert_eq!(result.latency_s, direct.latency_s);
+        assert_eq!(result.mapping_desc, direct.mapping_desc);
+    }
+
+    #[test]
+    fn round_trip_scenario_evaluates_identically() {
+        // serialize → parse → evaluate must match evaluating the original.
+        let sc = Scenario::new(
+            "layer",
+            "a100",
+            Workload::Layer {
+                model: "gpt-small".into(),
+                phase: Phase::Prefill { batch: 4, seq: 128 },
+            },
+        );
+        let again = Scenario::parse(&sc.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sc, again);
+        let ev = Evaluator::new();
+        let (a, b) = (ev.evaluate(&sc).unwrap(), ev.evaluate(&again).unwrap());
+        let (
+            EvalResult::LayerLatency { per_layer: ra, .. },
+            EvalResult::LayerLatency { per_layer: rb, .. },
+        ) = (&a.results[0], &b.results[0])
+        else {
+            panic!("expected layer latency")
+        };
+        assert_eq!(ra.total_s, rb.total_s);
+    }
+
+    #[test]
+    fn request_latency_and_throughput_consistent() {
+        let sc = Scenario::new(
+            "req",
+            "a100",
+            Workload::Request {
+                model: "gpt-small".into(),
+                batch: 2,
+                prefill: 64,
+                decode: 16,
+                layers: Some(2),
+            },
+        )
+        .with_output(Output::Throughput);
+        let ev = Evaluator::new();
+        let rep = ev.evaluate(&sc).unwrap();
+        let EvalResult::RequestLatency { total_s, tokens_per_s_per_request } = &rep.results[0]
+        else {
+            panic!("expected request latency")
+        };
+        let EvalResult::Throughput { tokens_per_s } = &rep.results[1] else {
+            panic!("expected throughput")
+        };
+        assert!(*total_s > 0.0);
+        assert!((tokens_per_s_per_request * 2.0 - tokens_per_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hardware_scenario_reports_area_and_cost() {
+        let ev = Evaluator::new();
+        let rep = ev.evaluate(&Scenario::new("hw", "ga100", Workload::Hardware)).unwrap();
+        assert_eq!(rep.results.len(), 2);
+        let EvalResult::Area(area) = &rep.results[0] else { panic!("expected area") };
+        let EvalResult::Cost(cost) = &rep.results[1] else { panic!("expected cost") };
+        assert!(area.total_mm2() > 0.0);
+        assert!((cost.die_mm2 - area.total_mm2()).abs() < 1e-9);
+        assert!(cost.total_usd() > 0.0);
+    }
+
+    #[test]
+    fn traffic_scenario_serves_and_prices() {
+        let ev = Evaluator::new();
+        let rep = ev.evaluate(&traffic_scenario("t", "ga100")).unwrap();
+        let EvalResult::Serving(sr) = &rep.results[0] else { panic!("expected serving") };
+        assert_eq!(sr.summary.requests, 32);
+        assert!(sr.summary.throughput_tok_s > 0.0);
+        assert!(sr.kv_capacity_tokens > 0);
+        assert!(sr.cluster_cost_usd > 0.0);
+        assert!(sr.usd_per_mtok > 0.0);
+        let EvalResult::Cost(_) = &rep.results[1] else { panic!("expected cost") };
+    }
+
+    #[test]
+    fn mismatched_outputs_error() {
+        let ev = Evaluator::new();
+        let bad = op_scenario("op", "a100").with_outputs(&[Output::Serving]);
+        assert!(ev.evaluate(&bad).is_err());
+        let bad = traffic_scenario("t", "ga100").with_outputs(&[Output::Latency]);
+        assert!(ev.evaluate(&bad).is_err());
+        let bad = Scenario::new("hw", "a100", Workload::Hardware).with_outputs(&[Output::Latency]);
+        assert!(ev.evaluate(&bad).is_err());
+        let bad = op_scenario("op", "not-a-device");
+        assert!(ev.evaluate(&bad).is_err());
+        let bad = Scenario::new(
+            "m",
+            "a100",
+            Workload::Layer {
+                model: "gpt-unknown".into(),
+                phase: Phase::Prefill { batch: 1, seq: 8 },
+            },
+        );
+        let err = ev.evaluate(&bad).unwrap_err();
+        assert!(err.contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn suite_shares_mapper_searches_across_scenarios() {
+        // The acceptance criterion of the cross-scenario cache: one shared
+        // evaluator performs strictly fewer mapper searches than N
+        // independent ones over a suite that revisits the same shapes.
+        let suite = vec![
+            op_scenario("first", "a100"),
+            op_scenario("second", "a100"),
+            op_scenario("third", "a100").with_output(Output::Cost),
+        ];
+        let shared = Evaluator::new();
+        for sc in &suite {
+            shared.evaluate(sc).unwrap();
+        }
+        let shared_searches = shared.sim.mapper.searches();
+        assert_eq!(shared_searches, 1, "one unique shape → one search");
+
+        let mut independent = 0;
+        for sc in &suite {
+            let ev = Evaluator::new();
+            ev.evaluate(sc).unwrap();
+            independent += ev.sim.mapper.searches();
+        }
+        assert!(
+            shared_searches < independent,
+            "shared {shared_searches} vs independent {independent}"
+        );
+    }
+
+    #[test]
+    fn parallel_suite_matches_serial() {
+        let suite = vec![
+            op_scenario("a", "a100"),
+            Scenario::new("hw", "ga100", Workload::Hardware),
+            op_scenario("b", "ga100"),
+        ];
+        let serial_ev = Evaluator::new();
+        let serial: Vec<_> = suite.iter().map(|sc| serial_ev.evaluate(sc).unwrap()).collect();
+        let pooled_ev = Evaluator::new();
+        let pooled = pooled_ev.evaluate_suite(&suite, 3);
+        assert_eq!(serial.len(), pooled.len());
+        for (a, b) in serial.iter().zip(&pooled) {
+            let b = b.as_ref().unwrap();
+            assert_eq!(a.to_json(), b.to_json());
+        }
+    }
+
+    #[test]
+    fn suite_reports_errors_in_place() {
+        let suite = vec![op_scenario("good", "a100"), op_scenario("bad", "nope")];
+        let ev = Evaluator::new();
+        let out = ev.evaluate_suite(&suite, 2);
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err());
+    }
+
+    #[test]
+    fn report_json_has_stable_schema() {
+        let ev = Evaluator::new();
+        let rep = ev.evaluate(&op_scenario("op", "a100").with_output(Output::Area)).unwrap();
+        let j = rep.to_json();
+        assert_eq!(j.get("schema_version").and_then(Json::as_u64), Some(SCHEMA_VERSION));
+        assert_eq!(
+            j.get("hardware").unwrap().get("device").and_then(Json::as_str),
+            Some("a100")
+        );
+        let results = j.get("results").unwrap();
+        assert!(results.get("latency").unwrap().get("latency_s").is_some());
+        assert!(results.get("area").unwrap().get("total").is_some());
+        // Valid JSON text round trip.
+        let text = j.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

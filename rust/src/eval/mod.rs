@@ -1,0 +1,34 @@
+//! The unified scenario API: one typed, serializable entry point for
+//! perf, cost, area, and serving evaluations.
+//!
+//! The framework's versatility used to be spread across four disjoint
+//! entry points (the simulator's positional-arg methods, the serving
+//! sweep's config struct, free functions in `cost`/`area`, and the
+//! experiment context). This module gives them a single front door:
+//!
+//! * [`Scenario`] — a typed description of *what to evaluate*: a hardware
+//!   target (preset name, `<name>xN` system, or JSON file), a workload
+//!   (operator, Transformer layer, end-to-end request, or serving
+//!   traffic), and the requested [`Output`]s. Builder-constructed in code
+//!   or loaded from JSON; `to_json`/`parse` round-trip losslessly.
+//! * [`Evaluator`] — turns scenarios into [`EvalReport`]s with a stable
+//!   JSON schema, routing each output through the right model (mapper +
+//!   graph simulation, area, cost, or the serving simulator). One
+//!   evaluator owns one simulator, so mapper searches are cached *across*
+//!   scenarios: suites that revisit shapes do strictly fewer searches
+//!   than independent runs.
+//! * [`load_suite`] — a directory of `*.json` scenarios as one suite,
+//!   evaluated by [`Evaluator::evaluate_suite`] across the thread pool.
+//!
+//! The CLI's `simulate` / `area` / `cost` / `serve` subcommands are thin
+//! adapters over this module, and `llmcompass eval --scenario file.json`
+//! / `--suite dir/` expose it directly.
+
+pub mod evaluator;
+pub mod scenario;
+
+pub use evaluator::{
+    load_suite, model_by_name, traffic_requests, EvalReport, EvalResult, Evaluator,
+    ServingReport, SCHEMA_VERSION,
+};
+pub use scenario::{Output, Scenario, TrafficSpec, Workload};

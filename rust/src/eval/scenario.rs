@@ -1,0 +1,704 @@
+//! The [`Scenario`] type: a typed, JSON-serializable description of one
+//! evaluation — a hardware target, a workload, and the requested outputs.
+//!
+//! A scenario names its hardware the same way the CLI does (a preset like
+//! `a100`, a system like `ga100x8`, or a JSON file path), picks one of five
+//! workload kinds, and lists the outputs it wants:
+//!
+//! | workload   | meaning                                              |
+//! |------------|------------------------------------------------------|
+//! | `hardware` | no workload — hardware-only outputs (area, cost)     |
+//! | `op`       | one operator (matmul / softmax / layernorm / gelu …) |
+//! | `layer`    | one Transformer layer at a prefill/decode phase      |
+//! | `request`  | one end-to-end request (prefill + decode tokens)     |
+//! | `traffic`  | an open-loop trace through the serving simulator     |
+//!
+//! Scenarios are built with the struct constructors here or parsed from
+//! JSON (`Scenario::parse` / `Scenario::load`); `to_json` round-trips
+//! losslessly, which the tests assert both structurally and by evaluating
+//! the reparsed scenario to identical numbers.
+
+use crate::graph::layer::Phase;
+use crate::hardware::DType;
+use crate::perf::Op;
+use crate::serve::{Policy, Slo};
+use crate::util::json::{num, obj, s, Json, JsonError};
+
+fn jerr(e: JsonError) -> String {
+    e.to_string()
+}
+
+/// Optional-field accessors that error when the key is present but has
+/// the wrong type — in a hand-written schema, silently falling back to a
+/// default on a typo'd value is worse than rejecting the file.
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => match x.as_u64() {
+            Some(n) => Ok(Some(n)),
+            None => Err(format!("`{key}` must be a non-negative integer")),
+        },
+    }
+}
+
+fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => match x.as_f64() {
+            Some(n) => Ok(Some(n)),
+            None => Err(format!("`{key}` must be a number")),
+        },
+    }
+}
+
+fn opt_bool(v: &Json, key: &str) -> Result<Option<bool>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => match x.as_bool() {
+            Some(b) => Ok(Some(b)),
+            None => Err(format!("`{key}` must be a boolean")),
+        },
+    }
+}
+
+fn opt_str<'a>(v: &'a Json, key: &str) -> Result<Option<&'a str>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => match x.as_str() {
+            Some(s2) => Ok(Some(s2)),
+            None => Err(format!("`{key}` must be a string")),
+        },
+    }
+}
+
+/// One requested output of a scenario evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Output {
+    /// Operator / layer / request latency (op, layer, request workloads).
+    Latency,
+    /// Request-level generation throughput (request workloads).
+    Throughput,
+    /// Die-area breakdown of the device (any workload).
+    Area,
+    /// Die + memory cost of the device (any workload).
+    Cost,
+    /// Serving metrics under traffic: TTFT/TPOT tails, goodput,
+    /// $/1M-tokens-at-SLO (traffic workloads).
+    Serving,
+}
+
+impl Output {
+    pub fn name(self) -> &'static str {
+        match self {
+            Output::Latency => "latency",
+            Output::Throughput => "throughput",
+            Output::Area => "area",
+            Output::Cost => "cost",
+            Output::Serving => "serving",
+        }
+    }
+
+    pub fn parse(v: &str) -> Option<Output> {
+        match v {
+            "latency" => Some(Output::Latency),
+            "throughput" => Some(Output::Throughput),
+            "area" => Some(Output::Area),
+            "cost" => Some(Output::Cost),
+            "serving" => Some(Output::Serving),
+            _ => None,
+        }
+    }
+}
+
+/// Traffic workload: the serving simulator's knobs in declarative form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    pub model: String,
+    /// Requests in the generated trace (ignored when `trace` is set).
+    pub requests: usize,
+    /// Mean Poisson arrival rate, requests/second.
+    pub rate_per_s: f64,
+    /// `Some(mult)` switches to the bursty (Markov-modulated) arrival
+    /// process with the burst state at `mult × rate_per_s`.
+    pub burst_multiplier: Option<f64>,
+    /// Replay a trace file (`arrival_s,prompt,output` lines) instead of
+    /// generating arrivals.
+    pub trace: Option<String>,
+    pub policy: Policy,
+    pub max_batch: u64,
+    pub slo: Slo,
+    pub seed: u64,
+}
+
+impl TrafficSpec {
+    /// Poisson traffic with the serving defaults (FCFS, max batch 64,
+    /// interactive SLO, seed 42).
+    pub fn poisson(model: &str, rate_per_s: f64, requests: usize) -> TrafficSpec {
+        TrafficSpec {
+            model: model.to_string(),
+            requests,
+            rate_per_s,
+            burst_multiplier: None,
+            trace: None,
+            policy: Policy::Fcfs,
+            max_batch: 64,
+            slo: Slo::interactive(),
+            seed: 42,
+        }
+    }
+}
+
+/// The workload a scenario evaluates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// No workload: hardware-only outputs (area, cost).
+    Hardware,
+    /// One operator on the device (or interconnect, for comm ops).
+    Op(Op),
+    /// One Transformer layer of `model` at a phase.
+    Layer { model: String, phase: Phase },
+    /// One end-to-end request: prefill `prefill` tokens, then generate
+    /// `decode` tokens, at batch size `batch`. `layers` defaults to the
+    /// whole model.
+    Request { model: String, batch: u64, prefill: u64, decode: u64, layers: Option<u64> },
+    /// An open-loop trace through the cluster serving simulator.
+    Traffic(TrafficSpec),
+}
+
+impl Workload {
+    /// The outputs a scenario gets when it does not list any.
+    pub fn default_outputs(&self) -> Vec<Output> {
+        match self {
+            Workload::Hardware => vec![Output::Area, Output::Cost],
+            Workload::Traffic(_) => vec![Output::Serving],
+            _ => vec![Output::Latency],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Workload::Hardware => obj(vec![("type", s("hardware"))]),
+            Workload::Op(op) => op_to_json(op),
+            Workload::Layer { model, phase } => {
+                let mut fields = vec![("type", s("layer")), ("model", s(model))];
+                match *phase {
+                    Phase::Prefill { batch, seq } => {
+                        fields.push(("phase", s("prefill")));
+                        fields.push(("batch", num(batch as f64)));
+                        fields.push(("seq", num(seq as f64)));
+                    }
+                    Phase::Decode { batch, kv_len } => {
+                        fields.push(("phase", s("decode")));
+                        fields.push(("batch", num(batch as f64)));
+                        fields.push(("kv_len", num(kv_len as f64)));
+                    }
+                }
+                obj(fields)
+            }
+            Workload::Request { model, batch, prefill, decode, layers } => {
+                let mut fields = vec![
+                    ("type", s("request")),
+                    ("model", s(model)),
+                    ("batch", num(*batch as f64)),
+                    ("prefill", num(*prefill as f64)),
+                    ("decode", num(*decode as f64)),
+                ];
+                if let Some(l) = layers {
+                    fields.push(("layers", num(*l as f64)));
+                }
+                obj(fields)
+            }
+            Workload::Traffic(t) => {
+                let mut fields = vec![
+                    ("type", s("traffic")),
+                    ("model", s(&t.model)),
+                    ("requests", num(t.requests as f64)),
+                    ("rate_per_s", num(t.rate_per_s)),
+                    ("policy", s(t.policy.name())),
+                    ("max_batch", num(t.max_batch as f64)),
+                    (
+                        "slo",
+                        obj(vec![("ttft_s", num(t.slo.ttft_s)), ("tpot_s", num(t.slo.tpot_s))]),
+                    ),
+                    ("seed", num(t.seed as f64)),
+                ];
+                if let Some(m) = t.burst_multiplier {
+                    fields.push(("burst_multiplier", num(m)));
+                }
+                if let Some(path) = &t.trace {
+                    fields.push(("trace", s(path)));
+                }
+                obj(fields)
+            }
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Workload, String> {
+        let ty = v.req_str("type").map_err(jerr)?;
+        match ty {
+            "hardware" => Ok(Workload::Hardware),
+            "op" => op_from_json(v).map(Workload::Op),
+            "layer" => {
+                let model = v.req_str("model").map_err(jerr)?.to_string();
+                let batch = v.req_u64("batch").map_err(jerr)?;
+                let phase = match v.req_str("phase").map_err(jerr)? {
+                    "prefill" => Phase::Prefill { batch, seq: v.req_u64("seq").map_err(jerr)? },
+                    "decode" => {
+                        Phase::Decode { batch, kv_len: v.req_u64("kv_len").map_err(jerr)? }
+                    }
+                    other => return Err(format!("unknown phase `{other}` (prefill | decode)")),
+                };
+                Ok(Workload::Layer { model, phase })
+            }
+            "request" => Ok(Workload::Request {
+                model: v.req_str("model").map_err(jerr)?.to_string(),
+                batch: v.req_u64("batch").map_err(jerr)?,
+                prefill: v.req_u64("prefill").map_err(jerr)?,
+                decode: v.req_u64("decode").map_err(jerr)?,
+                layers: opt_u64(v, "layers")?,
+            }),
+            "traffic" => {
+                let trace = opt_str(v, "trace")?.map(str::to_string);
+                let rate_per_s = match opt_f64(v, "rate_per_s")? {
+                    Some(r) => r,
+                    None if trace.is_some() => 0.0,
+                    None => {
+                        return Err(
+                            "traffic workload needs `rate_per_s` (or a `trace` file)".to_string()
+                        )
+                    }
+                };
+                let policy = match opt_str(v, "policy")? {
+                    None => Policy::Fcfs,
+                    Some(p) => Policy::parse(p)
+                        .ok_or_else(|| "bad traffic `policy` (fcfs | spf)".to_string())?,
+                };
+                let slo = match v.get("slo") {
+                    None => Slo::interactive(),
+                    Some(sv) => Slo {
+                        ttft_s: sv.req_f64("ttft_s").map_err(jerr)?,
+                        tpot_s: sv.req_f64("tpot_s").map_err(jerr)?,
+                    },
+                };
+                let requests = match opt_u64(v, "requests")? {
+                    Some(n) => n as usize,
+                    None if trace.is_some() => 0, // replay ignores `requests`
+                    None => {
+                        return Err(
+                            "traffic workload needs `requests` (or a `trace` file)".to_string()
+                        )
+                    }
+                };
+                Ok(Workload::Traffic(TrafficSpec {
+                    model: v.req_str("model").map_err(jerr)?.to_string(),
+                    requests,
+                    rate_per_s,
+                    burst_multiplier: opt_f64(v, "burst_multiplier")?,
+                    trace,
+                    policy,
+                    max_batch: opt_u64(v, "max_batch")?.unwrap_or(64),
+                    slo,
+                    seed: opt_u64(v, "seed")?.unwrap_or(42),
+                }))
+            }
+            other => Err(format!(
+                "unknown workload type `{other}` (hardware | op | layer | request | traffic)"
+            )),
+        }
+    }
+}
+
+fn op_to_json(op: &Op) -> Json {
+    let mut fields = vec![("type", s("op")), ("op", s(op.name()))];
+    let dims = |vals: &[u64]| Json::Arr(vals.iter().map(|&d| num(d as f64)).collect());
+    match *op {
+        Op::Matmul { b, m, k, n, dtype, batched_b } => {
+            fields.push(("dims", dims(&[m, k, n])));
+            fields.push(("dtype", s(dtype.name())));
+            if b != 1 {
+                fields.push(("batch", num(b as f64)));
+            }
+            if batched_b {
+                fields.push(("batched_b", Json::Bool(true)));
+            }
+        }
+        Op::Softmax { m, n, dtype } | Op::LayerNorm { m, n, dtype } => {
+            fields.push(("dims", dims(&[m, n])));
+            fields.push(("dtype", s(dtype.name())));
+        }
+        Op::Gelu { elements, dtype } => {
+            fields.push(("dims", dims(&[elements])));
+            fields.push(("dtype", s(dtype.name())));
+        }
+        Op::AllReduce { bytes, devices } => {
+            fields.push(("bytes", num(bytes as f64)));
+            fields.push(("devices", num(devices as f64)));
+        }
+        Op::PeerToPeer { bytes } => fields.push(("bytes", num(bytes as f64))),
+    }
+    obj(fields)
+}
+
+fn op_from_json(v: &Json) -> Result<Op, String> {
+    let name = v.req_str("op").map_err(jerr)?;
+    let dtype = match v.get("dtype") {
+        None => DType::FP16,
+        Some(d) => {
+            let d = d.as_str().ok_or_else(|| "op `dtype` must be a string".to_string())?;
+            DType::parse(d).ok_or_else(|| format!("unknown dtype `{d}`"))?
+        }
+    };
+    let dims: Vec<u64> = match v.get("dims") {
+        None => Vec::new(),
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|i| {
+                i.as_u64().ok_or_else(|| "op `dims` must be non-negative integers".to_string())
+            })
+            .collect::<Result<_, _>>()?,
+        Some(_) => return Err("op `dims` must be an array".to_string()),
+    };
+    match (name, dims.as_slice()) {
+        ("matmul", [m, k, n]) => Ok(Op::Matmul {
+            b: opt_u64(v, "batch")?.unwrap_or(1),
+            m: *m,
+            k: *k,
+            n: *n,
+            dtype,
+            batched_b: opt_bool(v, "batched_b")?.unwrap_or(false),
+        }),
+        ("softmax", [m, n]) => Ok(Op::Softmax { m: *m, n: *n, dtype }),
+        ("layernorm", [m, n]) => Ok(Op::LayerNorm { m: *m, n: *n, dtype }),
+        ("gelu", [n]) => Ok(Op::Gelu { elements: *n, dtype }),
+        ("allreduce", _) => Ok(Op::AllReduce {
+            bytes: v.req_u64("bytes").map_err(jerr)?,
+            devices: v.req_u64("devices").map_err(jerr)?,
+        }),
+        ("p2p", _) => Ok(Op::PeerToPeer { bytes: v.req_u64("bytes").map_err(jerr)? }),
+        _ => Err(format!(
+            "op `{name}` with {} dims is not a scenario op (matmul [m,k,n] | softmax [m,n] | \
+             layernorm [m,n] | gelu [n] | allreduce/p2p with bytes)",
+            dims.len()
+        )),
+    }
+}
+
+/// Rewrite a relative path that does not exist from the CWD to live under
+/// `dir`, when that resolves — used by [`Scenario::load`] so scenario
+/// files can reference sibling hardware/trace files.
+fn anchor_path(value: &mut String, dir: &std::path::Path) {
+    let p = std::path::Path::new(value.as_str());
+    if p.is_relative() && !p.exists() {
+        let joined = dir.join(p);
+        if joined.exists() {
+            *value = joined.to_string_lossy().into_owned();
+        }
+    }
+}
+
+/// One evaluation scenario: hardware target, workload, requested outputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Hardware target: preset (`a100`), system (`ga100x8`), or JSON path.
+    pub hardware: String,
+    pub workload: Workload,
+    pub outputs: Vec<Output>,
+}
+
+impl Scenario {
+    /// A scenario with the workload's default outputs.
+    pub fn new(name: &str, hardware: &str, workload: Workload) -> Scenario {
+        let outputs = workload.default_outputs();
+        Scenario { name: name.to_string(), hardware: hardware.to_string(), workload, outputs }
+    }
+
+    /// Append an output (no-op if already requested).
+    pub fn with_output(mut self, out: Output) -> Scenario {
+        if !self.outputs.contains(&out) {
+            self.outputs.push(out);
+        }
+        self
+    }
+
+    /// Replace the output list.
+    pub fn with_outputs(mut self, outs: &[Output]) -> Scenario {
+        self.outputs.clear();
+        for &o in outs {
+            if !self.outputs.contains(&o) {
+                self.outputs.push(o);
+            }
+        }
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("hardware", s(&self.hardware)),
+            ("workload", self.workload.to_json()),
+            ("outputs", Json::Arr(self.outputs.iter().map(|o| s(o.name())).collect())),
+        ])
+    }
+
+    /// Parse a scenario from an already-parsed JSON value. A missing
+    /// `name` defaults to `"scenario"` (overridden by the file stem in
+    /// [`Scenario::load`]); missing `outputs` default per workload.
+    pub fn from_json(v: &Json) -> Result<Scenario, String> {
+        let workload = Workload::from_json(
+            v.get("workload").ok_or_else(|| "scenario needs a `workload` object".to_string())?,
+        )?;
+        let outputs = match v.get("outputs") {
+            None => workload.default_outputs(),
+            Some(Json::Arr(items)) => {
+                let mut outs: Vec<Output> = Vec::new();
+                for item in items {
+                    let text = item
+                        .as_str()
+                        .ok_or_else(|| "scenario `outputs` must be strings".to_string())?;
+                    let o = Output::parse(text).ok_or_else(|| {
+                        format!(
+                            "unknown output `{text}` (latency | throughput | area | cost | serving)"
+                        )
+                    })?;
+                    if !outs.contains(&o) {
+                        outs.push(o);
+                    }
+                }
+                outs
+            }
+            Some(_) => return Err("scenario `outputs` must be an array".to_string()),
+        };
+        Ok(Scenario {
+            name: opt_str(v, "name")?.unwrap_or("scenario").to_string(),
+            hardware: v.req_str("hardware").map_err(jerr)?.to_string(),
+            workload,
+            outputs,
+        })
+    }
+
+    /// Parse a scenario from JSON text.
+    pub fn parse(text: &str) -> Result<Scenario, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        Scenario::from_json(&v)
+    }
+
+    /// Load a scenario from a JSON file; an unnamed scenario takes the
+    /// file stem as its name. Relative `hardware` / `trace` file paths
+    /// that do not resolve from the process CWD are anchored to the
+    /// scenario file's directory, so suites referencing sibling files
+    /// stay relocatable.
+    pub fn load(path: &std::path::Path) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read scenario {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut sc = Scenario::from_json(&v).map_err(|e| format!("{}: {e}", path.display()))?;
+        if v.get("name").is_none() {
+            if let Some(stem) = path.file_stem().and_then(|v| v.to_str()) {
+                sc.name = stem.to_string();
+            }
+        }
+        if let Some(dir) = path.parent() {
+            if crate::hardware::presets::system(&sc.hardware).is_none() {
+                anchor_path(&mut sc.hardware, dir);
+            }
+            if let Workload::Traffic(t) = &mut sc.workload {
+                if let Some(trace) = &mut t.trace {
+                    anchor_path(trace, dir);
+                }
+            }
+        }
+        Ok(sc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(sc: &Scenario) {
+        let text = sc.to_json().to_string_pretty();
+        let again = Scenario::parse(&text).unwrap();
+        assert_eq!(*sc, again, "round trip changed the scenario:\n{text}");
+    }
+
+    #[test]
+    fn every_workload_kind_round_trips() {
+        round_trip(&Scenario::new("hw", "ga100", Workload::Hardware));
+        round_trip(&Scenario::new(
+            "op",
+            "a100",
+            Workload::Op(Op::Matmul {
+                b: 4,
+                m: 256,
+                k: 512,
+                n: 256,
+                dtype: DType::BF16,
+                batched_b: true,
+            }),
+        ));
+        round_trip(&Scenario::new(
+            "layer",
+            "a100x4",
+            Workload::Layer {
+                model: "gpt3-175b".into(),
+                phase: Phase::Decode { batch: 8, kv_len: 3072 },
+            },
+        ));
+        round_trip(
+            &Scenario::new(
+                "req",
+                "ga100x8",
+                Workload::Request {
+                    model: "gpt-small".into(),
+                    batch: 4,
+                    prefill: 128,
+                    decode: 32,
+                    layers: Some(2),
+                },
+            )
+            .with_output(Output::Throughput)
+            .with_output(Output::Cost),
+        );
+        let mut t = TrafficSpec::poisson("gpt-small", 20.0, 48);
+        t.burst_multiplier = Some(4.0);
+        t.policy = Policy::ShortestPromptFirst;
+        t.slo = Slo::relaxed();
+        round_trip(&Scenario::new("traffic", "throughput-oriented", Workload::Traffic(t)));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 10, "rate_per_s": 5.0}}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.name, "scenario");
+        assert_eq!(sc.outputs, vec![Output::Serving]);
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(t.policy, Policy::Fcfs);
+        assert_eq!(t.max_batch, 64);
+        assert_eq!(t.seed, 42);
+        assert_eq!(t.slo, Slo::interactive());
+    }
+
+    #[test]
+    fn op_dims_and_dtype_parse() {
+        let sc = Scenario::parse(
+            r#"{"name": "m", "hardware": "a100",
+                "workload": {"type": "op", "op": "matmul", "dims": [256, 512, 256],
+                             "dtype": "fp32"}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            sc.workload,
+            Workload::Op(Op::Matmul {
+                b: 1,
+                m: 256,
+                k: 512,
+                n: 256,
+                dtype: DType::FP32,
+                batched_b: false,
+            })
+        );
+        assert_eq!(sc.outputs, vec![Output::Latency]);
+    }
+
+    #[test]
+    fn bad_scenarios_error() {
+        assert!(Scenario::parse("{}").is_err());
+        assert!(Scenario::parse(r#"{"hardware": "a100"}"#).is_err());
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "teleport"}}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "hardware"}, "outputs": ["speed"]}"#
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100",
+                "workload": {"type": "op", "op": "matmul", "dims": [1, 2]}}"#
+        )
+        .is_err());
+        // traffic without rate or trace
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100",
+                "workload": {"type": "traffic", "model": "gpt-small", "requests": 4}}"#
+        )
+        .is_err());
+        // traffic without requests or trace
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100",
+                "workload": {"type": "traffic", "model": "gpt-small", "rate_per_s": 5.0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mistyped_optional_fields_error_instead_of_defaulting() {
+        // A typo'd optional value must reject the file, not silently run
+        // a different experiment.
+        for bad in [
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 4, "rate_per_s": 5.0, "burst_multiplier": "4.0"}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 4, "rate_per_s": 5.0, "seed": "42"}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "request", "model": "gpt-small",
+                "batch": 1, "prefill": 8, "decode": 4, "layers": "12"}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "op", "op": "matmul",
+                "dims": [8, 8, 8], "batched_b": 1}}"#,
+            r#"{"hardware": "a100", "name": 7, "workload": {"type": "hardware"}}"#,
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted mistyped scenario: {bad}");
+        }
+    }
+
+    #[test]
+    fn load_anchors_relative_hardware_paths_to_the_scenario_dir() {
+        let dir = std::env::temp_dir().join("llmcompass-test-scenario-anchor");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dev = crate::hardware::presets::a100();
+        std::fs::write(dir.join("dev.json"), dev.to_json().to_string_pretty()).unwrap();
+        std::fs::write(
+            dir.join("sc.json"),
+            r#"{"hardware": "dev.json", "workload": {"type": "hardware"}}"#,
+        )
+        .unwrap();
+        let sc = Scenario::load(&dir.join("sc.json")).unwrap();
+        assert_eq!(sc.name, "sc", "file stem becomes the name");
+        assert!(
+            std::path::Path::new(&sc.hardware).is_absolute(),
+            "hardware path `{}` should be anchored to the suite dir",
+            sc.hardware
+        );
+        assert!(crate::hardware::config::resolve(&sc.hardware).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_replay_needs_neither_rate_nor_requests() {
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100",
+                "workload": {"type": "traffic", "model": "gpt-small",
+                             "trace": "trace.csv"}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(t.trace.as_deref(), Some("trace.csv"));
+        assert_eq!(t.requests, 0);
+        assert_eq!(t.rate_per_s, 0.0);
+        round_trip(&sc);
+    }
+
+    #[test]
+    fn outputs_deduplicate() {
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "hardware"},
+                "outputs": ["cost", "area", "cost"]}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.outputs, vec![Output::Cost, Output::Area]);
+    }
+}

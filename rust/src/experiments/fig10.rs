@@ -43,8 +43,8 @@ pub fn normalized_grid(ctx: &Ctx) -> (Vec<u64>, Vec<u64>, Vec<Vec<f64>>) {
         ins.iter().flat_map(|&i| outs.iter().map(move |&o| (i, o))).collect();
     let threads = crate::util::pool::default_threads();
     let values = crate::util::pool::parallel_map(&cells, threads, |&(s_in, s_out)| {
-        let t_ga = ctx.sim.e2e_latency(&ga, &model, BATCH, s_in, s_out, LAYERS);
-        let t_lat = ctx.sim.e2e_latency(&lat, &model, BATCH, s_in, s_out, LAYERS);
+        let t_ga = ctx.sim().e2e_latency(&ga, &model, BATCH, s_in, s_out, LAYERS);
+        let t_lat = ctx.sim().e2e_latency(&lat, &model, BATCH, s_in, s_out, LAYERS);
         t_ga / t_lat // perf = 1/latency, normalized to GA100
     });
     let grid: Vec<Vec<f64>> =

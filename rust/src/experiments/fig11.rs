@@ -37,7 +37,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
                 device_count: 4,
                 interconnect: InterconnectSpec::nvlink_like(600e9),
             };
-            row.push(ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s);
+            row.push(ctx.sim().layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s);
         }
         let ratio = row[2] / row[1];
         ratios.push(ratio);

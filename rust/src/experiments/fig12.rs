@@ -36,8 +36,8 @@ pub fn grids(ctx: &Ctx) -> (Vec<u64>, Vec<u64>, Vec<Vec<f64>>, Vec<Vec<f64>>, f6
         ins.iter().flat_map(|&i| outs.iter().map(move |&o| (i, o))).collect();
     let threads = crate::util::pool::default_threads();
     let pairs = crate::util::pool::parallel_map(&cells, threads, |&(s_in, s_out)| {
-        let (tok_thr, _, _) = ctx.sim.pipeline_throughput(&thr, &model, s_in, s_out);
-        let (tok_ga, _, _) = ctx.sim.pipeline_throughput(&ga, &model, s_in, s_out);
+        let (tok_thr, _, _) = ctx.sim().pipeline_throughput(&thr, &model, s_in, s_out);
+        let (tok_ga, _, _) = ctx.sim().pipeline_throughput(&ga, &model, s_in, s_out);
         (tok_thr, if tok_ga > 0.0 { tok_thr / tok_ga } else { f64::INFINITY })
     });
     let abs: Vec<Vec<f64>> =
@@ -75,8 +75,10 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     // Latency side of the trade-off (paper discussion: 9.21x worse).
     let model = ModelConfig::gpt3_175b();
     let (s_in, s_out) = (512, 512);
-    let (_, b_thr, t_thr) = ctx.sim.pipeline_throughput(&pp8(presets::throughput_oriented()), &model, s_in, s_out);
-    let (_, b_ga, t_ga) = ctx.sim.pipeline_throughput(&pp8(presets::ga100()), &model, s_in, s_out);
+    let (_, b_thr, t_thr) =
+        ctx.sim().pipeline_throughput(&pp8(presets::throughput_oriented()), &model, s_in, s_out);
+    let (_, b_ga, t_ga) =
+        ctx.sim().pipeline_throughput(&pp8(presets::ga100()), &model, s_in, s_out);
     // Request latency ≈ stage time × stages (one batch flowing through).
     let _ = writeln!(
         out,

@@ -26,7 +26,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         .with_title("Fig. 5 — simulated vs measured operator latency (CPU substitution)");
     let mut per_class: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
     for m in &measured {
-        let Some(pred) = calibrate::predict(&ctx.sim, &dev, &m.name) else { continue };
+        let Some(pred) = calibrate::predict(ctx.sim(), &dev, &m.name) else { continue };
         let err = stats::rel_error(pred, m.seconds);
         let class = calibrate::parse_op_name(&m.name).unwrap().0;
         per_class.entry(class).or_default().push(err);
@@ -44,7 +44,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     let mut all_errs = Vec::new();
     let mut pairs: std::collections::BTreeMap<&str, (Vec<f64>, Vec<f64>)> = Default::default();
     for m in &measured {
-        if let Some(pred) = calibrate::predict(&ctx.sim, &dev, &m.name) {
+        if let Some(pred) = calibrate::predict(ctx.sim(), &dev, &m.name) {
             let class = calibrate::parse_op_name(&m.name).unwrap().0;
             let e = pairs.entry(class).or_default();
             e.0.push(m.seconds);
@@ -87,7 +87,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     // CSV + calibrated device for downstream use.
     let mut csv = String::from("name,measured_s,predicted_s,rel_err\n");
     for m in &measured {
-        if let Some(pred) = calibrate::predict(&ctx.sim, &dev, &m.name) {
+        if let Some(pred) = calibrate::predict(ctx.sim(), &dev, &m.name) {
             let _ = writeln!(
                 csv,
                 "{},{},{},{}",

@@ -53,8 +53,8 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             device_count: 4,
             interconnect: InterconnectSpec::nvlink_like(600e9),
         };
-        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq });
-        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv });
+        let pre = ctx.sim().layer(&sys, &model, Phase::Prefill { batch, seq });
+        let dec = ctx.sim().layer(&sys, &model, Phase::Decode { batch, kv_len: kv });
         for (name, s) in &pre.breakdown {
             let ds = dec.time_of(name);
             let _ = writeln!(breakdown_csv, "{letter},{name},{s},{ds}");

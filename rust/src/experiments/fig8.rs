@@ -43,8 +43,8 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             device_count: 4,
             interconnect: InterconnectSpec::nvlink_like(600e9),
         };
-        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq });
-        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv });
+        let pre = ctx.sim().layer(&sys, &model, Phase::Prefill { batch, seq });
+        let dec = ctx.sim().layer(&sys, &model, Phase::Decode { batch, kv_len: kv });
         let split = |rep: &crate::graph::inference::LayerReport| {
             let mm: f64 = rep
                 .breakdown

@@ -38,8 +38,8 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             device_count: 4,
             interconnect: InterconnectSpec::nvlink_like(600e9),
         };
-        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq }).total_s;
-        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s;
+        let pre = ctx.sim().layer(&sys, &model, Phase::Prefill { batch, seq }).total_s;
+        let dec = ctx.sim().layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s;
         lt.row(vec![
             kb.to_string(),
             format!("{:.2}", pre * 1e3),
@@ -62,8 +62,8 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             device_count: 4,
             interconnect: InterconnectSpec::nvlink_like(600e9),
         };
-        let pre = ctx.sim.layer(&sys, &model, Phase::Prefill { batch, seq }).total_s;
-        let dec = ctx.sim.layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s;
+        let pre = ctx.sim().layer(&sys, &model, Phase::Prefill { batch, seq }).total_s;
+        let dec = ctx.sim().layer(&sys, &model, Phase::Decode { batch, kv_len: kv }).total_s;
         gt.row(vec![
             mb.to_string(),
             format!("{:.2}", pre * 1e3),

@@ -17,12 +17,15 @@ pub mod serve_sweep;
 pub mod tab4;
 pub mod variants;
 
+use crate::eval::Evaluator;
 use crate::graph::inference::Simulator;
 use anyhow::Result;
 
 /// Shared context for experiment runs.
 pub struct Ctx {
-    pub sim: Simulator,
+    /// The unified evaluator; its simulator's mapper caches persist
+    /// across every experiment run through this context.
+    pub eval: Evaluator,
     /// Trim sweeps for fast smoke runs.
     pub quick: bool,
     /// Where AOT artifacts live (fig5 measured side).
@@ -31,11 +34,27 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn new(quick: bool) -> Ctx {
-        Ctx {
-            sim: Simulator::new(),
-            quick,
-            artifact_dir: std::path::PathBuf::from("artifacts"),
-        }
+        Ctx { eval: Evaluator::new(), quick, artifact_dir: default_artifact_dir() }
+    }
+
+    /// The shared analytical simulator (shorthand for `self.eval.sim`).
+    pub fn sim(&self) -> &Simulator {
+        &self.eval.sim
+    }
+}
+
+/// Default artifact directory: the `LLMCOMPASS_ARTIFACT_DIR` environment
+/// variable when set and non-empty, else `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    artifact_dir_from(std::env::var("LLMCOMPASS_ARTIFACT_DIR").ok())
+}
+
+/// Pure core of [`default_artifact_dir`], unit-testable without touching
+/// process environment (concurrent `set_var`/`getenv` is a data race).
+fn artifact_dir_from(env_value: Option<String>) -> std::path::PathBuf {
+    match env_value {
+        Some(v) if !v.is_empty() => std::path::PathBuf::from(v),
+        _ => std::path::PathBuf::from("artifacts"),
     }
 }
 
@@ -97,5 +116,14 @@ mod tests {
     fn unknown_experiment_errors() {
         let ctx = Ctx::new(true);
         assert!(run("nope", &ctx).is_err());
+    }
+
+    #[test]
+    fn artifact_dir_env_override() {
+        let p = std::path::PathBuf::from;
+        assert_eq!(artifact_dir_from(Some("/tmp/llmcompass-art".into())), p("/tmp/llmcompass-art"));
+        assert_eq!(artifact_dir_from(Some(String::new())), p("artifacts"));
+        assert_eq!(artifact_dir_from(None), p("artifacts"));
+        assert_eq!(Ctx::new(true).artifact_dir, default_artifact_dir());
     }
 }

@@ -43,7 +43,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         } else {
             SweepConfig::paper_default(1000, *slo)
         };
-        let rows = run_sweep(&ctx.sim, &model, &cfg).map_err(anyhow::Error::msg)?;
+        let rows = run_sweep(ctx.sim(), &model, &cfg).map_err(anyhow::Error::msg)?;
 
         let title = format!(
             "serve sweep — {} on {} requests, SLO `{slo_name}` (TTFT ≤ {:.1} s, TPOT ≤ {:.2} s)",

@@ -49,8 +49,8 @@ pub fn run(ctx: &Ctx) -> Result<String> {
     let mut csv = String::from("model,prefill_s,decode_s,kv_bytes,params,max_batch\n");
     let mut rows = Vec::new();
     for m in &models {
-        let pre = ctx.sim.layer(&sys, m, Phase::Prefill { batch, seq }).total_s;
-        let dec = ctx.sim.layer(&sys, m, Phase::Decode { batch, kv_len: kv }).total_s;
+        let pre = ctx.sim().layer(&sys, m, Phase::Prefill { batch, seq }).total_s;
+        let dec = ctx.sim().layer(&sys, m, Phase::Decode { batch, kv_len: kv }).total_s;
         let kv_b = m.kv_bytes_per_token_per_layer();
         let params = m.params_per_layer();
         let mb = max_batch(&a100, m, m.layers, 4, 4096);

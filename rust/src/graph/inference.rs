@@ -283,7 +283,8 @@ mod tests {
         let sys = a100x4();
         let m = gpt3();
         let lat = s.layer(&sys, &m, Phase::Decode { batch: 8, kv_len: 3072 }).total_s;
-        let io = crate::graph::layer::layer_min_bytes(&m, Phase::Decode { batch: 8, kv_len: 3072 }, 4)
+        let phase = Phase::Decode { batch: 8, kv_len: 3072 };
+        let io = crate::graph::layer::layer_min_bytes(&m, phase, 4)
             / sys.device.memory.bandwidth_bytes_per_s;
         assert!(lat >= io, "latency {lat} below io bound {io}");
         assert!(lat < io * 4.0, "decode layer {:.1}x io bound", lat / io);

@@ -308,10 +308,15 @@ mod tests {
             "MQA attention traffic should collapse: {mha_attn:.3e} vs {mqa_attn:.3e}"
         );
         // FLOPs stay equal (same scores computed).
-        let f_mha: f64 =
-            layer_ops(&mha, phase, 4).iter().filter(|o| o.name == "Q_mul_K").map(|o| o.op.flops()).sum();
-        let f_mqa: f64 =
-            layer_ops(&mqa, phase, 4).iter().filter(|o| o.name == "Q_mul_K").map(|o| o.op.flops()).sum();
+        let qk_flops = |m: &ModelConfig| -> f64 {
+            layer_ops(m, phase, 4)
+                .iter()
+                .filter(|o| o.name == "Q_mul_K")
+                .map(|o| o.op.flops())
+                .sum()
+        };
+        let f_mha = qk_flops(&mha);
+        let f_mqa = qk_flops(&mqa);
         assert!((f_mha - f_mqa).abs() / f_mha < 1e-9);
     }
 

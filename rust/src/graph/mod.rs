@@ -111,6 +111,23 @@ impl ModelConfig {
         m
     }
 
+    /// Look up a model by name — the registry behind the CLI's `--model`
+    /// and the `eval` scenario `model` field. Names equal the returned
+    /// config's `name`.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        match name {
+            "gpt3-175b" => Some(Self::gpt3_175b()),
+            "gpt-small" => Some(Self::gpt_small()),
+            "gpt3-mqa-parallel" => Some(Self::gpt3_palm_style()),
+            _ => None,
+        }
+    }
+
+    /// The names accepted by [`ModelConfig::by_name`].
+    pub fn known_names() -> Vec<&'static str> {
+        vec!["gpt3-175b", "gpt-small", "gpt3-mqa-parallel"]
+    }
+
     /// Switch-Transformer-style MoE on GPT-3 geometry: `experts` experts,
     /// one active per token.
     pub fn gpt3_moe(experts: u64) -> ModelConfig {
@@ -161,6 +178,15 @@ impl ModelConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn model_registry_names_are_canonical() {
+        for name in ModelConfig::known_names() {
+            let m = ModelConfig::by_name(name).unwrap();
+            assert_eq!(m.name, name, "registry key must equal the config name");
+        }
+        assert!(ModelConfig::by_name("gpt-unknown").is_none());
+    }
 
     #[test]
     fn gpt3_parameter_count() {

@@ -56,6 +56,42 @@ mod tests {
     }
 
     #[test]
+    fn resolve_rejects_zero_count_system() {
+        let err = resolve("a100x0").unwrap_err();
+        assert!(err.contains("unknown hardware"), "{err}");
+    }
+
+    #[test]
+    fn resolve_unknown_preset_names_the_input() {
+        let err = resolve("h200").unwrap_err();
+        assert!(err.contains("`h200`"), "{err}");
+        assert!(err.contains("hardware --list"), "{err}");
+    }
+
+    #[test]
+    fn resolve_malformed_json_file_reports_parse_error() {
+        let dir = std::env::temp_dir().join("llmcompass-test-config3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("broken.json");
+        std::fs::write(&path, "{ \"device\": not json").unwrap();
+        let err = resolve(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("json error"), "{err}");
+        assert!(err.contains("broken.json"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_valid_json_with_missing_fields_names_the_key() {
+        let dir = std::env::temp_dir().join("llmcompass-test-config4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.json");
+        std::fs::write(&path, "{}").unwrap();
+        let err = resolve(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn file_roundtrip() {
         let sys = presets::system("mi210").unwrap();
         let dir = std::env::temp_dir().join("llmcompass-test-config");

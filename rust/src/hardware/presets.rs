@@ -191,6 +191,10 @@ pub fn device(name: &str) -> Option<DeviceSpec> {
 pub fn system(name: &str) -> Option<SystemSpec> {
     if let Some((dev_name, count)) = name.rsplit_once('x') {
         if let (Some(dev), Ok(n)) = (device(dev_name), count.parse::<u64>()) {
+            if n == 0 {
+                // `<name>x0` is a zero-device system, not a preset.
+                return None;
+            }
             let link_bw = match dev_name {
                 "mi210" => 300e9,
                 "tpuv3" => 162.5e9,
@@ -288,5 +292,6 @@ mod tests {
         let sys = system("ga100").unwrap();
         assert_eq!(sys.device_count, 1);
         assert!(system("bogusx4").is_none());
+        assert!(system("a100x0").is_none(), "zero-device systems are not presets");
     }
 }

@@ -26,6 +26,12 @@
 //!   batching with KV-cache accounting, TTFT/TPOT/goodput metrics, and an
 //!   SLO-aware $/1M-token cost sweep across hardware presets — the layer
 //!   that evaluates designs under traffic instead of isolated batches.
+//! * [`eval`] — the unified scenario API: one typed, JSON-serializable
+//!   [`eval::Scenario`] (hardware target + workload + requested outputs)
+//!   evaluated by [`eval::Evaluator`] into a stable-schema
+//!   [`eval::EvalReport`]. The CLI subcommands and experiment context are
+//!   thin adapters over it, and suites of scenarios share one mapper
+//!   cache so repeated shapes are searched once.
 //! * [`runtime`] / [`calibrate`] / [`coordinator`] — the executable side:
 //!   load AOT-compiled JAX/Pallas artifacts via PJRT, time them, calibrate
 //!   a CPU device description, and serve batched inference end-to-end.
@@ -43,6 +49,7 @@ pub mod graph;
 pub mod area;
 pub mod cost;
 pub mod serve;
+pub mod eval;
 pub mod runtime;
 pub mod calibrate;
 pub mod coordinator;

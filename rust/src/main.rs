@@ -3,6 +3,10 @@
 //! Subcommands:
 //! * `hardware`   — list / show hardware descriptions (Table I presets,
 //!   Table III designs, Table IV proposals, JSON files)
+//! * `eval`       — evaluate typed JSON scenarios (`--scenario file` /
+//!   `--suite dir`) through the unified `eval::Evaluator`, emitting
+//!   stable-schema JSON reports with a shared mapper cache across the
+//!   suite
 //! * `simulate`   — simulate one operator or a Transformer layer/request
 //! * `area`       — die area breakdown (Fig. 6) and Table II parameters
 //! * `cost`       — die + memory cost (Table IV economics)
@@ -14,12 +18,17 @@
 //!   $/1M-token comparison across presets
 //! * `serve-pjrt` — run the batched-serving coordinator on a synthetic
 //!   trace through PJRT (the end-to-end request path)
+//!
+//! `simulate`, `area`, `cost`, and `serve` are thin adapters: each builds
+//! an [`eval::Scenario`] and routes it through [`eval::Evaluator`], the
+//! same entry point `eval --scenario` exposes directly.
 
+use llmcompass::eval::{self, EvalResult, Evaluator, Output, Scenario, TrafficSpec, Workload};
 use llmcompass::experiments::{self, Ctx};
 use llmcompass::graph::layer::Phase;
-use llmcompass::graph::{inference::Simulator, ModelConfig};
 use llmcompass::hardware::{config, presets, DType};
 use llmcompass::util::cli::Command;
+use llmcompass::util::json::Json;
 use llmcompass::util::table::Table;
 use std::process::ExitCode;
 
@@ -31,6 +40,7 @@ fn main() -> ExitCode {
     };
     let result = match cmd.as_str() {
         "hardware" => cmd_hardware(rest),
+        "eval" => cmd_eval(rest),
         "simulate" => cmd_simulate(rest),
         "area" => cmd_area(rest),
         "cost" => cmd_cost(rest),
@@ -63,6 +73,7 @@ fn print_usage() {
          usage: llmcompass <command> [options]\n\n\
          commands:\n\
          \x20 hardware    list/show hardware descriptions\n\
+         \x20 eval        evaluate JSON scenarios (--scenario file | --suite dir)\n\
          \x20 simulate    simulate an operator or a transformer layer\n\
          \x20 area        die area breakdown\n\
          \x20 cost        die + memory cost\n\
@@ -80,6 +91,9 @@ type R = Result<(), String>;
 fn err<E: std::fmt::Display>(e: E) -> String {
     format!("error: {e}")
 }
+
+// `--model` arguments resolve through `eval::model_by_name`, the same
+// registry lookup (and error message) scenario files get.
 
 fn cmd_hardware(raw: &[String]) -> R {
     let cmd = Command::new("hardware", "list or show hardware descriptions")
@@ -118,20 +132,102 @@ fn cmd_hardware(raw: &[String]) -> R {
     Ok(())
 }
 
+fn cmd_eval(raw: &[String]) -> R {
+    let cmd = Command::new("eval", "evaluate typed scenarios through the unified entry point")
+        .opt("scenario", None, "one scenario JSON file (see scenarios/ for examples)")
+        .opt("suite", None, "directory of scenario JSON files (shared mapper cache)")
+        .opt("threads", None, "suite fan-out worker threads (default: all cores)")
+        .flag("compact", "emit compact JSON instead of pretty-printed")
+        .flag("pooled", "use the pooled (multi-threaded) mapper search");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    if a.get("scenario").is_some() && a.get("suite").is_some() {
+        return Err("pass exactly one of --scenario and --suite".into());
+    }
+    if a.flag("pooled") && a.get("suite").is_some() {
+        // Suites already fan out one thread per scenario; a pooled mapper
+        // on top would oversubscribe cores multiplicatively.
+        return Err("--pooled applies to --scenario only (suites already fan out)".into());
+    }
+    let ev = if a.flag("pooled") { Evaluator::pooled() } else { Evaluator::new() };
+    let emit = |j: &Json| {
+        if a.flag("compact") {
+            println!("{}", j.to_string_compact());
+        } else {
+            // to_string_pretty already ends with a newline.
+            print!("{}", j.to_string_pretty());
+        }
+    };
+
+    if let Some(path) = a.get("scenario") {
+        let sc = Scenario::load(std::path::Path::new(path))?;
+        let rep = ev.evaluate(&sc)?;
+        emit(&rep.to_json());
+        return Ok(());
+    }
+
+    if let Some(dir) = a.get("suite") {
+        let scenarios = eval::load_suite(std::path::Path::new(dir))?;
+        let threads = match a.get_u64("threads").map_err(|e| e.0)? {
+            Some(n) if n >= 1 => n as usize,
+            Some(_) => return Err("--threads must be ≥ 1".into()),
+            None => llmcompass::util::pool::default_threads(),
+        };
+        let start = std::time::Instant::now();
+        let reports = ev.evaluate_suite(&scenarios, threads);
+        let mut failed = 0usize;
+        let items: Vec<Json> = scenarios
+            .iter()
+            .zip(&reports)
+            .map(|(sc, rep)| match rep {
+                Ok(r) => r.to_json(),
+                Err(e) => {
+                    failed += 1;
+                    // Same schema shape as a success report (versioned,
+                    // object-valued `scenario`), plus an `error` field
+                    // consumers can key on.
+                    llmcompass::util::json::obj(vec![
+                        (
+                            "schema_version",
+                            llmcompass::util::json::num(eval::SCHEMA_VERSION as f64),
+                        ),
+                        ("scenario", sc.to_json()),
+                        ("error", llmcompass::util::json::s(e)),
+                    ])
+                }
+            })
+            .collect();
+        emit(&Json::Arr(items));
+        eprintln!(
+            "[{} scenarios in {} | mapper: {} searches, {} rounds, {} cached shapes]",
+            scenarios.len(),
+            llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),
+            ev.sim.mapper.searches(),
+            ev.sim.mapper.total_rounds(),
+            ev.sim.mapper.cache_len()
+        );
+        if failed > 0 {
+            return Err(format!("{failed} of {} scenario(s) failed", scenarios.len()));
+        }
+        return Ok(());
+    }
+
+    Err(format!("eval needs --scenario <file> or --suite <dir>\n\n{}", cmd.help()))
+}
+
 fn cmd_simulate(raw: &[String]) -> R {
     let cmd = Command::new("simulate", "simulate an operator or transformer workload")
         .opt("hardware", Some("a100x4"), "system preset or JSON path")
         .opt("op", None, "operator: matmul MxKxN | softmax MxN | layernorm MxN | gelu N")
         .opt("phase", Some("prefill"), "layer phase: prefill | decode | e2e")
-        .opt("model", Some("gpt3-175b"), "model: gpt3-175b | gpt-small")
+        .opt("model", Some("gpt3-175b"), "model: gpt3-175b | gpt-small | gpt3-mqa-parallel")
         .opt("batch", Some("8"), "batch size")
         .opt("seq", Some("2048"), "input sequence length")
         .opt("out-tokens", Some("1024"), "output tokens (decode kv offset / e2e length)")
         .opt("layers", None, "layer count (default: whole model)")
         .opt("dtype", Some("fp16"), "fp32 | fp16 | bf16 | int8");
     let a = cmd.parse(raw).map_err(|e| e.0)?;
-    let sys = config::resolve(a.get_or("hardware", "a100x4"))?;
-    let sim = Simulator::new();
+    let hw = a.get_or("hardware", "a100x4");
+    let ev = Evaluator::new();
     let dtype = DType::parse(a.get_or("dtype", "fp16")).ok_or("bad --dtype")?;
 
     if let Some(op_spec) = a.get("op") {
@@ -154,11 +250,14 @@ fn cmd_simulate(raw: &[String]) -> R {
             ("gelu", [n]) => llmcompass::perf::Op::Gelu { elements: *n, dtype },
             _ => return Err("usage: simulate --op matmul 256x12288x12288".into()),
         };
-        let r = sim.op_latency(&sys, &op);
+        let rep = ev.evaluate(&Scenario::new("cli-op", hw, Workload::Op(op)))?;
+        let EvalResult::OpLatency { op_name, result: r } = &rep.results[0] else {
+            return Err("internal: op scenario produced no op latency".into());
+        };
         println!(
             "{} on {}: {}  (compute bound {}, memory bound {}, roofline {:.1}%, {} mapper rounds)\n  mapping: {}",
-            op.name(),
-            sys.device.name,
+            op_name,
+            rep.system.device.name,
             llmcompass::util::fmt_seconds(r.latency_s),
             llmcompass::util::fmt_seconds(r.compute_bound_s),
             llmcompass::util::fmt_seconds(r.memory_bound_s),
@@ -169,26 +268,48 @@ fn cmd_simulate(raw: &[String]) -> R {
         return Ok(());
     }
 
-    let model = match a.get_or("model", "gpt3-175b") {
-        "gpt3-175b" => ModelConfig::gpt3_175b(),
-        "gpt-small" => ModelConfig::gpt_small(),
-        other => return Err(format!("unknown model `{other}`")),
-    };
+    let model_name = a.get_or("model", "gpt3-175b");
+    let model = eval::model_by_name(model_name)?;
     let batch = a.get_u64("batch").map_err(|e| e.0)?.unwrap();
     let seq = a.get_u64("seq").map_err(|e| e.0)?.unwrap();
     let out_tokens = a.get_u64("out-tokens").map_err(|e| e.0)?.unwrap();
     let layers = a.get_u64("layers").map_err(|e| e.0)?.unwrap_or(model.layers);
+    let layer_scenario = |phase: Phase| {
+        Scenario::new("cli-layer", hw, Workload::Layer { model: model_name.to_string(), phase })
+    };
     match a.get_or("phase", "prefill") {
         "prefill" => {
-            let rep = sim.layer(&sys, &model, Phase::Prefill { batch, seq });
-            print_layer("prefill", &rep, layers);
+            let rep = ev.evaluate(&layer_scenario(Phase::Prefill { batch, seq }))?;
+            let EvalResult::LayerLatency { per_layer, .. } = &rep.results[0] else {
+                return Err("internal: layer scenario produced no layer latency".into());
+            };
+            print_layer("prefill", per_layer, layers);
         }
         "decode" => {
-            let rep = sim.layer(&sys, &model, Phase::Decode { batch, kv_len: seq + out_tokens });
-            print_layer("decode", &rep, layers);
+            let rep =
+                ev.evaluate(&layer_scenario(Phase::Decode { batch, kv_len: seq + out_tokens }))?;
+            let EvalResult::LayerLatency { per_layer, .. } = &rep.results[0] else {
+                return Err("internal: layer scenario produced no layer latency".into());
+            };
+            print_layer("decode", per_layer, layers);
         }
         "e2e" => {
-            let t = sim.e2e_latency(&sys, &model, batch, seq, out_tokens, layers);
+            let sc = Scenario::new(
+                "cli-e2e",
+                hw,
+                Workload::Request {
+                    model: model_name.to_string(),
+                    batch,
+                    prefill: seq,
+                    decode: out_tokens,
+                    layers: Some(layers),
+                },
+            );
+            let rep = ev.evaluate(&sc)?;
+            let EvalResult::RequestLatency { total_s, .. } = &rep.results[0] else {
+                return Err("internal: request scenario produced no latency".into());
+            };
+            let t = *total_s;
             println!(
                 "end-to-end {} layers, b={batch}, in={seq}, out={out_tokens}: {} \
                  ({:.2} tok/s/request)",
@@ -203,7 +324,8 @@ fn cmd_simulate(raw: &[String]) -> R {
 }
 
 fn print_layer(phase: &str, rep: &llmcompass::graph::inference::LayerReport, layers: u64) {
-    let title = format!("{phase} latency per layer: {}", llmcompass::util::fmt_seconds(rep.total_s));
+    let title =
+        format!("{phase} latency per layer: {}", llmcompass::util::fmt_seconds(rep.total_s));
     let mut t = Table::new(&["operator", "latency", "share %"]).with_title(&title);
     for (name, s) in &rep.breakdown {
         t.row(vec![
@@ -245,13 +367,14 @@ fn cmd_area(raw: &[String]) -> R {
         println!("{}", t.render());
         return Ok(());
     }
-    let sys = config::resolve(a.get_or("hardware", "ga100"))?;
-    let b = llmcompass::area::die_breakdown(
-        &llmcompass::area::AreaParams::default(),
-        &sys.device,
-        sys.interconnect.link_bandwidth_bytes_per_s,
-    );
-    let title = format!("die breakdown: {}", sys.device.name);
+    let ev = Evaluator::new();
+    let sc = Scenario::new("cli-area", a.get_or("hardware", "ga100"), Workload::Hardware)
+        .with_outputs(&[Output::Area]);
+    let rep = ev.evaluate(&sc)?;
+    let EvalResult::Area(b) = &rep.results[0] else {
+        return Err("internal: area scenario produced no area breakdown".into());
+    };
+    let title = format!("die breakdown: {}", rep.system.device.name);
     let mut t = Table::new(&["component", "mm²", "share %"]).with_title(&title);
     for (name, v) in b.rows() {
         t.row(vec![
@@ -272,15 +395,20 @@ fn cmd_cost(raw: &[String]) -> R {
         "device preset or JSON path",
     );
     let a = cmd.parse(raw).map_err(|e| e.0)?;
-    let sys = config::resolve(a.get_or("hardware", "ga100"))?;
-    let p = llmcompass::cost::CostParams::default();
-    let c = llmcompass::cost::device_cost(&p, &sys.device);
+    let ev = Evaluator::new();
+    let sc = Scenario::new("cli-cost", a.get_or("hardware", "ga100"), Workload::Hardware)
+        .with_outputs(&[Output::Cost]);
+    let rep = ev.evaluate(&sc)?;
+    let EvalResult::Cost(c) = &rep.results[0] else {
+        return Err("internal: cost scenario produced no cost report".into());
+    };
+    let p = &ev.cost_params;
     println!(
         "{}: die {:.0} mm² → yield {:.1}%, {:.0} gross dies/wafer, die ${:.0}; memory ${:.0}; total ${:.0}",
-        sys.device.name,
+        rep.system.device.name,
         c.die_mm2,
-        llmcompass::cost::murphy_yield(&p, c.die_mm2) * 100.0,
-        llmcompass::cost::dies_per_wafer(&p, c.die_mm2),
+        llmcompass::cost::murphy_yield(p, c.die_mm2) * 100.0,
+        llmcompass::cost::dies_per_wafer(p, c.die_mm2),
         c.die_cost_usd,
         c.memory_cost_usd,
         c.total_usd()
@@ -293,7 +421,12 @@ fn cmd_experiment(raw: &[String]) -> R {
         .flag("list", "list experiment ids")
         .flag("quick", "trimmed sweeps (smoke test)")
         .flag("all", "run every experiment")
-        .opt("artifacts", Some("artifacts"), "artifact directory (fig5)");
+        .opt(
+            "artifact-dir",
+            None,
+            "artifact directory for fig5 (default: $LLMCOMPASS_ARTIFACT_DIR or ./artifacts)",
+        )
+        .opt("artifacts", None, "alias for --artifact-dir");
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     if a.flag("list") || (a.positional.is_empty() && !a.flag("all")) {
         let mut t = Table::new(&["id", "description"]).with_title("experiments");
@@ -304,7 +437,9 @@ fn cmd_experiment(raw: &[String]) -> R {
         return Ok(());
     }
     let mut ctx = Ctx::new(a.flag("quick"));
-    ctx.artifact_dir = std::path::PathBuf::from(a.get_or("artifacts", "artifacts"));
+    if let Some(dir) = a.get("artifact-dir").or_else(|| a.get("artifacts")) {
+        ctx.artifact_dir = std::path::PathBuf::from(dir);
+    }
     let ids: Vec<String> = if a.flag("all") {
         experiments::registry().iter().map(|(n, _, _)| n.to_string()).collect()
     } else {
@@ -318,8 +453,8 @@ fn cmd_experiment(raw: &[String]) -> R {
                 println!(
                     "[{id} done in {} | mapper: {} rounds total, {} cached shapes]\n",
                     llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),
-                    ctx.sim.mapper.total_rounds(),
-                    ctx.sim.mapper.cache_len()
+                    ctx.sim().mapper.total_rounds(),
+                    ctx.sim().mapper.cache_len()
                 );
             }
             Err(e) => eprintln!("[{id}] failed: {e:#}"),
@@ -330,13 +465,21 @@ fn cmd_experiment(raw: &[String]) -> R {
 
 fn cmd_calibrate(raw: &[String]) -> R {
     let cmd = Command::new("calibrate", "fit a CPU device description from artifacts")
-        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt(
+            "artifacts",
+            None,
+            "artifact directory (default: $LLMCOMPASS_ARTIFACT_DIR or ./artifacts)",
+        )
         .opt("out", Some("hardware/cpu.json"), "output JSON path")
         .opt("iters", Some("3"), "timing iterations per artifact");
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     let iters = a.get_u64("iters").map_err(|e| e.0)?.unwrap() as usize;
+    let artifact_dir = a
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(experiments::default_artifact_dir);
     let (meas, dev) = llmcompass::calibrate::calibrate(
-        std::path::Path::new(a.get_or("artifacts", "artifacts")),
+        &artifact_dir,
         std::path::Path::new(a.get_or("out", "hardware/cpu.json")),
         iters,
     )
@@ -368,7 +511,7 @@ fn cmd_calibrate(raw: &[String]) -> R {
 fn cmd_serve(raw: &[String]) -> R {
     let cmd = Command::new("serve", "simulate an inference cluster under traffic")
         .opt("hardware", Some("a100x8"), "system preset or JSON path")
-        .opt("model", Some("gpt3-175b"), "model: gpt3-175b | gpt-small")
+        .opt("model", Some("gpt3-175b"), "model: gpt3-175b | gpt-small | gpt3-mqa-parallel")
         .opt("requests", Some("1000"), "number of requests in the trace")
         .opt("rate", Some("2.0"), "mean arrival rate, requests/second")
         .opt("arrival", Some("poisson"), "arrival process: poisson | bursty")
@@ -387,11 +530,8 @@ fn cmd_serve(raw: &[String]) -> R {
         )
         .flag("pooled", "use the pooled (multi-threaded) mapper search");
     let a = cmd.parse(raw).map_err(|e| e.0)?;
-    let model = match a.get_or("model", "gpt3-175b") {
-        "gpt3-175b" => ModelConfig::gpt3_175b(),
-        "gpt-small" => ModelConfig::gpt_small(),
-        other => return Err(format!("unknown model `{other}`")),
-    };
+    let model_name = a.get_or("model", "gpt3-175b");
+    let model = eval::model_by_name(model_name)?;
     let slo = llmcompass::serve::Slo {
         ttft_s: a.get_f64("slo-ttft").map_err(|e| e.0)?.unwrap(),
         tpot_s: a.get_f64("slo-tpot").map_err(|e| e.0)?.unwrap(),
@@ -400,7 +540,7 @@ fn cmd_serve(raw: &[String]) -> R {
     let seed = a.get_u64("seed").map_err(|e| e.0)?.unwrap();
     let policy = llmcompass::serve::Policy::parse(a.get_or("policy", "fcfs"))
         .ok_or("bad --policy (fcfs | spf)")?;
-    let sim = if a.flag("pooled") { Simulator::pooled() } else { Simulator::new() };
+    let ev = if a.flag("pooled") { Evaluator::pooled() } else { Evaluator::new() };
     let start = std::time::Instant::now();
 
     if a.flag("sweep") {
@@ -410,7 +550,7 @@ fn cmd_serve(raw: &[String]) -> R {
         let mut cfg = llmcompass::serve::sweep::SweepConfig::paper_default(requests_n, slo);
         cfg.seed = seed;
         cfg.policy = policy;
-        let rows = llmcompass::serve::sweep::run_sweep(&sim, &model, &cfg)?;
+        let rows = llmcompass::serve::sweep::run_sweep(&ev.sim, &model, &cfg)?;
         let mut t = Table::new(&["system", "rate/s", "goodput tok/s", "SLO %", "$/1M tok"])
             .with_title("SLO-aware serving sweep");
         for r in &rows {
@@ -444,42 +584,51 @@ fn cmd_serve(raw: &[String]) -> R {
         return Ok(());
     }
 
-    let sys = config::resolve(a.get_or("hardware", "a100x8"))?;
+    let hw = a.get_or("hardware", "a100x8");
+    let sys = config::resolve(hw)?;
     let rate = a.get_f64("rate").map_err(|e| e.0)?.unwrap();
     if !rate.is_finite() || rate <= 0.0 {
         return Err(format!("--rate must be a positive number, got {rate}"));
     }
-    let trace = if let Some(path) = a.get("trace") {
-        let text = std::fs::read_to_string(path).map_err(err)?;
-        llmcompass::serve::workload::parse_trace(&text)?
-    } else {
-        let mut spec = llmcompass::serve::WorkloadSpec::poisson(rate, requests_n, seed);
-        if a.get_or("arrival", "poisson") == "bursty" {
-            spec.arrival = llmcompass::serve::Arrival::Bursty {
-                rate_per_s: rate,
-                burst_multiplier: a.get_f64("burst-mult").map_err(|e| e.0)?.unwrap(),
-                mean_phase_requests: 50.0,
-            };
-        }
-        llmcompass::serve::workload::generate(&spec)
-    };
-    let mut cfg = llmcompass::serve::SchedulerConfig::for_system(&sys, &model, policy);
-    cfg.max_batch = a.get_u64("max-batch").map_err(|e| e.0)?.unwrap();
-    if cfg.max_batch == 0 {
+    let max_batch = a.get_u64("max-batch").map_err(|e| e.0)?.unwrap();
+    if max_batch == 0 {
         return Err("--max-batch must be ≥ 1".into());
     }
-    if cfg.kv_capacity_tokens == 0 {
+    let traffic = TrafficSpec {
+        model: model_name.to_string(),
+        requests: requests_n,
+        rate_per_s: rate,
+        burst_multiplier: if a.get_or("arrival", "poisson") == "bursty" {
+            Some(a.get_f64("burst-mult").map_err(|e| e.0)?.unwrap())
+        } else {
+            None
+        },
+        trace: a.get("trace").map(str::to_string),
+        policy,
+        max_batch,
+        slo,
+        seed,
+    };
+    // Materialize the trace up front so the fit checks and the preamble
+    // banner run before the (slow) simulation, matching the historical
+    // CLI behavior. The evaluator materializes its own copy: generated
+    // workloads are deterministic in the seed; `--trace` files are read
+    // twice, so edits between the reads can slip past these checks (the
+    // evaluator re-checks and errors rather than misbehaving).
+    let trace = eval::traffic_requests(&traffic)?;
+    let kv_capacity = llmcompass::serve::kv_capacity_tokens(&sys, &model);
+    if kv_capacity == 0 {
         return Err(format!(
             "model `{}` does not fit `{}` (parameters exceed memory capacity)",
             model.name, sys.device.name
         ));
     }
-    if let Some(big) = trace.iter().find(|r| r.total_tokens() > cfg.kv_capacity_tokens) {
+    if let Some(big) = trace.iter().find(|r| r.total_tokens() > kv_capacity) {
         return Err(format!(
             "request {} needs {} KV tokens but the cluster budget is only {}",
             big.id,
             big.total_tokens(),
-            cfg.kv_capacity_tokens
+            kv_capacity
         ));
     }
     println!(
@@ -488,11 +637,14 @@ fn cmd_serve(raw: &[String]) -> R {
         model.name,
         sys.device.name,
         sys.device_count,
-        cfg.kv_capacity_tokens
+        kv_capacity
     );
-    let (summary, stats, _) =
-        llmcompass::serve::serve_once(&sim, &sys, &model, &cfg, &trace, &slo);
-    println!("{}", summary.render());
+    let rep = ev.evaluate(&Scenario::new("cli-serve", hw, Workload::Traffic(traffic)))?;
+    let EvalResult::Serving(sr) = &rep.results[0] else {
+        return Err("internal: traffic scenario produced no serving report".into());
+    };
+    println!("{}", sr.summary.render());
+    let stats = &sr.stats;
     println!(
         "iterations: {} prefill ({}) + {} decode ({}) | idle {} | peak batch {} | peak KV {} tokens",
         stats.prefill_iterations,
@@ -506,24 +658,29 @@ fn cmd_serve(raw: &[String]) -> R {
     println!(
         "[simulated in {} wall-clock | mapper: {} rounds, {} cached shapes]",
         llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),
-        sim.mapper.total_rounds(),
-        sim.mapper.cache_len()
+        ev.sim.mapper.total_rounds(),
+        ev.sim.mapper.cache_len()
     );
     Ok(())
 }
 
 fn cmd_serve_pjrt(raw: &[String]) -> R {
     let cmd = Command::new("serve-pjrt", "run the batched serving coordinator over PJRT")
-        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt(
+            "artifacts",
+            None,
+            "artifact directory (default: $LLMCOMPASS_ARTIFACT_DIR or ./artifacts)",
+        )
         .opt("requests", Some("16"), "number of synthetic requests")
         .opt("max-out", Some("8"), "max output tokens per request")
         .opt("policy", Some("fifo"), "batching policy: fifo | sjf")
         .opt("seed", Some("42"), "trace seed");
     let a = cmd.parse(raw).map_err(|e| e.0)?;
-    let mut coord = llmcompass::coordinator::Coordinator::new(std::path::Path::new(
-        a.get_or("artifacts", "artifacts"),
-    ))
-    .map_err(err)?;
+    let artifact_dir = a
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(experiments::default_artifact_dir);
+    let mut coord = llmcompass::coordinator::Coordinator::new(&artifact_dir).map_err(err)?;
     let n = a.get_u64("requests").map_err(|e| e.0)?.unwrap() as usize;
     let max_out = a.get_u64("max-out").map_err(|e| e.0)?.unwrap() as usize;
     let seed = a.get_u64("seed").map_err(|e| e.0)?.unwrap();

@@ -17,8 +17,8 @@
 use super::matmul::{fits, simulate, Mapping, Scheme, Shape, SimOutcome};
 use crate::arch::systolic::SystolicLut;
 use crate::hardware::{DeviceSpec, DType};
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Condvar, Mutex};
 
 /// Search-space budget knobs. The defaults give a few hundred to a couple
 /// thousand rounds per unique shape, in line with the paper's 26,400 rounds
@@ -206,11 +206,21 @@ pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &Systo
 
 /// Memoizing front-end to [`search`]. Keyed by device name + shape, so use
 /// distinct names for distinct hardware descriptions (presets do).
+type CacheKey = (u64, u64, u64, u64, u64, DType, bool);
+
 pub struct Mapper {
     budget: SearchBudget,
     lut: SystolicLut,
-    cache: Mutex<HashMap<(u64, u64, u64, u64, u64, DType, bool), Best>>,
+    cache: Mutex<HashMap<CacheKey, Best>>,
+    /// Keys whose search is currently running on some thread. Concurrent
+    /// callers of the same key wait on [`Mapper::search_done`] instead of
+    /// duplicating the (expensive) search — this is what keeps the
+    /// cross-scenario search count minimal even when `eval` suites fan
+    /// out across threads.
+    in_flight: Mutex<HashSet<CacheKey>>,
+    search_done: Condvar,
     total_rounds: Mutex<u64>,
+    searches: Mutex<u64>,
 }
 
 impl Default for Mapper {
@@ -225,14 +235,17 @@ impl Mapper {
             budget,
             lut: SystolicLut::new(),
             cache: Mutex::new(HashMap::new()),
+            in_flight: Mutex::new(HashSet::new()),
+            search_done: Condvar::new(),
             total_rounds: Mutex::new(0),
+            searches: Mutex::new(0),
         }
     }
 
     /// A mapper whose candidate loop fans across all cores. Memoization is
     /// unchanged — the cache `Mutex` is only held around lookups/inserts,
-    /// never across a search, so concurrent callers at worst duplicate one
-    /// search and last-write-wins with identical results.
+    /// never across a search; concurrent callers of the same shape
+    /// coalesce onto one search via the in-flight set.
     pub fn pooled() -> Self {
         Mapper::new(SearchBudget::pooled())
     }
@@ -247,13 +260,43 @@ impl Mapper {
             shape.dtype,
             shape.batched_b,
         );
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-            return hit.clone();
+        // Fast path / search coalescing. A miss claims the key in
+        // `in_flight`; concurrent callers of the same key block on the
+        // condvar and re-check the cache instead of duplicating the
+        // search. Lock order is safe: the cache guard is always a
+        // statement-scoped temporary, never held while acquiring
+        // `in_flight`. (If `search` panicked the in-flight marker would
+        // leak and waiters would hang, but `search` panics only on an
+        // infeasible shape, which the minimal systolic tile rules out.)
+        loop {
+            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+                return hit.clone();
+            }
+            let mut in_flight = self.in_flight.lock().unwrap();
+            // Re-check: the searcher publishes to the cache before
+            // clearing its marker, so miss + no marker ⇒ nobody is on it.
+            if self.cache.lock().unwrap().contains_key(&key) {
+                continue;
+            }
+            if in_flight.insert(key) {
+                break; // this thread owns the search
+            }
+            // Someone else is searching this key; wait and re-check.
+            drop(self.search_done.wait(in_flight).unwrap());
         }
         let best = search(dev, shape, self.budget, &self.lut);
         *self.total_rounds.lock().unwrap() += best.rounds;
+        *self.searches.lock().unwrap() += 1;
         self.cache.lock().unwrap().insert(key, best.clone());
+        self.in_flight.lock().unwrap().remove(&key);
+        self.search_done.notify_all();
         best
+    }
+
+    /// Number of full mapper parameter searches performed (cache misses) —
+    /// the quantity cross-scenario caching in `eval` exists to minimize.
+    pub fn searches(&self) -> u64 {
+        *self.searches.lock().unwrap()
     }
 
     /// Total mapper rounds across all (non-cached) searches — the paper's
@@ -307,6 +350,23 @@ mod tests {
         let b = mapper.matmul(&dev, &shape);
         assert_eq!(mapper.total_rounds(), rounds_after_first, "second hit was cached");
         assert_eq!(a.outcome.seconds, b.outcome.seconds);
+        assert_eq!(mapper.cache_len(), 1);
+        assert_eq!(mapper.searches(), 1, "one unique shape → one search");
+    }
+
+    #[test]
+    fn concurrent_matmul_coalesces_to_one_search() {
+        // Eight threads racing on a cold cache for the same shape must
+        // produce one search, identical results, and one cache entry.
+        let mapper = Mapper::default();
+        let dev = a100();
+        let shape = Shape::simple(256, 512, 256, DType::FP16);
+        let items: Vec<u32> = (0..8).collect();
+        let outs = crate::util::pool::parallel_map(&items, 8, |_| {
+            mapper.matmul(&dev, &shape).outcome.seconds
+        });
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(mapper.searches(), 1, "racing callers must coalesce");
         assert_eq!(mapper.cache_len(), 1);
     }
 

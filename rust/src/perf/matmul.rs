@@ -144,7 +144,14 @@ pub fn fits(dev: &DeviceSpec, shape: &Shape, map: &Mapping) -> bool {
 /// Level 3: one core executes an (lm × lk × ln) GEMM chunk. Lanes split the
 /// wider of the m/n extents; the systolic model gives cycles; the local
 /// buffer must also feed operands at `local_buffer_bytes_per_clk`.
-fn core_cycles(dev: &DeviceSpec, dtype: DType, lm: u64, lk: u64, ln: u64, lut: &SystolicLut) -> u64 {
+fn core_cycles(
+    dev: &DeviceSpec,
+    dtype: DType,
+    lm: u64,
+    lk: u64,
+    ln: u64,
+    lut: &SystolicLut,
+) -> u64 {
     let lanes = dev.core.lane_count;
     let lane = &dev.core.lane;
     let array = Array {
@@ -515,7 +522,11 @@ mod tests {
         let out = simulate(&dev, &shape, &map, &lut()).unwrap();
         let io_bound = (12288.0 * 12288.0 * 2.0) / dev.memory.bandwidth_bytes_per_s;
         assert!(out.seconds >= io_bound * 0.9);
-        assert!(out.seconds <= io_bound * 3.0, "decode matmul {}x io bound", out.seconds / io_bound);
+        assert!(
+            out.seconds <= io_bound * 3.0,
+            "decode matmul {}x io bound",
+            out.seconds / io_bound
+        );
     }
 
     #[test]

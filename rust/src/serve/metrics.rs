@@ -121,6 +121,25 @@ pub fn summarize(metrics: &[RequestMetrics], slo: &Slo, makespan_s: f64) -> Summ
 }
 
 impl Summary {
+    /// Stable JSON rendering (part of the `eval` report schema).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("requests", num(self.requests as f64)),
+            ("output_tokens", num(self.output_tokens as f64)),
+            ("makespan_s", num(self.makespan_s)),
+            ("ttft_p50_s", num(self.ttft_p50_s)),
+            ("ttft_p99_s", num(self.ttft_p99_s)),
+            ("tpot_p50_s", num(self.tpot_p50_s)),
+            ("tpot_p99_s", num(self.tpot_p99_s)),
+            ("e2e_p50_s", num(self.e2e_p50_s)),
+            ("e2e_p99_s", num(self.e2e_p99_s)),
+            ("throughput_tok_s", num(self.throughput_tok_s)),
+            ("goodput_tok_s", num(self.goodput_tok_s)),
+            ("slo_attainment", num(self.slo_attainment)),
+        ])
+    }
+
     /// Multi-line human-readable rendering for the CLI.
     pub fn render(&self) -> String {
         format!(

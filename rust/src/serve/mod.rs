@@ -64,7 +64,8 @@ mod tests {
         let model = ModelConfig::gpt_small();
         let cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
         let reqs = workload::generate(&WorkloadSpec::poisson(25.0, 100, 1));
-        let (summary, stats, per_req) = serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+        let (summary, stats, per_req) =
+            serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
         assert_eq!(summary.requests, 100);
         assert_eq!(per_req.len(), 100);
         assert!(summary.throughput_tok_s > 0.0);

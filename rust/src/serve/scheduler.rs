@@ -48,6 +48,14 @@ impl Policy {
             _ => None,
         }
     }
+
+    /// Canonical name, accepted back by [`Policy::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::ShortestPromptFirst => "spf",
+        }
+    }
 }
 
 /// Scheduler configuration.
@@ -183,6 +191,23 @@ pub struct RunStats {
     pub peak_batch: u64,
     /// Wall-clock of the simulated run (last completion time).
     pub makespan_s: f64,
+}
+
+impl RunStats {
+    /// Stable JSON rendering (part of the `eval` report schema).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("prefill_iterations", num(self.prefill_iterations as f64)),
+            ("decode_iterations", num(self.decode_iterations as f64)),
+            ("prefill_busy_s", num(self.prefill_busy_s)),
+            ("decode_busy_s", num(self.decode_busy_s)),
+            ("idle_s", num(self.idle_s)),
+            ("peak_kv_tokens", num(self.peak_kv_tokens as f64)),
+            ("peak_batch", num(self.peak_batch as f64)),
+            ("makespan_s", num(self.makespan_s)),
+        ])
+    }
 }
 
 /// One request in flight.

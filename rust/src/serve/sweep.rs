@@ -23,6 +23,18 @@ use crate::hardware::presets;
 /// paper's cost model excludes IP/masks/packaging).
 pub const AMORT_SECONDS: f64 = 3.0 * 365.0 * 24.0 * 3600.0;
 
+/// $ per million output tokens at the SLO for a cluster costing
+/// `cluster_cost_usd`, amortized over [`AMORT_SECONDS`]; infinite when
+/// nothing met the SLO. Shared by the sweep and `eval` serving reports so
+/// the two surfaces can never diverge.
+pub fn usd_per_mtok_at_slo(cluster_cost_usd: f64, goodput_tok_s: f64) -> f64 {
+    if goodput_tok_s > 0.0 {
+        cluster_cost_usd / AMORT_SECONDS / goodput_tok_s * 1e6
+    } else {
+        f64::INFINITY
+    }
+}
+
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
@@ -97,11 +109,7 @@ pub fn run_sweep(
             let requests = generate(&WorkloadSpec::poisson(rate, cfg.requests, cfg.seed));
             let (per_req, stats) = scheduler::simulate(&oracle, &sched, &requests);
             let summary = metrics::summarize(&per_req, &cfg.slo, stats.makespan_s);
-            let usd_per_mtok = if summary.goodput_tok_s > 0.0 {
-                cluster_cost_usd / AMORT_SECONDS / summary.goodput_tok_s * 1e6
-            } else {
-                f64::INFINITY
-            };
+            let usd_per_mtok = usd_per_mtok_at_slo(cluster_cost_usd, summary.goodput_tok_s);
             rows.push(SweepRow {
                 system: name.clone(),
                 rate_per_s: rate,

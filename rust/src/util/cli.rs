@@ -118,11 +118,9 @@ impl Command {
                 if name == "help" {
                     return Err(CliError(self.help()));
                 }
-                let spec = self
-                    .opts
-                    .iter()
-                    .find(|s| s.name == name)
-                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help())))?;
+                let spec = self.opts.iter().find(|s| s.name == name).ok_or_else(|| {
+                    CliError(format!("unknown option --{name}\n\n{}", self.help()))
+                })?;
                 if spec.is_flag {
                     if inline_val.is_some() {
                         return Err(CliError(format!("flag --{name} takes no value")));

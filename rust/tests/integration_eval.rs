@@ -1,0 +1,78 @@
+//! Integration tests for the unified `eval` layer: the shipped
+//! `scenarios/` suite evaluates end to end, reports keep the stable v1
+//! schema, scenarios survive JSON round trips, and a shared evaluator
+//! performs fewer mapper searches than independent ones — the acceptance
+//! criteria of the scenario API.
+
+use llmcompass::eval::{self, Evaluator, Scenario, SCHEMA_VERSION};
+use llmcompass::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+#[test]
+fn shipped_suite_evaluates_with_stable_schema() {
+    let suite = eval::load_suite(&scenarios_dir()).unwrap();
+    assert!(suite.len() >= 3, "the sample suite ships at least 3 scenarios");
+    let ev = Evaluator::new();
+    let reports = ev.evaluate_suite(&suite, 2);
+    for (sc, rep) in suite.iter().zip(&reports) {
+        let rep = rep.as_ref().unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        let j = rep.to_json();
+        assert_eq!(
+            j.get("schema_version").and_then(Json::as_u64),
+            Some(SCHEMA_VERSION),
+            "{}",
+            sc.name
+        );
+        assert!(j.get("scenario").is_some());
+        assert!(j.get("hardware").and_then(|h| h.get("device")).is_some());
+        let results = j.get("results").unwrap();
+        for o in &sc.outputs {
+            assert!(results.get(o.name()).is_some(), "{}: missing `{}`", sc.name, o.name());
+        }
+        // Every report is valid JSON text that reparses to itself.
+        assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j, "{}", sc.name);
+    }
+    // The traffic comparison scenarios actually exercised the serving path.
+    let a100 = suite.iter().position(|sc| sc.name == "a100-traffic").unwrap();
+    let serving = reports[a100].as_ref().unwrap().to_json();
+    let summary = serving.get("results").unwrap().get("serving").unwrap().get("summary").unwrap();
+    assert_eq!(summary.get("requests").and_then(Json::as_u64), Some(48));
+    assert!(summary.get("throughput_tok_s").and_then(Json::as_f64).unwrap() > 0.0);
+}
+
+#[test]
+fn shipped_suite_round_trips_losslessly() {
+    for sc in eval::load_suite(&scenarios_dir()).unwrap() {
+        let again = Scenario::parse(&sc.to_json().to_string_pretty())
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        assert_eq!(sc, again, "{} changed across serialize → parse", sc.name);
+    }
+}
+
+#[test]
+fn shared_evaluator_beats_independent_runs_on_searches() {
+    // The cross-scenario cache acceptance criterion, on the real suite:
+    // one evaluator over all scenarios must perform strictly fewer mapper
+    // parameter searches than one fresh evaluator per scenario.
+    let suite = eval::load_suite(&scenarios_dir()).unwrap();
+    let shared = Evaluator::new();
+    for sc in &suite {
+        shared.evaluate(sc).unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+    }
+    let shared_searches = shared.sim.mapper.searches();
+
+    let mut independent_searches = 0;
+    for sc in &suite {
+        let ev = Evaluator::new();
+        ev.evaluate(sc).unwrap();
+        independent_searches += ev.sim.mapper.searches();
+    }
+    assert!(
+        shared_searches < independent_searches,
+        "shared evaluator did {shared_searches} searches, independent runs {independent_searches}"
+    );
+}

@@ -57,7 +57,12 @@ fn fig12_throughput_design_wins() {
         .lines()
         .find(|l| l.starts_with("average normalized throughput"))
         .and_then(|l| l.split(':').nth(1))
-        .and_then(|v| v.trim().trim_end_matches(|c: char| !c.is_ascii_digit() && c != '.').split('x').next())
+        .and_then(|v| {
+            v.trim()
+                .trim_end_matches(|c: char| !c.is_ascii_digit() && c != '.')
+                .split('x')
+                .next()
+        })
         .and_then(|v| v.parse().ok())
         .expect("average line");
     assert!(avg > 1.0, "throughput design should beat GA100, got {avg}");

@@ -115,7 +115,11 @@ fn burst_arrivals_queue_worse_than_spaced_arrivals() {
     );
     // The bursty arrival *process* also drives the scheduler end to end.
     let bursty = serve::workload::generate(&WorkloadSpec {
-        arrival: Arrival::Bursty { rate_per_s: 20.0, burst_multiplier: 8.0, mean_phase_requests: 25.0 },
+        arrival: Arrival::Bursty {
+            rate_per_s: 20.0,
+            burst_multiplier: 8.0,
+            mean_phase_requests: 25.0,
+        },
         ..WorkloadSpec::poisson(20.0, 200, 13)
     });
     let (bp, _, _) = serve::serve_once(&sim, &sys, &model, &cfg, &bursty, &Slo::interactive());
