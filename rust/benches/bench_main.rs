@@ -16,6 +16,7 @@ use llmcompass::hardware::presets;
 use llmcompass::hardware::DType;
 use llmcompass::perf::mapper::{search, SearchBudget};
 use llmcompass::perf::matmul::Shape;
+use llmcompass::util::json::{num, obj, s, Json};
 use llmcompass::util::stats::Welford;
 use std::time::Instant;
 
@@ -62,6 +63,21 @@ fn fmt(s: f64) -> String {
     llmcompass::util::fmt_seconds(s)
 }
 
+/// Record the mapper-engine rows in BENCH_mapper.json at the repo root —
+/// rounds simulated + wall time per mode, the engine's perf baseline.
+fn write_mapper_baseline(rows: Vec<Json>) {
+    let doc = obj(vec![
+        ("generated_by", s("cargo bench (benches/bench_main.rs)")),
+        ("device", s("a100")),
+        ("benches", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_mapper.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => eprintln!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  warning: could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
     let mut b = Bench::new();
     eprintln!("llmcompass benchmarks (criterion-lite)");
@@ -79,25 +95,47 @@ fn main() {
         std::hint::black_box(lut.cycles(Tile { m: 128, k: 64, n: 64 }, arr));
     });
 
+    // --- mapper engine: exhaustive vs pruned vs pruned+hybrid --------------
+    // Every mode returns the bit-identical winner; the engine's point is
+    // the rounds-simulated and wall-time drop. Each (shape, mode) row is
+    // also snapshotted into BENCH_mapper.json at the repo root so the
+    // perf trajectory has a recorded baseline across PRs.
     let dev = presets::a100();
     let shape = Shape::simple(2048, 12288, 12288, DType::FP16);
-    b.run("mapper_search_prefill_gemm", "2048x12288x12288 full search", 1, 50, || {
-        std::hint::black_box(search(&dev, &shape, SearchBudget::default(), &lut));
-    });
     let decode_shape = Shape::simple(8, 12288, 12288, DType::FP16);
-    b.run("mapper_search_decode_gemm", "8x12288x12288 full search", 1, 50, || {
-        std::hint::black_box(search(&dev, &decode_shape, SearchBudget::default(), &lut));
-    });
-    // Serial vs pooled candidate loop on the same search (identical
-    // result; the speedup is the point — see mapper::search docs).
-    let pooled = SearchBudget::pooled();
-    let note = format!("same search, {} pool threads", pooled.threads);
-    b.run("mapper_search_prefill_pooled", &note, 1, 50, || {
-        std::hint::black_box(search(&dev, &shape, pooled, &lut));
-    });
-    b.run("mapper_search_decode_pooled", &note, 1, 50, || {
-        std::hint::black_box(search(&dev, &decode_shape, pooled, &lut));
-    });
+    let mut mapper_rows: Vec<Json> = Vec::new();
+    for (tag, sh) in [("prefill_gemm", shape), ("decode_gemm", decode_shape)] {
+        for (mode, budget) in [
+            ("exhaustive", SearchBudget::exhaustive()),
+            ("pruned", SearchBudget::default()),
+            ("pruned_hybrid", SearchBudget::hybrid()),
+        ] {
+            let name = if tag == "prefill_gemm" {
+                format!("mapper_{mode}")
+            } else {
+                format!("mapper_{mode}_decode")
+            };
+            let mlut = SystolicLut::new();
+            let snap = search(&dev, &sh, budget, &mlut);
+            let note =
+                format!("{tag}: {}/{} rounds simulated", snap.rounds, snap.candidates);
+            b.run(&name, &note, 1, 50, || {
+                std::hint::black_box(search(&dev, &sh, budget, &mlut));
+            });
+            let (_, mean, sd, iters, _) = b.rows.last().unwrap();
+            mapper_rows.push(obj(vec![
+                ("bench", s(&name)),
+                ("shape", s(&format!("{}x{}x{}", sh.m, sh.k, sh.n))),
+                ("mode", s(mode)),
+                ("candidates", num(snap.candidates as f64)),
+                ("rounds_simulated", num(snap.rounds as f64)),
+                ("mean_s", num(*mean)),
+                ("sigma_s", num(*sd)),
+                ("iters", num(*iters as f64)),
+            ]));
+        }
+    }
+    write_mapper_baseline(mapper_rows);
 
     let sim = Simulator::new();
     let sys = presets::system("a100x4").unwrap();

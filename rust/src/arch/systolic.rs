@@ -6,6 +6,8 @@
 //! same LUT layer.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Dataflow of the systolic array.
@@ -148,13 +150,26 @@ fn chunks(total: u64, step: u64) -> impl Iterator<Item = u64> {
     (0..full).map(move |_| step).chain((rem > 0).then_some(rem))
 }
 
+/// Number of independent LUT shards. Each shard is its own mutex-guarded
+/// map, so concurrent mapper workers hitting *different* tiles almost
+/// never contend; 16 shards keeps the worst case at 1/16th of the old
+/// single-mutex serialization.
+const LUT_SHARDS: usize = 16;
+
 /// Memoizing LUT over (tile, array) — mirrors the paper's caching of
 /// SCALE-Sim results ("LLMCompass caches the results of SCALE-Sim into a
 /// look-up table to avoid duplicated simulation").
+///
+/// The table is sharded by key hash and the hit/miss counters are atomics,
+/// so a parallel candidate loop never serializes on a global lock (the
+/// pre-engine design took one `Mutex` per simulated candidate). Two
+/// threads racing on the *same* cold key may both compute it — the value
+/// is deterministic, so the second insert is a harmless overwrite (and
+/// both count as misses, exactly as the old implementation did).
 pub struct SystolicLut {
-    map: Mutex<HashMap<(Tile, Array), u64>>,
-    hits: Mutex<u64>,
-    misses: Mutex<u64>,
+    shards: Vec<Mutex<HashMap<(Tile, Array), u64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl Default for SystolicLut {
@@ -166,29 +181,37 @@ impl Default for SystolicLut {
 impl SystolicLut {
     pub fn new() -> Self {
         SystolicLut {
-            map: Mutex::new(HashMap::new()),
-            hits: Mutex::new(0),
-            misses: Mutex::new(0),
+            shards: (0..LUT_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
     }
 
+    fn shard(&self, key: &(Tile, Array)) -> &Mutex<HashMap<(Tile, Array), u64>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[h.finish() as usize % LUT_SHARDS]
+    }
+
     pub fn cycles(&self, tile: Tile, array: Array) -> u64 {
-        if let Some(&c) = self.map.lock().unwrap().get(&(tile, array)) {
-            *self.hits.lock().unwrap() += 1;
+        let key = (tile, array);
+        let shard = self.shard(&key);
+        if let Some(&c) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return c;
         }
         let c = cycles_analytical(tile, array);
-        self.map.lock().unwrap().insert((tile, array), c);
-        *self.misses.lock().unwrap() += 1;
+        shard.lock().unwrap().insert(key, c);
+        self.misses.fetch_add(1, Ordering::Relaxed);
         c
     }
 
     pub fn stats(&self) -> (u64, u64) {
-        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -271,6 +294,23 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(lut.stats(), (1, 1));
         assert_eq!(lut.len(), 1);
+    }
+
+    #[test]
+    fn sharded_lut_counts_and_sums_across_shards() {
+        // More distinct keys than shards: `len` must sum the shards, and
+        // a re-read of every key must be a pure hit.
+        let lut = SystolicLut::new();
+        for m in 1..=64u64 {
+            lut.cycles(Tile { m, k: 16, n: 16 }, WS16);
+        }
+        assert_eq!(lut.len(), 64);
+        assert_eq!(lut.stats(), (0, 64));
+        for m in 1..=64u64 {
+            lut.cycles(Tile { m, k: 16, n: 16 }, WS16);
+        }
+        assert_eq!(lut.stats(), (64, 64));
+        assert_eq!(lut.len(), 64);
     }
 
     #[test]

@@ -209,10 +209,20 @@ impl Evaluator {
     }
 
     /// An evaluator whose mapper fans each candidate search across all
-    /// cores — for single-stream callers (the CLI). Keep [`Evaluator::new`]
-    /// for suite evaluation, which already fans out per scenario.
+    /// cores as a fixed pool — for single-stream callers that own the
+    /// whole machine.
     pub fn pooled() -> Evaluator {
         Evaluator::with_sim(Simulator::pooled())
+    }
+
+    /// An evaluator whose mapper runs in work-stealing hybrid mode —
+    /// the right choice under [`Evaluator::evaluate_suite_shared`] (and
+    /// the experiment context): scenario fan-out and the per-candidate
+    /// loops borrow from one process-wide worker budget, so suites with
+    /// few scenarios still use every core and suites with many never
+    /// oversubscribe.
+    pub fn hybrid() -> Evaluator {
+        Evaluator::with_sim(Simulator::hybrid())
     }
 
     pub fn with_sim(sim: Simulator) -> Evaluator {
@@ -234,14 +244,26 @@ impl Evaluator {
     }
 
     /// Evaluate many scenarios with a shared mapper cache, fanned across
-    /// `threads` pool workers. Per-scenario errors are returned in place,
-    /// so one bad scenario does not sink the suite.
+    /// `threads` fixed pool workers. Per-scenario errors are returned in
+    /// place, so one bad scenario does not sink the suite.
     pub fn evaluate_suite(
         &self,
         scenarios: &[Scenario],
         threads: usize,
     ) -> Vec<Result<EvalReport, String>> {
         crate::util::pool::parallel_map(scenarios, threads, |sc| self.evaluate(sc))
+    }
+
+    /// Like [`Evaluator::evaluate_suite`], but fanned across the
+    /// process-wide work-stealing token budget. Combined with a
+    /// [`Evaluator::hybrid`] evaluator, a scenario worker that finishes
+    /// donates its thread to the mapper candidate loops still running in
+    /// the suite's tail.
+    pub fn evaluate_suite_shared(
+        &self,
+        scenarios: &[Scenario],
+    ) -> Vec<Result<EvalReport, String>> {
+        crate::util::pool::parallel_map_shared(scenarios, |sc| self.evaluate(sc))
     }
 
     fn eval_output(
@@ -565,6 +587,39 @@ mod tests {
         for (a, b) in serial.iter().zip(&pooled) {
             let b = b.as_ref().unwrap();
             assert_eq!(a.to_json(), b.to_json());
+        }
+    }
+
+    #[test]
+    fn shared_fanout_matches_serial_results() {
+        // The work-stealing hybrid fan-out must produce the identical
+        // evaluations (rounds counters may differ under a parallel
+        // pruned search — the winners never do).
+        let suite = vec![
+            op_scenario("a", "a100"),
+            op_scenario("b", "ga100"),
+            Scenario::new("hw", "ga100", Workload::Hardware),
+        ];
+        let serial_ev = Evaluator::new();
+        let serial: Vec<_> = suite.iter().map(|sc| serial_ev.evaluate(sc).unwrap()).collect();
+        let hybrid_ev = Evaluator::hybrid();
+        let shared = hybrid_ev.evaluate_suite_shared(&suite);
+        assert_eq!(serial.len(), shared.len());
+        for (a, b) in serial.iter().zip(&shared) {
+            let b = b.as_ref().unwrap();
+            match (&a.results[0], &b.results[0]) {
+                (
+                    EvalResult::OpLatency { result: ra, .. },
+                    EvalResult::OpLatency { result: rb, .. },
+                ) => {
+                    assert_eq!(ra.latency_s.to_bits(), rb.latency_s.to_bits());
+                    assert_eq!(ra.mapping_desc, rb.mapping_desc);
+                }
+                (EvalResult::Area(x), EvalResult::Area(y)) => {
+                    assert_eq!(x.total_mm2(), y.total_mm2())
+                }
+                _ => panic!("result kinds diverged"),
+            }
         }
     }
 

@@ -37,12 +37,13 @@ pub fn normalized_grid(ctx: &Ctx) -> (Vec<u64>, Vec<u64>, Vec<Vec<f64>>) {
     let (ins, outs) = lengths(ctx.quick);
     let ga = tp4(presets::ga100());
     let lat = tp4(presets::latency_oriented());
-    // Grid cells are independent; fan them across the thread pool (the
-    // mapper/LUT caches behind `Simulator` are lock-protected and shared).
+    // Grid cells are independent; fan them across the shared work-stealing
+    // budget (the mapper/LUT caches behind `Simulator` are concurrency-safe
+    // and shared). The hybrid mapper picks idle workers back up for its
+    // candidate loops as cells drain.
     let cells: Vec<(u64, u64)> =
         ins.iter().flat_map(|&i| outs.iter().map(move |&o| (i, o))).collect();
-    let threads = crate::util::pool::default_threads();
-    let values = crate::util::pool::parallel_map(&cells, threads, |&(s_in, s_out)| {
+    let values = crate::util::pool::parallel_map_shared(&cells, |&(s_in, s_out)| {
         let t_ga = ctx.sim().e2e_latency(&ga, &model, BATCH, s_in, s_out, LAYERS);
         let t_lat = ctx.sim().e2e_latency(&lat, &model, BATCH, s_in, s_out, LAYERS);
         t_ga / t_lat // perf = 1/latency, normalized to GA100

@@ -34,8 +34,7 @@ pub fn grids(ctx: &Ctx) -> (Vec<u64>, Vec<u64>, Vec<Vec<f64>>, Vec<Vec<f64>>, f6
     let ga = pp8(presets::ga100());
     let cells: Vec<(u64, u64)> =
         ins.iter().flat_map(|&i| outs.iter().map(move |&o| (i, o))).collect();
-    let threads = crate::util::pool::default_threads();
-    let pairs = crate::util::pool::parallel_map(&cells, threads, |&(s_in, s_out)| {
+    let pairs = crate::util::pool::parallel_map_shared(&cells, |&(s_in, s_out)| {
         let (tok_thr, _, _) = ctx.sim().pipeline_throughput(&thr, &model, s_in, s_out);
         let (tok_ga, _, _) = ctx.sim().pipeline_throughput(&ga, &model, s_in, s_out);
         (tok_thr, if tok_ga > 0.0 { tok_thr / tok_ga } else { f64::INFINITY })

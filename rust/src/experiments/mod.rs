@@ -33,8 +33,12 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// The evaluator's mapper runs in work-stealing hybrid mode: sweep
+    /// cells fan out over `util::pool::parallel_map_shared`, and whatever
+    /// workers the sweep leaves idle are picked up by the mapper's own
+    /// candidate loops — both levels of parallelism, no multiplication.
     pub fn new(quick: bool) -> Ctx {
-        Ctx { eval: Evaluator::new(), quick, artifact_dir: default_artifact_dir() }
+        Ctx { eval: Evaluator::hybrid(), quick, artifact_dir: default_artifact_dir() }
     }
 
     /// The shared analytical simulator (shorthand for `self.eval.sim`).

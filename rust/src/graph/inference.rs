@@ -44,11 +44,25 @@ impl Simulator {
     }
 
     /// A simulator whose mapper fans each candidate search across all
-    /// cores — for single-stream callers (the CLI, the serving oracle).
-    /// Keep [`Simulator::new`] inside experiment sweeps that already
-    /// parallelize over sweep cells.
+    /// cores as a fixed pool — for single-stream callers that own the
+    /// whole machine (the CLI, the serving oracle). Prefer
+    /// [`Simulator::hybrid`] under outer sweeps.
     pub fn pooled() -> Self {
         Simulator { mapper: Mapper::pooled() }
+    }
+
+    /// A simulator whose mapper runs in work-stealing hybrid mode: its
+    /// candidate loops borrow idle workers from the process-wide token
+    /// budget, so outer sweeps (experiment cells, eval suites) and the
+    /// per-candidate loop share the cores without multiplying threads.
+    pub fn hybrid() -> Self {
+        Simulator { mapper: Mapper::hybrid() }
+    }
+
+    /// A simulator around a caller-built mapper (e.g.
+    /// [`Mapper::with_cache`] for the persistent on-disk mapping cache).
+    pub fn with_mapper(mapper: Mapper) -> Self {
+        Simulator { mapper }
     }
 
     /// Simulate one operator on the system (device for compute ops, the

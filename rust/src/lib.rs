@@ -13,9 +13,14 @@
 //! * [`arch`] — low-level architectural timing models: systolic array
 //!   (SCALE-Sim style), vector unit, and LogGP-style links.
 //! * [`perf`] — the operator performance model: tile-by-tile matmul
-//!   simulation with a mapping/scheduling parameter search (the *mapper*),
-//!   vector-op models (softmax/layernorm/GELU), and communication
-//!   primitives (ring all-reduce, peer-to-peer).
+//!   simulation driven by the *mapper search engine*
+//!   ([`perf::mapper`]) — an analytically lower-bound-pruned,
+//!   work-stealing parameter search over tilings/schedules that returns
+//!   the bit-identical winner of the exhaustive sweep at a fraction of
+//!   the simulated rounds, memoized in-process per (device, shape) and
+//!   across processes via a versioned on-disk mapping cache
+//!   (`--mapper-cache`) — plus vector-op models (softmax/layernorm/GELU)
+//!   and communication primitives (ring all-reduce, peer-to-peer).
 //! * [`graph`] — Transformer computational graphs (prefill/decode, tensor &
 //!   pipeline parallelism) and end-to-end latency/throughput simulation.
 //! * [`area`] / [`cost`] — the area model (component transistor counts,

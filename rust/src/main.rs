@@ -6,7 +6,7 @@
 //! * `eval`       — evaluate typed JSON scenarios (`--scenario file` /
 //!   `--suite dir`) through the unified `eval::Evaluator`, emitting
 //!   stable-schema JSON reports with a shared mapper cache across the
-//!   suite
+//!   suite (and, with `--mapper-cache`, across processes)
 //! * `simulate`   — simulate one operator or a Transformer layer/request
 //! * `area`       — die area breakdown (Fig. 6) and Table II parameters
 //! * `cost`       — die + memory cost (Table IV economics)
@@ -25,8 +25,10 @@
 
 use llmcompass::eval::{self, EvalResult, Evaluator, Output, Scenario, TrafficSpec, Workload};
 use llmcompass::experiments::{self, Ctx};
+use llmcompass::graph::inference::Simulator;
 use llmcompass::graph::layer::Phase;
 use llmcompass::hardware::{config, presets, DType};
+use llmcompass::perf::mapper::{Mapper, SearchBudget};
 use llmcompass::util::cli::Command;
 use llmcompass::util::json::Json;
 use llmcompass::util::table::Table;
@@ -95,6 +97,51 @@ fn err<E: std::fmt::Display>(e: E) -> String {
 // `--model` arguments resolve through `eval::model_by_name`, the same
 // registry lookup (and error message) scenario files get.
 
+const MAPPER_CACHE_HELP: &str = "persistent mapping cache: a JSON path, or `auto` for \
+     $LLMCOMPASS_ARTIFACT_DIR/mapper_cache.json (created on exit; repeated runs skip searches)";
+
+/// Resolve a `--mapper-cache` argument: `auto` places the cache under the
+/// artifact directory; anything else is used as a path verbatim.
+fn mapper_cache_path(arg: &str) -> std::path::PathBuf {
+    if arg == "auto" {
+        experiments::default_artifact_dir().join("mapper_cache.json")
+    } else {
+        std::path::PathBuf::from(arg)
+    }
+}
+
+/// Build an evaluator for a CLI command: `budget` picks the mapper's
+/// candidate-loop mode; `--mapper-cache` backs it with the persistent
+/// on-disk mapping cache.
+fn evaluator_for(budget: SearchBudget, cache: Option<&str>) -> Evaluator {
+    let mapper = match cache {
+        None => Mapper::new(budget),
+        Some(arg) => {
+            let path = mapper_cache_path(arg);
+            let mapper = Mapper::with_cache(budget, &path);
+            if mapper.loaded_from_disk() > 0 {
+                eprintln!(
+                    "[mapper cache: {} mappings loaded from {}]",
+                    mapper.loaded_from_disk(),
+                    path.display()
+                );
+            }
+            mapper
+        }
+    };
+    Evaluator::with_sim(Simulator::with_mapper(mapper))
+}
+
+/// Save the evaluator's mapper cache (no-op without `--mapper-cache`),
+/// reporting where it went — or why it could not be written.
+fn persist_mapper_cache(ev: &Evaluator) {
+    match ev.sim.mapper.persist() {
+        Ok(Some(path)) => eprintln!("[mapper cache saved to {}]", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("warning: mapper cache not saved: {e}"),
+    }
+}
+
 fn cmd_hardware(raw: &[String]) -> R {
     let cmd = Command::new("hardware", "list or show hardware descriptions")
         .opt("show", None, "preset name or JSON path to display")
@@ -136,7 +183,14 @@ fn cmd_eval(raw: &[String]) -> R {
     let cmd = Command::new("eval", "evaluate typed scenarios through the unified entry point")
         .opt("scenario", None, "one scenario JSON file (see scenarios/ for examples)")
         .opt("suite", None, "directory of scenario JSON files (shared mapper cache)")
-        .opt("threads", None, "suite fan-out worker threads (default: all cores)")
+        .opt(
+            "threads",
+            None,
+            "suite fan-out: fixed worker threads with a serial per-search mapper — \
+             run-to-run reproducible `mapper_rounds` stats (default: work-stealing \
+             hybrid over all cores; winners identical, rounds counters may vary)",
+        )
+        .opt("mapper-cache", None, MAPPER_CACHE_HELP)
         .flag("compact", "emit compact JSON instead of pretty-printed")
         .flag("pooled", "use the pooled (multi-threaded) mapper search");
     let a = cmd.parse(raw).map_err(|e| e.0)?;
@@ -148,7 +202,10 @@ fn cmd_eval(raw: &[String]) -> R {
         // on top would oversubscribe cores multiplicatively.
         return Err("--pooled applies to --scenario only (suites already fan out)".into());
     }
-    let ev = if a.flag("pooled") { Evaluator::pooled() } else { Evaluator::new() };
+    if a.get("threads").is_some() && a.get("scenario").is_some() {
+        return Err("--threads applies to --suite only (use --pooled for one scenario)".into());
+    }
+    let cache = a.get("mapper-cache");
     let emit = |j: &Json| {
         if a.flag("compact") {
             println!("{}", j.to_string_compact());
@@ -159,21 +216,34 @@ fn cmd_eval(raw: &[String]) -> R {
     };
 
     if let Some(path) = a.get("scenario") {
+        let budget = if a.flag("pooled") { SearchBudget::pooled() } else { SearchBudget::default() };
+        let ev = evaluator_for(budget, cache);
         let sc = Scenario::load(std::path::Path::new(path))?;
         let rep = ev.evaluate(&sc)?;
         emit(&rep.to_json());
+        persist_mapper_cache(&ev);
         return Ok(());
     }
 
     if let Some(dir) = a.get("suite") {
         let scenarios = eval::load_suite(std::path::Path::new(dir))?;
         let threads = match a.get_u64("threads").map_err(|e| e.0)? {
-            Some(n) if n >= 1 => n as usize,
+            Some(n) if n >= 1 => Some(n as usize),
             Some(_) => return Err("--threads must be ≥ 1".into()),
-            None => llmcompass::util::pool::default_threads(),
+            None => None,
         };
+        // Default fan-out is the work-stealing hybrid: scenario workers
+        // and the mapper candidate loops share one process-wide worker
+        // budget, so the suite's tail donates idle cores to the searches
+        // still running. An explicit --threads pins a fixed pool with a
+        // serial per-search loop instead.
+        let budget = if threads.is_some() { SearchBudget::default() } else { SearchBudget::hybrid() };
+        let ev = evaluator_for(budget, cache);
         let start = std::time::Instant::now();
-        let reports = ev.evaluate_suite(&scenarios, threads);
+        let reports = match threads {
+            Some(n) => ev.evaluate_suite(&scenarios, n),
+            None => ev.evaluate_suite_shared(&scenarios),
+        };
         let mut failed = 0usize;
         let items: Vec<Json> = scenarios
             .iter()
@@ -205,6 +275,7 @@ fn cmd_eval(raw: &[String]) -> R {
             ev.sim.mapper.total_rounds(),
             ev.sim.mapper.cache_len()
         );
+        persist_mapper_cache(&ev);
         if failed > 0 {
             return Err(format!("{failed} of {} scenario(s) failed", scenarios.len()));
         }
@@ -224,10 +295,11 @@ fn cmd_simulate(raw: &[String]) -> R {
         .opt("seq", Some("2048"), "input sequence length")
         .opt("out-tokens", Some("1024"), "output tokens (decode kv offset / e2e length)")
         .opt("layers", None, "layer count (default: whole model)")
-        .opt("dtype", Some("fp16"), "fp32 | fp16 | bf16 | int8");
+        .opt("dtype", Some("fp16"), "fp32 | fp16 | bf16 | int8")
+        .opt("mapper-cache", None, MAPPER_CACHE_HELP);
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     let hw = a.get_or("hardware", "a100x4");
-    let ev = Evaluator::new();
+    let ev = evaluator_for(SearchBudget::default(), a.get("mapper-cache"));
     let dtype = DType::parse(a.get_or("dtype", "fp16")).ok_or("bad --dtype")?;
 
     if let Some(op_spec) = a.get("op") {
@@ -265,6 +337,7 @@ fn cmd_simulate(raw: &[String]) -> R {
             r.mapper_rounds,
             r.mapping_desc
         );
+        persist_mapper_cache(&ev);
         return Ok(());
     }
 
@@ -320,6 +393,7 @@ fn cmd_simulate(raw: &[String]) -> R {
         }
         other => return Err(format!("unknown phase `{other}`")),
     }
+    persist_mapper_cache(&ev);
     Ok(())
 }
 
@@ -528,7 +602,8 @@ fn cmd_serve(raw: &[String]) -> R {
              (uses --model/--requests/--policy/--slo-*/--seed; ignores --hardware, \
              --rate and the arrival options)",
         )
-        .flag("pooled", "use the pooled (multi-threaded) mapper search");
+        .flag("pooled", "use the pooled (multi-threaded) mapper search")
+        .opt("mapper-cache", None, MAPPER_CACHE_HELP);
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     let model_name = a.get_or("model", "gpt3-175b");
     let model = eval::model_by_name(model_name)?;
@@ -540,7 +615,8 @@ fn cmd_serve(raw: &[String]) -> R {
     let seed = a.get_u64("seed").map_err(|e| e.0)?.unwrap();
     let policy = llmcompass::serve::Policy::parse(a.get_or("policy", "fcfs"))
         .ok_or("bad --policy (fcfs | spf)")?;
-    let ev = if a.flag("pooled") { Evaluator::pooled() } else { Evaluator::new() };
+    let budget = if a.flag("pooled") { SearchBudget::pooled() } else { SearchBudget::default() };
+    let ev = evaluator_for(budget, a.get("mapper-cache"));
     let start = std::time::Instant::now();
 
     if a.flag("sweep") {
@@ -581,6 +657,7 @@ fn cmd_serve(raw: &[String]) -> R {
             );
         }
         println!("[swept in {}]", llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()));
+        persist_mapper_cache(&ev);
         return Ok(());
     }
 
@@ -661,6 +738,7 @@ fn cmd_serve(raw: &[String]) -> R {
         ev.sim.mapper.total_rounds(),
         ev.sim.mapper.cache_len()
     );
+    persist_mapper_cache(&ev);
     Ok(())
 }
 

@@ -1,4 +1,5 @@
-//! The mapper: parameter search over tilings and schedules (paper §III-B).
+//! The mapper search **engine**: pruned, work-stealing, persistently
+//! cached parameter search over tilings and schedules (paper §III-B).
 //!
 //! "A parameter search is performed by the mapper to determine the best
 //! tiling scheme and schedule scheme … LLMCompass always tries to find the
@@ -8,16 +9,50 @@
 //! The search enumerates global-tile and local-tile sizes (powers of two
 //! aligned to the systolic geometry, plus the problem extents themselves),
 //! both schedule schemes, and the software-pipeline (double-buffering)
-//! options at each level, simulates every feasible combination through
-//! [`super::matmul::simulate`], and keeps the fastest. Results are
-//! memoized per (device, shape) — the same matmul shape recurs for every
-//! Transformer layer, so a GPT-3 run touches only a handful of unique
-//! shapes.
+//! options at each level, and keeps the fastest mapping under
+//! [`super::matmul::simulate`]. Four coordinated optimizations make this a
+//! search engine rather than a brute-force sweep — each preserves the
+//! exhaustive serial path's winner bit for bit:
+//!
+//! 1. **Lower-bound pruning** ([`SearchBudget::prune`], default on).
+//!    Every candidate first gets the O(1) analytical floor from
+//!    [`super::matmul::lower_bound`]; candidates whose floor already
+//!    exceeds the best simulated time so far are skipped. The best-so-far
+//!    lives in an atomic seconds watermark, so the parallel paths prune
+//!    too. Because the floor is a *true* lower bound and pruning is
+//!    strict (`bound > watermark`), only strictly-suboptimal candidates
+//!    are ever skipped — every optimal candidate is simulated, and the
+//!    ordered first-strict-minimum reduction returns the identical
+//!    winner. Only [`Best::rounds`] (candidates actually simulated)
+//!    shrinks.
+//! 2. **Work-stealing hybrid parallelism** ([`SearchBudget::hybrid`]).
+//!    The candidate loop fans across [`crate::util::pool::parallel_map_shared`],
+//!    borrowing workers from the process-wide token budget. Experiment
+//!    sweeps and eval suites fan out over the same budget, so both levels
+//!    of parallelism (per-cell *and* per-candidate) get used without
+//!    thread counts multiplying: a sweep's tail cells donate their idle
+//!    workers to the remaining searches.
+//! 3. **Lock-light [`SystolicLut`]**. The per-tile timing LUT is sharded
+//!    with atomic hit/miss counters, so parallel candidate workers no
+//!    longer serialize on the global mutex every simulated candidate used
+//!    to take.
+//! 4. **Persistent on-disk mapping cache** ([`Mapper::with_cache`]).
+//!    Search results are memoized per (device fingerprint, shape, budget)
+//!    in a versioned JSON file (CLI `--mapper-cache`, conventionally under
+//!    `$LLMCOMPASS_ARTIFACT_DIR`), so repeated CLI runs, eval suites, and
+//!    serve sweeps skip whole searches across processes.
+//!
+//! In-process, results are still memoized per (device, shape) — the same
+//! matmul shape recurs for every Transformer layer, so a GPT-3 run touches
+//! only a handful of unique shapes.
 
-use super::matmul::{fits, simulate, Mapping, Scheme, Shape, SimOutcome};
+use super::matmul::{fits, lower_bound, simulate, Mapping, Scheme, Shape, SimOutcome};
 use crate::arch::systolic::SystolicLut;
-use crate::hardware::{DeviceSpec, DType};
+use crate::hardware::{DType, DeviceSpec};
+use crate::util::json::{num, obj, s, Json};
 use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
 /// Search-space budget knobs. The defaults give a few hundred to a couple
@@ -29,23 +64,44 @@ pub struct SearchBudget {
     pub gt_per_dim: usize,
     /// Max candidate sizes per local-tile dimension.
     pub lt_per_dim: usize,
-    /// Worker threads for the per-candidate simulation loop (1 = serial).
-    /// Keep 1 when the caller already fans out over `util::pool` (the
-    /// experiment sweeps do), so thread counts do not multiply.
+    /// Fixed worker threads for the per-candidate simulation loop
+    /// (1 = serial). Ignored when `hybrid` is set. Keep 1 when the caller
+    /// already fans out over `util::pool` with fixed threads.
     pub threads: usize,
+    /// Skip candidates whose analytical lower bound already exceeds the
+    /// best simulated time (identical winner, far fewer rounds).
+    pub prune: bool,
+    /// Fan the candidate loop across the process-wide work-stealing token
+    /// budget instead of a fixed thread count — safe under outer sweeps.
+    pub hybrid: bool,
 }
 
 impl Default for SearchBudget {
     fn default() -> Self {
-        SearchBudget { gt_per_dim: 4, lt_per_dim: 3, threads: 1 }
+        SearchBudget { gt_per_dim: 4, lt_per_dim: 3, threads: 1, prune: true, hybrid: false }
     }
 }
 
 impl SearchBudget {
     /// Default budget with the candidate loop fanned across all available
-    /// cores — for single-search callers (CLI ops, the serving oracle).
+    /// cores as a fixed pool — for single-search callers that own the
+    /// whole machine (CLI ops, the serving oracle).
     pub fn pooled() -> Self {
         SearchBudget { threads: crate::util::pool::default_threads(), ..Self::default() }
+    }
+
+    /// Default budget with the candidate loop in work-stealing hybrid
+    /// mode: workers are borrowed from (and returned to) the shared token
+    /// budget, so experiment sweeps and eval suites can fan out per-cell
+    /// *and* per-candidate without multiplying threads.
+    pub fn hybrid() -> Self {
+        SearchBudget { hybrid: true, ..Self::default() }
+    }
+
+    /// Default budget with pruning disabled — the exhaustive reference
+    /// path (benchmarks and the identity tests compare against this).
+    pub fn exhaustive() -> Self {
+        SearchBudget { prune: false, ..Self::default() }
     }
 }
 
@@ -54,8 +110,13 @@ impl SearchBudget {
 pub struct Best {
     pub outcome: SimOutcome,
     pub mapping: Mapping,
-    /// Number of (mapping) candidates actually simulated.
+    /// Number of candidate mappings actually simulated (pruning shrinks
+    /// this; with a parallel budget it can vary run to run — the winner
+    /// never does).
     pub rounds: u64,
+    /// Number of feasible candidates enumerated (the exhaustive round
+    /// count; `rounds / candidates` is the survival rate under pruning).
+    pub candidates: u64,
 }
 
 /// Candidate tile sizes for one dimension: descending powers of two capped
@@ -160,26 +221,59 @@ fn feasible_candidates(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget) ->
     out
 }
 
-/// Exhaustively search mappings for `shape` on `dev`; returns the fastest
-/// feasible mapping. Panics only if no mapping fits (which cannot happen:
-/// the minimal systolic-aligned tile always fits any realistic buffer).
+/// Search mappings for `shape` on `dev`; returns the fastest feasible
+/// mapping. Panics only if no mapping fits (which cannot happen on a
+/// realistic device: the minimal systolic-aligned tile always fits).
 ///
-/// With `budget.threads > 1` the per-candidate simulations fan across a
-/// [`crate::util::pool`] scoped pool. The reduction keeps the serial
-/// result bit-for-bit: `parallel_map` preserves candidate order and the
-/// fold takes the *first* strictly-fastest outcome, so ties resolve the
-/// same way in both paths. The [`SystolicLut`] is shared across workers
-/// behind its internal `Mutex`.
+/// All budget modes (serial, fixed-pool, hybrid, pruned or exhaustive)
+/// return the identical `(mapping, outcome)`:
+///
+/// * the candidate list and its order are deterministic;
+/// * the parallel maps preserve candidate order, and the reduction takes
+///   the *first* strictly-fastest outcome, so ties resolve identically;
+/// * pruning skips a candidate only when its [`lower_bound`] strictly
+///   exceeds the watermark — an actually-simulated time, so every
+///   candidate tied with the optimum is simulated, and only
+///   [`Best::rounds`] varies.
 pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &SystolicLut) -> Best {
     let cands = feasible_candidates(dev, shape, budget);
-    let rounds = cands.len() as u64;
+    let candidates = cands.len() as u64;
 
-    let outcomes: Vec<Option<SimOutcome>> = if budget.threads > 1 {
-        crate::util::pool::parallel_map(&cands, budget.threads, |map| {
-            simulate(dev, shape, map, lut)
-        })
+    // Best-so-far seconds, shared across workers as raw f64 bits. Only
+    // ever lowered, and only to values some worker actually simulated.
+    let watermark = AtomicU64::new(f64::INFINITY.to_bits());
+    let simulated = AtomicU64::new(0);
+    let eval = |map: &Mapping| -> Option<SimOutcome> {
+        if budget.prune
+            && lower_bound(dev, shape, map) > f64::from_bits(watermark.load(Ordering::Relaxed))
+        {
+            return None;
+        }
+        let out = simulate(dev, shape, map, lut)?;
+        simulated.fetch_add(1, Ordering::Relaxed);
+        if budget.prune {
+            let mut cur = watermark.load(Ordering::Relaxed);
+            while out.seconds < f64::from_bits(cur) {
+                match watermark.compare_exchange_weak(
+                    cur,
+                    out.seconds.to_bits(),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(c) => cur = c,
+                }
+            }
+        }
+        Some(out)
+    };
+
+    let outcomes: Vec<Option<SimOutcome>> = if budget.hybrid {
+        crate::util::pool::parallel_map_shared(&cands, eval)
+    } else if budget.threads > 1 {
+        crate::util::pool::parallel_map(&cands, budget.threads, eval)
     } else {
-        cands.iter().map(|map| simulate(dev, shape, map, lut)).collect()
+        cands.iter().map(eval).collect()
     };
 
     let mut best: Option<(SimOutcome, Mapping)> = None;
@@ -201,17 +295,47 @@ pub fn search(dev: &DeviceSpec, shape: &Shape, budget: SearchBudget, lut: &Systo
             shape, dev.name, dev.core.local_buffer_bytes
         )
     });
-    Best { outcome, mapping, rounds }
+    Best { outcome, mapping, rounds: simulated.load(Ordering::Relaxed), candidates }
 }
 
-/// Memoizing front-end to [`search`]. Keyed by device name + shape, so use
-/// distinct names for distinct hardware descriptions (presets do).
+// ---------------------------------------------------------------------------
+// Memoizing front-end + persistent cache
+// ---------------------------------------------------------------------------
+
+/// Memoization key: device fingerprint + shape. Distinct hardware
+/// descriptions never alias even under one name (the fingerprint hashes
+/// every parameter).
 type CacheKey = (u64, u64, u64, u64, u64, DType, bool);
+
+/// Version of the on-disk mapping-cache schema ([`Mapper::with_cache`]).
+/// Bump on any change to the entry layout; files with another version are
+/// rejected on load and replaced on the next persist.
+pub const CACHE_VERSION: u64 = 1;
+
+/// One memoized search result plus the device name it was computed for
+/// (the name is informational — the key's fingerprint is authoritative).
+#[derive(Debug, Clone)]
+struct CacheEntry {
+    device: String,
+    best: Best,
+}
+
+/// Persistent-cache state: where to save, entries for *other* budgets
+/// carried through untouched, and whether anything new needs writing.
+struct DiskCache {
+    path: PathBuf,
+    /// Raw entries from the loaded file whose budget did not match this
+    /// mapper's — preserved verbatim by [`Mapper::persist`] so differently
+    /// budgeted runs sharing one cache file do not clobber each other.
+    foreign: Vec<Json>,
+    dirty: AtomicBool,
+    loaded: u64,
+}
 
 pub struct Mapper {
     budget: SearchBudget,
     lut: SystolicLut,
-    cache: Mutex<HashMap<CacheKey, Best>>,
+    cache: Mutex<HashMap<CacheKey, CacheEntry>>,
     /// Keys whose search is currently running on some thread. Concurrent
     /// callers of the same key wait on [`Mapper::search_done`] instead of
     /// duplicating the (expensive) search — this is what keeps the
@@ -219,13 +343,35 @@ pub struct Mapper {
     /// out across threads.
     in_flight: Mutex<HashSet<CacheKey>>,
     search_done: Condvar,
-    total_rounds: Mutex<u64>,
-    searches: Mutex<u64>,
+    total_rounds: AtomicU64,
+    searches: AtomicU64,
+    disk: Option<DiskCache>,
 }
 
 impl Default for Mapper {
     fn default() -> Self {
         Self::new(SearchBudget::default())
+    }
+}
+
+/// Clears a key's in-flight marker and wakes waiters when dropped — even
+/// when `search` panics mid-flight, so no waiter is ever stranded on the
+/// condvar (the waiters then re-check the cache, find it cold, and run the
+/// search themselves).
+struct InFlightGuard<'a> {
+    mapper: &'a Mapper,
+    key: CacheKey,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        // Recover the guard even if a panicking thread poisoned the lock;
+        // the set's state is a plain membership update, always valid.
+        let mut in_flight =
+            self.mapper.in_flight.lock().unwrap_or_else(|e| e.into_inner());
+        in_flight.remove(&self.key);
+        drop(in_flight);
+        self.mapper.search_done.notify_all();
     }
 }
 
@@ -237,17 +383,83 @@ impl Mapper {
             cache: Mutex::new(HashMap::new()),
             in_flight: Mutex::new(HashSet::new()),
             search_done: Condvar::new(),
-            total_rounds: Mutex::new(0),
-            searches: Mutex::new(0),
+            total_rounds: AtomicU64::new(0),
+            searches: AtomicU64::new(0),
+            disk: None,
         }
     }
 
-    /// A mapper whose candidate loop fans across all cores. Memoization is
-    /// unchanged — the cache `Mutex` is only held around lookups/inserts,
-    /// never across a search; concurrent callers of the same shape
-    /// coalesce onto one search via the in-flight set.
+    /// A mapper whose candidate loop fans across all cores as a fixed
+    /// pool. Memoization is unchanged — the cache `Mutex` is only held
+    /// around lookups/inserts, never across a search; concurrent callers
+    /// of the same shape coalesce onto one search via the in-flight set.
     pub fn pooled() -> Self {
         Mapper::new(SearchBudget::pooled())
+    }
+
+    /// A mapper in work-stealing hybrid mode (see [`SearchBudget::hybrid`]).
+    pub fn hybrid() -> Self {
+        Mapper::new(SearchBudget::hybrid())
+    }
+
+    /// A mapper backed by a persistent on-disk cache at `path`. Entries
+    /// whose `(device fingerprint, shape, budget)` match are pre-loaded
+    /// into the in-memory cache, so repeated runs skip those searches
+    /// entirely. A missing file is a cold start; a corrupt file or one
+    /// with a different [`CACHE_VERSION`] is ignored with a warning (and
+    /// replaced on the next [`Mapper::persist`]). New search results are
+    /// saved by `persist` — called explicitly by the CLI, and best-effort
+    /// on drop.
+    pub fn with_cache(budget: SearchBudget, path: &Path) -> Self {
+        let mut mapper = Mapper::new(budget);
+        let mut foreign = Vec::new();
+        let mut loaded = HashMap::new();
+        match std::fs::read_to_string(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {} // no cache yet
+            Err(e) => eprintln!(
+                "warning: cannot read mapper cache {}: {e}; starting cold",
+                path.display()
+            ),
+            Ok(text) => match Json::parse(&text) {
+                Err(e) => eprintln!(
+                    "warning: ignoring corrupt mapper cache {}: {e}",
+                    path.display()
+                ),
+                Ok(doc) => {
+                    if doc.get("version").and_then(Json::as_u64) != Some(CACHE_VERSION) {
+                        eprintln!(
+                            "warning: mapper cache {} is not version {CACHE_VERSION}; starting cold",
+                            path.display()
+                        );
+                    } else if let Some(entries) = doc.get("entries").and_then(Json::as_arr) {
+                        for entry in entries {
+                            if !budget_matches(entry, &budget) {
+                                foreign.push(entry.clone());
+                                continue;
+                            }
+                            match parse_entry(entry) {
+                                Some((key, cached)) => {
+                                    loaded.insert(key, cached);
+                                }
+                                None => eprintln!(
+                                    "warning: skipping malformed entry in mapper cache {}",
+                                    path.display()
+                                ),
+                            }
+                        }
+                    }
+                }
+            },
+        }
+        let count = loaded.len() as u64;
+        *mapper.cache.get_mut().unwrap() = loaded;
+        mapper.disk = Some(DiskCache {
+            path: path.to_path_buf(),
+            foreign,
+            dirty: AtomicBool::new(false),
+            loaded: count,
+        });
+        mapper
     }
 
     pub fn matmul(&self, dev: &DeviceSpec, shape: &Shape) -> Best {
@@ -265,14 +477,18 @@ impl Mapper {
         // condvar and re-check the cache instead of duplicating the
         // search. Lock order is safe: the cache guard is always a
         // statement-scoped temporary, never held while acquiring
-        // `in_flight`. (If `search` panicked the in-flight marker would
-        // leak and waiters would hang, but `search` panics only on an
-        // infeasible shape, which the minimal systolic tile rules out.)
+        // `in_flight`.
+        // The in-flight mutex only guards a membership set (always valid
+        // state), so recover from poisoning — a search that panicked on
+        // one key must not take down every later call (or waiter) with a
+        // PoisonError.
+        let lock_in_flight =
+            || self.in_flight.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-                return hit.clone();
+                return hit.best.clone();
             }
-            let mut in_flight = self.in_flight.lock().unwrap();
+            let mut in_flight = lock_in_flight();
             // Re-check: the searcher publishes to the cache before
             // clearing its marker, so miss + no marker ⇒ nobody is on it.
             if self.cache.lock().unwrap().contains_key(&key) {
@@ -282,32 +498,238 @@ impl Mapper {
                 break; // this thread owns the search
             }
             // Someone else is searching this key; wait and re-check.
-            drop(self.search_done.wait(in_flight).unwrap());
+            // While asleep this thread is not a live worker, so donate
+            // its core to the shared budget — the searching thread's
+            // hybrid candidate loop picks it up instead of running
+            // serial while N−1 coalescing callers sleep.
+            crate::util::pool::donate_token();
+            let woken = self.search_done.wait(in_flight).unwrap_or_else(|e| e.into_inner());
+            crate::util::pool::withdraw_token();
+            drop(woken);
         }
+        // From here the marker is cleared (and waiters woken) even if
+        // `search` panics — the guard publishes-then-notifies on drop.
+        let _guard = InFlightGuard { mapper: self, key };
         let best = search(dev, shape, self.budget, &self.lut);
-        *self.total_rounds.lock().unwrap() += best.rounds;
-        *self.searches.lock().unwrap() += 1;
-        self.cache.lock().unwrap().insert(key, best.clone());
-        self.in_flight.lock().unwrap().remove(&key);
-        self.search_done.notify_all();
+        self.total_rounds.fetch_add(best.rounds, Ordering::Relaxed);
+        self.searches.fetch_add(1, Ordering::Relaxed);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, CacheEntry { device: dev.name.clone(), best: best.clone() });
+        if let Some(disk) = &self.disk {
+            disk.dirty.store(true, Ordering::Relaxed);
+        }
         best
     }
 
+    /// Write the cache to its backing file (no-op without one, or when
+    /// nothing changed since the last save). Returns the path written.
+    /// The file's *current* entries are merged in — only this mapper's own
+    /// keys are overwritten — so concurrent processes sharing one cache
+    /// path extend rather than clobber each other (the read-merge-rename
+    /// window is best-effort, not transactional). Entries are written
+    /// sorted by key, via a temp-file rename, so readers never observe a
+    /// half-written cache.
+    pub fn persist(&self) -> Result<Option<PathBuf>, String> {
+        let Some(disk) = &self.disk else { return Ok(None) };
+        // Claim the dirty flag *before* snapshotting: a search that lands
+        // after the snapshot re-sets it, so the next persist picks the
+        // entry up instead of being skipped as clean. Restored on failure.
+        if !disk.dirty.swap(false, Ordering::Relaxed) {
+            return Ok(None);
+        }
+        let restore_dirty = || disk.dirty.store(true, Ordering::Relaxed);
+        // Snapshot under the lock, then do every file read/parse/serialize
+        // lock-free, so concurrent `matmul` cache hits never stall on disk.
+        let mut items: Vec<(CacheKey, CacheEntry)> = {
+            let cache = self.cache.lock().unwrap();
+            cache.iter().map(|(k, e)| (*k, e.clone())).collect()
+        };
+        items.sort_by_key(|(k, _)| (k.0, k.1, k.2, k.3, k.4, k.5.name(), k.6));
+        let own: HashSet<CacheKey> = items.iter().map(|(k, _)| *k).collect();
+        // Keep every entry on disk we don't own — other budgets, and
+        // shapes another process saved since we loaded. A missing file is
+        // a first save; any *other* read error refuses to overwrite
+        // rather than clobbering an accumulated cache it cannot see.
+        let on_disk = match std::fs::read_to_string(&disk.path) {
+            Ok(text) => Some(text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => {
+                restore_dirty();
+                return Err(format!(
+                    "read {}: {e} (refusing to overwrite the existing cache)",
+                    disk.path.display()
+                ));
+            }
+        };
+        // Corrupt or other-version content falls back to the load-time
+        // foreign snapshot — replacement is the documented behavior there.
+        let parsed = on_disk
+            .and_then(|text| Json::parse(&text).ok())
+            .filter(|doc| doc.get("version").and_then(Json::as_u64) == Some(CACHE_VERSION));
+        let mut entries: Vec<Json> = match parsed.as_ref().and_then(|doc| doc.get("entries")) {
+            Some(Json::Arr(es)) => es
+                .iter()
+                .filter(|entry| {
+                    !(budget_matches(entry, &self.budget)
+                        && parse_entry(entry).map_or(false, |(key, _)| own.contains(&key)))
+                })
+                .cloned()
+                .collect(),
+            _ => disk.foreign.clone(),
+        };
+        entries.extend(items.iter().map(|(k, e)| entry_to_json(k, e, &self.budget)));
+        let doc = obj(vec![
+            ("version", num(CACHE_VERSION as f64)),
+            ("entries", Json::Arr(entries)),
+        ]);
+        if let Some(parent) = disk.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| {
+                    restore_dirty();
+                    format!("create {}: {e}", parent.display())
+                })?;
+            }
+        }
+        let tmp = disk.path.with_extension("json.tmp");
+        std::fs::write(&tmp, doc.to_string_pretty()).map_err(|e| {
+            restore_dirty();
+            format!("write {}: {e}", tmp.display())
+        })?;
+        std::fs::rename(&tmp, &disk.path).map_err(|e| {
+            restore_dirty();
+            format!("rename to {}: {e}", disk.path.display())
+        })?;
+        Ok(Some(disk.path.clone()))
+    }
+
+    /// The backing cache file, when this mapper has one.
+    pub fn cache_path(&self) -> Option<&Path> {
+        self.disk.as_ref().map(|d| d.path.as_path())
+    }
+
+    /// How many mappings were pre-loaded from the persistent cache.
+    pub fn loaded_from_disk(&self) -> u64 {
+        self.disk.as_ref().map(|d| d.loaded).unwrap_or(0)
+    }
+
     /// Number of full mapper parameter searches performed (cache misses) —
-    /// the quantity cross-scenario caching in `eval` exists to minimize.
+    /// the quantity cross-scenario and persistent caching exist to
+    /// minimize. Mappings served from the persistent cache count zero.
     pub fn searches(&self) -> u64 {
-        *self.searches.lock().unwrap()
+        self.searches.load(Ordering::Relaxed)
     }
 
     /// Total mapper rounds across all (non-cached) searches — the paper's
     /// "26,400 rounds of the mapper's parameter search" statistic.
     pub fn total_rounds(&self) -> u64 {
-        *self.total_rounds.lock().unwrap()
+        self.total_rounds.load(Ordering::Relaxed)
     }
 
     pub fn cache_len(&self) -> usize {
         self.cache.lock().unwrap().len()
     }
+}
+
+impl Drop for Mapper {
+    fn drop(&mut self) {
+        // Best-effort: CLI paths persist explicitly (and report errors);
+        // this catches everything else that used `with_cache`.
+        let _ = self.persist();
+    }
+}
+
+fn entry_to_json(key: &CacheKey, entry: &CacheEntry, budget: &SearchBudget) -> Json {
+    let (fp, b, m, k, n, dtype, batched_b) = *key;
+    let map = &entry.best.mapping;
+    obj(vec![
+        ("device", s(&entry.device)),
+        ("fingerprint", s(&format!("{fp:016x}"))),
+        ("b", num(b as f64)),
+        ("m", num(m as f64)),
+        ("k", num(k as f64)),
+        ("n", num(n as f64)),
+        ("dtype", s(dtype.name())),
+        ("batched_b", Json::Bool(batched_b)),
+        (
+            "budget",
+            obj(vec![
+                ("gt_per_dim", num(budget.gt_per_dim as f64)),
+                ("lt_per_dim", num(budget.lt_per_dim as f64)),
+            ]),
+        ),
+        ("seconds", num(entry.best.outcome.seconds)),
+        ("dram_bytes", num(entry.best.outcome.dram_bytes)),
+        ("systolic_util", num(entry.best.outcome.systolic_util)),
+        ("rounds", num(entry.best.rounds as f64)),
+        ("candidates", num(entry.best.candidates as f64)),
+        (
+            "mapping",
+            obj(vec![
+                ("gt_m", num(map.gt.0 as f64)),
+                ("gt_k", num(map.gt.1 as f64)),
+                ("gt_n", num(map.gt.2 as f64)),
+                ("lt_m", num(map.lt.0 as f64)),
+                ("lt_k", num(map.lt.1 as f64)),
+                ("lt_n", num(map.lt.2 as f64)),
+                ("scheme", s(map.scheme.name())),
+                ("db_global", Json::Bool(map.db_global)),
+                ("db_local", Json::Bool(map.db_local)),
+            ]),
+        ),
+    ])
+}
+
+/// Does a cache entry's recorded budget match this mapper's? Only the
+/// knobs that change the candidate set matter — pruning and the thread
+/// counts provably do not change the winner, so their cached results are
+/// interchangeable.
+fn budget_matches(entry: &Json, budget: &SearchBudget) -> bool {
+    let Some(b) = entry.get("budget") else { return false };
+    b.get("gt_per_dim").and_then(Json::as_u64) == Some(budget.gt_per_dim as u64)
+        && b.get("lt_per_dim").and_then(Json::as_u64) == Some(budget.lt_per_dim as u64)
+}
+
+fn parse_entry(entry: &Json) -> Option<(CacheKey, CacheEntry)> {
+    let fp = u64::from_str_radix(entry.get("fingerprint")?.as_str()?, 16).ok()?;
+    let key = (
+        fp,
+        entry.get("b")?.as_u64()?,
+        entry.get("m")?.as_u64()?,
+        entry.get("k")?.as_u64()?,
+        entry.get("n")?.as_u64()?,
+        DType::parse(entry.get("dtype")?.as_str()?)?,
+        entry.get("batched_b")?.as_bool()?,
+    );
+    let map = entry.get("mapping")?;
+    let mapping = Mapping {
+        gt: (
+            map.get("gt_m")?.as_u64()?,
+            map.get("gt_k")?.as_u64()?,
+            map.get("gt_n")?.as_u64()?,
+        ),
+        lt: (
+            map.get("lt_m")?.as_u64()?,
+            map.get("lt_k")?.as_u64()?,
+            map.get("lt_n")?.as_u64()?,
+        ),
+        scheme: Scheme::parse(map.get("scheme")?.as_str()?)?,
+        db_global: map.get("db_global")?.as_bool()?,
+        db_local: map.get("db_local")?.as_bool()?,
+    };
+    let best = Best {
+        outcome: SimOutcome {
+            seconds: entry.get("seconds")?.as_f64()?,
+            dram_bytes: entry.get("dram_bytes")?.as_f64()?,
+            systolic_util: entry.get("systolic_util")?.as_f64()?,
+        },
+        mapping,
+        rounds: entry.get("rounds")?.as_u64()?,
+        candidates: entry.get("candidates")?.as_u64()?,
+    };
+    let device = entry.get("device")?.as_str()?.to_string();
+    Some((key, CacheEntry { device, best }))
 }
 
 #[cfg(test)]
@@ -331,13 +753,85 @@ mod tests {
         let dev = a100();
         let shape = Shape::simple(2048, 12288, 12288, DType::FP16);
         let best = search(&dev, &shape, SearchBudget::default(), &SystolicLut::new());
-        assert!(best.rounds > 10, "searched {} rounds", best.rounds);
+        assert!(best.candidates > 10, "enumerated {} candidates", best.candidates);
+        assert!(best.rounds >= 1 && best.rounds <= best.candidates);
         // Prefill-class GEMM on A100 should land within 3x of the
         // compute roofline (paper measures ~50% of roofline on A100).
         let roofline = shape.flops() / dev.peak_matrix_flops();
         let ratio = best.outcome.seconds / roofline;
         assert!(ratio < 3.0, "achieved {ratio:.2}x of compute roofline");
         assert!(best.outcome.systolic_util > 0.3, "util {}", best.outcome.systolic_util);
+    }
+
+    #[test]
+    fn pruned_and_hybrid_match_exhaustive_on_design_grid() {
+        // The engine's core acceptance criterion: every budget mode must
+        // return the identical winner on every Table III design and the
+        // A100, across prefill-, decode-, and degenerate-class shapes.
+        let shapes = [
+            Shape::simple(2048, 12288, 12288, DType::FP16), // prefill GEMM
+            Shape::simple(8, 12288, 1024, DType::FP16),     // decode GEMM
+            Shape::simple(128, 12288, 128, DType::FP16),    // k-heavy (scheme 2 relevant)
+            Shape::simple(5, 300, 7, DType::FP32),          // degenerate/ragged
+        ];
+        let mut devices = vec![a100()];
+        for l in ['A', 'B', 'C', 'D', 'E'] {
+            devices.push(design(l).unwrap());
+        }
+        for (di, dev) in devices.iter().enumerate() {
+            let lut = SystolicLut::new();
+            // The prefill GEMM has the largest candidate set; exercising
+            // its exhaustive sweep on the A100 alone keeps the grid fast
+            // in debug builds without losing device coverage elsewhere.
+            let shapes = if di == 0 { &shapes[..] } else { &shapes[1..] };
+            for shape in shapes {
+                let exhaustive = search(dev, shape, SearchBudget::exhaustive(), &lut);
+                for (mode, budget) in [
+                    ("pruned", SearchBudget::default()),
+                    ("pruned+pool", SearchBudget { threads: 4, ..SearchBudget::default() }),
+                    ("pruned+hybrid", SearchBudget::hybrid()),
+                ] {
+                    let got = search(dev, shape, budget, &lut);
+                    assert_eq!(
+                        got.mapping, exhaustive.mapping,
+                        "{mode} winner drifted on {} {shape:?}",
+                        dev.name
+                    );
+                    assert_eq!(
+                        got.outcome.seconds.to_bits(),
+                        exhaustive.outcome.seconds.to_bits(),
+                        "{mode} seconds drifted on {} {shape:?}",
+                        dev.name
+                    );
+                    assert_eq!(
+                        got.outcome.systolic_util.to_bits(),
+                        exhaustive.outcome.systolic_util.to_bits(),
+                        "{mode} util drifted on {} {shape:?}",
+                        dev.name
+                    );
+                    assert_eq!(got.candidates, exhaustive.candidates);
+                    assert!(got.rounds <= exhaustive.rounds);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_halves_rounds_on_prefill_gemm() {
+        // The acceptance bar: ≥ 2x fewer simulated rounds on the
+        // prefill-class GEMM (in practice far more survive the axe).
+        let dev = a100();
+        let shape = Shape::simple(2048, 12288, 12288, DType::FP16);
+        let lut = SystolicLut::new();
+        let exhaustive = search(&dev, &shape, SearchBudget::exhaustive(), &lut);
+        let pruned = search(&dev, &shape, SearchBudget::default(), &lut);
+        assert_eq!(exhaustive.rounds, exhaustive.candidates);
+        assert!(
+            pruned.rounds * 2 <= exhaustive.rounds,
+            "pruning only got {} of {} rounds",
+            pruned.rounds,
+            exhaustive.rounds
+        );
     }
 
     #[test]
@@ -371,6 +865,34 @@ mod tests {
     }
 
     #[test]
+    fn panicking_search_does_not_strand_waiters() {
+        // A device nothing fits (1-byte local buffer) makes `search`
+        // panic; the in-flight drop-guard must still clear the marker so
+        // later callers retry instead of hanging on the condvar.
+        let mapper = Mapper::default();
+        let mut dev = a100();
+        dev.core.local_buffer_bytes = 1;
+        let shape = Shape::simple(64, 64, 64, DType::FP16);
+        for _ in 0..2 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                mapper.matmul(&dev, &shape)
+            }));
+            assert!(r.is_err(), "infeasible device should panic the search");
+            assert_eq!(
+                mapper.in_flight.lock().unwrap_or_else(|e| e.into_inner()).len(),
+                0,
+                "in-flight marker leaked"
+            );
+        }
+        assert_eq!(mapper.cache_len(), 0);
+        // And the mapper survives: the poisoned-in-unwind in-flight mutex
+        // must not take later calls down — a feasible search still works.
+        let ok = mapper.matmul(&a100(), &Shape::simple(64, 64, 64, DType::FP16));
+        assert!(ok.outcome.seconds > 0.0);
+        assert_eq!(mapper.cache_len(), 1);
+    }
+
+    #[test]
     fn tiny_decode_shape_feasible_everywhere() {
         // m=8 decode GEMMs must map onto every Table III design, including
         // E with its 128x128 arrays.
@@ -379,25 +901,6 @@ mod tests {
             let shape = Shape::simple(8, 12288, 1024, DType::FP16);
             let best = search(&dev, &shape, SearchBudget::default(), &SystolicLut::new());
             assert!(best.outcome.seconds > 0.0, "design {l}");
-        }
-    }
-
-    #[test]
-    fn pooled_search_matches_serial_exactly() {
-        // Same candidates, order-stable reduction → bit-identical winner.
-        let dev = a100();
-        let lut = SystolicLut::new();
-        for shape in [
-            Shape::simple(2048, 12288, 12288, DType::FP16),
-            Shape::simple(8, 12288, 1024, DType::FP16),
-            Shape::simple(5, 300, 7, DType::FP32),
-        ] {
-            let serial = search(&dev, &shape, SearchBudget::default(), &lut);
-            let budget = SearchBudget { threads: 4, ..SearchBudget::default() };
-            let pooled = search(&dev, &shape, budget, &lut);
-            assert_eq!(serial.rounds, pooled.rounds);
-            assert_eq!(serial.outcome.seconds, pooled.outcome.seconds);
-            assert_eq!(serial.mapping, pooled.mapping);
         }
     }
 
@@ -412,5 +915,121 @@ mod tests {
         dev.memory.bandwidth_bytes_per_s *= 2.0;
         let fast = search(&dev, &shape, SearchBudget::default(), &lut).outcome.seconds;
         assert!(fast <= slow * 1.0001, "2x BW: {fast} vs {slow}");
+    }
+
+    // --- persistent cache ---------------------------------------------------
+
+    fn temp_cache(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("llmcompass-mapper-{tag}-{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn persistent_cache_round_trips_across_mappers() {
+        let path = temp_cache("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let dev = a100();
+        let shapes =
+            [Shape::simple(256, 512, 256, DType::FP16), Shape::simple(8, 512, 128, DType::FP16)];
+        let first = {
+            let mapper = Mapper::with_cache(SearchBudget::default(), &path);
+            assert_eq!(mapper.loaded_from_disk(), 0);
+            let out: Vec<Best> = shapes.iter().map(|sh| mapper.matmul(&dev, sh)).collect();
+            assert_eq!(mapper.searches(), 2);
+            let written = mapper.persist().unwrap();
+            assert_eq!(written.as_deref(), Some(path.as_path()));
+            // Not dirty anymore: a second persist is a no-op.
+            assert!(mapper.persist().unwrap().is_none());
+            out
+        };
+        let mapper = Mapper::with_cache(SearchBudget::default(), &path);
+        assert_eq!(mapper.loaded_from_disk(), 2);
+        for (sh, want) in shapes.iter().zip(&first) {
+            let got = mapper.matmul(&dev, sh);
+            assert_eq!(got.mapping, want.mapping);
+            assert_eq!(got.outcome.seconds.to_bits(), want.outcome.seconds.to_bits());
+        }
+        assert_eq!(mapper.searches(), 0, "warm persistent cache must skip every search");
+        // A different budget must NOT reuse these entries (different
+        // candidate set) — and must carry them through its own persist.
+        let other =
+            Mapper::with_cache(SearchBudget { gt_per_dim: 2, ..SearchBudget::default() }, &path);
+        assert_eq!(other.loaded_from_disk(), 0);
+        other.matmul(&dev, &shapes[0]);
+        assert_eq!(other.searches(), 1);
+        other.persist().unwrap();
+        let merged = Mapper::with_cache(SearchBudget::default(), &path);
+        assert_eq!(merged.loaded_from_disk(), 2, "foreign-budget entries were clobbered");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn persistent_cache_rejects_other_versions() {
+        let path = temp_cache("version");
+        std::fs::write(&path, format!("{{\"version\": {}, \"entries\": []}}", CACHE_VERSION + 1))
+            .unwrap();
+        let dev = a100();
+        let shape = Shape::simple(256, 512, 256, DType::FP16);
+        {
+            let mapper = Mapper::with_cache(SearchBudget::default(), &path);
+            assert_eq!(mapper.loaded_from_disk(), 0, "other-version cache must be rejected");
+            mapper.matmul(&dev, &shape);
+            assert_eq!(mapper.searches(), 1);
+            // Dropping persists (best-effort), replacing the stale file.
+        }
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("version").and_then(Json::as_u64), Some(CACHE_VERSION));
+        let reloaded = Mapper::with_cache(SearchBudget::default(), &path);
+        assert_eq!(reloaded.loaded_from_disk(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn persistent_cache_tolerates_corrupt_files() {
+        let path = temp_cache("corrupt");
+        std::fs::write(&path, "{ this is not json").unwrap();
+        let dev = a100();
+        let shape = Shape::simple(256, 512, 256, DType::FP16);
+        let mapper = Mapper::with_cache(SearchBudget::default(), &path);
+        assert_eq!(mapper.loaded_from_disk(), 0);
+        let best = mapper.matmul(&dev, &shape);
+        assert!(best.outcome.seconds > 0.0);
+        assert_eq!(mapper.searches(), 1);
+        mapper.persist().unwrap();
+        // The corrupt file was replaced with a valid one.
+        let reloaded = Mapper::with_cache(SearchBudget::default(), &path);
+        assert_eq!(reloaded.loaded_from_disk(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_entry_json_round_trips() {
+        let dev = a100();
+        let shape = Shape::simple(256, 512, 256, DType::FP16);
+        let best = search(&dev, &shape, SearchBudget::default(), &SystolicLut::new());
+        let key: CacheKey = (
+            dev.fingerprint(),
+            shape.b,
+            shape.m,
+            shape.k,
+            shape.n,
+            shape.dtype,
+            shape.batched_b,
+        );
+        let entry = CacheEntry { device: dev.name.clone(), best };
+        let j = entry_to_json(&key, &entry, &SearchBudget::default());
+        assert!(budget_matches(&j, &SearchBudget::default()));
+        assert!(!budget_matches(&j, &SearchBudget { gt_per_dim: 9, ..Default::default() }));
+        let (k2, e2) = parse_entry(&j).unwrap();
+        assert_eq!(k2, key);
+        assert_eq!(e2.device, entry.device);
+        assert_eq!(e2.best.mapping, entry.best.mapping);
+        assert_eq!(e2.best.outcome.seconds.to_bits(), entry.best.outcome.seconds.to_bits());
+        assert_eq!(e2.best.rounds, entry.best.rounds);
+        assert_eq!(e2.best.candidates, entry.best.candidates);
+        // And survives an actual text round trip (f64 precision included).
+        let text = j.to_string_pretty();
+        let (k3, e3) = parse_entry(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(k3, key);
+        assert_eq!(e3.best.outcome.seconds.to_bits(), entry.best.outcome.seconds.to_bits());
     }
 }

@@ -37,6 +37,14 @@ impl Scheme {
             Scheme::KSplit => "scheme2",
         }
     }
+
+    pub fn parse(v: &str) -> Option<Scheme> {
+        match v {
+            "scheme1" => Some(Scheme::OutputPartitioned),
+            "scheme2" => Some(Scheme::KSplit),
+            _ => None,
+        }
+    }
 }
 
 /// One point in the mapper's search space.
@@ -319,6 +327,71 @@ fn tile_cycles(
     }
 }
 
+/// Batch packing: if one batch element's global tile uses only part of
+/// the global buffer, pack several batch elements per step so their
+/// sub-tiles fill the cores (critical for decode attention, where each
+/// per-head GEMM is tiny). Shared by [`simulate`] and [`lower_bound`] —
+/// the bound mirrors the model through this one implementation.
+fn batch_pack(dev: &DeviceSpec, shape: &Shape, map: &Mapping) -> u64 {
+    let e = shape.dtype.bytes();
+    let (gm, gk, gn) = map.gt;
+    let per_batch = (gm.min(shape.m) * gk.min(shape.k) + gk.min(shape.k) * gn.min(shape.n)) * e
+        * if map.db_global { 2 } else { 1 }
+        + gm.min(shape.m) * gn.min(shape.n) * e;
+    if shape.b > 1 {
+        (dev.global_buffer_bytes / per_batch.max(1)).clamp(1, shape.b)
+    } else {
+        1
+    }
+}
+
+/// One global-tile class: `steps` equal steps over a (tm × tk × tn) tile
+/// with `io_bytes` of main-memory traffic each.
+struct TileClass {
+    steps: u64,
+    tm: u64,
+    tk: u64,
+    tn: u64,
+    /// Per-step main-memory traffic: A and B tiles streamed in (a shared,
+    /// non-batched B is still re-read per step — the global buffer only
+    /// holds the current tile), plus the C writeback amortized as a
+    /// 1/⌈k/gk⌉ share per step to stay closed-form.
+    io_bytes: f64,
+}
+
+/// Visit the ≤ 8 global-tile classes (full + ragged along each dimension)
+/// with their per-step traffic. The single source of the model's
+/// stream-traffic accounting, shared by [`simulate`] and [`lower_bound`]
+/// so the pruning bound cannot drift from the model. Callback-based (no
+/// allocation): this sits on the innermost candidate-evaluation path and
+/// runs once per pruning check plus once per surviving simulation.
+fn for_each_tile_class(shape: &Shape, map: &Mapping, pack: u64, mut f: impl FnMut(TileClass)) {
+    let e = shape.dtype.bytes();
+    let (gm, gk, gn) = map.gt;
+    let batch_steps = ceil_div(shape.b, pack);
+    for (cm, tm) in classes(shape.m, gm) {
+        for (cn, tn) in classes(shape.n, gn) {
+            for (ck, tk) in classes(shape.k, gk) {
+                let count = cm * cn * ck;
+                if count == 0 {
+                    continue;
+                }
+                let a_bytes = pack * tm * tk * e;
+                let b_bytes = if shape.batched_b { pack * tk * tn * e } else { tk * tn * e };
+                let k_tiles_total = ceil_div(shape.k, gk);
+                let c_share = (pack * tm * tn * e) as f64 / k_tiles_total as f64;
+                f(TileClass {
+                    steps: count * batch_steps,
+                    tm,
+                    tk,
+                    tn,
+                    io_bytes: (a_bytes + b_bytes) as f64 + c_share,
+                });
+            }
+        }
+    }
+}
+
 /// Level 1 + 0: full simulation of `shape` under `mapping`. Returns `None`
 /// if the mapping does not fit the buffers.
 pub fn simulate(
@@ -331,20 +404,7 @@ pub fn simulate(
         return None;
     }
     let e = shape.dtype.bytes() as u64;
-    let (gm, gk, gn) = map.gt;
-
-    // Batch packing: if one batch element's global tile uses only part of
-    // the global buffer, pack several batch elements per step so their
-    // sub-tiles fill the cores (critical for decode attention, where each
-    // per-head GEMM is tiny).
-    let per_batch = (gm.min(shape.m) * gk.min(shape.k) + gk.min(shape.k) * gn.min(shape.n)) * e
-        * if map.db_global { 2 } else { 1 }
-        + gm.min(shape.m) * gn.min(shape.n) * e;
-    let pack = if shape.b > 1 {
-        (dev.global_buffer_bytes / per_batch.max(1)).clamp(1, shape.b)
-    } else {
-        1
-    };
+    let pack = batch_pack(dev, shape, map);
 
     let freq = dev.frequency_hz;
     let mem_bw = dev.memory.bandwidth_bytes_per_s;
@@ -356,42 +416,19 @@ pub fn simulate(
     let mut steps_total = 0u64;
     let mut pipelined_s = 0.0f64;
 
-    let batch_steps = ceil_div(shape.b, pack);
+    for_each_tile_class(shape, map, pack, |class| {
+        let TileClass { steps, tm, tk, tn, io_bytes } = class;
+        let (cycles, _gb_bytes) = tile_cycles(dev, shape, map, tm, tk, tn, pack, lut);
+        let compute_s = cycles as f64 / freq;
+        let io_s = io_bytes / mem_bw;
 
-    // Iterate global-tile classes along each dimension (full + ragged).
-    for (cm, tm) in classes(shape.m, gm) {
-        for (cn, tn) in classes(shape.n, gn) {
-            for (ck, tk) in classes(shape.k, gk) {
-                let count = cm * cn * ck;
-                if count == 0 {
-                    continue;
-                }
-                let steps = count * batch_steps;
-                // Main-memory traffic per step: stream A and B tiles in;
-                // write C out on the last k chunk of each (m,n) tile. A
-                // shared (non-batched) B tile is still re-read per step —
-                // the global buffer only holds the current tile.
-                let a_bytes = pack * tm * tk * e;
-                let b_bytes = if shape.batched_b { pack * tk * tn * e } else { tk * tn * e };
-                // C writeback happens on each (m,n) tile's final k step;
-                // amortize it as a 1/⌈k/gk⌉ share per step to stay
-                // closed-form.
-                let k_tiles_total = ceil_div(shape.k, gk);
-                let c_share = (pack * tm * tn * e) as f64 / k_tiles_total as f64;
-                let (cycles, _gb_bytes) = tile_cycles(dev, shape, map, tm, tk, tn, pack, lut);
-                let compute_s = cycles as f64 / freq;
-                let step_io_bytes = (a_bytes + b_bytes) as f64 + c_share;
-                let io_s = step_io_bytes / mem_bw;
-
-                compute_s_total += steps as f64 * compute_s;
-                io_s_total += steps as f64 * io_s;
-                max_step_io_s = max_step_io_s.max(io_s);
-                dram_bytes += steps as f64 * step_io_bytes;
-                steps_total += steps;
-                pipelined_s += steps as f64 * compute_s.max(io_s);
-            }
-        }
-    }
+        compute_s_total += steps as f64 * compute_s;
+        io_s_total += steps as f64 * io_s;
+        max_step_io_s = max_step_io_s.max(io_s);
+        dram_bytes += steps as f64 * io_bytes;
+        steps_total += steps;
+        pipelined_s += steps as f64 * compute_s.max(io_s);
+    });
 
     let mut seconds = if map.db_global {
         // Software pipeline: steady state is max(io, compute) per step,
@@ -425,6 +462,83 @@ pub fn simulate(
     let util = if seconds > 0.0 { shape.flops() / (seconds * peak) } else { 0.0 };
 
     Some(SimOutcome { seconds, dram_bytes, systolic_util: util.min(1.0) })
+}
+
+/// Cheap analytical lower bound on [`simulate`]'s `seconds` for a feasible
+/// mapping — the mapper engine's pruning oracle. It is derived from the
+/// simulation model itself, not from an independent roofline, so it is a
+/// *true* bound: `lower_bound(..) <= simulate(..).seconds` for every
+/// mapping that [`fits`] (a `util::quick` property test in
+/// `tests/property_model.rs` holds this invariant down).
+///
+/// Two floors, evaluated in O(#tile classes) ≤ 8 steps instead of the full
+/// wave-by-wave simulation:
+///
+/// * **Memory floor.** The mapping's main-memory stream traffic (A/B tiles
+///   re-read once per global-tile pass, C amortized over its k steps) is
+///   mirrored from [`simulate`]'s per-step accounting; both the software-
+///   pipelined and the serial IO paths take at least `stream / bandwidth`
+///   seconds, and the global-buffer-resident fast path takes at least the
+///   compulsory `problem / bandwidth`.
+/// * **Compute floor.** Every level of the core model costs at least the
+///   ideal MAC count over the device's peak MAC rate (the systolic fold
+///   equations stream ≥ `m` rows per fold, lanes/cores divide work without
+///   speeding the per-MAC rate). The only place the simulation can round
+///   *below* that ideal is the wave-window extrapolation's integer
+///   division — bounded by one cycle per tile step — so one cycle per
+///   step is subtracted to keep the bound sound.
+///
+/// Kernel-launch overhead is excluded on both sides, matching `simulate`.
+/// A final 1e-12 relative shave makes the bound robust to floating-point
+/// reassociation between the two computations.
+pub fn lower_bound(dev: &DeviceSpec, shape: &Shape, map: &Mapping) -> f64 {
+    let e = shape.dtype.bytes();
+    let mem_bw = dev.memory.bandwidth_bytes_per_s;
+
+    // Same packing and per-class traffic accounting as `simulate` — the
+    // shared helpers are what make the bound a bound. The IO time is also
+    // accumulated with the *same association* (per-class divide, then
+    // weighted sum) as `simulate`'s `io_s_total`, keeping the two within
+    // ulps of each other instead of drifting by summation order.
+    let pack = batch_pack(dev, shape, map);
+    let mut stream_s = 0.0f64;
+    let mut steps_total = 0u64;
+    for_each_tile_class(shape, map, pack, |class| {
+        stream_s += class.steps as f64 * (class.io_bytes / mem_bw);
+        steps_total += class.steps;
+    });
+
+    let b_traffic = if shape.batched_b { shape.b } else { 1 };
+    let problem_bytes = e
+        * (shape.b * shape.m * shape.k
+            + b_traffic * shape.k * shape.n
+            + shape.b * shape.m * shape.n);
+    // The resident fast path can undercut the stream traffic, but only
+    // when the whole problem fits the global buffer — and then it still
+    // pays the compulsory traffic once.
+    let io_floor = if problem_bytes <= dev.global_buffer_bytes {
+        (problem_bytes as f64 / mem_bw).min(stream_s)
+    } else {
+        stream_s
+    };
+
+    let compute_floor = (shape.flops() / dev.peak_matrix_flops()
+        - steps_total as f64 / dev.frequency_hz)
+        .max(0.0);
+
+    let bound = if !map.db_global && problem_bytes > dev.global_buffer_bytes {
+        // Without the software pipeline (and with the resident fast path
+        // ruled out by capacity) every step *serializes* IO after compute,
+        // so the floors add — this is what prunes most non-pipelined
+        // candidates of compute-bound GEMMs.
+        io_floor + compute_floor
+    } else {
+        io_floor.max(compute_floor)
+    };
+    // Shave a relative epsilon so residual floating-point reassociation
+    // (a few ulps at most — orders of magnitude below any real pruning
+    // margin) can never tip the bound past the simulated time.
+    bound * (1.0 - 1e-12)
 }
 
 #[cfg(test)]
@@ -565,6 +679,58 @@ mod tests {
         let io_bound = shape.b as f64 * (8.0 * 128.0 + 128.0 * 2048.0 + 8.0 * 2048.0) * 2.0
             / dev.memory.bandwidth_bytes_per_s;
         assert!(out.seconds < io_bound * 6.0, "{} vs {}", out.seconds, io_bound);
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_simulated_time() {
+        // Hand-picked mappings across regimes: compute-bound prefill,
+        // IO-bound decode, batched attention, k-split. The exhaustive
+        // property version lives in tests/property_model.rs.
+        let dev = a100();
+        let l = lut();
+        let cases = [
+            (Shape::simple(2048, 2048, 2048, DType::FP16), map_basic()),
+            (
+                Shape::simple(8, 12288, 12288, DType::FP16),
+                Mapping {
+                    gt: (8, 8192, 512),
+                    lt: (8, 128, 64),
+                    scheme: Scheme::KSplit,
+                    db_global: true,
+                    db_local: true,
+                },
+            ),
+            (
+                Shape { b: 96, m: 8, k: 128, n: 2048, dtype: DType::FP16, batched_b: true },
+                Mapping {
+                    gt: (8, 128, 2048),
+                    lt: (8, 128, 64),
+                    scheme: Scheme::OutputPartitioned,
+                    db_global: true,
+                    db_local: true,
+                },
+            ),
+            (
+                Shape::simple(128, 12288, 128, DType::FP16),
+                Mapping {
+                    gt: (128, 2048, 128),
+                    lt: (64, 128, 64),
+                    scheme: Scheme::OutputPartitioned,
+                    db_global: false,
+                    db_local: false,
+                },
+            ),
+        ];
+        for (shape, map) in cases {
+            let sim = simulate(&dev, &shape, &map, &l).unwrap();
+            let lb = lower_bound(&dev, &shape, &map);
+            assert!(
+                lb <= sim.seconds,
+                "lower bound {lb} > simulated {} for {shape:?} {map:?}",
+                sim.seconds
+            );
+            assert!(lb > 0.0, "degenerate bound for {shape:?}");
+        }
     }
 
     #[test]

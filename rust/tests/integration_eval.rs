@@ -5,6 +5,8 @@
 //! criteria of the scenario API.
 
 use llmcompass::eval::{self, Evaluator, Scenario, SCHEMA_VERSION};
+use llmcompass::graph::inference::Simulator;
+use llmcompass::perf::mapper::{Mapper, SearchBudget};
 use llmcompass::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -51,6 +53,49 @@ fn shipped_suite_round_trips_losslessly() {
             .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
         assert_eq!(sc, again, "{} changed across serialize → parse", sc.name);
     }
+}
+
+#[test]
+fn warm_persistent_cache_makes_repeated_suite_search_free() {
+    // The persistent-cache acceptance criterion: after one cold run of
+    // the shipped suite persists its mapping cache, a fresh process-like
+    // evaluator re-running `eval --suite scenarios/` must perform ZERO
+    // mapper parameter searches — every (device, shape) is served from
+    // disk, including everything the serving simulations touch.
+    let cache = std::env::temp_dir()
+        .join(format!("llmcompass-suite-mapper-cache-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&cache);
+    let suite = eval::load_suite(&scenarios_dir()).unwrap();
+
+    let cold = Evaluator::with_sim(Simulator::with_mapper(Mapper::with_cache(
+        SearchBudget::default(),
+        &cache,
+    )));
+    assert_eq!(cold.sim.mapper.loaded_from_disk(), 0);
+    let cold_reports: Vec<_> = suite
+        .iter()
+        .map(|sc| cold.evaluate(sc).unwrap_or_else(|e| panic!("{}: {e}", sc.name)))
+        .collect();
+    let cold_searches = cold.sim.mapper.searches();
+    assert!(cold_searches > 0, "cold run must actually search");
+    cold.sim.mapper.persist().unwrap();
+
+    let warm = Evaluator::with_sim(Simulator::with_mapper(Mapper::with_cache(
+        SearchBudget::default(),
+        &cache,
+    )));
+    assert_eq!(warm.sim.mapper.loaded_from_disk() as usize, cold.sim.mapper.cache_len());
+    let warm_reports = warm.evaluate_suite(&suite, 2);
+    for (a, b) in cold_reports.iter().zip(&warm_reports) {
+        let b = b.as_ref().unwrap();
+        assert_eq!(a.to_json(), b.to_json(), "cache-served report drifted");
+    }
+    assert_eq!(
+        warm.sim.mapper.searches(),
+        0,
+        "a warm persistent cache must make the repeated suite search-free"
+    );
+    let _ = std::fs::remove_file(&cache);
 }
 
 #[test]

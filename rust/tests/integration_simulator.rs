@@ -135,16 +135,31 @@ fn throughput_design_trades_latency_for_batch() {
 #[test]
 fn mapper_round_count_order_of_magnitude() {
     // The paper reports 26,400 mapper rounds for a full GPT-3 inference
-    // sim. Our search budget should land within the same order: a full
-    // e2e run stays under ~300k rounds and above ~1k.
-    let sim = Simulator::new();
+    // sim. Our exhaustive search budget should land within the same
+    // order: a full e2e run stays under ~300k rounds and above ~1k. The
+    // default (pruned) engine must reach the identical timings while
+    // simulating well under half of those rounds.
+    use llmcompass::perf::mapper::{Mapper, SearchBudget};
+    let exhaustive = Simulator::with_mapper(Mapper::new(SearchBudget::exhaustive()));
     let m = ModelConfig::gpt3_175b();
     let sys = tp4(presets::a100());
-    let _ = sim.e2e_latency(&sys, &m, 8, 2048, 1024, 96);
-    let rounds = sim.mapper.total_rounds();
+    let t_ex = exhaustive.e2e_latency(&sys, &m, 8, 2048, 1024, 96);
+    let rounds = exhaustive.mapper.total_rounds();
     assert!(
         (1_000..400_000).contains(&rounds),
         "mapper rounds {rounds} out of expected range"
+    );
+    let pruned = Simulator::new();
+    let t_pr = pruned.e2e_latency(&sys, &m, 8, 2048, 1024, 96);
+    assert_eq!(t_pr.to_bits(), t_ex.to_bits(), "pruned e2e latency drifted");
+    // Decode-class GEMMs sit on their IO floor, so most of their
+    // candidates survive the bound; the 2x criterion applies to the
+    // prefill-class search (perf::mapper tests). Across a whole e2e mix
+    // the engine must still shave ≥ 10%.
+    assert!(
+        pruned.mapper.total_rounds() * 10 <= rounds * 9,
+        "pruning only cut rounds {rounds} → {}",
+        pruned.mapper.total_rounds()
     );
 }
 

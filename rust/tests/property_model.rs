@@ -5,9 +5,9 @@
 use llmcompass::arch::systolic::{
     cycles_analytical, cycles_reference, Array, Dataflow, SystolicLut, Tile,
 };
-use llmcompass::hardware::{presets, DeviceSpec, DType};
+use llmcompass::hardware::{presets, DType, DeviceSpec};
 use llmcompass::perf::mapper::{search, SearchBudget};
-use llmcompass::perf::matmul::Shape;
+use llmcompass::perf::matmul::{fits, lower_bound, simulate, Mapping, Scheme, Shape};
 use llmcompass::util::quick::{forall, Gen};
 
 /// Draw a random-but-plausible device from the GA100 template.
@@ -52,6 +52,72 @@ fn prop_simulated_latency_respects_rooflines() {
         (
             (shape, dev.name.clone(), best.outcome.seconds, bound),
             best.outcome.seconds >= bound,
+        )
+    });
+}
+
+/// Draw a random mapping over pow2 tiles (not necessarily feasible).
+fn gen_mapping(g: &mut Gen) -> Mapping {
+    let gt = (g.pow2(3, 13), g.pow2(3, 13), g.pow2(3, 13));
+    Mapping {
+        gt,
+        lt: (
+            g.pow2(3, 8).min(gt.0),
+            g.pow2(3, 8).min(gt.1),
+            g.pow2(3, 8).min(gt.2),
+        ),
+        scheme: *g.pick(&[Scheme::OutputPartitioned, Scheme::KSplit]),
+        db_global: g.bool(),
+        db_local: g.bool(),
+    }
+}
+
+#[test]
+fn prop_lower_bound_never_exceeds_simulated_time() {
+    // The soundness contract of the mapper engine's pruning oracle: for
+    // every feasible (device, shape, mapping), the analytical floor must
+    // not exceed the full tile-by-tile simulation — otherwise pruning
+    // could discard the true winner and break the bit-identical-winner
+    // guarantee.
+    let lut = SystolicLut::new();
+    let feasible = std::cell::Cell::new(0u32);
+    forall("lower_bound <= simulate", 400, |g| {
+        let dev = gen_device(g);
+        let mut shape = gen_shape(g);
+        if g.bool() {
+            shape.b = g.u64(1, 96);
+            shape.batched_b = g.bool();
+        }
+        let map = gen_mapping(g);
+        if !fits(&dev, &shape, &map) {
+            return ((shape, map, 0.0, 0.0), true); // vacuous: mapper never simulates it
+        }
+        feasible.set(feasible.get() + 1);
+        let sim = simulate(&dev, &shape, &map, &lut).unwrap();
+        let lb = lower_bound(&dev, &shape, &map);
+        ((shape, map, lb, sim.seconds), lb <= sim.seconds)
+    });
+    assert!(
+        feasible.get() > 50,
+        "only {} feasible draws — generator drifted",
+        feasible.get()
+    );
+}
+
+#[test]
+fn prop_pruned_search_matches_exhaustive() {
+    // Winner identity on random devices/shapes, not just the preset grid.
+    let lut = SystolicLut::new();
+    forall("pruned winner == exhaustive winner", 15, |g| {
+        let dev = gen_device(g);
+        let shape = gen_shape(g);
+        let ex = search(&dev, &shape, SearchBudget::exhaustive(), &lut);
+        let pr = search(&dev, &shape, SearchBudget::default(), &lut);
+        (
+            (shape, dev.name.clone(), ex.mapping, pr.mapping),
+            ex.mapping == pr.mapping
+                && ex.outcome.seconds.to_bits() == pr.outcome.seconds.to_bits()
+                && pr.rounds <= ex.rounds,
         )
     });
 }
