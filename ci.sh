@@ -17,6 +17,12 @@ cargo test -q
 echo "== cargo test --doc -q =="
 cargo test --doc -q
 
+# Golden-report regression gate, explicitly: every scenarios/*.json must
+# parse as a valid Scenario and evaluate to its checked-in EvalReport
+# (field-by-field, float-tolerant). GOLDEN_UPDATE=1 regenerates goldens.
+echo "== cargo test --test integration_golden =="
+cargo test --test integration_golden
+
 if [[ "${1:-}" == "--fix" ]]; then
     echo "== cargo fmt =="
     cargo fmt

@@ -34,7 +34,8 @@ fn main() {
     let slo = Slo::interactive();
     let reqs = serve::workload::generate(&WorkloadSpec::poisson(2.0, 1000, 42));
     let t0 = std::time::Instant::now();
-    let (summary, stats, _) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &slo);
+    let (report, _) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &slo);
+    let (summary, stats) = (report.summary, report.stats);
     println!("\n== 1,000 Poisson requests at 2.0 req/s ==");
     println!("{}", summary.render());
     println!(
@@ -55,7 +56,8 @@ fn main() {
         ..WorkloadSpec::poisson(2.0, 1000, 42)
     };
     let bursty = serve::workload::generate(&bursty_spec);
-    let (bsum, _, _) = serve::serve_once(&sim, &sys, &model, &cfg, &bursty, &slo);
+    let (breport, _) = serve::serve_once(&sim, &sys, &model, &cfg, &bursty, &slo);
+    let bsum = breport.summary;
     println!("\n== same rate, bursty (8x burst multiplier) ==");
     println!(
         "TTFT p99 {} (vs {} Poisson) | SLO attainment {:.1}% (vs {:.1}%)",
@@ -86,4 +88,24 @@ fn main() {
         "\n(the cost-effective Table IV designs should match or beat the GA100 \
          node here — the paper's Fig. 10-12 ordering, reproduced under traffic)"
     );
+
+    // 4. Scheduler v2: monolithic vs chunked prefill vs disaggregated
+    //    pools on the same node and traffic — the phase-splitting study.
+    println!("\n== scheduler modes on a100x8, identical traffic ==");
+    let cfg = sweep::SweepConfig::mode_comparison("a100x8", 300, Slo::relaxed());
+    let rows = sweep::run_sweep(&sim, &model, &cfg).expect("mode sweep");
+    for r in &rows {
+        println!(
+            "  {:<14} rate {:>4.1}/s  TTFT mean {}  preemptions {:>3}  ${}/1M tok",
+            r.mode,
+            r.rate_per_s,
+            fmt_seconds(r.summary.ttft_mean_s),
+            r.preemptions,
+            if r.usd_per_mtok.is_finite() {
+                format!("{:.3}", r.usd_per_mtok)
+            } else {
+                "inf".to_string()
+            }
+        );
+    }
 }

@@ -174,6 +174,26 @@ fn main() {
         ));
     });
 
+    // Scheduler v2: the same trace through chunked-prefill mixed
+    // iterations — more iterations than monolithic (every chunk is one),
+    // so this guards the per-iteration overhead of the mixed engine.
+    b.run("serve_1k_gpt3_chunked", "1000 Poisson requests, chunk 2048", 0, 3, || {
+        use llmcompass::serve::{self, Policy, SchedulerConfig, ServeMode, Slo, WorkloadSpec};
+        let fresh = Simulator::pooled();
+        let sys = presets::system("a100x8").unwrap();
+        let mut cfg = SchedulerConfig::for_system(&sys, &gpt3, Policy::Fcfs);
+        cfg.mode = ServeMode::Chunked { chunk_tokens: 2048 };
+        let reqs = serve::workload::generate(&WorkloadSpec::poisson(2.0, 1000, 42));
+        std::hint::black_box(serve::serve_once(
+            &fresh,
+            &sys,
+            &gpt3,
+            &cfg,
+            &reqs,
+            &Slo::interactive(),
+        ));
+    });
+
     // Cold vs cached-mapper suite evaluation through the unified `eval`
     // API: the same three-scenario suite with a fresh Evaluator per
     // scenario (every scenario re-searches its shapes) vs one shared

@@ -354,40 +354,56 @@ impl Evaluator {
         t: &TrafficSpec,
     ) -> Result<EvalResult, String> {
         let model = model_by_name(&t.model)?;
-        if t.max_batch == 0 {
-            return Err(format!("scenario `{}`: traffic max_batch must be ≥ 1", sc.name));
-        }
-        let mut cfg = serve::SchedulerConfig::for_system(system, &model, t.policy);
-        cfg.max_batch = t.max_batch;
-        if cfg.kv_capacity_tokens == 0 {
-            return Err(format!(
-                "model `{}` does not fit `{}` (parameters exceed memory capacity)",
-                model.name, system.device.name
-            ));
-        }
+        let cfg = scheduler_config_for(system, &model, t)
+            .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
         let requests = traffic_requests(t)?;
-        if let Some(big) = requests.iter().find(|r| r.total_tokens() > cfg.kv_capacity_tokens) {
-            return Err(format!(
-                "request {} needs {} KV tokens but the cluster budget is only {}",
-                big.id,
-                big.total_tokens(),
-                cfg.kv_capacity_tokens
-            ));
-        }
-        let (summary, stats, _) =
-            serve::serve_once(&self.sim, system, &model, &cfg, &requests, &t.slo);
+        serve::scheduler::validate(&cfg, system.device_count, &requests)
+            .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
+        let (report, _) = serve::serve_once(&self.sim, system, &model, &cfg, &requests, &t.slo);
         let cluster_cost_usd =
             device_cost(&self.cost_params, &system.device).total_usd() * system.device_count as f64;
         let usd_per_mtok =
-            serve::sweep::usd_per_mtok_at_slo(cluster_cost_usd, summary.goodput_tok_s);
+            serve::sweep::usd_per_mtok_at_slo(cluster_cost_usd, report.summary.goodput_tok_s);
         Ok(EvalResult::Serving(ServingReport {
-            summary,
-            stats,
+            summary: report.summary,
+            stats: report.stats,
             kv_capacity_tokens: cfg.kv_capacity_tokens,
             cluster_cost_usd,
             usd_per_mtok,
         }))
     }
+}
+
+/// Build the scheduler configuration a traffic workload asks for on a
+/// concrete system: derive the KV budget from hardware + model, then apply
+/// the spec's knobs (batch cap, execution mode, preemption, KV clamp).
+/// Shared by the evaluator, the `serve` CLI, and the integration tests so
+/// every surface runs the identical configuration for the same scenario.
+pub fn scheduler_config_for(
+    system: &SystemSpec,
+    model: &ModelConfig,
+    t: &TrafficSpec,
+) -> Result<serve::SchedulerConfig, String> {
+    if t.max_batch == 0 {
+        return Err("traffic max_batch must be ≥ 1".to_string());
+    }
+    let mut cfg = serve::SchedulerConfig::for_system(system, model, t.policy);
+    cfg.max_batch = t.max_batch;
+    cfg.mode = t.mode.resolved(system.device_count)?;
+    cfg.preemption = t.preemption;
+    if let Some(clamp) = t.max_kv_tokens {
+        if clamp == 0 {
+            return Err("traffic max_kv_tokens must be ≥ 1".to_string());
+        }
+        cfg.kv_capacity_tokens = cfg.kv_capacity_tokens.min(clamp);
+    }
+    if cfg.kv_capacity_tokens == 0 {
+        return Err(format!(
+            "model `{}` does not fit `{}` (parameters exceed memory capacity)",
+            model.name, system.device.name
+        ));
+    }
+    Ok(cfg)
 }
 
 /// Load every `*.json` scenario in a directory (sorted by file name) as

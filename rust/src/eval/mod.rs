@@ -28,7 +28,7 @@ pub mod evaluator;
 pub mod scenario;
 
 pub use evaluator::{
-    load_suite, model_by_name, traffic_requests, EvalReport, EvalResult, Evaluator,
-    ServingReport, SCHEMA_VERSION,
+    load_suite, model_by_name, scheduler_config_for, traffic_requests, EvalReport, EvalResult,
+    Evaluator, ServingReport, SCHEMA_VERSION,
 };
 pub use scenario::{Output, Scenario, TrafficSpec, Workload};

@@ -21,7 +21,7 @@
 use crate::graph::layer::Phase;
 use crate::hardware::DType;
 use crate::perf::Op;
-use crate::serve::{Policy, Slo};
+use crate::serve::{Policy, Preemption, ServeMode, Slo};
 use crate::util::json::{num, obj, s, Json, JsonError};
 
 fn jerr(e: JsonError) -> String {
@@ -126,13 +126,23 @@ pub struct TrafficSpec {
     pub trace: Option<String>,
     pub policy: Policy,
     pub max_batch: u64,
+    /// Scheduler execution mode: monolithic, chunked prefill, or
+    /// disaggregated prefill/decode pools (`"mode"` + the mode's knobs:
+    /// `chunk_tokens`, `prefill_devices`, `transfer_base_s`).
+    pub mode: ServeMode,
+    /// KV admission strategy (`"preemption"`: conservative | evict).
+    pub preemption: Preemption,
+    /// Optional cap on the derived KV budget, in tokens — models a
+    /// hypothetical memory budget (or forces KV pressure for preemption
+    /// studies) without editing the hardware description.
+    pub max_kv_tokens: Option<u64>,
     pub slo: Slo,
     pub seed: u64,
 }
 
 impl TrafficSpec {
     /// Poisson traffic with the serving defaults (FCFS, max batch 64,
-    /// interactive SLO, seed 42).
+    /// monolithic/conservative scheduling, interactive SLO, seed 42).
     pub fn poisson(model: &str, rate_per_s: f64, requests: usize) -> TrafficSpec {
         TrafficSpec {
             model: model.to_string(),
@@ -142,11 +152,20 @@ impl TrafficSpec {
             trace: None,
             policy: Policy::Fcfs,
             max_batch: 64,
+            mode: ServeMode::Monolithic,
+            preemption: Preemption::Conservative,
+            max_kv_tokens: None,
             slo: Slo::interactive(),
             seed: 42,
         }
     }
 }
+
+/// Default per-iteration token budget of chunked mode when a scenario
+/// says `"mode": "chunked"` without `chunk_tokens`.
+pub const DEFAULT_CHUNK_TOKENS: u64 = 2048;
+/// Default handoff base latency of disaggregated mode, seconds.
+pub const DEFAULT_TRANSFER_BASE_S: f64 = 1e-3;
 
 /// The workload a scenario evaluates.
 #[derive(Debug, Clone, PartialEq)]
@@ -216,12 +235,29 @@ impl Workload {
                     ("rate_per_s", num(t.rate_per_s)),
                     ("policy", s(t.policy.name())),
                     ("max_batch", num(t.max_batch as f64)),
+                    ("mode", s(t.mode.name())),
+                    ("preemption", s(t.preemption.name())),
                     (
                         "slo",
                         obj(vec![("ttft_s", num(t.slo.ttft_s)), ("tpot_s", num(t.slo.tpot_s))]),
                     ),
                     ("seed", num(t.seed as f64)),
                 ];
+                match t.mode {
+                    ServeMode::Monolithic => {}
+                    ServeMode::Chunked { chunk_tokens } => {
+                        fields.push(("chunk_tokens", num(chunk_tokens as f64)));
+                    }
+                    ServeMode::Disaggregated { prefill_devices, transfer_base_s } => {
+                        if prefill_devices != 0 {
+                            fields.push(("prefill_devices", num(prefill_devices as f64)));
+                        }
+                        fields.push(("transfer_base_s", num(transfer_base_s)));
+                    }
+                }
+                if let Some(kv) = t.max_kv_tokens {
+                    fields.push(("max_kv_tokens", num(kv as f64)));
+                }
                 if let Some(m) = t.burst_multiplier {
                     fields.push(("burst_multiplier", num(m)));
                 }
@@ -273,6 +309,28 @@ impl Workload {
                     Some(p) => Policy::parse(p)
                         .ok_or_else(|| "bad traffic `policy` (fcfs | spf)".to_string())?,
                 };
+                let mode = match opt_str(v, "mode")?.unwrap_or("monolithic") {
+                    "monolithic" => ServeMode::Monolithic,
+                    "chunked" => ServeMode::Chunked {
+                        chunk_tokens: opt_u64(v, "chunk_tokens")?.unwrap_or(DEFAULT_CHUNK_TOKENS),
+                    },
+                    "disaggregated" => ServeMode::Disaggregated {
+                        prefill_devices: opt_u64(v, "prefill_devices")?.unwrap_or(0),
+                        transfer_base_s: opt_f64(v, "transfer_base_s")?
+                            .unwrap_or(DEFAULT_TRANSFER_BASE_S),
+                    },
+                    other => {
+                        return Err(format!(
+                            "unknown traffic `mode` `{other}` (monolithic | chunked | disaggregated)"
+                        ))
+                    }
+                };
+                let preemption = match opt_str(v, "preemption")? {
+                    None => Preemption::Conservative,
+                    Some(p) => Preemption::parse(p).ok_or_else(|| {
+                        "bad traffic `preemption` (conservative | evict)".to_string()
+                    })?,
+                };
                 let slo = match v.get("slo") {
                     None => Slo::interactive(),
                     Some(sv) => Slo {
@@ -297,6 +355,9 @@ impl Workload {
                     trace,
                     policy,
                     max_batch: opt_u64(v, "max_batch")?.unwrap_or(64),
+                    mode,
+                    preemption,
+                    max_kv_tokens: opt_u64(v, "max_kv_tokens")?,
                     slo,
                     seed: opt_u64(v, "seed")?.unwrap_or(42),
                 }))
@@ -565,6 +626,54 @@ mod tests {
         t.policy = Policy::ShortestPromptFirst;
         t.slo = Slo::relaxed();
         round_trip(&Scenario::new("traffic", "throughput-oriented", Workload::Traffic(t)));
+        // Scheduler-v2 knobs survive the round trip in every mode.
+        let mut t = TrafficSpec::poisson("gpt-small", 30.0, 64);
+        t.mode = ServeMode::Chunked { chunk_tokens: 512 };
+        t.preemption = Preemption::Evict;
+        t.max_kv_tokens = Some(9000);
+        round_trip(&Scenario::new("chunked", "a100", Workload::Traffic(t)));
+        let mut t = TrafficSpec::poisson("gpt-small", 30.0, 64);
+        t.mode = ServeMode::Disaggregated { prefill_devices: 2, transfer_base_s: 0.002 };
+        round_trip(&Scenario::new("disagg", "a100x4", Workload::Traffic(t)));
+        let mut t = TrafficSpec::poisson("gpt-small", 30.0, 64);
+        t.mode = ServeMode::Disaggregated { prefill_devices: 0, transfer_base_s: 1e-3 };
+        round_trip(&Scenario::new("disagg-auto", "a100x4", Workload::Traffic(t)));
+    }
+
+    #[test]
+    fn mode_knobs_parse_with_defaults() {
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "mode": "chunked"}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(t.mode, ServeMode::Chunked { chunk_tokens: DEFAULT_CHUNK_TOKENS });
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100x4", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "mode": "disaggregated",
+                "preemption": "evict"}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(
+            t.mode,
+            ServeMode::Disaggregated { prefill_devices: 0, transfer_base_s: DEFAULT_TRANSFER_BASE_S }
+        );
+        assert_eq!(t.preemption, Preemption::Evict);
+        // Unknown values reject the file.
+        for bad in [
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "mode": "teleported"}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "preemption": "yolo"}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "mode": "chunked", "chunk_tokens": "big"}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "max_kv_tokens": -3}}"#,
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted bad scenario: {bad}");
+        }
     }
 
     #[test]
@@ -581,6 +690,9 @@ mod tests {
         assert_eq!(t.max_batch, 64);
         assert_eq!(t.seed, 42);
         assert_eq!(t.slo, Slo::interactive());
+        assert_eq!(t.mode, ServeMode::Monolithic);
+        assert_eq!(t.preemption, Preemption::Conservative);
+        assert_eq!(t.max_kv_tokens, None);
     }
 
     #[test]

@@ -1,19 +1,73 @@
 //! `serve` — the SLO-aware serving cost sweep: GPT-3-class Poisson traffic
 //! on the paper's hardware presets, reporting TTFT/TPOT tails, goodput,
 //! and $/1M-output-tokens-at-SLO (Table IV's performance/cost comparison,
-//! generalized from isolated batches to traffic).
+//! generalized from isolated batches to traffic) — plus a scheduler-mode
+//! study comparing monolithic, chunked-prefill, and disaggregated
+//! prefill/decode execution on identical hardware and traffic.
 //!
 //! Quick mode swaps in the small model and single-device systems so the
 //! integration suite can exercise the whole path in seconds; the full run
-//! sweeps 1,000 GPT-3 requests per (system, rate) point.
+//! sweeps 1,000 GPT-3 requests per (system, mode, rate) point.
 
 use super::Ctx;
 use crate::graph::ModelConfig;
 use crate::serve::metrics::Slo;
-use crate::serve::sweep::{best_per_system, run_sweep, SweepConfig};
+use crate::serve::sweep::{best_per_system, run_sweep, SweepConfig, SweepRow};
 use crate::util::table::{write_report, Table};
 use anyhow::Result;
 use std::fmt::Write as _;
+
+fn render_rows(title: &str, rows: &[SweepRow], out: &mut String, csv: &mut Table) {
+    let mut t = Table::new(&[
+        "system", "mode", "rate/s", "TTFT mean", "TTFT p50/p99", "TPOT p50/p99",
+        "goodput tok/s", "SLO %", "preempt", "$/1M tok",
+    ])
+    .with_title(title);
+    for r in rows {
+        let s = &r.summary;
+        t.row(vec![
+            r.system.clone(),
+            r.mode.to_string(),
+            format!("{:.1}", r.rate_per_s),
+            crate::util::fmt_seconds(s.ttft_mean_s),
+            format!(
+                "{} / {}",
+                crate::util::fmt_seconds(s.ttft_p50_s),
+                crate::util::fmt_seconds(s.ttft_p99_s)
+            ),
+            format!(
+                "{} / {}",
+                crate::util::fmt_seconds(s.tpot_p50_s),
+                crate::util::fmt_seconds(s.tpot_p99_s)
+            ),
+            format!("{:.1}", s.goodput_tok_s),
+            format!("{:.1}", s.slo_attainment * 100.0),
+            r.preemptions.to_string(),
+            if r.usd_per_mtok.is_finite() {
+                format!("{:.3}", r.usd_per_mtok)
+            } else {
+                "inf".into()
+            },
+        ]);
+        csv.row(vec![
+            title.to_string(),
+            r.system.clone(),
+            r.mode.to_string(),
+            format!("{}", r.rate_per_s),
+            format!("{}", s.ttft_mean_s),
+            format!("{}", s.ttft_p50_s),
+            format!("{}", s.ttft_p99_s),
+            format!("{}", s.tpot_p50_s),
+            format!("{}", s.tpot_p99_s),
+            format!("{}", s.goodput_tok_s),
+            format!("{}", s.slo_attainment),
+            format!("{}", r.preemptions),
+            format!("{}", r.cluster_cost_usd),
+            format!("{}", r.usd_per_mtok),
+        ]);
+    }
+    out.push_str(&t.render());
+}
 
 pub fn run(ctx: &Ctx) -> Result<String> {
     let (model, slos) = if ctx.quick {
@@ -27,8 +81,9 @@ pub fn run(ctx: &Ctx) -> Result<String> {
 
     let mut out = String::new();
     let mut csv_all = Table::new(&[
-        "slo", "system", "rate/s", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
-        "goodput_tok_s", "attainment", "cluster_usd", "usd_per_mtok",
+        "sweep", "system", "mode", "rate/s", "ttft_mean_s", "ttft_p50_s", "ttft_p99_s",
+        "tpot_p50_s", "tpot_p99_s", "goodput_tok_s", "attainment", "preemptions",
+        "cluster_usd", "usd_per_mtok",
     ]);
     for (slo_name, slo) in &slos {
         let cfg = if ctx.quick {
@@ -37,8 +92,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
                 rates: vec![20.0, 60.0],
                 requests: 48,
                 slo: *slo,
-                policy: crate::serve::Policy::Fcfs,
-                seed: 42,
+                ..SweepConfig::paper_default(48, *slo)
             }
         } else {
             SweepConfig::paper_default(1000, *slo)
@@ -49,57 +103,16 @@ pub fn run(ctx: &Ctx) -> Result<String> {
             "serve sweep — {} on {} requests, SLO `{slo_name}` (TTFT ≤ {:.1} s, TPOT ≤ {:.2} s)",
             model.name, cfg.requests, slo.ttft_s, slo.tpot_s
         );
-        let mut t = Table::new(&[
-            "system", "rate/s", "TTFT p50/p99", "TPOT p50/p99", "goodput tok/s", "SLO %",
-            "$/1M tok",
-        ])
-        .with_title(&title);
-        for r in &rows {
-            let s = &r.summary;
-            t.row(vec![
-                r.system.clone(),
-                format!("{:.1}", r.rate_per_s),
-                format!(
-                    "{} / {}",
-                    crate::util::fmt_seconds(s.ttft_p50_s),
-                    crate::util::fmt_seconds(s.ttft_p99_s)
-                ),
-                format!(
-                    "{} / {}",
-                    crate::util::fmt_seconds(s.tpot_p50_s),
-                    crate::util::fmt_seconds(s.tpot_p99_s)
-                ),
-                format!("{:.1}", s.goodput_tok_s),
-                format!("{:.1}", s.slo_attainment * 100.0),
-                if r.usd_per_mtok.is_finite() {
-                    format!("{:.3}", r.usd_per_mtok)
-                } else {
-                    "inf".into()
-                },
-            ]);
-            csv_all.row(vec![
-                slo_name.to_string(),
-                r.system.clone(),
-                format!("{}", r.rate_per_s),
-                format!("{}", s.ttft_p50_s),
-                format!("{}", s.ttft_p99_s),
-                format!("{}", s.tpot_p50_s),
-                format!("{}", s.tpot_p99_s),
-                format!("{}", s.goodput_tok_s),
-                format!("{}", s.slo_attainment),
-                format!("{}", r.cluster_cost_usd),
-                format!("{}", r.usd_per_mtok),
-            ]);
-        }
-        out.push_str(&t.render());
+        render_rows(&title, &rows, &mut out, &mut csv_all);
 
         let best = best_per_system(&rows);
         let _ = writeln!(out, "best $/1M tokens at `{slo_name}` SLO:");
         for b in &best {
             let _ = writeln!(
                 out,
-                "  {:<24} {:>10} at {:.1} req/s (cluster ${:.0})",
+                "  {:<24} {:<14} {:>10} at {:.1} req/s (cluster ${:.0})",
                 b.system,
+                b.mode,
                 if b.usd_per_mtok.is_finite() {
                     format!("${:.3}", b.usd_per_mtok)
                 } else {
@@ -111,6 +124,23 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         }
         out.push('\n');
     }
+
+    // Scheduler-mode study: identical hardware, identical seeded traffic;
+    // only the execution mode differs, so every delta is the scheduler's.
+    let (system, requests) = if ctx.quick { ("a100x2", 32) } else { ("a100x8", 500) };
+    let mut mode_cfg = SweepConfig::mode_comparison(system, requests, Slo::relaxed());
+    if ctx.quick {
+        mode_cfg.rates = vec![30.0];
+    }
+    let mode_rows = run_sweep(ctx.sim(), &model, &mode_cfg).map_err(anyhow::Error::msg)?;
+    let title = format!(
+        "scheduler-mode comparison — {} on {system}, {requests} requests (monolithic vs \
+         chunked vs disaggregated)",
+        model.name
+    );
+    render_rows(&title, &mode_rows, &mut out, &mut csv_all);
+    out.push('\n');
+
     write_report("serve_sweep.csv", &csv_all.to_csv())?;
     Ok(out)
 }

@@ -27,10 +27,16 @@
 //!   SRAM, PHYs) and the cost model (wafer economics, memory prices,
 //!   performance/cost).
 //! * [`serve`] — the cluster serving simulator: discrete-event simulation
-//!   of request arrivals (Poisson/bursty/trace replay), continuous
-//!   batching with KV-cache accounting, TTFT/TPOT/goodput metrics, and an
-//!   SLO-aware $/1M-token cost sweep across hardware presets — the layer
-//!   that evaluates designs under traffic instead of isolated batches.
+//!   of request arrivals (Poisson/bursty/trace replay) through an
+//!   iteration-level scheduler with three execution modes — monolithic
+//!   continuous batching, chunked prefill piggybacked onto decode
+//!   iterations (Sarathi/Orca-style token budgets), and disaggregated
+//!   prefill/decode device pools with a transfer-modeled handoff queue
+//!   (Splitwise-style) — plus KV-pressure preemption with
+//!   recompute-on-resume, TTFT/TPOT/goodput metrics, and an SLO-aware
+//!   $/1M-token cost sweep across hardware presets *and* scheduler modes
+//!   — the layer that evaluates designs under traffic instead of
+//!   isolated batches.
 //! * [`eval`] — the unified scenario API: one typed, JSON-serializable
 //!   [`eval::Scenario`] (hardware target + workload + requested outputs)
 //!   evaluated by [`eval::Evaluator`] into a stable-schema

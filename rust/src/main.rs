@@ -13,9 +13,12 @@
 //! * `experiment` — regenerate a paper table/figure (`--list` for ids)
 //! * `calibrate`  — measure AOT artifacts, fit the CPU device description
 //! * `serve`      — simulate an inference cluster under traffic: Poisson /
-//!   bursty / replayed arrivals, continuous batching with KV accounting,
-//!   TTFT/TPOT/goodput metrics, and `--sweep` for the SLO-aware
-//!   $/1M-token comparison across presets
+//!   bursty / replayed arrivals through the scheduler's three execution
+//!   modes (`--mode monolithic | chunked | disaggregated`) with
+//!   conservative or eviction-based KV admission (`--preemption`),
+//!   TTFT/TPOT/goodput metrics plus preemption counters, and `--sweep
+//!   [--modes ...]` for the SLO-aware $/1M-token comparison across
+//!   presets and scheduler modes
 //! * `serve-pjrt` — run the batched-serving coordinator on a synthetic
 //!   trace through PJRT (the end-to-end request path)
 //!
@@ -593,14 +596,38 @@ fn cmd_serve(raw: &[String]) -> R {
         .opt("trace", None, "replay a trace file (`arrival_s,prompt,output` lines)")
         .opt("policy", Some("fcfs"), "admission policy: fcfs | spf")
         .opt("max-batch", Some("64"), "max concurrent sequences")
+        .opt(
+            "mode",
+            Some("monolithic"),
+            "scheduler mode: monolithic | chunked | disaggregated",
+        )
+        .opt("chunk-tokens", Some("2048"), "chunked: per-iteration token budget")
+        .opt(
+            "prefill-devices",
+            Some("0"),
+            "disaggregated: devices in the prefill pool (0 = half the system)",
+        )
+        .opt(
+            "transfer-base-s",
+            Some("0.001"),
+            "disaggregated: base KV-handoff latency, seconds (plus modeled link time)",
+        )
+        .opt("preemption", Some("conservative"), "KV admission: conservative | evict")
+        .opt("max-kv-tokens", None, "clamp the derived KV budget (forces preemption pressure)")
         .opt("slo-ttft", Some("2.0"), "SLO: max time-to-first-token, seconds")
         .opt("slo-tpot", Some("0.1"), "SLO: max time-per-output-token, seconds")
         .opt("seed", Some("42"), "workload seed")
         .flag(
             "sweep",
             "run the SLO-aware $/1M-token sweep across the paper's preset ladder \
-             (uses --model/--requests/--policy/--slo-*/--seed; ignores --hardware, \
-             --rate and the arrival options)",
+             (uses --model/--requests/--policy/--modes/--preemption/--slo-*/--seed; \
+             ignores --hardware, --rate and the arrival options)",
+        )
+        .opt(
+            "modes",
+            Some("monolithic"),
+            "sweep: comma-separated scheduler modes to compare on every system \
+             (monolithic,chunked,disaggregated; knob flags above apply)",
         )
         .flag("pooled", "use the pooled (multi-threaded) mapper search")
         .opt("mapper-cache", None, MAPPER_CACHE_HELP);
@@ -615,6 +642,20 @@ fn cmd_serve(raw: &[String]) -> R {
     let seed = a.get_u64("seed").map_err(|e| e.0)?.unwrap();
     let policy = llmcompass::serve::Policy::parse(a.get_or("policy", "fcfs"))
         .ok_or("bad --policy (fcfs | spf)")?;
+    let preemption = llmcompass::serve::Preemption::parse(a.get_or("preemption", "conservative"))
+        .ok_or("bad --preemption (conservative | evict)")?;
+    let chunk_tokens = a.get_u64("chunk-tokens").map_err(|e| e.0)?.unwrap();
+    let prefill_devices = a.get_u64("prefill-devices").map_err(|e| e.0)?.unwrap();
+    let transfer_base_s = a.get_f64("transfer-base-s").map_err(|e| e.0)?.unwrap();
+    let mode_of = |name: &str| -> Result<llmcompass::serve::ServeMode, String> {
+        use llmcompass::serve::ServeMode;
+        match name {
+            "monolithic" => Ok(ServeMode::Monolithic),
+            "chunked" => Ok(ServeMode::Chunked { chunk_tokens }),
+            "disaggregated" => Ok(ServeMode::Disaggregated { prefill_devices, transfer_base_s }),
+            other => Err(format!("bad mode `{other}` (monolithic | chunked | disaggregated)")),
+        }
+    };
     let budget = if a.flag("pooled") { SearchBudget::pooled() } else { SearchBudget::default() };
     let ev = evaluator_for(budget, a.get("mapper-cache"));
     let start = std::time::Instant::now();
@@ -626,15 +667,27 @@ fn cmd_serve(raw: &[String]) -> R {
         let mut cfg = llmcompass::serve::sweep::SweepConfig::paper_default(requests_n, slo);
         cfg.seed = seed;
         cfg.policy = policy;
+        cfg.preemption = preemption;
+        cfg.modes = a
+            .get_or("modes", "monolithic")
+            .split(',')
+            .map(|m| mode_of(m.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
         let rows = llmcompass::serve::sweep::run_sweep(&ev.sim, &model, &cfg)?;
-        let mut t = Table::new(&["system", "rate/s", "goodput tok/s", "SLO %", "$/1M tok"])
-            .with_title("SLO-aware serving sweep");
+        let mut t = Table::new(&[
+            "system", "mode", "rate/s", "TTFT mean", "goodput tok/s", "SLO %", "preempt",
+            "$/1M tok",
+        ])
+        .with_title("SLO-aware serving sweep");
         for r in &rows {
             t.row(vec![
                 r.system.clone(),
+                r.mode.to_string(),
                 format!("{:.1}", r.rate_per_s),
+                llmcompass::util::fmt_seconds(r.summary.ttft_mean_s),
                 format!("{:.1}", r.summary.goodput_tok_s),
                 format!("{:.1}", r.summary.slo_attainment * 100.0),
+                r.preemptions.to_string(),
                 if r.usd_per_mtok.is_finite() {
                     format!("{:.3}", r.usd_per_mtok)
                 } else {
@@ -643,11 +696,12 @@ fn cmd_serve(raw: &[String]) -> R {
             ]);
         }
         println!("{}", t.render());
-        println!("best per system ($/1M output tokens at SLO):");
+        println!("best per system/mode ($/1M output tokens at SLO):");
         for b in llmcompass::serve::sweep::best_per_system(&rows) {
             println!(
-                "  {:<24} {:>10} at {:.1} req/s",
+                "  {:<24} {:<14} {:>10} at {:.1} req/s",
                 b.system,
+                b.mode,
                 if b.usd_per_mtok.is_finite() {
                     format!("${:.3}", b.usd_per_mtok)
                 } else {
@@ -667,10 +721,6 @@ fn cmd_serve(raw: &[String]) -> R {
     if !rate.is_finite() || rate <= 0.0 {
         return Err(format!("--rate must be a positive number, got {rate}"));
     }
-    let max_batch = a.get_u64("max-batch").map_err(|e| e.0)?.unwrap();
-    if max_batch == 0 {
-        return Err("--max-batch must be ≥ 1".into());
-    }
     let traffic = TrafficSpec {
         model: model_name.to_string(),
         requests: requests_n,
@@ -682,7 +732,10 @@ fn cmd_serve(raw: &[String]) -> R {
         },
         trace: a.get("trace").map(str::to_string),
         policy,
-        max_batch,
+        max_batch: a.get_u64("max-batch").map_err(|e| e.0)?.unwrap(),
+        mode: mode_of(a.get_or("mode", "monolithic"))?,
+        preemption,
+        max_kv_tokens: a.get_u64("max-kv-tokens").map_err(|e| e.0)?,
         slo,
         seed,
     };
@@ -693,28 +746,18 @@ fn cmd_serve(raw: &[String]) -> R {
     // twice, so edits between the reads can slip past these checks (the
     // evaluator re-checks and errors rather than misbehaving).
     let trace = eval::traffic_requests(&traffic)?;
-    let kv_capacity = llmcompass::serve::kv_capacity_tokens(&sys, &model);
-    if kv_capacity == 0 {
-        return Err(format!(
-            "model `{}` does not fit `{}` (parameters exceed memory capacity)",
-            model.name, sys.device.name
-        ));
-    }
-    if let Some(big) = trace.iter().find(|r| r.total_tokens() > kv_capacity) {
-        return Err(format!(
-            "request {} needs {} KV tokens but the cluster budget is only {}",
-            big.id,
-            big.total_tokens(),
-            kv_capacity
-        ));
-    }
+    let sched = eval::scheduler_config_for(&sys, &model, &traffic)?;
+    llmcompass::serve::scheduler::validate(&sched, sys.device_count, &trace)?;
     println!(
-        "serving {} requests of {} on {} x{} (policy {policy:?}, KV budget {} tokens)…",
+        "serving {} requests of {} on {} x{} (mode {}, policy {policy:?}, preemption {}, \
+         KV budget {} tokens)…",
         trace.len(),
         model.name,
         sys.device.name,
         sys.device_count,
-        kv_capacity
+        sched.mode.name(),
+        sched.preemption.name(),
+        sched.kv_capacity_tokens
     );
     let rep = ev.evaluate(&Scenario::new("cli-serve", hw, Workload::Traffic(traffic)))?;
     let EvalResult::Serving(sr) = &rep.results[0] else {
@@ -723,14 +766,25 @@ fn cmd_serve(raw: &[String]) -> R {
     println!("{}", sr.summary.render());
     let stats = &sr.stats;
     println!(
-        "iterations: {} prefill ({}) + {} decode ({}) | idle {} | peak batch {} | peak KV {} tokens",
+        "iterations: {} prefill ({}) + {} decode ({}) + {} mixed ({}) | idle {} | \
+         peak batch {} | peak KV {} tokens",
         stats.prefill_iterations,
         llmcompass::util::fmt_seconds(stats.prefill_busy_s),
         stats.decode_iterations,
         llmcompass::util::fmt_seconds(stats.decode_busy_s),
+        stats.mixed_iterations,
+        llmcompass::util::fmt_seconds(stats.mixed_busy_s),
         llmcompass::util::fmt_seconds(stats.idle_s),
         stats.peak_batch,
         stats.peak_kv_tokens
+    );
+    println!(
+        "preemption: {} events over {} requests ({} recompute tokens) | transfer {} | handoff wait {}",
+        stats.preemptions,
+        stats.preempted_requests,
+        stats.recompute_tokens,
+        llmcompass::util::fmt_seconds(stats.transfer_total_s),
+        llmcompass::util::fmt_seconds(stats.handoff_wait_s)
     );
     println!(
         "[simulated in {} wall-clock | mapper: {} rounds, {} cached shapes]",

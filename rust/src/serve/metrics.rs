@@ -76,8 +76,12 @@ pub struct Summary {
     pub requests: usize,
     pub output_tokens: u64,
     pub makespan_s: f64,
+    /// Mean time to first token (the chunked-vs-monolithic figure of
+    /// merit: padding waste shows up here before it shows in the tails).
+    pub ttft_mean_s: f64,
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
+    pub tpot_mean_s: f64,
     pub tpot_p50_s: f64,
     pub tpot_p99_s: f64,
     pub e2e_p50_s: f64,
@@ -104,6 +108,8 @@ pub fn summarize(metrics: &[RequestMetrics], slo: &Slo, makespan_s: f64) -> Summ
         requests: metrics.len(),
         output_tokens,
         makespan_s,
+        ttft_mean_s: stats::mean(&ttft),
+        tpot_mean_s: stats::mean(&tpot),
         ttft_p50_s: stats::percentile(&ttft, 50.0),
         ttft_p99_s: stats::percentile(&ttft, 99.0),
         tpot_p50_s: stats::percentile(&tpot, 50.0),
@@ -128,8 +134,10 @@ impl Summary {
             ("requests", num(self.requests as f64)),
             ("output_tokens", num(self.output_tokens as f64)),
             ("makespan_s", num(self.makespan_s)),
+            ("ttft_mean_s", num(self.ttft_mean_s)),
             ("ttft_p50_s", num(self.ttft_p50_s)),
             ("ttft_p99_s", num(self.ttft_p99_s)),
+            ("tpot_mean_s", num(self.tpot_mean_s)),
             ("tpot_p50_s", num(self.tpot_p50_s)),
             ("tpot_p99_s", num(self.tpot_p99_s)),
             ("e2e_p50_s", num(self.e2e_p50_s)),
@@ -144,13 +152,15 @@ impl Summary {
     pub fn render(&self) -> String {
         format!(
             "requests {} | output tokens {} | makespan {:.2} s\n\
-             TTFT p50 {} p99 {} | TPOT p50 {} p99 {} | e2e p50 {} p99 {}\n\
+             TTFT mean {} p50 {} p99 {} | TPOT mean {} p50 {} p99 {} | e2e p50 {} p99 {}\n\
              throughput {:.1} tok/s | goodput {:.1} tok/s | SLO attainment {:.1}%",
             self.requests,
             self.output_tokens,
             self.makespan_s,
+            crate::util::fmt_seconds(self.ttft_mean_s),
             crate::util::fmt_seconds(self.ttft_p50_s),
             crate::util::fmt_seconds(self.ttft_p99_s),
+            crate::util::fmt_seconds(self.tpot_mean_s),
             crate::util::fmt_seconds(self.tpot_p50_s),
             crate::util::fmt_seconds(self.tpot_p99_s),
             crate::util::fmt_seconds(self.e2e_p50_s),
@@ -213,6 +223,9 @@ mod tests {
         assert!((s.goodput_tok_s - 11.0 / 30.5).abs() < 1e-12);
         assert!(s.goodput_tok_s < s.throughput_tok_s);
         assert!(s.ttft_p50_s <= s.ttft_p99_s);
+        // Means: TTFT (0.5 + 5.0 + 0.5)/3 = 2.0; TPOT (0.1 + 0.1 + 3.0)/3.
+        assert!((s.ttft_mean_s - 2.0).abs() < 1e-12);
+        assert!((s.tpot_mean_s - 3.2 / 3.0).abs() < 1e-12);
         assert!(s.render().contains("SLO attainment"));
     }
 
@@ -222,6 +235,7 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.slo_attainment, 0.0);
         assert_eq!(s.ttft_p50_s, 0.0);
+        assert_eq!(s.ttft_mean_s, 0.0);
         assert_eq!(s.goodput_tok_s, 0.0);
     }
 }

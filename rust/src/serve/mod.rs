@@ -10,13 +10,18 @@
 //!
 //! * [`workload`] — Poisson / bursty arrival processes and trace replay
 //!   with configurable prompt/output-length distributions.
-//! * [`scheduler`] — the continuous-batching engine: iteration-level
-//!   scheduling, FCFS or shortest-prompt-first admission, KV-cache
-//!   accounting against the cluster memory budget.
+//! * [`scheduler`] — the iteration-level engine in three execution modes
+//!   ([`ServeMode`]): monolithic prefill-prioritized batching, chunked
+//!   prefill piggybacked onto decode iterations (Sarathi/Orca-style mixed
+//!   iterations under a token budget), and disaggregated prefill/decode
+//!   device pools coupled by a transfer-latency-modeled handoff queue
+//!   (Splitwise-style) — each with conservative or eviction-based
+//!   ([`Preemption`]) KV admission.
 //! * [`metrics`] — per-request timelines, percentile aggregation, and
 //!   SLO goodput.
 //! * [`sweep`] — the SLO-aware cost sweep reporting $/1M-tokens-at-SLO
-//!   across hardware presets (the Table IV comparison, under traffic).
+//!   across hardware presets *and* scheduler modes (the Table IV
+//!   comparison, under traffic).
 //!
 //! Everything is deterministic in the workload seed, and the quantizing
 //! oracle keeps mapper work bounded, so thousand-request traces of
@@ -28,16 +33,36 @@ pub mod sweep;
 pub mod workload;
 
 pub use metrics::{RequestMetrics, Slo, Summary};
-pub use scheduler::{kv_capacity_tokens, IterOracle, Policy, RunStats, SchedulerConfig};
+pub use scheduler::{
+    kv_capacity_tokens, IterOracle, Policy, Preemption, RunStats, SchedulerConfig, ServeMode,
+};
 pub use workload::{Arrival, LengthDist, Request, WorkloadSpec};
 
 use crate::graph::inference::Simulator;
 use crate::graph::ModelConfig;
 use crate::hardware::SystemSpec;
 
-/// Serve one workload on one system end to end: build the oracle, run the
-/// scheduler, and summarize under the SLO. Returns (summary, run stats,
-/// per-request metrics).
+/// The complete result of one serving run: the SLO summary plus the
+/// scheduler's iteration/preemption accounting. `to_json` is byte-stable
+/// for identical inputs — the deterministic-replay tests and the golden
+/// harness both lock it.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub summary: Summary,
+    pub stats: RunStats,
+}
+
+impl ServeReport {
+    /// Stable JSON rendering (part of the `eval` report schema).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::obj;
+        obj(vec![("summary", self.summary.to_json()), ("stats", self.stats.to_json())])
+    }
+}
+
+/// Serve one workload on one system end to end: run the scheduler in the
+/// configured mode and summarize under the SLO. Returns the report plus
+/// per-request metrics.
 pub fn serve_once(
     sim: &Simulator,
     sys: &SystemSpec,
@@ -45,11 +70,10 @@ pub fn serve_once(
     cfg: &SchedulerConfig,
     requests: &[workload::Request],
     slo: &Slo,
-) -> (Summary, RunStats, Vec<RequestMetrics>) {
-    let oracle = IterOracle::new(sim, sys, model);
-    let (per_req, stats) = scheduler::simulate(&oracle, cfg, requests);
+) -> (ServeReport, Vec<RequestMetrics>) {
+    let (per_req, stats) = scheduler::simulate(sim, sys, model, cfg, requests);
     let summary = metrics::summarize(&per_req, slo, stats.makespan_s);
-    (summary, stats, per_req)
+    (ServeReport { summary, stats }, per_req)
 }
 
 #[cfg(test)]
@@ -64,8 +88,8 @@ mod tests {
         let model = ModelConfig::gpt_small();
         let cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
         let reqs = workload::generate(&WorkloadSpec::poisson(25.0, 100, 1));
-        let (summary, stats, per_req) =
-            serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+        let (report, per_req) = serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+        let (summary, stats) = (&report.summary, &report.stats);
         assert_eq!(summary.requests, 100);
         assert_eq!(per_req.len(), 100);
         assert!(summary.throughput_tok_s > 0.0);
@@ -73,5 +97,9 @@ mod tests {
         assert!(summary.tpot_p50_s <= summary.tpot_p99_s);
         assert!(stats.makespan_s > 0.0);
         assert!(summary.goodput_tok_s <= summary.throughput_tok_s + 1e-12);
+        // The report JSON nests both halves under stable keys.
+        let j = report.to_json();
+        assert!(j.get("summary").and_then(|s| s.get("ttft_mean_s")).is_some());
+        assert!(j.get("stats").and_then(|s| s.get("preemptions")).is_some());
     }
 }

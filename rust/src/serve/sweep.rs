@@ -1,5 +1,6 @@
 //! SLO-aware cost sweep: serve the same workload on a ladder of arrival
-//! rates across hardware presets and report **$ / 1M output tokens at
+//! rates across hardware presets — and, since scheduler v2, across
+//! scheduler execution modes — and report **$ / 1M output tokens at
 //! SLO** — the serving-economics figure of merit that combines the
 //! performance model (via the scheduler) with the cost model.
 //!
@@ -8,10 +9,12 @@
 //! die+memory cost, it normalizes *goodput under an SLO* — so a design
 //! with cheap capacious DRAM (the throughput-oriented proposal) wins at
 //! relaxed SLOs even though its per-iteration decode is slower, exactly
-//! the Fig. 10–12 trade the paper argues for.
+//! the Fig. 10–12 trade the paper argues for. Sweeping `modes` on one
+//! system isolates the scheduler's contribution: monolithic vs. chunked
+//! prefill vs. disaggregated pools on identical hardware and traffic.
 
-use super::metrics::{self, Slo, Summary};
-use super::scheduler::{self, IterOracle, Policy, SchedulerConfig};
+use super::metrics::{Slo, Summary};
+use super::scheduler::{Policy, Preemption, SchedulerConfig, ServeMode};
 use super::workload::{generate, WorkloadSpec};
 use crate::cost::{device_cost, CostParams};
 use crate::graph::inference::Simulator;
@@ -40,6 +43,10 @@ pub fn usd_per_mtok_at_slo(cluster_cost_usd: f64, goodput_tok_s: f64) -> f64 {
 pub struct SweepConfig {
     /// System preset names (`<device>x<count>` or bare device).
     pub systems: Vec<String>,
+    /// Scheduler execution modes to compare on every system (disaggregated
+    /// entries are skipped on single-device systems rather than erroring).
+    pub modes: Vec<ServeMode>,
+    pub preemption: Preemption,
     /// Poisson arrival rates to sweep, requests/second.
     pub rates: Vec<f64>,
     pub requests: usize,
@@ -50,7 +57,8 @@ pub struct SweepConfig {
 
 impl SweepConfig {
     /// The paper-comparison default: GPT-3-class traffic on 8-device
-    /// nodes of the A100, full GA100, and the Table IV proposals.
+    /// nodes of the A100, full GA100, and the Table IV proposals,
+    /// monolithic scheduling.
     pub fn paper_default(requests: usize, slo: Slo) -> SweepConfig {
         SweepConfig {
             systems: vec![
@@ -59,7 +67,29 @@ impl SweepConfig {
                 "latency-orientedx8".into(),
                 "throughput-orientedx8".into(),
             ],
+            modes: vec![ServeMode::Monolithic],
+            preemption: Preemption::Conservative,
             rates: vec![0.5, 1.0, 2.0, 4.0],
+            requests,
+            slo,
+            policy: Policy::Fcfs,
+            seed: 42,
+        }
+    }
+
+    /// Compare the three scheduler modes on the same hardware and traffic
+    /// — the phase-splitting study (chunk 2048 tokens, half the devices
+    /// on prefill, 1 ms transfer base).
+    pub fn mode_comparison(system: &str, requests: usize, slo: Slo) -> SweepConfig {
+        SweepConfig {
+            systems: vec![system.to_string()],
+            modes: vec![
+                ServeMode::Monolithic,
+                ServeMode::Chunked { chunk_tokens: 2048 },
+                ServeMode::Disaggregated { prefill_devices: 0, transfer_base_s: 1e-3 },
+            ],
+            preemption: Preemption::Conservative,
+            rates: vec![1.0, 2.0, 4.0],
             requests,
             slo,
             policy: Policy::Fcfs,
@@ -68,19 +98,23 @@ impl SweepConfig {
     }
 }
 
-/// One (system, rate) sweep point.
+/// One (system, mode, rate) sweep point.
 #[derive(Debug, Clone)]
 pub struct SweepRow {
     pub system: String,
+    /// Canonical scheduler-mode name ([`ServeMode::name`]).
+    pub mode: &'static str,
     pub rate_per_s: f64,
     pub cluster_cost_usd: f64,
     pub summary: Summary,
+    /// Preemption events of this run (0 under conservative admission).
+    pub preemptions: u64,
     /// $ per million output tokens at the SLO (hardware amortized over
     /// [`AMORT_SECONDS`]); infinite when nothing met the SLO.
     pub usd_per_mtok: f64,
 }
 
-/// Run the sweep for one model across all (system, rate) points. The
+/// Run the sweep for one model across all (system, mode, rate) points. The
 /// `sim`'s mapper caches persist across points (shapes recur), which is
 /// what makes a full sweep take seconds.
 pub fn run_sweep(
@@ -95,47 +129,57 @@ pub fn run_sweep(
             .ok_or_else(|| format!("unknown system preset `{name}`"))?;
         let cluster_cost_usd =
             device_cost(&cost_params, &sys.device).total_usd() * sys.device_count as f64;
-        let sched = SchedulerConfig::for_system(&sys, model, cfg.policy);
-        if sched.kv_capacity_tokens == 0 {
-            return Err(format!(
-                "model `{}` does not fit `{name}` (parameters exceed memory capacity)",
-                model.name
-            ));
-        }
-        let oracle = IterOracle::new(sim, &sys, model);
-        for &rate in &cfg.rates {
-            // Same seed across systems and rates: identical request
-            // lengths, only the arrival spacing scales with the rate.
-            let requests = generate(&WorkloadSpec::poisson(rate, cfg.requests, cfg.seed));
-            let (per_req, stats) = scheduler::simulate(&oracle, &sched, &requests);
-            let summary = metrics::summarize(&per_req, &cfg.slo, stats.makespan_s);
-            let usd_per_mtok = usd_per_mtok_at_slo(cluster_cost_usd, summary.goodput_tok_s);
-            rows.push(SweepRow {
-                system: name.clone(),
-                rate_per_s: rate,
-                cluster_cost_usd,
-                summary,
-                usd_per_mtok,
-            });
+        for &mode in &cfg.modes {
+            let Ok(resolved) = mode.resolved(sys.device_count) else {
+                continue; // e.g. disaggregation on a single device
+            };
+            let mut sched = SchedulerConfig::for_system(&sys, model, cfg.policy);
+            sched.mode = resolved;
+            sched.preemption = cfg.preemption;
+            if sched.kv_capacity_tokens == 0 {
+                return Err(format!(
+                    "model `{}` does not fit `{name}` (parameters exceed memory capacity)",
+                    model.name
+                ));
+            }
+            for &rate in &cfg.rates {
+                // Same seed across systems, modes, and rates: identical
+                // request lengths, only the arrival spacing scales.
+                let requests = generate(&WorkloadSpec::poisson(rate, cfg.requests, cfg.seed));
+                super::scheduler::validate(&sched, sys.device_count, &requests)?;
+                let (report, _) =
+                    super::serve_once(sim, &sys, model, &sched, &requests, &cfg.slo);
+                let usd_per_mtok =
+                    usd_per_mtok_at_slo(cluster_cost_usd, report.summary.goodput_tok_s);
+                rows.push(SweepRow {
+                    system: name.clone(),
+                    mode: resolved.name(),
+                    rate_per_s: rate,
+                    cluster_cost_usd,
+                    summary: report.summary,
+                    preemptions: report.stats.preemptions,
+                    usd_per_mtok,
+                });
+            }
         }
     }
     Ok(rows)
 }
 
-/// Best (cheapest $/1M-tokens-at-SLO) row per system, preserving the
-/// system order of the sweep.
+/// Best (cheapest $/1M-tokens-at-SLO) row per (system, mode), preserving
+/// the sweep's system/mode order.
 pub fn best_per_system(rows: &[SweepRow]) -> Vec<&SweepRow> {
-    let mut order: Vec<&str> = Vec::new();
+    let mut order: Vec<(&str, &str)> = Vec::new();
     for r in rows {
-        if !order.contains(&r.system.as_str()) {
-            order.push(&r.system);
+        if !order.contains(&(r.system.as_str(), r.mode)) {
+            order.push((r.system.as_str(), r.mode));
         }
     }
     order
         .into_iter()
-        .map(|name| {
+        .map(|(name, mode)| {
             rows.iter()
-                .filter(|r| r.system == name)
+                .filter(|r| r.system == name && r.mode == mode)
                 .min_by(|a, b| a.usd_per_mtok.partial_cmp(&b.usd_per_mtok).unwrap())
                 .unwrap()
         })
@@ -149,6 +193,8 @@ mod tests {
     fn quick_cfg() -> SweepConfig {
         SweepConfig {
             systems: vec!["ga100".into(), "throughput-oriented".into()],
+            modes: vec![ServeMode::Monolithic],
+            preemption: Preemption::Conservative,
             rates: vec![20.0, 60.0],
             requests: 48,
             slo: Slo::relaxed(),
@@ -167,10 +213,33 @@ mod tests {
             assert!(r.summary.requests == 48);
             assert!(r.summary.throughput_tok_s > 0.0);
             assert!(r.usd_per_mtok > 0.0);
+            assert_eq!(r.mode, "monolithic");
+            assert_eq!(r.preemptions, 0);
         }
         let best = best_per_system(&rows);
         assert_eq!(best.len(), 2);
         assert_eq!(best[0].system, "ga100");
+    }
+
+    #[test]
+    fn mode_comparison_covers_all_three_modes_on_one_system() {
+        let sim = Simulator::new();
+        let mut cfg = SweepConfig::mode_comparison("a100x2", 24, Slo::relaxed());
+        cfg.rates = vec![30.0];
+        let rows = run_sweep(&sim, &ModelConfig::gpt_small(), &cfg).unwrap();
+        let modes: Vec<&str> = rows.iter().map(|r| r.mode).collect();
+        assert_eq!(modes, vec!["monolithic", "chunked", "disaggregated"]);
+        for r in &rows {
+            assert_eq!(r.summary.requests, 24);
+            assert!(r.summary.throughput_tok_s > 0.0, "{} produced nothing", r.mode);
+        }
+        // Identical traffic in every row: same total output tokens.
+        assert!(rows.windows(2).all(|w| w[0].summary.output_tokens == w[1].summary.output_tokens));
+        // On a single device the disaggregated entry is skipped, not fatal.
+        let mut single = cfg.clone();
+        single.systems = vec!["a100".into()];
+        let rows = run_sweep(&sim, &ModelConfig::gpt_small(), &single).unwrap();
+        assert_eq!(rows.len(), 2, "mono + chunked only");
     }
 
     #[test]

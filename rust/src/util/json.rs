@@ -216,6 +216,110 @@ pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// One structural difference between two JSON documents: the dotted path
+/// (`results.serving.summary.ttft_p50_s`, array indices as `[3]`) plus
+/// the rendered expected/actual values at that path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonDiff {
+    pub path: String,
+    pub expected: String,
+    pub actual: String,
+}
+
+impl fmt::Display for JsonDiff {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: expected {}, actual {}", self.path, self.expected, self.actual)
+    }
+}
+
+/// Field-by-field comparison of two documents with a float tolerance:
+/// numbers are equal when `|a − b| ≤ max(abs_tol, rel_tol · max(|a|,|b|))`
+/// (NaN equals NaN, so sentinel values survive a round trip); everything
+/// else — including object key sets and array lengths — must match
+/// exactly. Returns every difference with its path, empty when the
+/// documents agree. Used by the golden-report regression harness.
+pub fn diff_with_tolerance(expected: &Json, actual: &Json, rel_tol: f64, abs_tol: f64) -> Vec<JsonDiff> {
+    let mut out = Vec::new();
+    diff_walk(expected, actual, rel_tol, abs_tol, String::new(), &mut out);
+    out
+}
+
+// Keep mismatch reports readable: type + size for containers, the value
+// itself for leaves.
+fn render_leaf(v: &Json) -> String {
+    match v {
+        Json::Obj(m) => format!("<object with {} keys>", m.len()),
+        Json::Arr(a) => format!("<array of {}>", a.len()),
+        other => other.to_string_compact(),
+    }
+}
+
+fn diff_walk(
+    expected: &Json,
+    actual: &Json,
+    rel_tol: f64,
+    abs_tol: f64,
+    path: String,
+    out: &mut Vec<JsonDiff>,
+) {
+    let here = |p: &str| if p.is_empty() { "<root>".to_string() } else { p.to_string() };
+    match (expected, actual) {
+        (Json::Num(a), Json::Num(b)) => {
+            let close = (a.is_nan() && b.is_nan())
+                || (a - b).abs() <= abs_tol.max(rel_tol * a.abs().max(b.abs()));
+            if !close {
+                out.push(JsonDiff {
+                    path: here(&path),
+                    expected: render_leaf(expected),
+                    actual: render_leaf(actual),
+                });
+            }
+        }
+        (Json::Obj(ea), Json::Obj(aa)) => {
+            for (k, ev) in ea {
+                let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match aa.get(k) {
+                    Some(av) => diff_walk(ev, av, rel_tol, abs_tol, sub, out),
+                    None => out.push(JsonDiff {
+                        path: sub,
+                        expected: render_leaf(ev),
+                        actual: "<missing>".to_string(),
+                    }),
+                }
+            }
+            for (k, av) in aa {
+                if !ea.contains_key(k) {
+                    let sub = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                    out.push(JsonDiff {
+                        path: sub,
+                        expected: "<missing>".to_string(),
+                        actual: render_leaf(av),
+                    });
+                }
+            }
+        }
+        (Json::Arr(ea), Json::Arr(aa)) => {
+            if ea.len() != aa.len() {
+                out.push(JsonDiff {
+                    path: here(&path),
+                    expected: format!("<array of {}>", ea.len()),
+                    actual: format!("<array of {}>", aa.len()),
+                });
+                return;
+            }
+            for (i, (ev, av)) in ea.iter().zip(aa).enumerate() {
+                diff_walk(ev, av, rel_tol, abs_tol, format!("{path}[{i}]"), out);
+            }
+        }
+        _ if expected == actual => {}
+        _ => out.push(JsonDiff {
+            path: here(&path),
+            expected: render_leaf(expected),
+            actual: render_leaf(actual),
+        }),
+    }
+}
+
 fn fmt_num(n: f64) -> String {
     if n.is_nan() || n.is_infinite() {
         // JSON has no NaN/Inf; emit null per common practice.
@@ -563,5 +667,49 @@ mod tests {
     fn integer_formatting_stays_integral() {
         let v = Json::Num(1024.0);
         assert_eq!(v.to_string_compact(), "1024");
+    }
+
+    #[test]
+    fn diff_identical_documents_is_empty() {
+        let v = Json::parse(r#"{"a": {"b": [1, 2.5, "x"]}, "c": true}"#).unwrap();
+        assert!(diff_with_tolerance(&v, &v, 1e-9, 1e-12).is_empty());
+    }
+
+    #[test]
+    fn diff_tolerates_float_noise_but_not_drift() {
+        let a = Json::parse(r#"{"t": 1.0}"#).unwrap();
+        let noise = Json::parse(r#"{"t": 1.0000000001}"#).unwrap();
+        let drift = Json::parse(r#"{"t": 1.01}"#).unwrap();
+        assert!(diff_with_tolerance(&a, &noise, 1e-9, 1e-12).is_empty());
+        let d = diff_with_tolerance(&a, &drift, 1e-9, 1e-12);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].path, "t");
+        assert!(d[0].to_string().contains("expected 1"), "{}", d[0]);
+        // Zero against tiny absolute noise passes through abs_tol.
+        let z = Json::parse(r#"{"t": 0.0}"#).unwrap();
+        let eps = Json::parse(r#"{"t": 1e-13}"#).unwrap();
+        assert!(diff_with_tolerance(&z, &eps, 1e-9, 1e-12).is_empty());
+    }
+
+    #[test]
+    fn diff_reports_paths_for_structural_mismatches() {
+        let a = Json::parse(r#"{"r": {"x": 1, "y": [1, 2]}, "gone": 3}"#).unwrap();
+        let b = Json::parse(r#"{"r": {"x": "one", "y": [1, 2, 3]}, "new": 4}"#).unwrap();
+        let d = diff_with_tolerance(&a, &b, 1e-9, 1e-12);
+        let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+        assert!(paths.contains(&"r.x"), "{paths:?}");
+        assert!(paths.contains(&"r.y"), "array length mismatch at r.y: {paths:?}");
+        assert!(paths.contains(&"gone"), "missing key reported: {paths:?}");
+        assert!(paths.contains(&"new"), "extra key reported: {paths:?}");
+        let gone = d.iter().find(|x| x.path == "gone").unwrap();
+        assert_eq!(gone.actual, "<missing>");
+        // Array element paths carry indices.
+        let e1 = Json::parse("[1, 2]").unwrap();
+        let e2 = Json::parse("[1, 9]").unwrap();
+        let d = diff_with_tolerance(&e1, &e2, 1e-9, 1e-12);
+        assert_eq!(d[0].path, "[1]");
+        // NaN sentinels compare equal to themselves.
+        let n = Json::Num(f64::NAN);
+        assert!(diff_with_tolerance(&n, &n.clone(), 1e-9, 1e-12).is_empty());
     }
 }

@@ -1,0 +1,220 @@
+//! Golden-report regression harness: every scenario in `scenarios/` is
+//! evaluated through the unified `eval::Evaluator` and compared
+//! field-by-field (with float tolerance) against a checked-in
+//! `EvalReport` JSON under `tests/golden/`. This locks `schema_version` 1
+//! and the serving metrics: a refactor that drifts any report field fails
+//! with the exact path and both values, not vibes.
+//!
+//! Workflow:
+//! * drift against an existing golden → loud failure listing every
+//!   mismatched field path with expected/actual;
+//! * `GOLDEN_UPDATE=1 cargo test --test integration_golden` regenerates
+//!   every golden from the current code (then commit the diff);
+//! * bootstrap: when `tests/golden/` holds NO goldens at all (the
+//!   authoring environment had no toolchain), the first run materializes
+//!   every report and passes with a "commit it" note;
+//! * once any golden is checked in, the gate is armed: a scenario
+//!   *without* a golden is a failure (a new scenarios/*.json cannot
+//!   silently escape the gate), as is any drift.
+//!
+//! The harness runs a serial `Evaluator::new()` so `mapper_rounds`
+//! counters are deterministic (the hybrid search's counters vary with
+//! thread timing; the winners never do).
+
+use llmcompass::eval::{self, Evaluator, SCHEMA_VERSION};
+use llmcompass::util::json::{diff_with_tolerance, Json};
+use std::path::{Path, PathBuf};
+
+/// Relative float tolerance for golden comparison: wide enough for libm
+/// differences across platforms, far tighter than any modeling change.
+const REL_TOL: f64 = 1e-9;
+const ABS_TOL: f64 = 1e-12;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn update_mode() -> bool {
+    std::env::var("GOLDEN_UPDATE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// CI gate: every `scenarios/*.json` file must parse as a valid
+/// `Scenario` — a malformed sample is a broken deliverable even before
+/// evaluation.
+#[test]
+fn every_scenario_file_parses() {
+    let dir = scenarios_dir();
+    let mut checked = 0;
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let sc = eval::Scenario::load(&path)
+            .unwrap_or_else(|e| panic!("scenario {} no longer parses: {e}", path.display()));
+        assert!(!sc.name.is_empty(), "{}: empty scenario name", path.display());
+        checked += 1;
+    }
+    assert!(checked >= 10, "expected the full sample suite, found {checked} files");
+}
+
+#[test]
+fn scenario_suite_matches_golden_reports() {
+    let suite = eval::load_suite(&scenarios_dir()).expect("scenarios/ loads as a suite");
+    std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
+    // Bootstrap only when NO goldens exist at all; with any golden
+    // checked in, a scenario lacking one is a failure, not a skip.
+    let bootstrap = std::fs::read_dir(golden_dir())
+        .map(|entries| {
+            !entries
+                .filter_map(|e| e.ok())
+                .any(|e| e.path().extension().map(|x| x == "json").unwrap_or(false))
+        })
+        .unwrap_or(true);
+    // Serial evaluator: deterministic mapper_rounds, shared cache across
+    // the suite (same winners as every other mode).
+    let ev = Evaluator::new();
+    let mut materialized: Vec<String> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    for sc in &suite {
+        let rep = ev
+            .evaluate(sc)
+            .unwrap_or_else(|e| panic!("scenario `{}` failed to evaluate: {e}", sc.name));
+        let actual = rep.to_json();
+        assert_eq!(
+            actual.get("schema_version").and_then(Json::as_u64),
+            Some(SCHEMA_VERSION),
+            "`{}`: report schema_version drifted",
+            sc.name
+        );
+        let path = golden_dir().join(format!("{}.json", sc.name));
+        if update_mode() || (bootstrap && !path.exists()) {
+            std::fs::write(&path, actual.to_string_pretty())
+                .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+            materialized.push(sc.name.clone());
+            continue;
+        }
+        if !path.exists() {
+            failures.push(format!(
+                "`{}`: no golden at {} — the gate is armed (goldens exist for other \
+                 scenarios); generate one with GOLDEN_UPDATE=1 and commit it\n",
+                sc.name,
+                path.display()
+            ));
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let expected = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("golden {} is not valid JSON: {e}", path.display()));
+        let diffs = diff_with_tolerance(&expected, &actual, REL_TOL, ABS_TOL);
+        if !diffs.is_empty() {
+            let mut msg = format!(
+                "`{}`: report drifted from {} ({} field(s)):\n",
+                sc.name,
+                path.display(),
+                diffs.len()
+            );
+            for d in &diffs {
+                msg.push_str(&format!("    {d}\n"));
+            }
+            failures.push(msg);
+        }
+    }
+
+    if !materialized.is_empty() {
+        println!(
+            "golden: materialized {} report(s) ({}) — commit tests/golden/ to lock them",
+            materialized.len(),
+            materialized.join(", ")
+        );
+    }
+    if !failures.is_empty() {
+        panic!(
+            "{}\n{}\nIntentional change? regenerate with \
+             `GOLDEN_UPDATE=1 cargo test --test integration_golden` and commit the diff.",
+            "golden-report regression:",
+            failures.join("\n")
+        );
+    }
+}
+
+/// Checked-in goldens must stay on schema v1 — bumping the schema is a
+/// deliberate act (update `SCHEMA_VERSION`, regenerate, and say so in the
+/// changelog), never a drive-by.
+#[test]
+fn golden_reports_lock_schema_v1() {
+    let dir = golden_dir();
+    let Ok(entries) = std::fs::read_dir(&dir) else {
+        println!("skipped: no goldens materialized yet (run the suite test first)");
+        return;
+    };
+    let mut seen = 0;
+    for e in entries.filter_map(|e| e.ok()) {
+        let path = e.path();
+        if path.extension().map(|x| x != "json").unwrap_or(true) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("golden {} unparseable: {e}", path.display()));
+        assert_eq!(
+            j.get("schema_version").and_then(Json::as_u64),
+            Some(1),
+            "{} is not schema v1",
+            path.display()
+        );
+        assert!(j.get("scenario").is_some(), "{} lacks the scenario echo", path.display());
+        assert!(j.get("results").is_some(), "{} lacks results", path.display());
+        seen += 1;
+    }
+    if seen == 0 {
+        println!("skipped: no goldens materialized yet (run the suite test first)");
+    }
+}
+
+/// The golden of the bursty chunked sample must carry the scheduler-v2
+/// serving counters — guards the report surface, not just the values.
+#[test]
+fn serving_reports_carry_scheduler_v2_counters() {
+    let suite = eval::load_suite(&scenarios_dir()).unwrap();
+    let sc = suite
+        .iter()
+        .find(|sc| sc.name == "a100-bursty-chunked")
+        .expect("bursty chunked sample scenario present");
+    let ev = Evaluator::new();
+    let rep = ev.evaluate(sc).unwrap();
+    let j = rep.to_json();
+    let stats = j
+        .get("results")
+        .and_then(|r| r.get("serving"))
+        .and_then(|s| s.get("stats"))
+        .expect("serving stats present");
+    for key in [
+        "mixed_iterations",
+        "mixed_busy_s",
+        "preemptions",
+        "preempted_requests",
+        "recompute_tokens",
+        "transfer_total_s",
+        "handoff_wait_s",
+        "prefill_peak_kv_tokens",
+    ] {
+        assert!(stats.get(key).is_some(), "serving stats lost `{key}`");
+    }
+    let summary = j
+        .get("results")
+        .and_then(|r| r.get("serving"))
+        .and_then(|s| s.get("summary"))
+        .unwrap();
+    assert!(summary.get("ttft_mean_s").is_some());
+    assert!(summary.get("tpot_mean_s").is_some());
+}

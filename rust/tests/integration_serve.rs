@@ -1,13 +1,41 @@
 //! Integration: the cluster serving simulator end to end — workload →
-//! continuous-batching scheduler → metrics → SLO cost sweep — on real
-//! hardware presets, including KV accounting for GPT-3-class models.
+//! scheduler v2 (monolithic / chunked / disaggregated, conservative /
+//! evict) → metrics → SLO cost sweep — on real hardware presets,
+//! including KV accounting for GPT-3-class models, the chunked-vs-
+//! monolithic TTFT acceptance criterion on the shipped bursty sample
+//! scenario, and byte-identical deterministic replay of `ServeReport`s.
 
+use llmcompass::eval::{self, Workload};
 use llmcompass::graph::inference::Simulator;
 use llmcompass::graph::ModelConfig;
-use llmcompass::hardware::presets;
+use llmcompass::hardware::{config, presets};
 use llmcompass::serve::{
-    self, kv_capacity_tokens, Arrival, Policy, SchedulerConfig, Slo, WorkloadSpec,
+    self, kv_capacity_tokens, Arrival, Policy, Preemption, SchedulerConfig, ServeMode, Slo,
+    WorkloadSpec,
 };
+use std::path::{Path, PathBuf};
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+/// Run one shipped traffic scenario through the exact configuration the
+/// evaluator would use, returning the full report.
+fn serve_scenario(name: &str) -> serve::ServeReport {
+    let suite = eval::load_suite(&scenarios_dir()).unwrap();
+    let sc = suite
+        .iter()
+        .find(|sc| sc.name == name)
+        .unwrap_or_else(|| panic!("scenario `{name}` missing from scenarios/"));
+    let Workload::Traffic(t) = &sc.workload else { panic!("`{name}` is not traffic") };
+    let sys = config::resolve(&sc.hardware).unwrap();
+    let model = eval::model_by_name(&t.model).unwrap();
+    let cfg = eval::scheduler_config_for(&sys, &model, t).unwrap();
+    let requests = eval::traffic_requests(t).unwrap();
+    let sim = Simulator::new();
+    let (report, _) = serve::serve_once(&sim, &sys, &model, &cfg, &requests, &t.slo);
+    report
+}
 
 #[test]
 fn thousand_requests_complete_with_consistent_accounting() {
@@ -16,8 +44,8 @@ fn thousand_requests_complete_with_consistent_accounting() {
     let model = ModelConfig::gpt_small();
     let cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
     let reqs = serve::workload::generate(&WorkloadSpec::poisson(30.0, 1000, 42));
-    let (summary, stats, per_req) =
-        serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::interactive());
+    let (report, per_req) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::interactive());
+    let (summary, stats) = (&report.summary, &report.stats);
 
     assert_eq!(summary.requests, 1000);
     let total_out: u64 = reqs.iter().map(|r| r.output_tokens).sum();
@@ -32,13 +60,16 @@ fn thousand_requests_complete_with_consistent_accounting() {
     assert!(summary.tpot_p50_s <= summary.tpot_p99_s);
     assert!(summary.goodput_tok_s <= summary.throughput_tok_s + 1e-12);
     assert!((0.0..=1.0).contains(&summary.slo_attainment));
-    // The busy/idle split covers the makespan (admission itself is free).
-    let accounted = stats.prefill_busy_s + stats.decode_busy_s + stats.idle_s;
+    // The busy/idle split covers the makespan (admission itself is free;
+    // monolithic mode has no mixed iterations).
+    let accounted = stats.prefill_busy_s + stats.decode_busy_s + stats.mixed_busy_s + stats.idle_s;
     assert!(
         (accounted - stats.makespan_s).abs() < 1e-6 * stats.makespan_s.max(1.0),
         "accounted {accounted:.3} vs makespan {:.3}",
         stats.makespan_s
     );
+    assert_eq!(stats.mixed_iterations, 0);
+    assert_eq!(stats.preemptions, 0);
     assert!(stats.peak_kv_tokens <= cfg.kv_capacity_tokens);
     assert!(stats.peak_batch <= cfg.max_batch);
 }
@@ -53,12 +84,9 @@ fn gpt3_on_a100x8_respects_kv_budget() {
     let budget = kv_capacity_tokens(&sys, &model);
     assert!((50_000..75_000).contains(&budget), "KV budget {budget}");
 
-    let cfg = SchedulerConfig {
-        max_batch: 8,
-        kv_capacity_tokens: budget,
-        policy: Policy::Fcfs,
-        max_prefill_batch: 4,
-    };
+    let mut cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
+    cfg.max_batch = 8;
+    cfg.max_prefill_batch = 4;
     let spec = WorkloadSpec {
         arrival: Arrival::Poisson { rate_per_s: 4.0 },
         prompt: serve::LengthDist::Fixed(512),
@@ -67,7 +95,8 @@ fn gpt3_on_a100x8_respects_kv_budget() {
         seed: 7,
     };
     let reqs = serve::workload::generate(&spec);
-    let (summary, stats, _) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+    let (report, _) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+    let (summary, stats) = (&report.summary, &report.stats);
     assert_eq!(summary.requests, 50);
     assert!(stats.peak_kv_tokens <= budget);
     assert!(stats.peak_kv_tokens >= 8 * (512 + 64), "batch never filled");
@@ -103,15 +132,13 @@ fn burst_arrivals_queue_worse_than_spaced_arrivals() {
     };
     let burst = mk(0.0);
     let spaced = mk(0.5);
-    let (b, _, _) = serve::serve_once(&sim, &sys, &model, &cfg, &burst, &Slo::interactive());
-    let (s, _, _) = serve::serve_once(&sim, &sys, &model, &cfg, &spaced, &Slo::interactive());
-    let b_ttft = b.ttft_p50_s + b.ttft_p99_s;
-    let s_ttft = s.ttft_p50_s + s.ttft_p99_s;
+    let (b, _) = serve::serve_once(&sim, &sys, &model, &cfg, &burst, &Slo::interactive());
+    let (s, _) = serve::serve_once(&sim, &sys, &model, &cfg, &spaced, &Slo::interactive());
     assert!(
-        b_ttft > s_ttft,
-        "burst TTFT (p50+p99) {:.4}s should exceed spaced {:.4}s",
-        b_ttft,
-        s_ttft
+        b.summary.ttft_mean_s > s.summary.ttft_mean_s,
+        "burst mean TTFT {:.4}s should exceed spaced {:.4}s",
+        b.summary.ttft_mean_s,
+        s.summary.ttft_mean_s
     );
     // The bursty arrival *process* also drives the scheduler end to end.
     let bursty = serve::workload::generate(&WorkloadSpec {
@@ -122,9 +149,105 @@ fn burst_arrivals_queue_worse_than_spaced_arrivals() {
         },
         ..WorkloadSpec::poisson(20.0, 200, 13)
     });
-    let (bp, _, _) = serve::serve_once(&sim, &sys, &model, &cfg, &bursty, &Slo::interactive());
-    assert_eq!(bp.requests, 200);
-    assert!(bp.throughput_tok_s > 0.0);
+    let (bp, _) = serve::serve_once(&sim, &sys, &model, &cfg, &bursty, &Slo::interactive());
+    assert_eq!(bp.summary.requests, 200);
+    assert!(bp.summary.throughput_tok_s > 0.0);
+}
+
+/// The scheduler-v2 acceptance criterion: on the shipped bursty sample
+/// scenario, chunked prefill strictly improves mean TTFT over monolithic
+/// execution of the *identical* seeded traffic. Monolithic pays padded
+/// whole-prompt batches under backlog (batch padded to the longest
+/// prompt, ~2x waste on 128–2048-uniform prompts); chunked processes
+/// exact token counts and piggybacks decodes, so the backlog drains
+/// faster.
+#[test]
+fn chunked_improves_mean_ttft_on_bursty_sample_scenario() {
+    let mono = serve_scenario("a100-bursty");
+    let chunked = serve_scenario("a100-bursty-chunked");
+    assert_eq!(
+        mono.summary.output_tokens, chunked.summary.output_tokens,
+        "the two samples must carry identical traffic"
+    );
+    assert!(
+        chunked.summary.ttft_mean_s < mono.summary.ttft_mean_s,
+        "chunked mean TTFT {:.4}s must beat monolithic {:.4}s on the bursty sample",
+        chunked.summary.ttft_mean_s,
+        mono.summary.ttft_mean_s
+    );
+    assert!(chunked.stats.mixed_iterations > 0, "chunked run never mixed an iteration");
+    // The trade: chunked's decodes ride long iterations, so its token
+    // pace cannot beat monolithic's dedicated decode steps by much —
+    // sanity-check both produced sane paces rather than degenerate runs.
+    assert!(chunked.summary.tpot_mean_s > 0.0 && mono.summary.tpot_mean_s > 0.0);
+}
+
+/// Disaggregated sample: phase splitting serves the whole trace, pays
+/// transfer latency on every handoff, and keeps both pools inside their
+/// KV budgets.
+#[test]
+fn disaggregated_sample_scenario_serves_with_handoff() {
+    let rep = serve_scenario("a100x4-disagg");
+    assert_eq!(rep.summary.requests, 48);
+    assert!(rep.summary.throughput_tok_s > 0.0);
+    assert!(rep.stats.transfer_total_s > 0.0, "no transfers in disaggregated mode");
+    assert!(rep.stats.prefill_peak_kv_tokens > 0);
+    assert!(rep.stats.prefill_iterations > 0 && rep.stats.decode_iterations > 0);
+}
+
+/// Evict sample: the clamped KV budget forces oversubscription; every
+/// request still completes and the counters surface in the report.
+#[test]
+fn evict_sample_scenario_preempts_and_completes() {
+    let rep = serve_scenario("a100-evict");
+    assert_eq!(rep.summary.requests, 40);
+    let total: u64 = rep.summary.output_tokens;
+    assert!(total > 0);
+    assert!(rep.stats.peak_kv_tokens <= 9_000, "clamped budget exceeded");
+    // The clamp is ~3 concurrent full footprints against max_batch 16 and
+    // a trace that arrives almost at once — optimistic admission must
+    // overshoot at least once.
+    assert!(
+        rep.stats.preemptions > 0,
+        "evict sample produced no preemption (peak {} tokens)",
+        rep.stats.peak_kv_tokens
+    );
+    assert!(rep.stats.recompute_tokens > 0);
+}
+
+/// Deterministic replay: two runs of the same seeded workload — through
+/// the work-stealing hybrid simulator, which exercises the shared worker
+/// pool — must produce byte-identical `ServeReport` JSON. Guards the
+/// discrete-event queues against ordering nondeterminism.
+#[test]
+fn deterministic_replay_is_byte_identical() {
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    let bursty = WorkloadSpec {
+        arrival: Arrival::Bursty { rate_per_s: 30.0, burst_multiplier: 6.0, mean_phase_requests: 20.0 },
+        ..WorkloadSpec::poisson(30.0, 120, 23)
+    };
+    for mode in [
+        ServeMode::Monolithic,
+        ServeMode::Chunked { chunk_tokens: 1024 },
+        ServeMode::Disaggregated { prefill_devices: 1, transfer_base_s: 1e-3 },
+    ] {
+        let mut cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
+        cfg.mode = mode;
+        cfg.preemption = Preemption::Evict;
+        cfg.kv_capacity_tokens = cfg.kv_capacity_tokens.min(40_000);
+        let run = || {
+            // A fresh hybrid simulator per run: mapper candidate loops
+            // fan over the shared worker pool, which must not leak
+            // nondeterminism into the report.
+            let sim = Simulator::hybrid();
+            let reqs = serve::workload::generate(&bursty);
+            let (report, _) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+            report.to_json().to_string_pretty()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "ServeReport JSON not byte-identical in {:?} mode", mode.name());
+    }
 }
 
 #[test]
@@ -135,9 +258,9 @@ fn trace_replay_drives_the_scheduler() {
     let cfg = SchedulerConfig::for_system(&sys, &model, Policy::ShortestPromptFirst);
     let text = "0.0,128,16\n0.01,64,8\n0.02,256,4\n";
     let reqs = serve::workload::parse_trace(text).unwrap();
-    let (summary, _, per_req) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
-    assert_eq!(summary.requests, 3);
-    assert_eq!(summary.output_tokens, 16 + 8 + 4);
+    let (report, per_req) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+    assert_eq!(report.summary.requests, 3);
+    assert_eq!(report.summary.output_tokens, 16 + 8 + 4);
     assert!(per_req.iter().all(|m| m.finish_s.is_finite()));
 }
 
@@ -147,5 +270,7 @@ fn serve_experiment_runs_quick() {
     let out = llmcompass::experiments::run("serve", &ctx).unwrap();
     assert!(out.contains("$/1M tok"), "missing cost column:\n{out}");
     assert!(out.contains("throughput-oriented"));
+    assert!(out.contains("scheduler-mode comparison"), "missing mode study:\n{out}");
+    assert!(out.contains("disaggregated"), "mode study lacks disaggregated:\n{out}");
     assert!(std::path::Path::new("reports/serve_sweep.csv").exists());
 }

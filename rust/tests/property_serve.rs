@@ -1,0 +1,165 @@
+//! Property tests for scheduler-v2 invariants, via `util::quick`:
+//!
+//! 1. KV occupancy never exceeds the configured capacity (per pool in
+//!    disaggregated mode), in every mode × preemption combination;
+//! 2. every admitted request either completes or is counted preempted —
+//!    and since the simulator runs traces to completion, *everything*
+//!    completes, preempted or not, with a sane timeline;
+//! 3. total generated tokens are conserved across
+//!    monolithic/chunked/disaggregated executions of the same trace.
+//!
+//! One shared `Simulator` keeps mapper searches cached across trials, so
+//! hundreds of random schedules cost oracle-cache lookups, not searches.
+
+use llmcompass::graph::inference::Simulator;
+use llmcompass::graph::ModelConfig;
+use llmcompass::hardware::presets;
+use llmcompass::serve::{
+    self, scheduler, Policy, Preemption, Request, SchedulerConfig, ServeMode,
+};
+use llmcompass::util::quick::{forall, Gen};
+
+/// Random trace whose largest request is bounded so capacity can be drawn
+/// relative to it.
+fn gen_trace(g: &mut Gen, n_max: usize) -> Vec<Request> {
+    let n = g.usize(3, n_max);
+    let mut t = 0.0;
+    (0..n as u64)
+        .map(|id| {
+            t += g.f64(0.0, 0.05);
+            Request {
+                id,
+                arrival_s: t,
+                prompt_tokens: g.u64(16, 600),
+                output_tokens: g.u64(1, 120),
+            }
+        })
+        .collect()
+}
+
+fn gen_mode(g: &mut Gen, device_count: u64) -> ServeMode {
+    match g.u64(0, if device_count >= 2 { 2 } else { 1 }) {
+        0 => ServeMode::Monolithic,
+        1 => ServeMode::Chunked { chunk_tokens: g.u64(48, 1024) },
+        _ => ServeMode::Disaggregated {
+            prefill_devices: g.u64(1, device_count - 1),
+            transfer_base_s: g.f64(0.0, 0.01),
+        },
+    }
+}
+
+fn gen_cfg(g: &mut Gen, sys_devices: u64, trace: &[Request]) -> SchedulerConfig {
+    let max_total = trace.iter().map(Request::total_tokens).max().unwrap();
+    let mode = gen_mode(g, sys_devices);
+    // Capacity between "tight" and "roomy", always ≥ what `validate`
+    // demands: the proportional pool split reserves the smallest share
+    // for a 1-device pool (1/devices), so scale past its inverse.
+    let headroom = g.u64(2 * sys_devices.max(1), 8 * sys_devices.max(1));
+    SchedulerConfig {
+        max_batch: g.u64(1, 24),
+        kv_capacity_tokens: max_total * headroom,
+        policy: *g.pick(&[Policy::Fcfs, Policy::ShortestPromptFirst]),
+        max_prefill_batch: g.u64(1, 8),
+        mode,
+        preemption: *g.pick(&[Preemption::Conservative, Preemption::Evict]),
+    }
+}
+
+#[test]
+fn kv_occupancy_never_exceeds_capacity() {
+    let sim = Simulator::new();
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    forall("kv occupancy ≤ capacity", 40, |g| {
+        let trace = gen_trace(g, 24);
+        let cfg = gen_cfg(g, sys.device_count, &trace);
+        let (pre_cap, dec_cap) = cfg.pool_budgets(sys.device_count);
+        let (_, stats) = scheduler::simulate(&sim, &sys, &model, &cfg, &trace);
+        let ok = stats.peak_kv_tokens <= dec_cap && stats.prefill_peak_kv_tokens <= pre_cap;
+        (
+            format!(
+                "mode {:?} preempt {:?} cap {} → peak {} (≤ {}), prefill peak {} (≤ {})",
+                cfg.mode,
+                cfg.preemption,
+                cfg.kv_capacity_tokens,
+                stats.peak_kv_tokens,
+                dec_cap,
+                stats.prefill_peak_kv_tokens,
+                pre_cap
+            ),
+            ok,
+        )
+    });
+}
+
+#[test]
+fn every_admitted_request_completes_or_is_counted_preempted() {
+    let sim = Simulator::new();
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    forall("complete or counted preempted", 40, |g| {
+        let trace = gen_trace(g, 24);
+        let cfg = gen_cfg(g, sys.device_count, &trace);
+        let (metrics, stats) = scheduler::simulate(&sim, &sys, &model, &cfg, &trace);
+        let all_finish = metrics.iter().all(|m| {
+            m.first_token_s.is_finite()
+                && m.finish_s.is_finite()
+                && m.first_token_s > m.arrival_s
+                && m.finish_s >= m.first_token_s
+        });
+        let counters_sane = stats.preempted_requests <= trace.len() as u64
+            && stats.preempted_requests <= stats.preemptions
+            && (cfg.preemption == Preemption::Evict || stats.preemptions == 0)
+            && (stats.preemptions == 0) == (stats.recompute_tokens == 0 && stats.preempted_requests == 0);
+        (
+            format!(
+                "mode {:?} preempt {:?}: finished {}, preemptions {} over {} requests",
+                cfg.mode,
+                cfg.preemption,
+                all_finish,
+                stats.preemptions,
+                stats.preempted_requests
+            ),
+            all_finish && counters_sane,
+        )
+    });
+}
+
+#[test]
+fn generated_tokens_conserved_across_modes_on_the_same_trace() {
+    let sim = Simulator::new();
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    forall("token conservation across modes", 25, |g| {
+        let trace = gen_trace(g, 16);
+        let expected: u64 = trace.iter().map(|r| r.output_tokens).sum();
+        let preemption = *g.pick(&[Preemption::Conservative, Preemption::Evict]);
+        let chunk = g.u64(48, 1024);
+        let prefill_devices = g.u64(1, sys.device_count - 1);
+        let max_total = trace.iter().map(Request::total_tokens).max().unwrap();
+        let headroom = g.u64(2 * sys.device_count, 6 * sys.device_count);
+        let totals: Vec<u64> = [
+            ServeMode::Monolithic,
+            ServeMode::Chunked { chunk_tokens: chunk },
+            ServeMode::Disaggregated { prefill_devices, transfer_base_s: 1e-3 },
+        ]
+        .into_iter()
+        .map(|mode| {
+            let cfg = SchedulerConfig {
+                max_batch: 12,
+                kv_capacity_tokens: max_total * headroom,
+                policy: Policy::Fcfs,
+                max_prefill_batch: 4,
+                mode,
+                preemption,
+            };
+            let (metrics, stats) = scheduler::simulate(&sim, &sys, &model, &cfg, &trace);
+            let summary =
+                serve::metrics::summarize(&metrics, &serve::Slo::relaxed(), stats.makespan_s);
+            summary.output_tokens
+        })
+        .collect();
+        let ok = totals.iter().all(|&t| t == expected);
+        (format!("expected {expected}, per mode {totals:?}"), ok)
+    });
+}
