@@ -23,6 +23,12 @@ cargo test --doc -q
 echo "== cargo test --test integration_golden =="
 cargo test --test integration_golden
 
+# Scenario-suite smoke through the real CLI: catches scenario-schema and
+# CLI-surface drift (flag parsing, suite fan-out, report emission) that
+# in-process unit tests miss.
+echo "== llmcompass eval --suite ../scenarios =="
+target/release/llmcompass eval --suite ../scenarios --compact > /dev/null
+
 if [[ "${1:-}" == "--fix" ]]; then
     echo "== cargo fmt =="
     cargo fmt

@@ -9,12 +9,13 @@
 //! seconds. [`Evaluator::evaluate_suite`] additionally fans scenarios
 //! across the [`crate::util::pool`] worker threads.
 
-use super::scenario::{Output, Scenario, TrafficSpec, Workload};
+use super::scenario::{build_graph, Output, Scenario, TrafficSpec, Workload};
 use crate::area::{die_breakdown, AreaParams, DieBreakdown};
 use crate::cost::{device_cost, CostParams, CostReport};
 use crate::graph::inference::{LayerReport, Simulator};
 use crate::graph::ModelConfig;
 use crate::hardware::{config, SystemSpec};
+use crate::perf::graph_sched::Schedule;
 use crate::perf::OpResult;
 use crate::serve;
 use crate::util::json::{num, obj, s, Json};
@@ -76,6 +77,8 @@ pub enum EvalResult {
     LayerLatency { layers: u64, per_layer: LayerReport },
     /// `latency` of a request workload (end-to-end seconds).
     RequestLatency { total_s: f64, tokens_per_s_per_request: f64 },
+    /// `latency` of a graph workload: the full DAG schedule.
+    GraphLatency { schedule: Schedule },
     /// `throughput` of a request workload (batch × decode tokens / total).
     Throughput { tokens_per_s: f64 },
     /// `area` of the device.
@@ -92,7 +95,8 @@ impl EvalResult {
         match self {
             EvalResult::OpLatency { .. }
             | EvalResult::LayerLatency { .. }
-            | EvalResult::RequestLatency { .. } => "latency",
+            | EvalResult::RequestLatency { .. }
+            | EvalResult::GraphLatency { .. } => "latency",
             EvalResult::Throughput { .. } => "throughput",
             EvalResult::Area(_) => "area",
             EvalResult::Cost(_) => "cost",
@@ -132,6 +136,41 @@ impl EvalResult {
                 ("kind", s("request")),
                 ("total_s", num(*total_s)),
                 ("tokens_per_s_per_request", num(*tokens_per_s_per_request)),
+            ]),
+            EvalResult::GraphLatency { schedule } => obj(vec![
+                ("kind", s("graph")),
+                ("total_s", num(schedule.total_s)),
+                ("critical_path_s", num(schedule.critical_path_s)),
+                ("serial_s", num(schedule.serial_s)),
+                (
+                    "resources",
+                    Json::Obj(
+                        schedule
+                            .resource_busy()
+                            .into_iter()
+                            .map(|(name, busy)| (name, num(busy)))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "nodes",
+                    Json::Arr(
+                        schedule
+                            .timings
+                            .iter()
+                            .map(|t| {
+                                obj(vec![
+                                    ("name", s(&t.name)),
+                                    ("stage", num(t.stage as f64)),
+                                    ("resource", s(if t.comm { "comm" } else { "compute" })),
+                                    ("start_s", num(t.start_s)),
+                                    ("finish_s", num(t.finish_s)),
+                                    ("latency_s", num(t.latency_s)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
             EvalResult::Throughput { tokens_per_s } => {
                 obj(vec![("kind", s("request")), ("tokens_per_s", num(*tokens_per_s))])
@@ -235,6 +274,21 @@ impl Evaluator {
         if sc.outputs.is_empty() {
             return Err(format!("scenario `{}` requests no outputs", sc.name));
         }
+        if let Some(p) = &sc.parallelism {
+            if matches!(
+                sc.workload,
+                Workload::Hardware | Workload::Traffic(_) | Workload::Op(_)
+            ) {
+                return Err(format!(
+                    "scenario `{}`: `parallelism` applies to layer/request/graph workloads",
+                    sc.name
+                ));
+            }
+            // Validate the device mapping up front so a typo'd scenario
+            // fails even when it only requests area/cost outputs.
+            p.validate(system.device_count)
+                .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
+        }
         let mut results = Vec::with_capacity(sc.outputs.len());
         for &out in &sc.outputs {
             let r = self.eval_output(&system, sc, out, &results)?;
@@ -266,6 +320,56 @@ impl Evaluator {
         crate::util::pool::parallel_map_shared(scenarios, |sc| self.evaluate(sc))
     }
 
+    /// The tensor-parallel degree a layer workload runs at: the scenario's
+    /// explicit mapping (pipeline-free, since one layer is one stage) or
+    /// the historical default of the whole system.
+    fn layer_tp_for(
+        &self,
+        system: &SystemSpec,
+        sc: &Scenario,
+        model: &ModelConfig,
+    ) -> Result<u64, String> {
+        let Some(p) = &sc.parallelism else { return Ok(system.device_count) };
+        p.validate(system.device_count).map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
+        if p.pp != 1 {
+            return Err(format!(
+                "scenario `{}`: a layer workload is a single pipeline stage (pp must be 1; \
+                 use a request or graph workload for pipeline parallelism)",
+                sc.name
+            ));
+        }
+        p.validate_heads(model.heads, &model.name)
+            .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
+        Ok(p.tp)
+    }
+
+    /// End-to-end seconds of a request workload under the scenario's
+    /// device mapping (shared by the `latency` and `throughput` outputs).
+    /// The layer count resolves through
+    /// [`ModelConfig::resolve_layers`] — the single clamp the evaluator
+    /// and the graph lowering both use.
+    #[allow(clippy::too_many_arguments)]
+    fn request_total_s(
+        &self,
+        system: &SystemSpec,
+        sc: &Scenario,
+        model: &str,
+        batch: u64,
+        prefill: u64,
+        decode: u64,
+        layers: Option<u64>,
+    ) -> Result<f64, String> {
+        let m = model_by_name(model)?;
+        let layers = m.resolve_layers(layers);
+        match &sc.parallelism {
+            None => Ok(self.sim.e2e_latency(system, &m, batch, prefill, decode, layers)),
+            Some(p) => self
+                .sim
+                .e2e_latency_parallel(system, &m, batch, prefill, decode, layers, p)
+                .map_err(|e| format!("scenario `{}`: {e}", sc.name)),
+        }
+    }
+
     fn eval_output(
         &self,
         system: &SystemSpec,
@@ -275,29 +379,51 @@ impl Evaluator {
     ) -> Result<EvalResult, String> {
         match out {
             Output::Latency => match &sc.workload {
+                // `parallelism` on an op workload is rejected up front in
+                // `evaluate`, together with hardware/traffic workloads.
                 Workload::Op(op) => Ok(EvalResult::OpLatency {
                     op_name: op.name().to_string(),
                     result: self.sim.op_latency(system, op),
                 }),
                 Workload::Layer { model, phase } => {
                     let m = model_by_name(model)?;
+                    let tp = self.layer_tp_for(system, sc, &m)?;
                     Ok(EvalResult::LayerLatency {
                         layers: m.layers,
-                        per_layer: self.sim.layer(system, &m, *phase),
+                        per_layer: self.sim.layer_tp(system, &m, *phase, tp),
                     })
                 }
                 Workload::Request { model, batch, prefill, decode, layers } => {
-                    let m = model_by_name(model)?;
-                    let layers = layers.unwrap_or(m.layers);
                     let total_s =
-                        self.sim.e2e_latency(system, &m, *batch, *prefill, *decode, layers);
+                        self.request_total_s(system, sc, model, *batch, *prefill, *decode, *layers)?;
                     Ok(EvalResult::RequestLatency {
                         total_s,
                         tokens_per_s_per_request: *decode as f64 / total_s,
                     })
                 }
+                Workload::Graph { nodes, edges } => {
+                    let base = build_graph(nodes, edges)
+                        .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
+                    let g = match &sc.parallelism {
+                        None => base,
+                        Some(p) => {
+                            p.validate(system.device_count)
+                                .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
+                            let g = base
+                                .tensor_parallel(p.tp)
+                                .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
+                            if p.pp > 1 {
+                                g.pipeline_parallel(p.pp, p.microbatches)
+                                    .map_err(|e| format!("scenario `{}`: {e}", sc.name))?
+                            } else {
+                                g
+                            }
+                        }
+                    };
+                    Ok(EvalResult::GraphLatency { schedule: self.sim.schedule_graph(system, &g) })
+                }
                 Workload::Traffic(_) => Err(format!(
-                    "scenario `{}`: `latency` needs an op/layer/request workload \
+                    "scenario `{}`: `latency` needs an op/layer/request/graph workload \
                      (traffic scenarios report `serving`)",
                     sc.name
                 )),
@@ -316,11 +442,8 @@ impl Evaluator {
                     });
                     let total_s = match total_s {
                         Some(t) => t,
-                        None => {
-                            let m = model_by_name(model)?;
-                            let layers = layers.unwrap_or(m.layers);
-                            self.sim.e2e_latency(system, &m, *batch, *prefill, *decode, layers)
-                        }
+                        None => self
+                            .request_total_s(system, sc, model, *batch, *prefill, *decode, *layers)?,
                     };
                     Ok(EvalResult::Throughput {
                         tokens_per_s: (*batch * *decode) as f64 / total_s,
@@ -391,6 +514,10 @@ pub fn scheduler_config_for(
     cfg.max_batch = t.max_batch;
     cfg.mode = t.mode.resolved(system.device_count)?;
     cfg.preemption = t.preemption;
+    if t.handoff_capacity == Some(0) {
+        return Err("traffic handoff_capacity must be ≥ 1".to_string());
+    }
+    cfg.handoff_capacity = t.handoff_capacity;
     if let Some(clamp) = t.max_kv_tokens {
         if clamp == 0 {
             return Err("traffic max_kv_tokens must be ≥ 1".to_string());
@@ -534,6 +661,139 @@ mod tests {
         assert!(sr.cluster_cost_usd > 0.0);
         assert!(sr.usd_per_mtok > 0.0);
         let EvalResult::Cost(_) = &rep.results[1] else { panic!("expected cost") };
+    }
+
+    #[test]
+    fn graph_scenario_schedules_branches_with_overlap() {
+        // ln → (left, right) → join: the two branch matmuls are
+        // independent, but on a single device (one compute resource) they
+        // serialize — the schedule must equal the serial sum. The report
+        // carries the full timeline.
+        let mm = |m, k, n| Op::Matmul { b: 1, m, k, n, dtype: DType::FP16, batched_b: false };
+        let sc = Scenario::parse(
+            r#"{"name": "branchy", "hardware": "a100",
+                "workload": {"type": "graph", "nodes": [
+                    {"name": "ln", "op": "layernorm", "dims": [256, 512]},
+                    {"name": "left", "op": "matmul", "dims": [256, 512, 512], "deps": ["ln"]},
+                    {"name": "right", "op": "matmul", "dims": [256, 512, 512], "deps": ["ln"]},
+                    {"name": "join", "op": "gelu", "dims": [131072], "deps": ["left", "right"]}
+                ]}}"#,
+        )
+        .unwrap();
+        let ev = Evaluator::new();
+        let rep = ev.evaluate(&sc).unwrap();
+        let EvalResult::GraphLatency { schedule } = &rep.results[0] else {
+            panic!("expected graph latency")
+        };
+        assert_eq!(schedule.timings.len(), 4);
+        assert_eq!(schedule.total_s.to_bits(), schedule.serial_s.to_bits());
+        assert!(schedule.critical_path_s < schedule.serial_s, "branches off the critical path");
+        // Spot-check one node against direct simulation.
+        let sys = crate::hardware::presets::system("a100").unwrap();
+        let direct = ev.sim.op_latency(&sys, &mm(256, 512, 512)).latency_s;
+        assert_eq!(schedule.timings[1].latency_s.to_bits(), direct.to_bits());
+        // JSON carries the schedule.
+        let j = rep.to_json();
+        let lat = j.get("results").unwrap().get("latency").unwrap();
+        assert_eq!(lat.get("kind").and_then(Json::as_str), Some("graph"));
+        assert!(lat.get("nodes").is_some());
+        assert!(lat.get("resources").unwrap().get("compute:0").is_some());
+    }
+
+    #[test]
+    fn parallelism_routes_and_validates() {
+        use crate::graph::ir::Parallelism;
+        let ev = Evaluator::new();
+        // Request with explicit tp == device_count matches the legacy path.
+        let req = Scenario::new(
+            "req",
+            "a100x2",
+            Workload::Request {
+                model: "gpt-small".into(),
+                batch: 4,
+                prefill: 64,
+                decode: 8,
+                layers: Some(2),
+            },
+        );
+        let legacy = ev.evaluate(&req).unwrap();
+        let explicit = ev
+            .evaluate(&req.clone().with_parallelism(Parallelism { tp: 2, pp: 1, microbatches: 1 }))
+            .unwrap();
+        let total = |rep: &EvalReport| match &rep.results[0] {
+            EvalResult::RequestLatency { total_s, .. } => *total_s,
+            _ => panic!("expected request latency"),
+        };
+        assert_eq!(total(&legacy).to_bits(), total(&explicit).to_bits());
+        // A mapping that does not match the system errors.
+        let bad = req.clone().with_parallelism(Parallelism { tp: 4, pp: 1, microbatches: 1 });
+        assert!(ev.evaluate(&bad).unwrap_err().contains("devices"));
+        // Parallelism on traffic workloads is rejected.
+        let t = traffic_scenario("t", "ga100")
+            .with_parallelism(Parallelism { tp: 1, pp: 1, microbatches: 1 });
+        assert!(ev.evaluate(&t).is_err());
+        // ... and on op workloads, regardless of the requested outputs.
+        let o = op_scenario("op", "a100")
+            .with_outputs(&[Output::Area, Output::Cost])
+            .with_parallelism(Parallelism { tp: 1, pp: 1, microbatches: 1 });
+        assert!(ev.evaluate(&o).is_err());
+        // An impossible mapping fails even when only area/cost outputs
+        // are requested (nothing would otherwise touch it).
+        let l = Scenario::new(
+            "l-area",
+            "a100",
+            Workload::Layer {
+                model: "gpt-small".into(),
+                phase: Phase::Prefill { batch: 2, seq: 64 },
+            },
+        )
+        .with_outputs(&[Output::Area, Output::Cost])
+        .with_parallelism(Parallelism { tp: 3, pp: 5, microbatches: 1 });
+        assert!(ev.evaluate(&l).unwrap_err().contains("devices"));
+        // Layer workloads accept tp but not pp.
+        let layer = Scenario::new(
+            "l",
+            "a100x2",
+            Workload::Layer {
+                model: "gpt-small".into(),
+                phase: Phase::Prefill { batch: 2, seq: 64 },
+            },
+        );
+        assert!(ev
+            .evaluate(&layer.clone().with_parallelism(Parallelism { tp: 2, pp: 1, microbatches: 1 }))
+            .is_ok());
+        let err = ev
+            .evaluate(&layer.with_parallelism(Parallelism { tp: 1, pp: 2, microbatches: 1 }))
+            .unwrap_err();
+        assert!(err.contains("single pipeline stage"), "{err}");
+    }
+
+    #[test]
+    fn request_layer_clamp_is_shared() {
+        // layers beyond the model depth clamp to the full model — the
+        // evaluator and the graph lowering agree by construction because
+        // both call ModelConfig::resolve_layers.
+        let ev = Evaluator::new();
+        let mk = |layers| {
+            Scenario::new(
+                "req",
+                "a100",
+                Workload::Request {
+                    model: "gpt-small".into(),
+                    batch: 1,
+                    prefill: 32,
+                    decode: 4,
+                    layers,
+                },
+            )
+        };
+        let full = ev.evaluate(&mk(None)).unwrap();
+        let clamped = ev.evaluate(&mk(Some(10_000))).unwrap();
+        let total = |rep: &EvalReport| match &rep.results[0] {
+            EvalResult::RequestLatency { total_s, .. } => *total_s,
+            _ => panic!("expected request latency"),
+        };
+        assert_eq!(total(&full).to_bits(), total(&clamped).to_bits());
     }
 
     #[test]

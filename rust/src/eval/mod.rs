@@ -8,9 +8,11 @@
 //!
 //! * [`Scenario`] — a typed description of *what to evaluate*: a hardware
 //!   target (preset name, `<name>xN` system, or JSON file), a workload
-//!   (operator, Transformer layer, end-to-end request, or serving
-//!   traffic), and the requested [`Output`]s. Builder-constructed in code
-//!   or loaded from JSON; `to_json`/`parse` round-trip losslessly.
+//!   (operator, Transformer layer, end-to-end request, arbitrary operator
+//!   graph, or serving traffic), an optional `{tp, pp, microbatches}`
+//!   device mapping, and the requested [`Output`]s. Builder-constructed
+//!   in code or loaded from JSON; `to_json`/`parse` round-trip
+//!   losslessly.
 //! * [`Evaluator`] — turns scenarios into [`EvalReport`]s with a stable
 //!   JSON schema, routing each output through the right model (mapper +
 //!   graph simulation, area, cost, or the serving simulator). One
@@ -31,4 +33,5 @@ pub use evaluator::{
     load_suite, model_by_name, scheduler_config_for, traffic_requests, EvalReport, EvalResult,
     Evaluator, ServingReport, SCHEMA_VERSION,
 };
-pub use scenario::{Output, Scenario, TrafficSpec, Workload};
+pub use crate::graph::ir::Parallelism;
+pub use scenario::{build_graph, GraphNodeSpec, Output, Scenario, TrafficSpec, Workload};

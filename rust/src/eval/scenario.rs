@@ -2,7 +2,7 @@
 //! evaluation — a hardware target, a workload, and the requested outputs.
 //!
 //! A scenario names its hardware the same way the CLI does (a preset like
-//! `a100`, a system like `ga100x8`, or a JSON file path), picks one of five
+//! `a100`, a system like `ga100x8`, or a JSON file path), picks one of six
 //! workload kinds, and lists the outputs it wants:
 //!
 //! | workload   | meaning                                              |
@@ -11,13 +11,21 @@
 //! | `op`       | one operator (matmul / softmax / layernorm / gelu …) |
 //! | `layer`    | one Transformer layer at a prefill/decode phase      |
 //! | `request`  | one end-to-end request (prefill + decode tokens)     |
+//! | `graph`    | an arbitrary operator DAG (named nodes + edges)      |
 //! | `traffic`  | an open-loop trace through the serving simulator     |
+//!
+//! A scenario may also carry a `parallelism` object (`{tp, pp,
+//! microbatches}`) mapping the workload onto the system's devices:
+//! `tp`-way tensor parallelism inside each of `pp` pipeline stages, with
+//! requests split into `microbatches`. Absent, the historical default
+//! applies (tensor parallelism across all devices).
 //!
 //! Scenarios are built with the struct constructors here or parsed from
 //! JSON (`Scenario::parse` / `Scenario::load`); `to_json` round-trips
 //! losslessly, which the tests assert both structurally and by evaluating
 //! the reparsed scenario to identical numbers.
 
+use crate::graph::ir::{self, Parallelism};
 use crate::graph::layer::Phase;
 use crate::hardware::DType;
 use crate::perf::Op;
@@ -136,6 +144,11 @@ pub struct TrafficSpec {
     /// hypothetical memory budget (or forces KV pressure for preemption
     /// studies) without editing the hardware description.
     pub max_kv_tokens: Option<u64>,
+    /// Disaggregated mode: bound on prefilled-but-not-yet-decoding
+    /// sequences in the KV-handoff queue — the prefill pool stalls
+    /// instead of queueing unboundedly. `None` derives the decode pool's
+    /// KV budget in (mean-trace-length) sequences.
+    pub handoff_capacity: Option<u64>,
     pub slo: Slo,
     pub seed: u64,
 }
@@ -155,6 +168,7 @@ impl TrafficSpec {
             mode: ServeMode::Monolithic,
             preemption: Preemption::Conservative,
             max_kv_tokens: None,
+            handoff_capacity: None,
             slo: Slo::interactive(),
             seed: 42,
         }
@@ -167,6 +181,13 @@ pub const DEFAULT_CHUNK_TOKENS: u64 = 2048;
 /// Default handoff base latency of disaggregated mode, seconds.
 pub const DEFAULT_TRANSFER_BASE_S: f64 = 1e-3;
 
+/// One node of a `graph` workload: a named operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphNodeSpec {
+    pub name: String,
+    pub op: Op,
+}
+
 /// The workload a scenario evaluates.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Workload {
@@ -178,10 +199,60 @@ pub enum Workload {
     Layer { model: String, phase: Phase },
     /// One end-to-end request: prefill `prefill` tokens, then generate
     /// `decode` tokens, at batch size `batch`. `layers` defaults to the
-    /// whole model.
+    /// whole model (and is clamped to it — see
+    /// [`crate::graph::ModelConfig::resolve_layers`]).
     Request { model: String, batch: u64, prefill: u64, decode: u64, layers: Option<u64> },
+    /// An arbitrary operator DAG: named nodes plus `(from, to)` dependency
+    /// edges. Nodes must be listed in topological order (edges point from
+    /// an earlier node to a later one), which makes the DAG property a
+    /// parse-time check instead of a runtime surprise. Lowered onto
+    /// [`crate::graph::ir::Graph`] and scheduled by
+    /// `perf::graph_sched`; the scenario's `parallelism` knobs apply the
+    /// `tensor_parallel` / `pipeline_parallel` transforms first.
+    Graph { nodes: Vec<GraphNodeSpec>, edges: Vec<(String, String)> },
     /// An open-loop trace through the cluster serving simulator.
     Traffic(TrafficSpec),
+}
+
+/// Build the IR graph of a `graph` workload. Node names must be unique;
+/// edges must reference known names and point forward in list order.
+pub fn build_graph(
+    nodes: &[GraphNodeSpec],
+    edges: &[(String, String)],
+) -> Result<ir::Graph, String> {
+    if nodes.is_empty() {
+        return Err("graph workload needs at least one node".to_string());
+    }
+    let mut index: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+    for (i, n) in nodes.iter().enumerate() {
+        if n.name.is_empty() {
+            return Err("graph node names must be non-empty".to_string());
+        }
+        if index.insert(n.name.as_str(), i).is_some() {
+            return Err(format!("duplicate graph node name `{}`", n.name));
+        }
+    }
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for (from, to) in edges {
+        let f = *index
+            .get(from.as_str())
+            .ok_or_else(|| format!("graph edge from unknown node `{from}`"))?;
+        let t = *index
+            .get(to.as_str())
+            .ok_or_else(|| format!("graph edge to unknown node `{to}`"))?;
+        if f >= t {
+            return Err(format!(
+                "graph edge `{from}` -> `{to}` must point from an earlier node to a later \
+                 one (list nodes in topological order)"
+            ));
+        }
+        preds[t].push(f);
+    }
+    let mut g = ir::Graph::new();
+    for (i, n) in nodes.iter().enumerate() {
+        g.add(n.name.clone(), n.op.clone(), &preds[i]);
+    }
+    Ok(g)
 }
 
 impl Workload {
@@ -198,6 +269,31 @@ impl Workload {
         match self {
             Workload::Hardware => obj(vec![("type", s("hardware"))]),
             Workload::Op(op) => op_to_json(op),
+            Workload::Graph { nodes, edges } => obj(vec![
+                ("type", s("graph")),
+                (
+                    "nodes",
+                    Json::Arr(
+                        nodes
+                            .iter()
+                            .map(|n| {
+                                let mut fields = vec![("name", s(&n.name))];
+                                fields.extend(op_fields(&n.op));
+                                obj(fields)
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "edges",
+                    Json::Arr(
+                        edges
+                            .iter()
+                            .map(|(f, t)| Json::Arr(vec![s(f), s(t)]))
+                            .collect(),
+                    ),
+                ),
+            ]),
             Workload::Layer { model, phase } => {
                 let mut fields = vec![("type", s("layer")), ("model", s(model))];
                 match *phase {
@@ -258,6 +354,9 @@ impl Workload {
                 if let Some(kv) = t.max_kv_tokens {
                     fields.push(("max_kv_tokens", num(kv as f64)));
                 }
+                if let Some(cap) = t.handoff_capacity {
+                    fields.push(("handoff_capacity", num(cap as f64)));
+                }
                 if let Some(m) = t.burst_multiplier {
                     fields.push(("burst_multiplier", num(m)));
                 }
@@ -293,6 +392,59 @@ impl Workload {
                 decode: v.req_u64("decode").map_err(jerr)?,
                 layers: opt_u64(v, "layers")?,
             }),
+            "graph" => {
+                let Some(Json::Arr(items)) = v.get("nodes") else {
+                    return Err("graph workload needs a `nodes` array".to_string());
+                };
+                let mut nodes: Vec<GraphNodeSpec> = Vec::with_capacity(items.len());
+                let mut edges: Vec<(String, String)> = Vec::new();
+                for item in items {
+                    let name = item.req_str("name").map_err(jerr)?.to_string();
+                    let op = op_from_json(item)?;
+                    // Per-node `deps` are sugar for edges into this node.
+                    match item.get("deps") {
+                        None => {}
+                        Some(Json::Arr(deps)) => {
+                            for d in deps {
+                                let dep = d.as_str().ok_or_else(|| {
+                                    "graph node `deps` must be node names".to_string()
+                                })?;
+                                edges.push((dep.to_string(), name.clone()));
+                            }
+                        }
+                        Some(_) => {
+                            return Err("graph node `deps` must be an array".to_string())
+                        }
+                    }
+                    nodes.push(GraphNodeSpec { name, op });
+                }
+                match v.get("edges") {
+                    None => {}
+                    Some(Json::Arr(items)) => {
+                        for item in items {
+                            let Json::Arr(pair) = item else {
+                                return Err(
+                                    "graph `edges` must be [from, to] pairs".to_string()
+                                );
+                            };
+                            let [f, t] = pair.as_slice() else {
+                                return Err(
+                                    "graph `edges` must be [from, to] pairs".to_string()
+                                );
+                            };
+                            let (Some(f), Some(t)) = (f.as_str(), t.as_str()) else {
+                                return Err("graph edge endpoints must be node names".to_string());
+                            };
+                            edges.push((f.to_string(), t.to_string()));
+                        }
+                    }
+                    Some(_) => return Err("graph `edges` must be an array".to_string()),
+                }
+                // Validate now so bad files fail at parse time, not when
+                // the evaluator lowers the workload.
+                build_graph(&nodes, &edges)?;
+                Ok(Workload::Graph { nodes, edges })
+            }
             "traffic" => {
                 let trace = opt_str(v, "trace")?.map(str::to_string);
                 let rate_per_s = match opt_f64(v, "rate_per_s")? {
@@ -358,19 +510,29 @@ impl Workload {
                     mode,
                     preemption,
                     max_kv_tokens: opt_u64(v, "max_kv_tokens")?,
+                    handoff_capacity: opt_u64(v, "handoff_capacity")?,
                     slo,
                     seed: opt_u64(v, "seed")?.unwrap_or(42),
                 }))
             }
             other => Err(format!(
-                "unknown workload type `{other}` (hardware | op | layer | request | traffic)"
+                "unknown workload type `{other}` (hardware | op | layer | request | graph | \
+                 traffic)"
             )),
         }
     }
 }
 
 fn op_to_json(op: &Op) -> Json {
-    let mut fields = vec![("type", s("op")), ("op", s(op.name()))];
+    let mut fields = vec![("type", s("op"))];
+    fields.extend(op_fields(op));
+    obj(fields)
+}
+
+/// The op-describing JSON fields (`op`, `dims`, `dtype`, …) shared by the
+/// `op` workload and `graph` workload nodes. [`op_from_json`] parses them.
+fn op_fields(op: &Op) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![("op", s(op.name()))];
     let dims = |vals: &[u64]| Json::Arr(vals.iter().map(|&d| num(d as f64)).collect());
     match *op {
         Op::Matmul { b, m, k, n, dtype, batched_b } => {
@@ -397,7 +559,7 @@ fn op_to_json(op: &Op) -> Json {
         }
         Op::PeerToPeer { bytes } => fields.push(("bytes", num(bytes as f64))),
     }
-    obj(fields)
+    fields
 }
 
 fn op_from_json(v: &Json) -> Result<Op, String> {
@@ -457,13 +619,18 @@ fn anchor_path(value: &mut String, dir: &std::path::Path) {
     }
 }
 
-/// One evaluation scenario: hardware target, workload, requested outputs.
+/// One evaluation scenario: hardware target, workload, requested outputs,
+/// and (optionally) how the workload maps onto the system's devices.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
     pub name: String,
     /// Hardware target: preset (`a100`), system (`ga100x8`), or JSON path.
     pub hardware: String,
     pub workload: Workload,
+    /// `{tp, pp, microbatches}` device mapping for layer/request/graph
+    /// workloads. `None` keeps the historical default: tensor parallelism
+    /// across every device.
+    pub parallelism: Option<Parallelism>,
     pub outputs: Vec<Output>,
 }
 
@@ -471,7 +638,19 @@ impl Scenario {
     /// A scenario with the workload's default outputs.
     pub fn new(name: &str, hardware: &str, workload: Workload) -> Scenario {
         let outputs = workload.default_outputs();
-        Scenario { name: name.to_string(), hardware: hardware.to_string(), workload, outputs }
+        Scenario {
+            name: name.to_string(),
+            hardware: hardware.to_string(),
+            workload,
+            parallelism: None,
+            outputs,
+        }
+    }
+
+    /// Set the device mapping (`tp × pp` must equal the device count).
+    pub fn with_parallelism(mut self, par: Parallelism) -> Scenario {
+        self.parallelism = Some(par);
+        self
     }
 
     /// Append an output (no-op if already requested).
@@ -494,12 +673,23 @@ impl Scenario {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("name", s(&self.name)),
             ("hardware", s(&self.hardware)),
             ("workload", self.workload.to_json()),
-            ("outputs", Json::Arr(self.outputs.iter().map(|o| s(o.name())).collect())),
-        ])
+        ];
+        if let Some(p) = &self.parallelism {
+            fields.push((
+                "parallelism",
+                obj(vec![
+                    ("tp", num(p.tp as f64)),
+                    ("pp", num(p.pp as f64)),
+                    ("microbatches", num(p.microbatches as f64)),
+                ]),
+            ));
+        }
+        fields.push(("outputs", Json::Arr(self.outputs.iter().map(|o| s(o.name())).collect())));
+        obj(fields)
     }
 
     /// Parse a scenario from an already-parsed JSON value. A missing
@@ -530,10 +720,34 @@ impl Scenario {
             }
             Some(_) => return Err("scenario `outputs` must be an array".to_string()),
         };
+        let parallelism = match v.get("parallelism") {
+            None => None,
+            Some(p) => {
+                if p.as_obj().is_none() {
+                    return Err(
+                        "scenario `parallelism` must be an object like \
+                         {\"tp\": 1, \"pp\": 1, \"microbatches\": 1}"
+                            .to_string(),
+                    );
+                }
+                let par = Parallelism {
+                    tp: opt_u64(p, "tp")?.unwrap_or(1),
+                    pp: opt_u64(p, "pp")?.unwrap_or(1),
+                    microbatches: opt_u64(p, "microbatches")?.unwrap_or(1),
+                };
+                if par.tp == 0 || par.pp == 0 || par.microbatches == 0 {
+                    return Err(
+                        "parallelism tp / pp / microbatches must all be ≥ 1".to_string()
+                    );
+                }
+                Some(par)
+            }
+        };
         Ok(Scenario {
             name: opt_str(v, "name")?.unwrap_or("scenario").to_string(),
             hardware: v.req_str("hardware").map_err(jerr)?.to_string(),
             workload,
+            parallelism,
             outputs,
         })
     }
@@ -638,6 +852,150 @@ mod tests {
         let mut t = TrafficSpec::poisson("gpt-small", 30.0, 64);
         t.mode = ServeMode::Disaggregated { prefill_devices: 0, transfer_base_s: 1e-3 };
         round_trip(&Scenario::new("disagg-auto", "a100x4", Workload::Traffic(t)));
+    }
+
+    fn branchy_graph() -> Workload {
+        let mm = |m, k, n| Op::Matmul { b: 1, m, k, n, dtype: DType::FP16, batched_b: false };
+        Workload::Graph {
+            nodes: vec![
+                GraphNodeSpec { name: "ln".into(), op: Op::LayerNorm { m: 256, n: 512, dtype: DType::FP16 } },
+                GraphNodeSpec { name: "left".into(), op: mm(256, 512, 512) },
+                GraphNodeSpec { name: "right".into(), op: mm(256, 512, 512) },
+                GraphNodeSpec { name: "join".into(), op: Op::Gelu { elements: 256 * 512, dtype: DType::FP16 } },
+            ],
+            edges: vec![
+                ("ln".into(), "left".into()),
+                ("ln".into(), "right".into()),
+                ("left".into(), "join".into()),
+                ("right".into(), "join".into()),
+            ],
+        }
+    }
+
+    #[test]
+    fn graph_workload_round_trips_and_builds() {
+        let sc = Scenario::new("g", "a100", branchy_graph());
+        assert_eq!(sc.outputs, vec![Output::Latency]);
+        round_trip(&sc);
+        let Workload::Graph { nodes, edges } = &sc.workload else { panic!("not graph") };
+        let g = build_graph(nodes, edges).unwrap();
+        assert_eq!(g.len(), 4);
+        assert!(!g.is_chain());
+        assert_eq!(g.preds(3), &[1, 2]);
+        // With parallelism knobs attached.
+        round_trip(&sc.clone().with_parallelism(Parallelism { tp: 2, pp: 1, microbatches: 1 }));
+    }
+
+    #[test]
+    fn graph_deps_sugar_becomes_edges() {
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "graph", "nodes": [
+                  {"name": "a", "op": "matmul", "dims": [64, 64, 64]},
+                  {"name": "b", "op": "gelu", "dims": [4096], "deps": ["a"]}
+                ]}}"#,
+        )
+        .unwrap();
+        let Workload::Graph { edges, .. } = &sc.workload else { panic!("not graph") };
+        assert_eq!(edges, &[("a".to_string(), "b".to_string())]);
+        round_trip(&sc);
+    }
+
+    #[test]
+    fn bad_graph_workloads_error_at_parse_time() {
+        for (bad, why) in [
+            (
+                r#"{"hardware": "a100", "workload": {"type": "graph", "nodes": []}}"#,
+                "empty graph",
+            ),
+            (
+                r#"{"hardware": "a100", "workload": {"type": "graph", "nodes": [
+                      {"name": "a", "op": "matmul", "dims": [8, 8, 8]},
+                      {"name": "a", "op": "gelu", "dims": [64]}]}}"#,
+                "duplicate names",
+            ),
+            (
+                r#"{"hardware": "a100", "workload": {"type": "graph", "nodes": [
+                      {"name": "a", "op": "matmul", "dims": [8, 8, 8], "deps": ["z"]}]}}"#,
+                "unknown dep",
+            ),
+            (
+                r#"{"hardware": "a100", "workload": {"type": "graph", "nodes": [
+                      {"name": "a", "op": "matmul", "dims": [8, 8, 8], "deps": ["b"]},
+                      {"name": "b", "op": "gelu", "dims": [64]}]}}"#,
+                "backward edge (cycle bait)",
+            ),
+            (
+                r#"{"hardware": "a100", "workload": {"type": "graph", "nodes": [
+                      {"name": "a", "op": "matmul", "dims": [8, 8, 8]}],
+                    "edges": [["a"]]}}"#,
+                "malformed edge pair",
+            ),
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted {why}: {bad}");
+        }
+    }
+
+    #[test]
+    fn parallelism_knobs_round_trip_and_validate() {
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100x4", "parallelism": {"pp": 4, "microbatches": 8},
+                "workload": {"type": "request", "model": "gpt3-175b",
+                             "batch": 8, "prefill": 2048, "decode": 4}}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.parallelism, Some(Parallelism { tp: 1, pp: 4, microbatches: 8 }));
+        round_trip(&sc);
+        // Zero degrees reject the file.
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100", "parallelism": {"tp": 0},
+                "workload": {"type": "hardware"}}"#,
+        )
+        .is_err());
+        // Mistyped values reject the file.
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100", "parallelism": {"tp": "four"},
+                "workload": {"type": "hardware"}}"#,
+        )
+        .is_err());
+        // A non-object parallelism value rejects the file rather than
+        // silently defaulting every degree to 1.
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100", "parallelism": "tp4",
+                "workload": {"type": "hardware"}}"#,
+        )
+        .is_err());
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100", "parallelism": [4, 1, 1],
+                "workload": {"type": "hardware"}}"#,
+        )
+        .is_err());
+        // Absent parallelism stays absent (legacy scenarios unchanged).
+        let sc = Scenario::parse(r#"{"hardware": "a100", "workload": {"type": "hardware"}}"#)
+            .unwrap();
+        assert_eq!(sc.parallelism, None);
+        assert!(sc.to_json().get("parallelism").is_none());
+    }
+
+    #[test]
+    fn handoff_capacity_round_trips() {
+        let mut t = TrafficSpec::poisson("gpt-small", 30.0, 64);
+        t.mode = ServeMode::Disaggregated { prefill_devices: 1, transfer_base_s: 0.002 };
+        t.handoff_capacity = Some(4);
+        round_trip(&Scenario::new("disagg-capped", "a100x4", Workload::Traffic(t)));
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100x4", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "mode": "disaggregated",
+                "handoff_capacity": 2}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(t.handoff_capacity, Some(2));
+        // Mistyped value rejects the file.
+        assert!(Scenario::parse(
+            r#"{"hardware": "a100x4", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "handoff_capacity": "two"}}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! End-to-end inference simulation: per-layer latency, prefill/decode,
 //! KV-growth integration, memory-capacity batch sizing, and pipeline-
-//! parallel throughput (paper §IV experimental setup and §V designs).
+//! parallel requests/throughput (paper §IV experimental setup and §V
+//! designs).
+//!
+//! Every workload is lowered onto the operator-graph IR
+//! ([`crate::graph::ir`]) and simulated by scheduling the DAG
+//! ([`crate::perf::graph_sched`]): a layer is a chain (which schedules to
+//! exactly the serial op walk, bit for bit), and a pipeline-parallel
+//! request is a stages × microbatches grid whose fill/drain bubbles and
+//! compute/communication overlap fall out of the schedule.
 
-use super::layer::{layer_ops, NamedOp, Phase};
+use super::ir::{Graph, NodeId, Parallelism};
+use super::layer::{append_layer_stack, layer_graph, Phase};
 use super::ModelConfig;
 use crate::hardware::{DeviceSpec, SystemSpec};
+use crate::perf::graph_sched::{self, Schedule};
 use crate::perf::mapper::Mapper;
 use crate::perf::matmul::Shape;
 use crate::perf::{comm, vecop, Op, OpResult};
@@ -14,7 +24,7 @@ use crate::perf::{comm, vecop, Op, OpResult};
 pub struct LayerReport {
     pub total_s: f64,
     /// (operator name, seconds) in execution order.
-    pub breakdown: Vec<(&'static str, f64)>,
+    pub breakdown: Vec<(String, f64)>,
 }
 
 impl LayerReport {
@@ -94,18 +104,36 @@ impl Simulator {
         }
     }
 
+    /// Schedule an arbitrary operator graph on the system: list
+    /// scheduling over the graph's stage/interconnect resources, with
+    /// every node's latency simulated through [`Simulator::op_latency`]
+    /// (and therefore the mapper caches).
+    pub fn schedule_graph(&self, sys: &SystemSpec, g: &Graph) -> Schedule {
+        graph_sched::schedule(g, |n| self.op_latency(sys, &n.op).latency_s)
+    }
+
     /// Simulate one Transformer layer; `tp` defaults to the system size.
     pub fn layer(&self, sys: &SystemSpec, model: &ModelConfig, phase: Phase) -> LayerReport {
-        let tp = sys.device_count;
-        let ops: Vec<NamedOp> = layer_ops(model, phase, tp);
-        let mut breakdown = Vec::with_capacity(ops.len());
-        let mut total = 0.0;
-        for nop in &ops {
-            let r = self.op_latency(sys, &nop.op);
-            total += r.latency_s;
-            breakdown.push((nop.name, r.latency_s));
+        self.layer_tp(sys, model, phase, sys.device_count)
+    }
+
+    /// Simulate one Transformer layer at an explicit tensor-parallel
+    /// degree: lower it to its chain graph and schedule that. A chain
+    /// schedules to exactly the serial sum of its op latencies, so this
+    /// reproduces the pre-IR serial walk bit for bit.
+    pub fn layer_tp(
+        &self,
+        sys: &SystemSpec,
+        model: &ModelConfig,
+        phase: Phase,
+        tp: u64,
+    ) -> LayerReport {
+        let g = layer_graph(model, phase, tp);
+        let sched = self.schedule_graph(sys, &g);
+        LayerReport {
+            total_s: sched.total_s,
+            breakdown: sched.timings.into_iter().map(|t| (t.name, t.latency_s)).collect(),
         }
-        LayerReport { total_s: total, breakdown }
     }
 
     /// Prefill latency for `layers` stacked layers.
@@ -161,32 +189,102 @@ impl Simulator {
         s_out: u64,
         layers: u64,
     ) -> f64 {
-        if s_out == 0 {
-            return 0.0;
+        integrate_tokens(s_out, |t| self.decode(sys, model, batch, s_in + t, layers))
+    }
+
+    /// End-to-end request latency under an explicit `{tp, pp,
+    /// microbatches}` mapping. With `pp == 1` this is exactly
+    /// [`Simulator::e2e_latency`] (tensor parallelism over the whole
+    /// system — the legacy path, bit for bit). With `pp ≥ 2` the layer
+    /// stack is cut into `pp` stages of `tp`-parallel devices:
+    ///
+    /// * **prefill** lowers to a stages × microbatches grid — each
+    ///   microbatch's activations flow through the stages over the
+    ///   interconnect, stage resources serialize the microbatches, and
+    ///   the GPipe fill/drain bubbles emerge from the schedule;
+    /// * **decode** is sequential in tokens (token *t+1* consumes token
+    ///   *t*), so each token's graph is a chain of stage stacks joined by
+    ///   peer-to-peer activation handoffs, integrated over KV growth with
+    ///   the same sampling as the serial path.
+    pub fn e2e_latency_parallel(
+        &self,
+        sys: &SystemSpec,
+        model: &ModelConfig,
+        batch: u64,
+        s_in: u64,
+        s_out: u64,
+        layers: u64,
+        par: &Parallelism,
+    ) -> Result<f64, String> {
+        par.validate(sys.device_count)?;
+        par.validate_heads(model.heads, &model.name)?;
+        if par.pp == 1 {
+            return Ok(self.e2e_latency(sys, model, batch, s_in, s_out, layers));
         }
-        let samples = 6usize.min(s_out as usize);
-        if samples <= 2 {
-            return (1..=s_out)
-                .map(|t| self.decode(sys, model, batch, s_in + t, layers))
-                .sum();
+        if par.pp > layers {
+            return Err(format!(
+                "pipeline stages ({}) exceed the {layers} layers to run",
+                par.pp
+            ));
         }
-        // Sample kv lengths from s_in+1 to s_in+s_out inclusive.
-        let mut pts: Vec<(f64, f64)> = Vec::with_capacity(samples);
-        for i in 0..samples {
-            let t = 1 + (s_out - 1) * i as u64 / (samples as u64 - 1);
-            let lat = self.decode(sys, model, batch, s_in + t, layers);
-            pts.push((t as f64, lat));
+        let mb = par.microbatches;
+        if batch % mb != 0 {
+            return Err(format!("microbatches ({mb}) must divide the batch ({batch})"));
         }
-        // Trapezoid over token index t ∈ [1, s_out].
-        let mut sum = 0.0;
-        for w in pts.windows(2) {
-            let (t0, l0) = w[0];
-            let (t1, l1) = w[1];
-            sum += (t1 - t0) * (l0 + l1) / 2.0;
+        // The tensor-parallel degree enters through the per-layer op
+        // shapes (`layer_ops(.., tp)`) and each AllReduce's own `devices`
+        // field — op_latency never reads `sys.device_count`, so the
+        // system is passed through as-is.
+        // Layers per stage; any remainder goes to the earliest stages.
+        let stage_layers: Vec<u64> = (0..par.pp)
+            .map(|s| layers / par.pp + u64::from(s < layers % par.pp))
+            .collect();
+        let mb_batch = batch / mb;
+        let act_bytes = |b: u64, toks: u64| b * toks * model.d_model * model.dtype.bytes();
+
+        // Prefill grid.
+        let mut g = Graph::new();
+        for j in 0..mb {
+            let mut prev: Option<NodeId> = None;
+            for (s, &ls) in stage_layers.iter().enumerate() {
+                let stage = s as u64;
+                if s > 0 {
+                    let deps: Vec<NodeId> = prev.into_iter().collect();
+                    prev = Some(g.add_on(
+                        stage,
+                        format!("P2P_s{s}@mb{j}"),
+                        Op::PeerToPeer { bytes: act_bytes(mb_batch, s_in) },
+                        &deps,
+                    ));
+                }
+                let phase = Phase::Prefill { batch: mb_batch, seq: s_in };
+                prev = append_layer_stack(&mut g, stage, model, phase, par.tp, ls, prev);
+            }
         }
-        // The trapezoid covers (s_out − 1) token intervals; add one
-        // endpoint token so Σ has s_out terms.
-        sum + (pts[0].1 + pts[pts.len() - 1].1) / 2.0
+        let prefill_s = self.schedule_graph(sys, &g).total_s;
+
+        // Decode: one chain of stage stacks per token, sampled over KV.
+        let decode_tok = |kv: u64| -> f64 {
+            let mut g = Graph::new();
+            let mut prev: Option<NodeId> = None;
+            for (s, &ls) in stage_layers.iter().enumerate() {
+                let stage = s as u64;
+                if s > 0 {
+                    let deps: Vec<NodeId> = prev.into_iter().collect();
+                    prev = Some(g.add_on(
+                        stage,
+                        format!("P2P_s{s}"),
+                        Op::PeerToPeer { bytes: act_bytes(batch, 1) },
+                        &deps,
+                    ));
+                }
+                let phase = Phase::Decode { batch, kv_len: kv };
+                prev = append_layer_stack(&mut g, stage, model, phase, par.tp, ls, prev);
+            }
+            self.schedule_graph(sys, &g).total_s
+        };
+        let decode_s = integrate_tokens(s_out, |t| decode_tok(s_in + t));
+        Ok(prefill_s + decode_s)
     }
 
     /// Pipeline-parallel throughput (paper Fig. 12 setting): the system's
@@ -220,6 +318,38 @@ impl Simulator {
         let tokens_per_s = batch as f64 * s_out as f64 / stage_time;
         (tokens_per_s, batch, stage_time)
     }
+}
+
+/// Σ_{t=1..s_out} f(t) for a per-token latency `f` that is affine-ish in
+/// `t`: evaluated densely for tiny `s_out`, otherwise sampled at up to 6
+/// points and integrated with the trapezoid rule (validated to <0.5%
+/// against dense evaluation in the integration tests). Shared by the
+/// serial decode path and the pipeline-parallel lowering so both
+/// integrate KV growth identically.
+fn integrate_tokens(s_out: u64, f: impl Fn(u64) -> f64) -> f64 {
+    if s_out == 0 {
+        return 0.0;
+    }
+    let samples = 6usize.min(s_out as usize);
+    if samples <= 2 {
+        return (1..=s_out).map(f).sum();
+    }
+    // Sample token indices from 1 to s_out inclusive.
+    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(samples);
+    for i in 0..samples {
+        let t = 1 + (s_out - 1) * i as u64 / (samples as u64 - 1);
+        pts.push((t as f64, f(t)));
+    }
+    // Trapezoid over token index t ∈ [1, s_out].
+    let mut sum = 0.0;
+    for w in pts.windows(2) {
+        let (t0, l0) = w[0];
+        let (t1, l1) = w[1];
+        sum += (t1 - t0) * (l0 + l1) / 2.0;
+    }
+    // The trapezoid covers (s_out − 1) token intervals; add one endpoint
+    // token so Σ has s_out terms.
+    sum + (pts[0].1 + pts[pts.len() - 1].1) / 2.0
 }
 
 /// Largest batch fitting device memory: capacity − resident parameters,
@@ -354,6 +484,82 @@ mod tests {
         let a100 = presets::a100();
         // All 96 layers on one 80 GB device: 350 GB of weights — impossible.
         assert_eq!(max_batch(&a100, &m, 96, 1, 2048), 0);
+    }
+
+    #[test]
+    fn layer_schedule_is_bit_identical_to_serial_op_walk() {
+        // The chain lowering must reproduce the pre-IR serial walk over
+        // `layer_ops` exactly — same sums, same order, same bits.
+        let s = sim();
+        let sys = a100x4();
+        let m = gpt3();
+        for phase in [
+            Phase::Prefill { batch: 8, seq: 2048 },
+            Phase::Decode { batch: 8, kv_len: 3072 },
+        ] {
+            let rep = s.layer(&sys, &m, phase);
+            let ops = crate::graph::layer::layer_ops(&m, phase, sys.device_count);
+            let mut serial = 0.0f64;
+            for nop in &ops {
+                serial += s.op_latency(&sys, &nop.op).latency_s;
+            }
+            assert_eq!(rep.total_s.to_bits(), serial.to_bits(), "{phase:?} drifted");
+            assert_eq!(rep.breakdown.len(), ops.len());
+            for ((name, sec), nop) in rep.breakdown.iter().zip(&ops) {
+                assert_eq!(name, nop.name);
+                assert_eq!(sec.to_bits(), s.op_latency(&sys, &nop.op).latency_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_request_with_pp1_matches_legacy_path() {
+        let s = sim();
+        let sys = presets::system("a100x2").unwrap();
+        let m = ModelConfig::gpt_small();
+        let par = crate::graph::ir::Parallelism { tp: 2, pp: 1, microbatches: 1 };
+        let legacy = s.e2e_latency(&sys, &m, 4, 64, 16, m.layers);
+        let parallel = s.e2e_latency_parallel(&sys, &m, 4, 64, 16, m.layers, &par).unwrap();
+        assert_eq!(legacy.to_bits(), parallel.to_bits());
+    }
+
+    #[test]
+    fn pipeline_parallel_request_is_sane() {
+        let s = sim();
+        let sys = presets::system("a100x2").unwrap();
+        let m = ModelConfig::gpt_small();
+        let par = crate::graph::ir::Parallelism { tp: 1, pp: 2, microbatches: 2 };
+        let (b, s_in, s_out) = (4u64, 128u64, 8u64);
+        let lat = s.e2e_latency_parallel(&sys, &m, b, s_in, s_out, m.layers, &par).unwrap();
+        assert!(lat.is_finite() && lat > 0.0);
+        // A pipeline can never beat the same work on one giant stage with
+        // no communication and no bubbles: half the layers on one device.
+        let one_stage_half =
+            s.prefill(&presets::system("a100").unwrap(), &m, b / 2, s_in, m.layers / 2);
+        assert!(lat > one_stage_half, "{lat} vs per-stage floor {one_stage_half}");
+        // And it must stay below fully serial execution on one device.
+        let serial_one_dev = s.e2e_latency(&presets::system("a100").unwrap(), &m, b, s_in, s_out, m.layers);
+        assert!(
+            lat < serial_one_dev * 1.5,
+            "pipeline {lat} not in the ballpark of serial {serial_one_dev}"
+        );
+    }
+
+    #[test]
+    fn parallel_request_validates_its_mapping() {
+        let s = sim();
+        let sys = presets::system("a100x4").unwrap();
+        let m = ModelConfig::gpt_small();
+        let bad = |tp, pp, mb| crate::graph::ir::Parallelism { tp, pp, microbatches: mb };
+        // tp × pp must match the device count.
+        assert!(s.e2e_latency_parallel(&sys, &m, 4, 64, 8, 12, &bad(2, 1, 1)).is_err());
+        // microbatches must divide the batch.
+        assert!(s.e2e_latency_parallel(&sys, &m, 6, 64, 8, 12, &bad(1, 4, 4)).is_err());
+        // stages cannot exceed layers.
+        assert!(s.e2e_latency_parallel(&sys, &m, 4, 64, 8, 2, &bad(1, 4, 1)).is_err());
+        // tp must divide the head count (gpt-small has 12 heads).
+        let sys8 = presets::system("a100x8").unwrap();
+        assert!(s.e2e_latency_parallel(&sys8, &m, 4, 64, 8, 12, &bad(8, 1, 1)).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! `LayerNorm_MHA`, `W1_proj`, `GeLU`, `W2_proj`, `AllReduce_FFN`,
 //! `LayerNorm_FFN`.
 
+use super::ir::{Graph, NodeId};
 use super::ModelConfig;
 use crate::perf::Op;
 
@@ -181,6 +182,38 @@ pub fn layer_ops(model: &ModelConfig, phase: Phase, tp: u64) -> Vec<NamedOp> {
     ops
 }
 
+/// Lower one Transformer layer onto the operator-graph IR: the op list of
+/// [`layer_ops`] as a dependency chain. This is the graph the simulator
+/// schedules — a chain schedules to exactly the serial op-walk latency
+/// (bit for bit, see `perf::graph_sched`), so the lowering is free.
+pub fn layer_graph(model: &ModelConfig, phase: Phase, tp: u64) -> Graph {
+    Graph::chain(layer_ops(model, phase, tp).into_iter().map(|n| (n.name.to_string(), n.op)))
+}
+
+/// Append `layers` chained copies of one layer onto `g`, placed on
+/// pipeline stage `stage`, depending on `after` (if any). Returns the id
+/// of the last appended node — the stack's output. This is the building
+/// block pipeline-parallel lowerings stack into per-stage subgraphs.
+pub fn append_layer_stack(
+    g: &mut Graph,
+    stage: u64,
+    model: &ModelConfig,
+    phase: Phase,
+    tp: u64,
+    layers: u64,
+    after: Option<NodeId>,
+) -> Option<NodeId> {
+    let ops = layer_ops(model, phase, tp);
+    let mut prev = after;
+    for l in 0..layers {
+        for nop in &ops {
+            let deps: Vec<NodeId> = prev.into_iter().collect();
+            prev = Some(g.add_on(stage, format!("{}_L{l}", nop.name), nop.op.clone(), &deps));
+        }
+    }
+    prev
+}
+
 /// Total FLOPs of one layer (sanity/reporting).
 pub fn layer_flops(model: &ModelConfig, phase: Phase, tp: u64) -> f64 {
     layer_ops(model, phase, tp).iter().map(|o| o.op.flops()).sum()
@@ -280,6 +313,34 @@ mod tests {
     #[should_panic(expected = "not divisible")]
     fn tp_must_divide_heads() {
         layer_ops(&gpt3(), Phase::Prefill { batch: 1, seq: 8 }, 7);
+    }
+
+    #[test]
+    fn layer_graph_is_the_op_chain() {
+        let m = gpt3();
+        let phase = Phase::Prefill { batch: 8, seq: 2048 };
+        let ops = layer_ops(&m, phase, 4);
+        let g = layer_graph(&m, phase, 4);
+        assert!(g.is_chain());
+        assert_eq!(g.len(), ops.len());
+        for (node, op) in g.nodes().iter().zip(&ops) {
+            assert_eq!(node.name, op.name);
+            assert_eq!(node.op, op.op);
+            assert_eq!(node.stage, 0);
+        }
+    }
+
+    #[test]
+    fn layer_stack_chains_layers_on_a_stage() {
+        let m = ModelConfig::gpt_small();
+        let phase = Phase::Decode { batch: 2, kv_len: 64 };
+        let per_layer = layer_ops(&m, phase, 1).len();
+        let mut g = crate::graph::ir::Graph::new();
+        let last = append_layer_stack(&mut g, 3, &m, phase, 1, 4, None);
+        assert_eq!(g.len(), 4 * per_layer);
+        assert_eq!(last, Some(g.len() - 1));
+        assert!(g.is_chain());
+        assert!(g.nodes().iter().all(|n| n.stage == 3));
     }
 
     #[test]

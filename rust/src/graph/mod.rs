@@ -5,12 +5,18 @@
 //! * [`layer`] — the per-layer operator list (Multi-Head Attention block +
 //!   MLP block, with tensor-parallel all-reduces) for the *prefill* and
 //!   *decoding* phases.
+//! * [`ir`] — the operator-graph IR: a DAG of named `perf::Op` nodes with
+//!   explicit edges, plus deterministic `tensor_parallel` /
+//!   `pipeline_parallel` transforms that rewrite a graph into per-device
+//!   subgraphs joined by `AllReduce`/`PeerToPeer` comm nodes. Every
+//!   workload lowers onto it; `perf::graph_sched` simulates the result.
 //! * [`inference`] — simulates layers on a [`crate::hardware::SystemSpec`]
-//!   via the mapper, integrates decode latency over the growing KV cache,
-//!   sizes the maximum batch under memory capacity, and models pipeline-
-//!   parallel throughput.
+//!   by scheduling their lowered graphs via the mapper, integrates decode
+//!   latency over the growing KV cache, sizes the maximum batch under
+//!   memory capacity, and models pipeline-parallel requests/throughput.
 
 pub mod layer;
+pub mod ir;
 pub mod inference;
 
 use crate::hardware::DType;
@@ -143,6 +149,15 @@ impl ModelConfig {
         self.d_model / self.heads
     }
 
+    /// The layer count a partial-model workload actually runs: the
+    /// requested depth, defaulting to — and clamped by — the model's own.
+    /// This is the single source of truth for `layers: Some(n)` semantics,
+    /// shared by the evaluator and the graph lowering so the two can never
+    /// disagree on what a partial model means.
+    pub fn resolve_layers(&self, requested: Option<u64>) -> u64 {
+        requested.unwrap_or(self.layers).clamp(1, self.layers)
+    }
+
     /// Parameters in one Transformer layer: Q (d²) + K/V (2·d·kv_dim) +
     /// output projection (d²) + MLP experts (2·d·d_ff each) +
     /// layernorm/bias terms (≈4d, negligible).
@@ -206,6 +221,15 @@ mod tests {
         let params = m.params_total() as f64;
         // layer stack ≈ 85M; embeddings (excluded) add ~38M more.
         assert!(params > 80e6 && params < 90e6, "{params:.3e}");
+    }
+
+    #[test]
+    fn resolve_layers_defaults_and_clamps() {
+        let m = ModelConfig::gpt3_175b();
+        assert_eq!(m.resolve_layers(None), 96);
+        assert_eq!(m.resolve_layers(Some(12)), 12);
+        assert_eq!(m.resolve_layers(Some(500)), 96, "clamped to the model depth");
+        assert_eq!(m.resolve_layers(Some(0)), 1, "at least one layer runs");
     }
 
     #[test]

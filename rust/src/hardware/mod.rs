@@ -235,6 +235,21 @@ impl InterconnectSpec {
             max_payload_bytes: 256,
         }
     }
+
+    /// Commodity-host PCIe 3.0 x16-class fabric (no NVLink bridges):
+    /// 16 GB/s per direction with host-bridge latencies. The `@pcie`
+    /// system-preset suffix selects this — the regime where per-layer
+    /// all-reduces dominate tensor parallelism and pipeline parallelism
+    /// earns its keep.
+    pub fn pcie_host_like() -> Self {
+        InterconnectSpec {
+            link_bandwidth_bytes_per_s: 16e9,
+            link_latency_s: 5.0e-6,
+            overhead_s: 5.0e-6,
+            flit_bytes: 16,
+            max_payload_bytes: 256,
+        }
+    }
 }
 
 /// A full system: `device_count` identical devices, fully connected.

@@ -187,8 +187,25 @@ pub fn device(name: &str) -> Option<DeviceSpec> {
 }
 
 /// Look up a system preset: `<device>x<count>` (e.g. `a100x4`, `ga100x8`),
-/// or a bare device name for a single-device system.
+/// or a bare device name for a single-device system. An optional
+/// `@<fabric>` suffix overrides the device-device interconnect:
+/// `@nvlink` (the per-device default) or `@pcie` (a commodity host
+/// without NVLink bridges — `a100x4@pcie`).
 pub fn system(name: &str) -> Option<SystemSpec> {
+    let (base, fabric) = match name.split_once('@') {
+        Some((b, f)) => (b, Some(f)),
+        None => (name, None),
+    };
+    let mut sys = system_base(base)?;
+    match fabric {
+        None | Some("nvlink") => {}
+        Some("pcie") => sys.interconnect = InterconnectSpec::pcie_host_like(),
+        Some(_) => return None,
+    }
+    Some(sys)
+}
+
+fn system_base(name: &str) -> Option<SystemSpec> {
     if let Some((dev_name, count)) = name.rsplit_once('x') {
         if let (Some(dev), Ok(n)) = (device(dev_name), count.parse::<u64>()) {
             if n == 0 {
@@ -287,6 +304,15 @@ mod tests {
         let sys = system("a100x4").unwrap();
         assert_eq!(sys.device_count, 4);
         assert_eq!(sys.interconnect.link_bandwidth_bytes_per_s, 600e9);
+        // Fabric suffixes: @pcie swaps the interconnect, @nvlink is the
+        // default, junk is rejected.
+        let pcie = system("a100x4@pcie").unwrap();
+        assert_eq!(pcie.device_count, 4);
+        assert_eq!(pcie.interconnect.link_bandwidth_bytes_per_s, 16e9);
+        assert_eq!(pcie.device, system("a100x4").unwrap().device);
+        assert_eq!(system("a100x4@nvlink").unwrap(), system("a100x4").unwrap());
+        assert!(system("a100x4@warp").is_none());
+        assert_eq!(system("a100@pcie").unwrap().device_count, 1);
         let sys = system("mi210x2").unwrap();
         assert_eq!(sys.interconnect.link_bandwidth_bytes_per_s, 300e9);
         let sys = system("ga100").unwrap();

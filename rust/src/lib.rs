@@ -19,10 +19,16 @@
 //!   the bit-identical winner of the exhaustive sweep at a fraction of
 //!   the simulated rounds, memoized in-process per (device, shape) and
 //!   across processes via a versioned on-disk mapping cache
-//!   (`--mapper-cache`) — plus vector-op models (softmax/layernorm/GELU)
-//!   and communication primitives (ring all-reduce, peer-to-peer).
-//! * [`graph`] — Transformer computational graphs (prefill/decode, tensor &
-//!   pipeline parallelism) and end-to-end latency/throughput simulation.
+//!   (`--mapper-cache`) — plus vector-op models (softmax/layernorm/GELU),
+//!   communication primitives (ring all-reduce, peer-to-peer), and
+//!   [`perf::graph_sched`], the DAG list scheduler that runs operator
+//!   graphs with compute/communication overlap on per-stage resources.
+//! * [`graph`] — Transformer computational graphs: the operator-graph IR
+//!   ([`graph::ir`] — named-op DAGs with deterministic `tensor_parallel`
+//!   / `pipeline_parallel` transforms), the per-layer lowering
+//!   (prefill/decode op chains), and end-to-end latency/throughput
+//!   simulation including pipeline-parallel requests (stages ×
+//!   microbatches grids whose bubbles fall out of the schedule).
 //! * [`area`] / [`cost`] — the area model (component transistor counts,
 //!   SRAM, PHYs) and the cost model (wafer economics, memory prices,
 //!   performance/cost).
@@ -31,14 +37,17 @@
 //!   iteration-level scheduler with three execution modes — monolithic
 //!   continuous batching, chunked prefill piggybacked onto decode
 //!   iterations (Sarathi/Orca-style token budgets), and disaggregated
-//!   prefill/decode device pools with a transfer-modeled handoff queue
-//!   (Splitwise-style) — plus KV-pressure preemption with
+//!   prefill/decode device pools with a transfer-modeled, *bounded*
+//!   handoff queue (Splitwise-style; the prefill pool stalls on
+//!   decode-pool backpressure) — plus KV-pressure preemption with
 //!   recompute-on-resume, TTFT/TPOT/goodput metrics, and an SLO-aware
 //!   $/1M-token cost sweep across hardware presets *and* scheduler modes
 //!   — the layer that evaluates designs under traffic instead of
 //!   isolated batches.
 //! * [`eval`] — the unified scenario API: one typed, JSON-serializable
-//!   [`eval::Scenario`] (hardware target + workload + requested outputs)
+//!   [`eval::Scenario`] (hardware target + workload — operator, layer,
+//!   request, arbitrary operator DAG, or traffic — + optional
+//!   `{tp, pp, microbatches}` device mapping + requested outputs)
 //!   evaluated by [`eval::Evaluator`] into a stable-schema
 //!   [`eval::EvalReport`]. The CLI subcommands and experiment context are
 //!   thin adapters over it, and suites of scenarios share one mapper

@@ -6,8 +6,12 @@
 //! * `eval`       — evaluate typed JSON scenarios (`--scenario file` /
 //!   `--suite dir`) through the unified `eval::Evaluator`, emitting
 //!   stable-schema JSON reports with a shared mapper cache across the
-//!   suite (and, with `--mapper-cache`, across processes)
+//!   suite (and, with `--mapper-cache`, across processes); scenarios
+//!   cover operators, layers, requests, arbitrary operator DAGs
+//!   (`"type": "graph"`), and serving traffic, with `parallelism`
+//!   `{tp, pp, microbatches}` device mappings
 //! * `simulate`   — simulate one operator or a Transformer layer/request
+//!   (`--pp`/`--microbatches` pipeline a request across device stages)
 //! * `area`       — die area breakdown (Fig. 6) and Table II parameters
 //! * `cost`       — die + memory cost (Table IV economics)
 //! * `experiment` — regenerate a paper table/figure (`--list` for ids)
@@ -169,7 +173,10 @@ fn cmd_hardware(raw: &[String]) -> R {
             ]);
         }
         println!("{}", t.render());
-        println!("systems: `<name>x<count>` (e.g. a100x4, ga100x8); files: any JSON path");
+        println!(
+            "systems: `<name>x<count>` (e.g. a100x4, ga100x8), fabric suffix `@nvlink` \
+             (default) or `@pcie` (e.g. a100x4@pcie); files: any JSON path"
+        );
         return Ok(());
     }
     let name = a.get("show").unwrap();
@@ -299,6 +306,9 @@ fn cmd_simulate(raw: &[String]) -> R {
         .opt("out-tokens", Some("1024"), "output tokens (decode kv offset / e2e length)")
         .opt("layers", None, "layer count (default: whole model)")
         .opt("dtype", Some("fp16"), "fp32 | fp16 | bf16 | int8")
+        .opt("tp", None, "tensor-parallel degree (default: all devices; tp×pp must equal them)")
+        .opt("pp", None, "pipeline stages for --phase e2e (default 1)")
+        .opt("microbatches", None, "pipeline microbatches for --phase e2e (default 1)")
         .opt("mapper-cache", None, MAPPER_CACHE_HELP);
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     let hw = a.get_or("hardware", "a100x4");
@@ -350,8 +360,33 @@ fn cmd_simulate(raw: &[String]) -> R {
     let seq = a.get_u64("seq").map_err(|e| e.0)?.unwrap();
     let out_tokens = a.get_u64("out-tokens").map_err(|e| e.0)?.unwrap();
     let layers = a.get_u64("layers").map_err(|e| e.0)?.unwrap_or(model.layers);
+    // Explicit device mapping: any of --tp/--pp/--microbatches switches
+    // the scenario onto the parallelism knobs (missing pieces default to
+    // tp = remaining devices, pp = 1, microbatches = 1).
+    let tp_arg = a.get_u64("tp").map_err(|e| e.0)?;
+    let pp_arg = a.get_u64("pp").map_err(|e| e.0)?;
+    let mb_arg = a.get_u64("microbatches").map_err(|e| e.0)?;
+    let parallelism = if tp_arg.is_some() || pp_arg.is_some() || mb_arg.is_some() {
+        if tp_arg == Some(0) || pp_arg == Some(0) || mb_arg == Some(0) {
+            return Err("--tp/--pp/--microbatches must be ≥ 1".into());
+        }
+        let sys = config::resolve(hw)?;
+        let pp = pp_arg.unwrap_or(1);
+        let tp = tp_arg.unwrap_or_else(|| (sys.device_count / pp).max(1));
+        Some(llmcompass::eval::Parallelism { tp, pp, microbatches: mb_arg.unwrap_or(1) })
+    } else {
+        None
+    };
     let layer_scenario = |phase: Phase| {
-        Scenario::new("cli-layer", hw, Workload::Layer { model: model_name.to_string(), phase })
+        let sc = Scenario::new(
+            "cli-layer",
+            hw,
+            Workload::Layer { model: model_name.to_string(), phase },
+        );
+        match parallelism {
+            Some(p) => sc.with_parallelism(p),
+            None => sc,
+        }
     };
     match a.get_or("phase", "prefill") {
         "prefill" => {
@@ -370,7 +405,7 @@ fn cmd_simulate(raw: &[String]) -> R {
             print_layer("decode", per_layer, layers);
         }
         "e2e" => {
-            let sc = Scenario::new(
+            let mut sc = Scenario::new(
                 "cli-e2e",
                 hw,
                 Workload::Request {
@@ -381,13 +416,20 @@ fn cmd_simulate(raw: &[String]) -> R {
                     layers: Some(layers),
                 },
             );
+            if let Some(p) = parallelism {
+                sc = sc.with_parallelism(p);
+            }
             let rep = ev.evaluate(&sc)?;
             let EvalResult::RequestLatency { total_s, .. } = &rep.results[0] else {
                 return Err("internal: request scenario produced no latency".into());
             };
             let t = *total_s;
+            let mapping = match parallelism {
+                Some(p) => format!(" (tp={} pp={} mb={})", p.tp, p.pp, p.microbatches),
+                None => String::new(),
+            };
             println!(
-                "end-to-end {} layers, b={batch}, in={seq}, out={out_tokens}: {} \
+                "end-to-end {} layers, b={batch}, in={seq}, out={out_tokens}{mapping}: {} \
                  ({:.2} tok/s/request)",
                 layers,
                 llmcompass::util::fmt_seconds(t),
@@ -614,6 +656,12 @@ fn cmd_serve(raw: &[String]) -> R {
         )
         .opt("preemption", Some("conservative"), "KV admission: conservative | evict")
         .opt("max-kv-tokens", None, "clamp the derived KV budget (forces preemption pressure)")
+        .opt(
+            "handoff-capacity",
+            None,
+            "disaggregated: max sequences queued between the pools — the prefill pool \
+             stalls when full (default: decode-pool KV budget in sequences)",
+        )
         .opt("slo-ttft", Some("2.0"), "SLO: max time-to-first-token, seconds")
         .opt("slo-tpot", Some("0.1"), "SLO: max time-per-output-token, seconds")
         .opt("seed", Some("42"), "workload seed")
@@ -736,6 +784,7 @@ fn cmd_serve(raw: &[String]) -> R {
         mode: mode_of(a.get_or("mode", "monolithic"))?,
         preemption,
         max_kv_tokens: a.get_u64("max-kv-tokens").map_err(|e| e.0)?,
+        handoff_capacity: a.get_u64("handoff-capacity").map_err(|e| e.0)?,
         slo,
         seed,
     };
@@ -779,12 +828,14 @@ fn cmd_serve(raw: &[String]) -> R {
         stats.peak_kv_tokens
     );
     println!(
-        "preemption: {} events over {} requests ({} recompute tokens) | transfer {} | handoff wait {}",
+        "preemption: {} events over {} requests ({} recompute tokens) | transfer {} | \
+         handoff wait {} | handoff stall {}",
         stats.preemptions,
         stats.preempted_requests,
         stats.recompute_tokens,
         llmcompass::util::fmt_seconds(stats.transfer_total_s),
-        llmcompass::util::fmt_seconds(stats.handoff_wait_s)
+        llmcompass::util::fmt_seconds(stats.handoff_wait_s),
+        llmcompass::util::fmt_seconds(stats.handoff_stall_s)
     );
     println!(
         "[simulated in {} wall-clock | mapper: {} rounds, {} cached shapes]",

@@ -1,0 +1,295 @@
+//! DAG scheduling for operator graphs ([`crate::graph::ir::Graph`]).
+//!
+//! [`schedule`] runs greedy list scheduling in topological (insertion)
+//! order: each node becomes ready when every predecessor has finished and
+//! starts as soon as its execution resource frees up. Compute nodes
+//! occupy their pipeline stage's compute resource; communication nodes
+//! (`AllReduce` / `PeerToPeer`) occupy a single shared interconnect
+//! resource — so compute and communication overlap across microbatches
+//! and stages, exactly the overlap pipeline parallelism exists to buy.
+//!
+//! Two invariants anchor the model (property-tested in this module):
+//!
+//! * the makespan is never below the **critical-path lower bound** (the
+//!   longest dependency chain, ignoring resource contention), and
+//! * a **chain graph schedules to exactly the serial sum** of its node
+//!   latencies, bit for bit — which is how the pre-IR serial walk over
+//!   `layer_ops` stays reproducible: lowering a chain workload onto the
+//!   graph path cannot move a single ULP.
+
+use crate::graph::ir::{Graph, Node};
+use crate::perf::Op;
+use std::collections::HashMap;
+
+/// Start/finish of one node in the computed schedule.
+#[derive(Debug, Clone)]
+pub struct NodeTiming {
+    pub name: String,
+    /// Pipeline stage (compute resource id) the node ran on.
+    pub stage: u64,
+    /// True when the node ran on the shared interconnect resource.
+    pub comm: bool,
+    pub start_s: f64,
+    pub finish_s: f64,
+    /// The node's own latency (`finish - start` may differ in the last
+    /// ULP; this is the exact simulated value).
+    pub latency_s: f64,
+}
+
+/// The result of scheduling a graph.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Makespan: the latest finish time across all nodes.
+    pub total_s: f64,
+    /// Longest dependency chain ignoring resource contention — a lower
+    /// bound on any legal schedule.
+    pub critical_path_s: f64,
+    /// Sum of all node latencies in topological order — the latency of
+    /// running the graph on one serial resource (equals `total_s` for
+    /// chain graphs, bit for bit).
+    pub serial_s: f64,
+    /// Per-node timings in topological order.
+    pub timings: Vec<NodeTiming>,
+}
+
+impl Schedule {
+    /// Busy seconds per resource, compute stages first (sorted by stage
+    /// id) then the shared interconnect.
+    pub fn resource_busy(&self) -> Vec<(String, f64)> {
+        let mut compute: Vec<(u64, f64)> = Vec::new();
+        let mut comm = 0.0;
+        let mut any_comm = false;
+        for t in &self.timings {
+            if t.comm {
+                comm += t.latency_s;
+                any_comm = true;
+            } else {
+                match compute.iter_mut().find(|(s, _)| *s == t.stage) {
+                    Some((_, b)) => *b += t.latency_s,
+                    None => compute.push((t.stage, t.latency_s)),
+                }
+            }
+        }
+        compute.sort_by_key(|&(s, _)| s);
+        let mut out: Vec<(String, f64)> =
+            compute.into_iter().map(|(s, b)| (format!("compute:{s}"), b)).collect();
+        if any_comm {
+            out.push(("comm".to_string(), comm));
+        }
+        out
+    }
+}
+
+fn is_comm(op: &Op) -> bool {
+    matches!(op, Op::AllReduce { .. } | Op::PeerToPeer { .. })
+}
+
+/// List-schedule `g` with per-node latencies from `lat`, respecting
+/// dependency edges and resource exclusivity (one node at a time per
+/// compute stage, one at a time on the interconnect).
+pub fn schedule<F>(g: &Graph, mut lat: F) -> Schedule
+where
+    F: FnMut(&Node) -> f64,
+{
+    let n = g.len();
+    let mut finish = vec![0.0f64; n];
+    let mut cp = vec![0.0f64; n];
+    // (comm, stage) → time the resource frees up. All comm shares stage 0.
+    let mut avail: HashMap<(bool, u64), f64> = HashMap::new();
+    let mut timings = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    let mut cp_max = 0.0f64;
+    let mut serial = 0.0f64;
+    for i in 0..n {
+        let node = g.node(i);
+        let l = lat(node);
+        serial += l;
+        let comm = is_comm(&node.op);
+        let key = (comm, if comm { 0 } else { node.stage });
+        let mut ready = 0.0f64;
+        let mut cp_ready = 0.0f64;
+        for &p in g.preds(i) {
+            ready = ready.max(finish[p]);
+            cp_ready = cp_ready.max(cp[p]);
+        }
+        let start = ready.max(*avail.get(&key).unwrap_or(&0.0));
+        let end = start + l;
+        avail.insert(key, end);
+        finish[i] = end;
+        cp[i] = cp_ready + l;
+        total = total.max(end);
+        cp_max = cp_max.max(cp[i]);
+        timings.push(NodeTiming {
+            name: node.name.clone(),
+            stage: node.stage,
+            comm,
+            start_s: start,
+            finish_s: end,
+            latency_s: l,
+        });
+    }
+    Schedule { total_s: total, critical_path_s: cp_max, serial_s: serial, timings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::DType;
+    use crate::util::quick::forall;
+
+    fn compute_op(tag: u64) -> Op {
+        Op::Gelu { elements: tag.max(1), dtype: DType::FP16 }
+    }
+
+    fn comm_op(bytes: u64) -> Op {
+        Op::PeerToPeer { bytes: bytes.max(1) }
+    }
+
+    /// Random DAG with random latencies and stages, built over a `Gen`.
+    /// Returns the graph and the latency table.
+    fn random_dag(g: &mut crate::util::quick::Gen) -> (Graph, Vec<f64>) {
+        let n = g.usize(1, 14);
+        let mut graph = Graph::new();
+        let mut lats = Vec::with_capacity(n);
+        for i in 0..n {
+            let stage = g.u64(0, 2);
+            let comm = g.bool();
+            let op = if comm { comm_op(i as u64 + 1) } else { compute_op(i as u64 + 1) };
+            let mut deps = Vec::new();
+            if i > 0 {
+                // Up to 3 random predecessors among earlier nodes.
+                for _ in 0..g.usize(0, 3) {
+                    let p = g.usize(0, i - 1);
+                    if !deps.contains(&p) {
+                        deps.push(p);
+                    }
+                }
+            }
+            graph.add_on(stage, format!("n{i}"), op, &deps);
+            lats.push(g.f64(0.0, 1.0));
+        }
+        (graph, lats)
+    }
+
+    #[test]
+    fn schedule_bounded_by_critical_path_and_serial_sum() {
+        forall("cp <= makespan <= serial", 300, |g| {
+            let (graph, lats) = random_dag(g);
+            let idx = std::cell::Cell::new(0usize);
+            let sched = schedule(&graph, |_| {
+                let l = lats[idx.get()];
+                idx.set(idx.get() + 1);
+                l
+            });
+            let lo_ok = sched.total_s >= sched.critical_path_s - 1e-12;
+            let hi_ok = sched.total_s <= sched.serial_s * (1.0 + 1e-12) + 1e-12;
+            ((graph.len(), sched.total_s, sched.critical_path_s, sched.serial_s), lo_ok && hi_ok)
+        });
+    }
+
+    #[test]
+    fn chain_schedules_to_exact_serial_sum() {
+        forall("chain == serial sum", 300, |g| {
+            let n = g.usize(1, 12);
+            let mut graph = Graph::new();
+            let mut lats = Vec::with_capacity(n);
+            for i in 0..n {
+                // Mix comm and compute nodes: dependencies alone must
+                // serialize a chain regardless of resource classes.
+                let op = if g.bool() { comm_op(64) } else { compute_op(i as u64 + 1) };
+                let deps: Vec<usize> = if i == 0 { vec![] } else { vec![i - 1] };
+                graph.add_on(g.u64(0, 2), format!("n{i}"), op, &deps);
+                lats.push(g.f64(0.0, 2.0));
+            }
+            let mut serial = 0.0f64;
+            for &l in &lats {
+                serial += l;
+            }
+            let idx = std::cell::Cell::new(0usize);
+            let sched = schedule(&graph, |_| {
+                let l = lats[idx.get()];
+                idx.set(idx.get() + 1);
+                l
+            });
+            let exact = sched.total_s.to_bits() == serial.to_bits()
+                && sched.serial_s.to_bits() == serial.to_bits()
+                && sched.critical_path_s.to_bits() == serial.to_bits();
+            ((n, sched.total_s, serial), exact)
+        });
+    }
+
+    #[test]
+    fn independent_nodes_on_distinct_stages_overlap() {
+        let mut g = Graph::new();
+        g.add_on(0, "a", compute_op(1), &[]);
+        g.add_on(1, "b", compute_op(2), &[]);
+        let sched = schedule(&g, |_| 1.0);
+        assert_eq!(sched.total_s, 1.0, "distinct stages run in parallel");
+        assert_eq!(sched.serial_s, 2.0);
+    }
+
+    #[test]
+    fn same_stage_serializes_without_edges() {
+        let mut g = Graph::new();
+        g.add_on(0, "a", compute_op(1), &[]);
+        g.add_on(0, "b", compute_op(2), &[]);
+        let sched = schedule(&g, |_| 1.0);
+        assert_eq!(sched.total_s, 2.0, "one compute resource per stage");
+        assert_eq!(sched.critical_path_s, 1.0, "cp ignores resource contention");
+    }
+
+    #[test]
+    fn comm_overlaps_compute() {
+        // a(compute) -> x(comm), while b(compute, same stage) is
+        // independent: b runs during the transfer.
+        let mut g = Graph::new();
+        let a = g.add_on(0, "a", compute_op(1), &[]);
+        g.add_on(0, "x", comm_op(64), &[a]);
+        g.add_on(0, "b", compute_op(2), &[]);
+        let sched = schedule(&g, |_| 1.0);
+        assert_eq!(sched.total_s, 2.0, "transfer hides behind compute");
+    }
+
+    #[test]
+    fn diamond_respects_both_branches() {
+        //    a
+        //   / \
+        //  b   c     (different stages, so they overlap)
+        //   \ /
+        //    d
+        let mut g = Graph::new();
+        let a = g.add_on(0, "a", compute_op(1), &[]);
+        let b = g.add_on(0, "b", compute_op(2), &[a]);
+        let c = g.add_on(1, "c", compute_op(3), &[a]);
+        g.add_on(0, "d", compute_op(4), &[b, c]);
+        let lats = [1.0, 1.0, 3.0, 1.0];
+        let idx = std::cell::Cell::new(0usize);
+        let sched = schedule(&g, |_| {
+            let l = lats[idx.get()];
+            idx.set(idx.get() + 1);
+            l
+        });
+        // d waits for the slow branch c: 1 + 3 + 1.
+        assert_eq!(sched.total_s, 5.0);
+        assert_eq!(sched.critical_path_s, 5.0);
+        assert_eq!(sched.serial_s, 6.0);
+    }
+
+    #[test]
+    fn resource_busy_accounts_every_second() {
+        let mut g = Graph::new();
+        let a = g.add_on(0, "a", compute_op(1), &[]);
+        let x = g.add_on(0, "x", comm_op(64), &[a]);
+        g.add_on(1, "b", compute_op(2), &[x]);
+        let sched = schedule(&g, |_| 1.0);
+        let busy = sched.resource_busy();
+        assert_eq!(
+            busy,
+            vec![
+                ("compute:0".to_string(), 1.0),
+                ("compute:1".to_string(), 1.0),
+                ("comm".to_string(), 1.0)
+            ]
+        );
+    }
+}

@@ -12,6 +12,7 @@ pub mod matmul;
 pub mod mapper;
 pub mod vecop;
 pub mod comm;
+pub mod graph_sched;
 
 use crate::hardware::DType;
 
@@ -67,6 +68,20 @@ impl Op {
             Op::Gelu { elements, dtype } => 2.0 * elements as f64 * dtype.bytes() as f64,
             Op::AllReduce { bytes, .. } => bytes as f64,
             Op::PeerToPeer { bytes } => bytes as f64,
+        }
+    }
+
+    /// Bytes of the operator's output tensor — the activation handed to
+    /// consumers, which is what moves over the interconnect when a graph
+    /// edge crosses a tensor- or pipeline-parallel boundary.
+    pub fn out_bytes(&self) -> u64 {
+        match *self {
+            Op::Matmul { b, m, n, dtype, .. } => b * m * n * dtype.bytes(),
+            Op::Softmax { m, n, dtype } | Op::LayerNorm { m, n, dtype } => {
+                m * n * dtype.bytes()
+            }
+            Op::Gelu { elements, dtype } => elements * dtype.bytes(),
+            Op::AllReduce { bytes, .. } | Op::PeerToPeer { bytes } => bytes,
         }
     }
 
@@ -134,6 +149,15 @@ mod tests {
         let op = Op::Softmax { m: 100, n: 200, dtype: DType::FP32 };
         assert_eq!(op.min_dram_bytes(), 2.0 * 100.0 * 200.0 * 4.0);
         assert_eq!(op.name(), "softmax");
+    }
+
+    #[test]
+    fn out_bytes_match_output_tensor() {
+        let op = Op::Matmul { b: 2, m: 8, k: 16, n: 4, dtype: DType::FP16, batched_b: true };
+        assert_eq!(op.out_bytes(), 2 * 8 * 4 * 2);
+        assert_eq!(Op::Softmax { m: 3, n: 5, dtype: DType::FP32 }.out_bytes(), 60);
+        assert_eq!(Op::Gelu { elements: 7, dtype: DType::INT8 }.out_bytes(), 7);
+        assert_eq!(Op::PeerToPeer { bytes: 99 }.out_bytes(), 99);
     }
 
     #[test]

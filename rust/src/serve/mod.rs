@@ -14,9 +14,12 @@
 //!   ([`ServeMode`]): monolithic prefill-prioritized batching, chunked
 //!   prefill piggybacked onto decode iterations (Sarathi/Orca-style mixed
 //!   iterations under a token budget), and disaggregated prefill/decode
-//!   device pools coupled by a transfer-latency-modeled handoff queue
-//!   (Splitwise-style) — each with conservative or eviction-based
-//!   ([`Preemption`]) KV admission.
+//!   device pools coupled by a transfer-latency-modeled, bounded handoff
+//!   queue (Splitwise-style; `handoff_capacity` backpressure stalls the
+//!   prefill pool, surfaced as `handoff_stall_s`) — each with
+//!   conservative or eviction-based ([`Preemption`]) KV admission. All
+//!   iteration latencies come from the graph-lowered layer costs of the
+//!   analytical simulator through the quantizing [`IterOracle`].
 //! * [`metrics`] — per-request timelines, percentile aggregation, and
 //!   SLO goodput.
 //! * [`sweep`] — the SLO-aware cost sweep reporting $/1M-tokens-at-SLO

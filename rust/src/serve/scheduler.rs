@@ -21,9 +21,12 @@
 //!   demand, so the iteration pays the greater of the two.
 //! * **Disaggregated** — Splitwise-style phase splitting: a prefill pool
 //!   and a decode pool of devices run their own iteration clocks, coupled
-//!   by a handoff queue whose entries become decodable only after a
-//!   KV-transfer latency (LogGP peer-to-peer of the prompt KV bytes over
-//!   the system interconnect, plus a fixed base).
+//!   by a *bounded* handoff queue whose entries become decodable only
+//!   after a KV-transfer latency (LogGP peer-to-peer of the prompt KV
+//!   bytes over the system interconnect, plus a fixed base). When the
+//!   queue hits [`SchedulerConfig::handoff_capacity`] the prefill pool
+//!   stalls (decode-pool backpressure) instead of queueing unboundedly;
+//!   stall time is reported as [`RunStats::handoff_stall_s`].
 //!
 //! Orthogonally, [`Preemption`] picks the admission strategy:
 //! `Conservative` reserves a request's full `prompt + output` KV footprint
@@ -185,6 +188,13 @@ pub struct SchedulerConfig {
     pub max_prefill_batch: u64,
     pub mode: ServeMode,
     pub preemption: Preemption,
+    /// Disaggregated mode: bound on sequences sitting in the KV-handoff
+    /// queue (prefilled, not yet admitted to the decode pool). When the
+    /// queue is full the prefill pool *stalls* instead of racing ahead of
+    /// the decode pool unboundedly; stall time is surfaced as
+    /// [`RunStats::handoff_stall_s`]. `None` derives the decode pool's KV
+    /// budget measured in mean-trace-length sequences.
+    pub handoff_capacity: Option<u64>,
 }
 
 impl SchedulerConfig {
@@ -199,6 +209,7 @@ impl SchedulerConfig {
             max_prefill_batch: 8,
             mode: ServeMode::Monolithic,
             preemption: Preemption::Conservative,
+            handoff_capacity: None,
         }
     }
 
@@ -252,6 +263,9 @@ pub fn validate(
     }
     if cfg.max_prefill_batch == 0 {
         return Err("max_prefill_batch must be ≥ 1".to_string());
+    }
+    if cfg.handoff_capacity == Some(0) {
+        return Err("handoff_capacity must be ≥ 1".to_string());
     }
     let mode = cfg.mode.resolved(device_count)?;
     let (pre_cap, dec_cap) = SchedulerConfig { mode, ..cfg.clone() }.pool_budgets(device_count);
@@ -402,6 +416,10 @@ pub struct RunStats {
     /// Time requests spent transfer-complete but not yet admitted to the
     /// decode pool (handoff queueing).
     pub handoff_wait_s: f64,
+    /// Time the prefill pool spent stalled because the bounded handoff
+    /// queue was full (decode-pool backpressure; 0 outside disaggregated
+    /// mode or when the queue never fills).
+    pub handoff_stall_s: f64,
     /// Wall-clock of the simulated run (last completion time).
     pub makespan_s: f64,
 }
@@ -426,6 +444,7 @@ impl RunStats {
             ("recompute_tokens", num(self.recompute_tokens as f64)),
             ("transfer_total_s", num(self.transfer_total_s)),
             ("handoff_wait_s", num(self.handoff_wait_s)),
+            ("handoff_stall_s", num(self.handoff_stall_s)),
             ("makespan_s", num(self.makespan_s)),
         ])
     }
@@ -996,6 +1015,19 @@ struct Handoff {
     serial: u64,
 }
 
+/// Default bound on the handoff queue: the decode pool's KV budget
+/// measured in mean-trace-length sequences (at least 1). Queueing more
+/// than fits the decode pool is pure backlog — the prefill pool should
+/// stall instead.
+fn default_handoff_capacity(dec_cap: u64, requests: &[Request]) -> u64 {
+    if requests.is_empty() {
+        return 1;
+    }
+    let mean =
+        (requests.iter().map(|r| r.total_tokens()).sum::<u64>() / requests.len() as u64).max(1);
+    (dec_cap / mean).max(1)
+}
+
 fn run_disaggregated(
     sim: &Simulator,
     sys: &SystemSpec,
@@ -1015,6 +1047,14 @@ fn run_disaggregated(
     };
     let (pre_cap, dec_cap) = resolved.pool_budgets(sys.device_count);
     let kv_bytes_per_token = model.kv_bytes_per_token_per_layer() * model.layers;
+    // Bounded handoff queue: default is the decode pool's KV budget in
+    // mean-trace-length sequences — beyond that, prefilled-but-undecodable
+    // KV cannot even fit the decode pool, so racing further ahead is pure
+    // queue growth.
+    let handoff_cap = cfg
+        .handoff_capacity
+        .unwrap_or_else(|| default_handoff_capacity(dec_cap, requests))
+        .max(1);
 
     let mut state = RunState::new(cfg, requests);
     // Prefill side. Preempted requests carry the decode-pool time they
@@ -1029,10 +1069,13 @@ fn run_disaggregated(
     let mut kv_d = 0u64;
     let mut t_d = 0.0f64;
     let mut last_finish = 0.0f64;
+    // Time since when the prefill pool has been blocked on a full handoff
+    // queue (None: not blocked).
+    let mut blocked_since: Option<f64> = None;
 
     while state.completed < requests.len() {
         // Earliest time each pool could do useful work (INFINITY: never).
-        let next_prefill_work = if !queue.is_empty() {
+        let raw_prefill_work = if !queue.is_empty() {
             t_p
         } else {
             let arr = if next_arrival < requests.len() {
@@ -1045,6 +1088,18 @@ fn run_disaggregated(
                 .map(|&(_, at)| at)
                 .fold(f64::INFINITY, f64::min);
             t_p.max(arr.min(res))
+        };
+        // Backpressure: a full handoff queue blocks the prefill pool until
+        // the decode pool drains a slot. (The queue holds work for the
+        // decode side, so the decode pool always has a finite next step
+        // here — no deadlock.)
+        let next_prefill_work = if handoff.len() as u64 >= handoff_cap {
+            if blocked_since.is_none() && raw_prefill_work.is_finite() {
+                blocked_since = Some(raw_prefill_work);
+            }
+            f64::INFINITY
+        } else {
+            raw_prefill_work
         };
         let next_decode_work = if !running.is_empty() {
             t_d
@@ -1078,7 +1133,9 @@ fn run_disaggregated(
             // its iteration + transfer, modeled as iteration-scoped).
             let mut admitted: Vec<usize> = Vec::new();
             let mut kv_p = 0u64;
-            while admitted.len() < cfg.max_prefill_batch as usize {
+            while admitted.len() < cfg.max_prefill_batch as usize
+                && (handoff.len() + admitted.len()) < handoff_cap as usize
+            {
                 let Some(cand) = queue.peek() else { break };
                 let need = state.prefill_target(cand) + 1;
                 if kv_p + need > pre_cap {
@@ -1154,6 +1211,14 @@ fn run_disaggregated(
                     serial: h.serial,
                 });
                 // `remove(k)` slid the next entry into position k.
+            }
+            // Draining below the bound releases the prefill pool; it lost
+            // the whole window from when it wanted to run until now.
+            if (handoff.len() as u64) < handoff_cap {
+                if let Some(since) = blocked_since.take() {
+                    state.stats.handoff_stall_s += (t_d - since).max(0.0);
+                    t_p = t_p.max(t_d);
+                }
             }
             state.stats.peak_kv_tokens = state.stats.peak_kv_tokens.max(kv_d);
             state.stats.peak_batch = state.stats.peak_batch.max(running.len() as u64);
@@ -1466,6 +1531,44 @@ mod tests {
         // TPOT includes the handoff, so it is ≥ the pure decode pace for
         // at least the earliest request (no queueing at t≈0).
         assert!(stats.makespan_s >= metrics.iter().fold(0.0f64, |a, m| a.max(m.finish_s)) - 1e-12);
+    }
+
+    #[test]
+    fn bounded_handoff_queue_stalls_prefill_pool() {
+        let sim = Simulator::new();
+        let sys = presets::system("a100x2").unwrap();
+        let model = ModelConfig::gpt_small();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        cfg.mode = ServeMode::Disaggregated { prefill_devices: 1, transfer_base_s: 0.0 };
+        cfg.max_prefill_batch = 8;
+        // Long outputs: the decode pool drains far slower than the prefill
+        // pool produces, so an unbounded queue would race ahead.
+        let reqs: Vec<Request> = (0..12u64)
+            .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 128, output_tokens: 256 })
+            .collect();
+        cfg.handoff_capacity = Some(1);
+        let (tight_m, tight) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert!(tight.handoff_stall_s > 0.0, "capacity-1 queue never stalled");
+        assert!(tight_m.iter().all(|m| m.finish_s.is_finite()));
+        // Unbounded-ish capacity on the same trace: no stalls, identical
+        // token output.
+        cfg.handoff_capacity = Some(1_000);
+        let (wide_m, wide) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert_eq!(wide.handoff_stall_s, 0.0);
+        let sum = |ms: &[RequestMetrics]| ms.iter().map(|m| m.output_tokens).sum::<u64>();
+        assert_eq!(sum(&tight_m), sum(&wide_m));
+        // Backpressure delays prefill work, it cannot invent any: the
+        // stalled run prefills no earlier.
+        assert!(tight.prefill_busy_s >= wide.prefill_busy_s * 0.99);
+
+        // The derived default equals dec_cap / mean total tokens.
+        assert_eq!(default_handoff_capacity(10_000, &reqs), 10_000 / (128 + 256));
+        assert_eq!(default_handoff_capacity(10, &reqs), 1, "floor of one slot");
+        assert_eq!(default_handoff_capacity(100, &[]), 1);
+
+        // Zero capacity is rejected up front.
+        cfg.handoff_capacity = Some(0);
+        assert!(validate(&cfg, sys.device_count, &reqs).is_err());
     }
 
     #[test]

@@ -206,6 +206,7 @@ fn serving_reports_carry_scheduler_v2_counters() {
         "recompute_tokens",
         "transfer_total_s",
         "handoff_wait_s",
+        "handoff_stall_s",
         "prefill_peak_kv_tokens",
     ] {
         assert!(stats.get(key).is_some(), "serving stats lost `{key}`");

@@ -1,0 +1,219 @@
+//! Integration tests for the operator-graph IR refactor.
+//!
+//! The contract of the refactor: lowering every workload onto the
+//! scheduled DAG changes *nothing* for the workloads that existed before
+//! it — chain graphs schedule to the serial op walk bit for bit, so the
+//! `EvalReport` JSON of layer/request workloads is byte-identical to a
+//! from-scratch reconstruction of the pre-refactor arithmetic. And it
+//! buys something real: the shipped pipeline-parallel GPT-3 scenario
+//! beats the tensor-parallel-only mapping at equal device count.
+
+use llmcompass::eval::{
+    EvalReport, EvalResult, Evaluator, Parallelism, Scenario, Workload,
+};
+use llmcompass::graph::inference::{LayerReport, Simulator};
+use llmcompass::graph::layer::{layer_ops, Phase};
+use llmcompass::graph::ModelConfig;
+use llmcompass::hardware::{presets, SystemSpec};
+use std::path::Path;
+
+fn scenarios_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+/// The pre-refactor layer arithmetic, reconstructed from scratch: a
+/// serial walk over `layer_ops`, accumulating latency in op order.
+fn legacy_layer(sim: &Simulator, sys: &SystemSpec, model: &ModelConfig, phase: Phase) -> LayerReport {
+    let ops = layer_ops(model, phase, sys.device_count);
+    let mut breakdown = Vec::with_capacity(ops.len());
+    let mut total = 0.0f64;
+    for nop in &ops {
+        let r = sim.op_latency(sys, &nop.op);
+        total += r.latency_s;
+        breakdown.push((nop.name.to_string(), r.latency_s));
+    }
+    LayerReport { total_s: total, breakdown }
+}
+
+/// The pre-refactor end-to-end request arithmetic: prefill + trapezoid-
+/// sampled decode over KV growth, all via the serial layer walk.
+fn legacy_e2e(
+    sim: &Simulator,
+    sys: &SystemSpec,
+    model: &ModelConfig,
+    batch: u64,
+    s_in: u64,
+    s_out: u64,
+    layers: u64,
+) -> f64 {
+    let layer = |phase: Phase| legacy_layer(sim, sys, model, phase).total_s;
+    let prefill = layers as f64 * layer(Phase::Prefill { batch, seq: s_in });
+    let decode = |kv: u64| layers as f64 * layer(Phase::Decode { batch, kv_len: kv });
+    if s_out == 0 {
+        return prefill;
+    }
+    let samples = 6usize.min(s_out as usize);
+    let decode_sum = if samples <= 2 {
+        (1..=s_out).map(|t| decode(s_in + t)).sum()
+    } else {
+        let mut pts: Vec<(f64, f64)> = Vec::with_capacity(samples);
+        for i in 0..samples {
+            let t = 1 + (s_out - 1) * i as u64 / (samples as u64 - 1);
+            pts.push((t as f64, decode(s_in + t)));
+        }
+        let mut sum = 0.0;
+        for w in pts.windows(2) {
+            let (t0, l0) = w[0];
+            let (t1, l1) = w[1];
+            sum += (t1 - t0) * (l0 + l1) / 2.0;
+        }
+        sum + (pts[0].1 + pts[pts.len() - 1].1) / 2.0
+    };
+    prefill + decode_sum
+}
+
+#[test]
+fn layer_reports_byte_identical_to_pre_refactor_path_on_designs_a_to_e() {
+    let model = "gpt-small";
+    let m = ModelConfig::by_name(model).unwrap();
+    for letter in ['A', 'B', 'C', 'D', 'E'] {
+        let hw = format!("design-{letter}x2");
+        let sys = presets::system(&hw).unwrap();
+        for phase in [
+            Phase::Prefill { batch: 2, seq: 128 },
+            Phase::Decode { batch: 4, kv_len: 256 },
+        ] {
+            let sc = Scenario::new(
+                "layer-id",
+                &hw,
+                Workload::Layer { model: model.into(), phase },
+            );
+            let ev = Evaluator::new();
+            let rep = ev.evaluate(&sc).unwrap();
+            // Reconstruct the whole report with pre-refactor arithmetic
+            // (reusing the evaluator's simulator so mapper results are
+            // the same memoized values) and demand byte equality.
+            let legacy = EvalReport {
+                scenario: sc.clone(),
+                system: sys.clone(),
+                results: vec![EvalResult::LayerLatency {
+                    layers: m.layers,
+                    per_layer: legacy_layer(&ev.sim, &sys, &m, phase),
+                }],
+            };
+            assert_eq!(
+                rep.to_json().to_string_pretty(),
+                legacy.to_json().to_string_pretty(),
+                "design {letter} {phase:?}: graph lowering drifted from the serial walk"
+            );
+        }
+    }
+}
+
+#[test]
+fn request_reports_byte_identical_to_pre_refactor_path_on_designs_a_to_e() {
+    let model = "gpt-small";
+    let m = ModelConfig::by_name(model).unwrap();
+    for letter in ['A', 'B', 'C', 'D', 'E'] {
+        let hw = format!("design-{letter}x2");
+        let sys = presets::system(&hw).unwrap();
+        let (batch, s_in, s_out, layers) = (2u64, 64u64, 8u64, 3u64);
+        let sc = Scenario::new(
+            "req-id",
+            &hw,
+            Workload::Request {
+                model: model.into(),
+                batch,
+                prefill: s_in,
+                decode: s_out,
+                layers: Some(layers),
+            },
+        );
+        let ev = Evaluator::new();
+        let rep = ev.evaluate(&sc).unwrap();
+        let total = legacy_e2e(&ev.sim, &sys, &m, batch, s_in, s_out, layers);
+        let legacy = EvalReport {
+            scenario: sc.clone(),
+            system: sys.clone(),
+            results: vec![EvalResult::RequestLatency {
+                total_s: total,
+                tokens_per_s_per_request: s_out as f64 / total,
+            }],
+        };
+        assert_eq!(
+            rep.to_json().to_string_pretty(),
+            legacy.to_json().to_string_pretty(),
+            "design {letter}: request lowering drifted from the serial walk"
+        );
+    }
+}
+
+#[test]
+fn shipped_pp4_scenario_beats_tp_only_at_equal_device_count() {
+    // The acceptance criterion of the IR refactor: on the shipped
+    // pipeline-parallel GPT-3 sample (4 A100s on a PCIe-class host
+    // fabric), {tp:1, pp:4, mb:8} strictly beats {tp:4, pp:1} — the
+    // per-layer all-reduces of tensor parallelism cost more than the
+    // pipeline's per-microbatch boundary handoffs plus its fill/drain
+    // bubbles.
+    let path = scenarios_dir().join("gpt3_pp4_request.json");
+    let sc = Scenario::load(&path).unwrap();
+    assert_eq!(sc.parallelism, Some(Parallelism { tp: 1, pp: 4, microbatches: 8 }));
+    let ev = Evaluator::new();
+    let total = |rep: &EvalReport| match &rep.results[0] {
+        EvalResult::RequestLatency { total_s, .. } => *total_s,
+        _ => panic!("expected request latency"),
+    };
+    let pp = total(&ev.evaluate(&sc).unwrap());
+    let tp_only = sc.clone().with_parallelism(Parallelism { tp: 4, pp: 1, microbatches: 1 });
+    let tp = total(&ev.evaluate(&tp_only).unwrap());
+    assert!(
+        pp < tp,
+        "pipeline parallelism should win on a PCIe fabric: pp {pp:.3}s vs tp {tp:.3}s"
+    );
+}
+
+#[test]
+fn shipped_branchy_graph_scenario_schedules() {
+    let path = scenarios_dir().join("branchy_residual_graph.json");
+    let sc = Scenario::load(&path).unwrap();
+    let ev = Evaluator::new();
+    let rep = ev.evaluate(&sc).unwrap();
+    let EvalResult::GraphLatency { schedule } = &rep.results[0] else {
+        panic!("expected a graph schedule")
+    };
+    // 7 workload nodes + the tp=2 all-reduce appended after the sink.
+    assert_eq!(schedule.timings.len(), 8);
+    assert!(schedule.total_s > 0.0);
+    assert!(schedule.total_s >= schedule.critical_path_s);
+    assert!(schedule.total_s <= schedule.serial_s * (1.0 + 1e-12));
+    // The all-reduce exists and runs on the interconnect resource.
+    let ar = schedule.timings.iter().find(|t| t.name == "AllReduce_ln_out").unwrap();
+    assert!(ar.comm);
+    // Everything still round-trips through the report JSON.
+    let j = rep.to_json();
+    assert_eq!(
+        j.get("results")
+            .and_then(|r| r.get("latency"))
+            .and_then(|l| l.get("kind"))
+            .and_then(llmcompass::util::json::Json::as_str),
+        Some("graph")
+    );
+}
+
+#[test]
+fn graph_tensor_parallel_shrinks_the_schedule_on_the_shipped_sample() {
+    // tp=2 halves every matmul's work; even with the extra all-reduce
+    // the branchy block must run faster than unsharded on one device.
+    let path = scenarios_dir().join("branchy_residual_graph.json");
+    let sharded = Scenario::load(&path).unwrap();
+    let mut unsharded = sharded.clone();
+    unsharded.parallelism = None;
+    unsharded.hardware = "a100".into();
+    let ev = Evaluator::new();
+    let total = |sc: &Scenario| match &ev.evaluate(sc).unwrap().results[0] {
+        EvalResult::GraphLatency { schedule } => schedule.total_s,
+        _ => panic!("expected graph latency"),
+    };
+    assert!(total(&sharded) < total(&unsharded));
+}

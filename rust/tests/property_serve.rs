@@ -55,6 +55,12 @@ fn gen_cfg(g: &mut Gen, sys_devices: u64, trace: &[Request]) -> SchedulerConfig 
     // demands: the proportional pool split reserves the smallest share
     // for a 1-device pool (1/devices), so scale past its inverse.
     let headroom = g.u64(2 * sys_devices.max(1), 8 * sys_devices.max(1));
+    // Exercise the bounded handoff queue too: explicit tight/roomy bounds
+    // or the derived default.
+    let handoff_capacity = match g.u64(0, 2) {
+        0 => None,
+        _ => Some(g.u64(1, 16)),
+    };
     SchedulerConfig {
         max_batch: g.u64(1, 24),
         kv_capacity_tokens: max_total * headroom,
@@ -62,6 +68,7 @@ fn gen_cfg(g: &mut Gen, sys_devices: u64, trace: &[Request]) -> SchedulerConfig 
         max_prefill_batch: g.u64(1, 8),
         mode,
         preemption: *g.pick(&[Preemption::Conservative, Preemption::Evict]),
+        handoff_capacity,
     }
 }
 
@@ -152,6 +159,7 @@ fn generated_tokens_conserved_across_modes_on_the_same_trace() {
                 max_prefill_batch: 4,
                 mode,
                 preemption,
+                handoff_capacity: None,
             };
             let (metrics, stats) = scheduler::simulate(&sim, &sys, &model, &cfg, &trace);
             let summary =
