@@ -29,6 +29,24 @@ cargo test --test integration_golden
 echo "== llmcompass eval --suite ../scenarios =="
 target/release/llmcompass eval --suite ../scenarios --compact > /dev/null
 
+# Telemetry smoke: a --trace run must write Chrome trace-event JSON that
+# parses and carries at least one event.
+echo "== llmcompass eval --trace =="
+target/release/llmcompass eval --scenario ../scenarios/a100_bursty.json \
+    --trace /tmp/llmcompass_trace.json > /dev/null
+if command -v python3 > /dev/null 2>&1; then
+    python3 -c '
+import json
+events = json.load(open("/tmp/llmcompass_trace.json"))["traceEvents"]
+assert len(events) >= 1, "trace has no events"
+print(f"trace OK: {len(events)} events")
+'
+else
+    # No python3: at least require a non-empty event list in the output.
+    grep -q '"ph"' /tmp/llmcompass_trace.json \
+        || { echo "trace has no events" >&2; exit 1; }
+fi
+
 if [[ "${1:-}" == "--fix" ]]; then
     echo "== cargo fmt =="
     cargo fmt

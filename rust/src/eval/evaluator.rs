@@ -19,10 +19,18 @@ use crate::perf::graph_sched::Schedule;
 use crate::perf::OpResult;
 use crate::serve;
 use crate::util::json::{num, obj, s, Json};
+use crate::util::telemetry::Recorder;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Version of the [`EvalReport::to_json`] schema. Bump on breaking change.
 pub const SCHEMA_VERSION: u64 = 1;
+
+/// Version of the `telemetry` section inside [`EvalReport::to_json`].
+/// Versioned independently of [`SCHEMA_VERSION`]: the summary can grow
+/// counters without invalidating the report schema itself.
+pub const TELEMETRY_SCHEMA_VERSION: u64 = 1;
 
 /// Resolve a model name, with the known registry in the error message.
 /// Shared by the evaluator and the CLI's `--model` arguments.
@@ -188,6 +196,55 @@ impl EvalResult {
     }
 }
 
+/// Framework self-profiling attached to every report (the `telemetry`
+/// section, [`TELEMETRY_SCHEMA_VERSION`]).
+///
+/// Mapper counters are evaluator-wide deltas taken around this one
+/// evaluation — exact under serial evaluation (the golden harness), an
+/// approximate attribution when a suite fans scenarios across threads
+/// (concurrent scenarios share the counters). `eval_wall_s` is host
+/// wall-clock and inherently nondeterministic; the golden harness
+/// excludes the `telemetry.host` subtree from comparison.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySummary {
+    /// Mapper parameter searches performed (cache misses).
+    pub mapper_searches: u64,
+    /// Candidates actually simulated across those searches.
+    pub mapper_rounds: u64,
+    /// Candidates enumerated (simulated + pruned).
+    pub mapper_candidates: u64,
+    /// Candidates skipped by lower-bound pruning.
+    pub mapper_pruned: u64,
+    /// In-memory memoization hits on the mapper fast path.
+    pub mapper_cache_hits: u64,
+    /// Systolic-array timing LUT hits / misses.
+    pub lut_hits: u64,
+    pub lut_misses: u64,
+    /// Host wall-clock seconds this evaluation took.
+    pub eval_wall_s: f64,
+}
+
+impl TelemetrySummary {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema_version", num(TELEMETRY_SCHEMA_VERSION as f64)),
+            (
+                "mapper",
+                obj(vec![
+                    ("searches", num(self.mapper_searches as f64)),
+                    ("rounds", num(self.mapper_rounds as f64)),
+                    ("candidates", num(self.mapper_candidates as f64)),
+                    ("pruned_candidates", num(self.mapper_pruned as f64)),
+                    ("cache_hits", num(self.mapper_cache_hits as f64)),
+                    ("lut_hits", num(self.lut_hits as f64)),
+                    ("lut_misses", num(self.lut_misses as f64)),
+                ]),
+            ),
+            ("host", obj(vec![("eval_wall_s", num(self.eval_wall_s))])),
+        ])
+    }
+}
+
 /// The evaluation of one scenario: the resolved system plus one result per
 /// requested output.
 #[derive(Debug, Clone)]
@@ -196,6 +253,8 @@ pub struct EvalReport {
     pub system: SystemSpec,
     /// One entry per requested output, in the scenario's output order.
     pub results: Vec<EvalResult>,
+    /// Framework self-profiling for this evaluation.
+    pub telemetry: TelemetrySummary,
 }
 
 impl EvalReport {
@@ -221,6 +280,7 @@ impl EvalReport {
                         .collect(),
                 ),
             ),
+            ("telemetry", self.telemetry.to_json()),
         ])
     }
 }
@@ -268,8 +328,30 @@ impl Evaluator {
         Evaluator { sim, area_params: AreaParams::default(), cost_params: CostParams::default() }
     }
 
+    /// Attach a telemetry recorder (builder style): threaded through the
+    /// simulator into the serving scheduler and the mapper, so one
+    /// `--trace` handle collects all three instrumentation layers.
+    pub fn with_recorder(mut self, rec: Arc<Recorder>) -> Evaluator {
+        self.sim.set_recorder(rec);
+        self
+    }
+
+    /// The attached telemetry recorder (disabled unless one was attached).
+    pub fn recorder(&self) -> &Arc<Recorder> {
+        &self.sim.recorder
+    }
+
     /// Evaluate one scenario into a report.
     pub fn evaluate(&self, sc: &Scenario) -> Result<EvalReport, String> {
+        // Counter baselines for the report's telemetry deltas (exact when
+        // scenarios run serially; see [`TelemetrySummary`]).
+        let wall = Instant::now();
+        let host_t0 = self.sim.recorder.host_now_s();
+        let (lut_hits0, lut_misses0) = self.sim.mapper.lut_stats();
+        let searches0 = self.sim.mapper.searches();
+        let rounds0 = self.sim.mapper.total_rounds();
+        let candidates0 = self.sim.mapper.total_candidates();
+        let cache_hits0 = self.sim.mapper.cache_hits();
         let system = config::resolve(&sc.hardware)?;
         if sc.outputs.is_empty() {
             return Err(format!("scenario `{}` requests no outputs", sc.name));
@@ -294,7 +376,31 @@ impl Evaluator {
             let r = self.eval_output(&system, sc, out, &results)?;
             results.push(r);
         }
-        Ok(EvalReport { scenario: sc.clone(), system, results })
+        let (lut_hits, lut_misses) = self.sim.mapper.lut_stats();
+        let telemetry = TelemetrySummary {
+            mapper_searches: self.sim.mapper.searches() - searches0,
+            mapper_rounds: self.sim.mapper.total_rounds() - rounds0,
+            mapper_candidates: self.sim.mapper.total_candidates() - candidates0,
+            mapper_pruned: (self.sim.mapper.total_candidates() - candidates0)
+                .saturating_sub(self.sim.mapper.total_rounds() - rounds0),
+            mapper_cache_hits: self.sim.mapper.cache_hits() - cache_hits0,
+            lut_hits: lut_hits - lut_hits0,
+            lut_misses: lut_misses - lut_misses0,
+            eval_wall_s: wall.elapsed().as_secs_f64(),
+        };
+        let rec = &self.sim.recorder;
+        if rec.is_enabled() {
+            rec.span_host(
+                "eval",
+                &format!("scenario {}", sc.name),
+                host_t0,
+                &[
+                    ("mapper_searches", num(telemetry.mapper_searches as f64)),
+                    ("mapper_rounds", num(telemetry.mapper_rounds as f64)),
+                ],
+            );
+        }
+        Ok(EvalReport { scenario: sc.clone(), system, results, telemetry })
     }
 
     /// Evaluate many scenarios with a shared mapper cache, fanned across
@@ -420,7 +526,15 @@ impl Evaluator {
                             }
                         }
                     };
-                    Ok(EvalResult::GraphLatency { schedule: self.sim.schedule_graph(system, &g) })
+                    let schedule = self.sim.schedule_graph(system, &g);
+                    if self.sim.recorder.is_enabled() {
+                        crate::perf::graph_sched::emit_trace(
+                            &self.sim.recorder,
+                            &format!("graph {}", sc.name),
+                            &schedule,
+                        );
+                    }
+                    Ok(EvalResult::GraphLatency { schedule })
                 }
                 Workload::Traffic(_) => Err(format!(
                     "scenario `{}`: `latency` needs an op/layer/request/graph workload \
@@ -921,6 +1035,15 @@ mod tests {
         let results = j.get("results").unwrap();
         assert!(results.get("latency").unwrap().get("latency_s").is_some());
         assert!(results.get("area").unwrap().get("total").is_some());
+        let tel = j.get("telemetry").unwrap();
+        assert_eq!(
+            tel.get("schema_version").and_then(Json::as_u64),
+            Some(TELEMETRY_SCHEMA_VERSION)
+        );
+        for key in ["searches", "rounds", "candidates", "pruned_candidates", "cache_hits"] {
+            assert!(tel.get("mapper").unwrap().get(key).is_some(), "telemetry.mapper lost `{key}`");
+        }
+        assert!(tel.get("host").unwrap().get("eval_wall_s").is_some());
         // Valid JSON text round trip.
         let text = j.to_string_pretty();
         assert_eq!(Json::parse(&text).unwrap(), j);

@@ -31,7 +31,7 @@ pub mod scenario;
 
 pub use evaluator::{
     load_suite, model_by_name, scheduler_config_for, traffic_requests, EvalReport, EvalResult,
-    Evaluator, ServingReport, SCHEMA_VERSION,
+    Evaluator, ServingReport, TelemetrySummary, SCHEMA_VERSION, TELEMETRY_SCHEMA_VERSION,
 };
 pub use crate::graph::ir::Parallelism;
 pub use scenario::{build_graph, GraphNodeSpec, Output, Scenario, TrafficSpec, Workload};

@@ -18,6 +18,8 @@ use crate::perf::graph_sched::{self, Schedule};
 use crate::perf::mapper::Mapper;
 use crate::perf::matmul::Shape;
 use crate::perf::{comm, vecop, Op, OpResult};
+use crate::util::telemetry::Recorder;
+use std::sync::Arc;
 
 /// Latency report for one Transformer layer.
 #[derive(Debug, Clone)]
@@ -40,11 +42,16 @@ impl LayerReport {
 /// hours, exactly as the paper's LUT + mapper-cache design intends).
 pub struct Simulator {
     pub mapper: Mapper,
+    /// Telemetry recorder shared with everything the simulator drives
+    /// (the serving scheduler reads it through its `&Simulator`; the
+    /// mapper holds a clone for its host-clock search spans). Disabled
+    /// by default — every record call is then a no-op branch.
+    pub recorder: Arc<Recorder>,
 }
 
 impl Default for Simulator {
     fn default() -> Self {
-        Simulator { mapper: Mapper::default() }
+        Self::with_mapper(Mapper::default())
     }
 }
 
@@ -58,7 +65,7 @@ impl Simulator {
     /// whole machine (the CLI, the serving oracle). Prefer
     /// [`Simulator::hybrid`] under outer sweeps.
     pub fn pooled() -> Self {
-        Simulator { mapper: Mapper::pooled() }
+        Self::with_mapper(Mapper::pooled())
     }
 
     /// A simulator whose mapper runs in work-stealing hybrid mode: its
@@ -66,13 +73,26 @@ impl Simulator {
     /// budget, so outer sweeps (experiment cells, eval suites) and the
     /// per-candidate loop share the cores without multiplying threads.
     pub fn hybrid() -> Self {
-        Simulator { mapper: Mapper::hybrid() }
+        Self::with_mapper(Mapper::hybrid())
     }
 
     /// A simulator around a caller-built mapper (e.g.
     /// [`Mapper::with_cache`] for the persistent on-disk mapping cache).
     pub fn with_mapper(mapper: Mapper) -> Self {
-        Simulator { mapper }
+        Simulator { mapper, recorder: Arc::new(Recorder::disabled()) }
+    }
+
+    /// Attach a telemetry recorder (builder style). The mapper shares
+    /// the handle so its parameter-search spans land in the same trace.
+    pub fn with_recorder(mut self, rec: Arc<Recorder>) -> Self {
+        self.set_recorder(rec);
+        self
+    }
+
+    /// Attach a telemetry recorder in place.
+    pub fn set_recorder(&mut self, rec: Arc<Recorder>) {
+        self.mapper.set_recorder(rec.clone());
+        self.recorder = rec;
     }
 
     /// Simulate one operator on the system (device for compute ops, the
@@ -261,7 +281,9 @@ impl Simulator {
                 prev = append_layer_stack(&mut g, stage, model, phase, par.tp, ls, prev);
             }
         }
-        let prefill_s = self.schedule_graph(sys, &g).total_s;
+        let prefill_sched = self.schedule_graph(sys, &g);
+        graph_sched::emit_trace(&self.recorder, "pipeline prefill", &prefill_sched);
+        let prefill_s = prefill_sched.total_s;
 
         // Decode: one chain of stage stacks per token, sampled over KV.
         let decode_tok = |kv: u64| -> f64 {
@@ -281,7 +303,15 @@ impl Simulator {
                 let phase = Phase::Decode { batch, kv_len: kv };
                 prev = append_layer_stack(&mut g, stage, model, phase, par.tp, ls, prev);
             }
-            self.schedule_graph(sys, &g).total_s
+            let sched = self.schedule_graph(sys, &g);
+            if self.recorder.is_enabled() {
+                graph_sched::emit_trace(
+                    &self.recorder,
+                    &format!("pipeline decode kv={kv}"),
+                    &sched,
+                );
+            }
+            sched.total_s
         };
         let decode_s = integrate_tokens(s_out, |t| decode_tok(s_in + t));
         Ok(prefill_s + decode_s)

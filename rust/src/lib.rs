@@ -60,6 +60,11 @@
 //! * [`util`] — self-contained substrates (JSON, CLI, tables, PRNG, thread
 //!   pool, property testing, stats) — the offline build environment has no
 //!   serde/clap/criterion/proptest, so these are built from scratch.
+//!   Includes [`util::telemetry`], the crate-wide observability layer: a
+//!   no-op-until-enabled span/counter/instant recorder with separate
+//!   simulated-time and host-wall-clock domains, exported as Chrome
+//!   trace-event JSON (`--trace`, loadable in Perfetto) and summarized in
+//!   every report's schema-versioned `telemetry` section.
 
 pub mod util;
 pub mod hardware;

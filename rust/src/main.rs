@@ -39,7 +39,9 @@ use llmcompass::perf::mapper::{Mapper, SearchBudget};
 use llmcompass::util::cli::Command;
 use llmcompass::util::json::Json;
 use llmcompass::util::table::Table;
+use llmcompass::util::telemetry::Recorder;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -106,6 +108,25 @@ fn err<E: std::fmt::Display>(e: E) -> String {
 
 const MAPPER_CACHE_HELP: &str = "persistent mapping cache: a JSON path, or `auto` for \
      $LLMCOMPASS_ARTIFACT_DIR/mapper_cache.json (created on exit; repeated runs skip searches)";
+
+const TRACE_HELP: &str = "write a Chrome trace-event JSON here (open it in ui.perfetto.dev \
+     or chrome://tracing); without this flag tracing is a no-op and costs nothing";
+
+/// `--trace <path>`: build an enabled telemetry recorder, or `None` when
+/// the flag is absent (every evaluator then keeps its no-op recorder).
+fn trace_recorder(trace_arg: Option<&str>) -> Option<Arc<Recorder>> {
+    trace_arg.map(|_| Arc::new(Recorder::enabled()))
+}
+
+/// Serialize a `--trace` recorder to its path, with an event-count note
+/// on stderr so stdout report JSON stays clean.
+fn write_trace(rec: Option<&Arc<Recorder>>, path: Option<&str>) -> R {
+    if let (Some(rec), Some(path)) = (rec, path) {
+        rec.write_chrome_trace(std::path::Path::new(path))?;
+        eprintln!("[trace: {} events written to {path}]", rec.event_count());
+    }
+    Ok(())
+}
 
 /// Resolve a `--mapper-cache` argument: `auto` places the cache under the
 /// artifact directory; anything else is used as a path verbatim.
@@ -201,6 +222,7 @@ fn cmd_eval(raw: &[String]) -> R {
              hybrid over all cores; winners identical, rounds counters may vary)",
         )
         .opt("mapper-cache", None, MAPPER_CACHE_HELP)
+        .opt("trace", None, TRACE_HELP)
         .flag("compact", "emit compact JSON instead of pretty-printed")
         .flag("pooled", "use the pooled (multi-threaded) mapper search");
     let a = cmd.parse(raw).map_err(|e| e.0)?;
@@ -227,10 +249,15 @@ fn cmd_eval(raw: &[String]) -> R {
 
     if let Some(path) = a.get("scenario") {
         let budget = if a.flag("pooled") { SearchBudget::pooled() } else { SearchBudget::default() };
-        let ev = evaluator_for(budget, cache);
+        let mut ev = evaluator_for(budget, cache);
+        let rec = trace_recorder(a.get("trace"));
+        if let Some(r) = &rec {
+            ev = ev.with_recorder(r.clone());
+        }
         let sc = Scenario::load(std::path::Path::new(path))?;
         let rep = ev.evaluate(&sc)?;
         emit(&rep.to_json());
+        write_trace(rec.as_ref(), a.get("trace"))?;
         persist_mapper_cache(&ev);
         return Ok(());
     }
@@ -248,7 +275,11 @@ fn cmd_eval(raw: &[String]) -> R {
         // still running. An explicit --threads pins a fixed pool with a
         // serial per-search loop instead.
         let budget = if threads.is_some() { SearchBudget::default() } else { SearchBudget::hybrid() };
-        let ev = evaluator_for(budget, cache);
+        let mut ev = evaluator_for(budget, cache);
+        let rec = trace_recorder(a.get("trace"));
+        if let Some(r) = &rec {
+            ev = ev.with_recorder(r.clone());
+        }
         let start = std::time::Instant::now();
         let reports = match threads {
             Some(n) => ev.evaluate_suite(&scenarios, n),
@@ -277,14 +308,21 @@ fn cmd_eval(raw: &[String]) -> R {
             })
             .collect();
         emit(&Json::Arr(items));
+        let (lut_hits, lut_misses) = ev.sim.mapper.lut_stats();
         eprintln!(
-            "[{} scenarios in {} | mapper: {} searches, {} rounds, {} cached shapes]",
+            "[{} scenarios in {} | mapper: {} searches, {} rounds, {} pruned, \
+             {} memo hits, {} cached shapes | systolic LUT: {} hits, {} misses]",
             scenarios.len(),
             llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),
             ev.sim.mapper.searches(),
             ev.sim.mapper.total_rounds(),
-            ev.sim.mapper.cache_len()
+            ev.sim.mapper.pruned_candidates(),
+            ev.sim.mapper.cache_hits(),
+            ev.sim.mapper.cache_len(),
+            lut_hits,
+            lut_misses
         );
+        write_trace(rec.as_ref(), a.get("trace"))?;
         persist_mapper_cache(&ev);
         if failed > 0 {
             return Err(format!("{failed} of {} scenario(s) failed", scenarios.len()));
@@ -309,10 +347,15 @@ fn cmd_simulate(raw: &[String]) -> R {
         .opt("tp", None, "tensor-parallel degree (default: all devices; tp×pp must equal them)")
         .opt("pp", None, "pipeline stages for --phase e2e (default 1)")
         .opt("microbatches", None, "pipeline microbatches for --phase e2e (default 1)")
-        .opt("mapper-cache", None, MAPPER_CACHE_HELP);
+        .opt("mapper-cache", None, MAPPER_CACHE_HELP)
+        .opt("trace", None, TRACE_HELP);
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     let hw = a.get_or("hardware", "a100x4");
-    let ev = evaluator_for(SearchBudget::default(), a.get("mapper-cache"));
+    let mut ev = evaluator_for(SearchBudget::default(), a.get("mapper-cache"));
+    let rec = trace_recorder(a.get("trace"));
+    if let Some(r) = &rec {
+        ev = ev.with_recorder(r.clone());
+    }
     let dtype = DType::parse(a.get_or("dtype", "fp16")).ok_or("bad --dtype")?;
 
     if let Some(op_spec) = a.get("op") {
@@ -350,6 +393,7 @@ fn cmd_simulate(raw: &[String]) -> R {
             r.mapper_rounds,
             r.mapping_desc
         );
+        write_trace(rec.as_ref(), a.get("trace"))?;
         persist_mapper_cache(&ev);
         return Ok(());
     }
@@ -438,6 +482,7 @@ fn cmd_simulate(raw: &[String]) -> R {
         }
         other => return Err(format!("unknown phase `{other}`")),
     }
+    write_trace(rec.as_ref(), a.get("trace"))?;
     persist_mapper_cache(&ev);
     Ok(())
 }
@@ -635,7 +680,7 @@ fn cmd_serve(raw: &[String]) -> R {
         .opt("rate", Some("2.0"), "mean arrival rate, requests/second")
         .opt("arrival", Some("poisson"), "arrival process: poisson | bursty")
         .opt("burst-mult", Some("8.0"), "bursty: rate multiplier in the burst state")
-        .opt("trace", None, "replay a trace file (`arrival_s,prompt,output` lines)")
+        .opt("replay", None, "replay an arrival trace file (`arrival_s,prompt,output` lines)")
         .opt("policy", Some("fcfs"), "admission policy: fcfs | spf")
         .opt("max-batch", Some("64"), "max concurrent sequences")
         .opt(
@@ -678,7 +723,8 @@ fn cmd_serve(raw: &[String]) -> R {
              (monolithic,chunked,disaggregated; knob flags above apply)",
         )
         .flag("pooled", "use the pooled (multi-threaded) mapper search")
-        .opt("mapper-cache", None, MAPPER_CACHE_HELP);
+        .opt("mapper-cache", None, MAPPER_CACHE_HELP)
+        .opt("trace", None, TRACE_HELP);
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     let model_name = a.get_or("model", "gpt3-175b");
     let model = eval::model_by_name(model_name)?;
@@ -705,12 +751,16 @@ fn cmd_serve(raw: &[String]) -> R {
         }
     };
     let budget = if a.flag("pooled") { SearchBudget::pooled() } else { SearchBudget::default() };
-    let ev = evaluator_for(budget, a.get("mapper-cache"));
+    let mut ev = evaluator_for(budget, a.get("mapper-cache"));
+    let rec = trace_recorder(a.get("trace"));
+    if let Some(r) = &rec {
+        ev = ev.with_recorder(r.clone());
+    }
     let start = std::time::Instant::now();
 
     if a.flag("sweep") {
-        if a.get("trace").is_some() {
-            return Err("--sweep generates its own workloads; drop --trace".into());
+        if a.get("replay").is_some() {
+            return Err("--sweep generates its own workloads; drop --replay".into());
         }
         let mut cfg = llmcompass::serve::sweep::SweepConfig::paper_default(requests_n, slo);
         cfg.seed = seed;
@@ -759,6 +809,7 @@ fn cmd_serve(raw: &[String]) -> R {
             );
         }
         println!("[swept in {}]", llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()));
+        write_trace(rec.as_ref(), a.get("trace"))?;
         persist_mapper_cache(&ev);
         return Ok(());
     }
@@ -778,7 +829,7 @@ fn cmd_serve(raw: &[String]) -> R {
         } else {
             None
         },
-        trace: a.get("trace").map(str::to_string),
+        trace: a.get("replay").map(str::to_string),
         policy,
         max_batch: a.get_u64("max-batch").map_err(|e| e.0)?.unwrap(),
         mode: mode_of(a.get_or("mode", "monolithic"))?,
@@ -843,6 +894,7 @@ fn cmd_serve(raw: &[String]) -> R {
         ev.sim.mapper.total_rounds(),
         ev.sim.mapper.cache_len()
     );
+    write_trace(rec.as_ref(), a.get("trace"))?;
     persist_mapper_cache(&ev);
     Ok(())
 }

@@ -19,6 +19,8 @@
 
 use crate::graph::ir::{Graph, Node};
 use crate::perf::Op;
+use crate::util::json::Json;
+use crate::util::telemetry::Recorder;
 use std::collections::HashMap;
 
 /// Start/finish of one node in the computed schedule.
@@ -82,6 +84,32 @@ impl Schedule {
 
 fn is_comm(op: &Op) -> bool {
     matches!(op, Op::AllReduce { .. } | Op::PeerToPeer { .. })
+}
+
+/// Emit a computed [`Schedule`] onto a telemetry recorder as
+/// simulated-time trace tracks: one track per execution resource
+/// (`<prefix>/compute:N`, `<prefix>/comm`) with a complete span per
+/// node. Resource exclusivity in the schedule means spans on one track
+/// never overlap, so pipeline bubbles and comm/compute overlap are
+/// directly visible in Perfetto. No-op when the recorder is disabled.
+pub fn emit_trace(rec: &Recorder, prefix: &str, sched: &Schedule) {
+    if !rec.is_enabled() {
+        return;
+    }
+    for t in &sched.timings {
+        let track = if t.comm {
+            format!("{prefix}/comm")
+        } else {
+            format!("{prefix}/compute:{}", t.stage)
+        };
+        rec.span_sim(
+            &track,
+            &t.name,
+            t.start_s,
+            t.finish_s,
+            &[("latency_s", Json::Num(t.latency_s))],
+        );
+    }
 }
 
 /// List-schedule `g` with per-node latencies from `lat`, respecting

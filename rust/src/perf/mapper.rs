@@ -50,10 +50,11 @@ use super::matmul::{fits, lower_bound, simulate, Mapping, Scheme, Shape, SimOutc
 use crate::arch::systolic::SystolicLut;
 use crate::hardware::{DType, DeviceSpec};
 use crate::util::json::{num, obj, s, Json};
+use crate::util::telemetry::Recorder;
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Search-space budget knobs. The defaults give a few hundred to a couple
 /// thousand rounds per unique shape, in line with the paper's 26,400 rounds
@@ -345,6 +346,14 @@ pub struct Mapper {
     search_done: Condvar,
     total_rounds: AtomicU64,
     searches: AtomicU64,
+    /// Candidates enumerated across all searches (simulated + pruned);
+    /// `total_candidates − total_rounds` is the pruning win.
+    total_candidates: AtomicU64,
+    /// In-memory memoization hits on [`Mapper::matmul`]'s fast path.
+    cache_hits: AtomicU64,
+    /// Telemetry handle: each cache-missing search emits a host-clock
+    /// span plus counter samples. Disabled recorder ⇒ no-op.
+    recorder: Arc<Recorder>,
     disk: Option<DiskCache>,
 }
 
@@ -385,8 +394,17 @@ impl Mapper {
             search_done: Condvar::new(),
             total_rounds: AtomicU64::new(0),
             searches: AtomicU64::new(0),
+            total_candidates: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            recorder: Arc::new(Recorder::disabled()),
             disk: None,
         }
+    }
+
+    /// Attach a telemetry recorder; subsequent searches emit host-clock
+    /// spans and self-profiling counters into it.
+    pub fn set_recorder(&mut self, rec: Arc<Recorder>) {
+        self.recorder = rec;
     }
 
     /// A mapper whose candidate loop fans across all cores as a fixed
@@ -486,6 +504,7 @@ impl Mapper {
             || self.in_flight.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
                 return hit.best.clone();
             }
             let mut in_flight = lock_in_flight();
@@ -510,9 +529,34 @@ impl Mapper {
         // From here the marker is cleared (and waiters woken) even if
         // `search` panics — the guard publishes-then-notifies on drop.
         let _guard = InFlightGuard { mapper: self, key };
+        let t0 = self.recorder.host_now_s();
         let best = search(dev, shape, self.budget, &self.lut);
         self.total_rounds.fetch_add(best.rounds, Ordering::Relaxed);
         self.searches.fetch_add(1, Ordering::Relaxed);
+        self.total_candidates.fetch_add(best.candidates, Ordering::Relaxed);
+        if self.recorder.is_enabled() {
+            // Host-clock self-profiling: one span per actual search (the
+            // quantity caching exists to minimize) plus running counters.
+            self.recorder.span_host(
+                "mapper search",
+                &format!(
+                    "{} b{} m{} k{} n{} {}",
+                    dev.name, shape.b, shape.m, shape.k, shape.n, shape.dtype.name()
+                ),
+                t0,
+                &[
+                    ("rounds", num(best.rounds as f64)),
+                    ("candidates", num(best.candidates as f64)),
+                    ("pruned", num(best.candidates.saturating_sub(best.rounds) as f64)),
+                ],
+            );
+            let (lut_hits, lut_misses) = self.lut.stats();
+            self.recorder.counter_host("mapper searches", self.searches() as f64);
+            self.recorder.counter_host("mapper rounds", self.total_rounds() as f64);
+            self.recorder.counter_host("mapper cache hits", self.cache_hits() as f64);
+            self.recorder.counter_host("lut hits", lut_hits as f64);
+            self.recorder.counter_host("lut misses", lut_misses as f64);
+        }
         self.cache
             .lock()
             .unwrap()
@@ -625,6 +669,28 @@ impl Mapper {
     /// "26,400 rounds of the mapper's parameter search" statistic.
     pub fn total_rounds(&self) -> u64 {
         self.total_rounds.load(Ordering::Relaxed)
+    }
+
+    /// Candidates enumerated across all searches, whether simulated or
+    /// pruned by the lower bound.
+    pub fn total_candidates(&self) -> u64 {
+        self.total_candidates.load(Ordering::Relaxed)
+    }
+
+    /// Candidates skipped by lower-bound pruning: enumerated minus
+    /// simulated (`total_candidates − total_rounds`).
+    pub fn pruned_candidates(&self) -> u64 {
+        self.total_candidates().saturating_sub(self.total_rounds())
+    }
+
+    /// In-memory memoization hits on the [`Mapper::matmul`] fast path.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// The systolic-array timing LUT's (hits, misses) counters.
+    pub fn lut_stats(&self) -> (u64, u64) {
+        self.lut.stats()
     }
 
     pub fn cache_len(&self) -> usize {

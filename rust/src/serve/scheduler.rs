@@ -48,6 +48,8 @@ use super::workload::Request;
 use crate::graph::inference::Simulator;
 use crate::graph::ModelConfig;
 use crate::hardware::SystemSpec;
+use crate::util::json::num;
+use crate::util::telemetry::Recorder;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -472,17 +474,29 @@ struct Prefilling {
 struct RunState<'a> {
     cfg: &'a SchedulerConfig,
     requests: &'a [Request],
+    /// Telemetry recorder (no-op when disabled). Lifecycle spans and
+    /// preemption instants are emitted here so all three engines share
+    /// one instrumentation vocabulary.
+    rec: &'a Recorder,
     metrics: Vec<RequestMetrics>,
     stats: RunStats,
     /// Tokens generated so far per request (survives preemption).
     generated: Vec<u64>,
     preempted_ever: Vec<bool>,
+    /// When the request last became runnable — its arrival, or the
+    /// moment it was preempted back to the queue. Start of the current
+    /// "queued" trace span.
+    queued_since: Vec<f64>,
+    /// When the request last became decodable (prefill completion, or
+    /// decode-pool admission in disaggregated mode). Start of the
+    /// "decode" trace span.
+    decode_from: Vec<f64>,
     completed: usize,
     serial: u64,
 }
 
 impl<'a> RunState<'a> {
-    fn new(cfg: &'a SchedulerConfig, requests: &'a [Request]) -> Self {
+    fn new(cfg: &'a SchedulerConfig, requests: &'a [Request], rec: &'a Recorder) -> Self {
         let metrics = requests
             .iter()
             .map(|r| RequestMetrics {
@@ -497,12 +511,66 @@ impl<'a> RunState<'a> {
         RunState {
             cfg,
             requests,
+            rec,
             metrics,
             stats: RunStats::default(),
             generated: vec![0; requests.len()],
             preempted_ever: vec![false; requests.len()],
+            queued_since: requests.iter().map(|r| r.arrival_s).collect(),
+            decode_from: vec![0.0; requests.len()],
             completed: 0,
             serial: 0,
+        }
+    }
+
+    /// Per-request trace track name.
+    fn track(&self, i: usize) -> String {
+        format!("req {}", self.requests[i].id)
+    }
+
+    /// Trace the "queued" lifecycle span ending at admission time `t`
+    /// (start: arrival, or the preemption that re-queued the request).
+    fn emit_admitted(&self, i: usize, t: f64) {
+        if self.rec.is_enabled() {
+            self.rec.span_sim(
+                &self.track(i),
+                "queued",
+                self.queued_since[i].min(t),
+                t,
+                &[
+                    ("prompt_tokens", num(self.requests[i].prompt_tokens as f64)),
+                    ("output_tokens", num(self.requests[i].output_tokens as f64)),
+                ],
+            );
+        }
+    }
+
+    /// Trace a prefill-work span (`name`: "prefill" or "chunk") covering
+    /// `tokens` context tokens between `t0` and `t1`.
+    fn emit_prefill_span(&self, i: usize, name: &str, t0: f64, t1: f64, tokens: u64) {
+        if self.rec.is_enabled() {
+            self.rec.span_sim(
+                &self.track(i),
+                name,
+                t0,
+                t1,
+                &[("tokens", num(tokens as f64))],
+            );
+        }
+    }
+
+    /// Trace the "decode" lifecycle span at completion time `t`.
+    fn emit_done(&self, i: usize, t: f64) {
+        if self.rec.is_enabled() {
+            let track = self.track(i);
+            self.rec.span_sim(
+                &track,
+                "decode",
+                self.decode_from[i].min(t),
+                t,
+                &[("generated", num(self.generated[i] as f64))],
+            );
+            self.rec.instant_sim(&track, "done", t, &[]);
         }
     }
 
@@ -532,26 +600,42 @@ impl<'a> RunState<'a> {
     fn finish_prefill(&mut self, i: usize, t: f64) -> Option<u64> {
         if self.generated[i] == 0 {
             self.metrics[i].first_token_s = t;
+            if self.rec.is_enabled() {
+                self.rec.instant_sim(&self.track(i), "first_token", t, &[]);
+            }
         }
         self.generated[i] += 1;
+        self.decode_from[i] = t;
         let kv = self.prefill_target(i); // prompt + generated
         if self.generated[i] >= self.requests[i].output_tokens {
             self.metrics[i].finish_s = t;
             self.completed += 1;
+            if self.rec.is_enabled() {
+                self.rec.instant_sim(&self.track(i), "done", t, &[]);
+            }
             None
         } else {
             Some(kv)
         }
     }
 
-    /// Record a preemption of a sequence holding `kv` tokens.
-    fn note_preemption(&mut self, idx: usize, kv: u64) {
+    /// Record a preemption at time `t` of a sequence holding `kv` tokens.
+    fn note_preemption(&mut self, idx: usize, kv: u64, t: f64) {
         self.stats.preemptions += 1;
         self.stats.recompute_tokens += kv;
         if !self.preempted_ever[idx] {
             self.preempted_ever[idx] = true;
             self.stats.preempted_requests += 1;
         }
+        if self.rec.is_enabled() {
+            self.rec.instant_sim(
+                &self.track(idx),
+                "preempt",
+                t,
+                &[("kv_tokens", num(kv as f64))],
+            );
+        }
+        self.queued_since[idx] = t;
     }
 
     /// KV released when a request completes (mirror of the reservation).
@@ -625,6 +709,7 @@ fn evict_for(
     running: &mut Vec<Running>,
     kv_reserved: &mut u64,
     capacity: u64,
+    t: f64,
 ) -> Vec<usize> {
     let mut evicted = Vec::new();
     while *kv_reserved + running.len() as u64 > capacity && running.len() > 1 {
@@ -636,7 +721,7 @@ fn evict_for(
             .unwrap();
         let victim = running.remove(j);
         *kv_reserved -= victim.kv_tokens;
-        state.note_preemption(victim.idx, victim.kv_tokens);
+        state.note_preemption(victim.idx, victim.kv_tokens, t);
         evicted.push(victim.idx);
     }
     evicted
@@ -657,14 +742,15 @@ pub fn simulate(
         panic!("{e}");
     }
     let mode = cfg.mode.resolved(sys.device_count).unwrap();
+    let rec: &Recorder = &sim.recorder;
     match mode {
         ServeMode::Monolithic => {
             let oracle = IterOracle::new(sim, sys, model);
-            run_monolithic(&oracle, cfg, requests)
+            run_monolithic(&oracle, cfg, requests, rec)
         }
         ServeMode::Chunked { chunk_tokens } => {
             let oracle = IterOracle::new(sim, sys, model);
-            run_chunked(&oracle, cfg, requests, chunk_tokens)
+            run_chunked(&oracle, cfg, requests, chunk_tokens, rec)
         }
         ServeMode::Disaggregated { prefill_devices, transfer_base_s } => run_disaggregated(
             sim,
@@ -691,8 +777,9 @@ fn run_monolithic(
     oracle: &IterOracle<'_>,
     cfg: &SchedulerConfig,
     requests: &[Request],
+    rec: &Recorder,
 ) -> (Vec<RequestMetrics>, RunStats) {
-    let mut state = RunState::new(cfg, requests);
+    let mut state = RunState::new(cfg, requests, rec);
     let mut queue = WaitQueue::new(cfg.policy);
     let mut running: Vec<Running> = Vec::new();
     let mut kv_reserved = 0u64;
@@ -731,6 +818,8 @@ fn run_monolithic(
         state.stats.peak_kv_tokens = state.stats.peak_kv_tokens.max(kv_reserved);
         state.stats.peak_batch =
             state.stats.peak_batch.max((running.len() + admitted.len()) as u64);
+        rec.counter_sim("kv_tokens", t, kv_reserved as f64);
+        rec.counter_sim("batch", t, (running.len() + admitted.len()) as f64);
 
         if !admitted.is_empty() {
             // 3a. Prefill iteration for the admitted requests (padded to
@@ -739,12 +828,24 @@ fn run_monolithic(
             // token.
             let batch = admitted.len() as u64;
             let max_ctx = admitted.iter().map(|&i| state.prefill_target(i)).max().unwrap();
+            let t0 = t;
             let dt = oracle.prefill(batch, max_ctx);
             t += dt;
             state.stats.prefill_iterations += 1;
             state.stats.prefill_busy_s += dt;
+            if rec.is_enabled() {
+                rec.span_sim(
+                    "engine",
+                    "prefill",
+                    t0,
+                    t,
+                    &[("batch", num(batch as f64)), ("max_ctx", num(max_ctx as f64))],
+                );
+            }
             for &i in &admitted {
                 let reserved = state.admit_need(i);
+                state.emit_admitted(i, t0);
+                state.emit_prefill_span(i, "prefill", t0, t, state.prefill_target(i));
                 match state.finish_prefill(i, t) {
                     Some(kv_tokens) => {
                         debug_assert!(
@@ -761,18 +862,32 @@ fn run_monolithic(
             // eviction, first make room for this step's +1-token-per-
             // sequence KV growth by preempting the youngest sequences.
             if cfg.preemption == Preemption::Evict {
-                for idx in
-                    evict_for(&mut state, &mut running, &mut kv_reserved, cfg.kv_capacity_tokens)
-                {
+                for idx in evict_for(
+                    &mut state,
+                    &mut running,
+                    &mut kv_reserved,
+                    cfg.kv_capacity_tokens,
+                    t,
+                ) {
                     queue.requeue_preempted(idx);
                 }
             }
             let batch = running.len() as u64;
             let mean_kv = running.iter().map(|r| r.kv_tokens).sum::<u64>() / batch;
+            let t0 = t;
             let dt = oracle.decode(batch, mean_kv);
             t += dt;
             state.stats.decode_iterations += 1;
             state.stats.decode_busy_s += dt;
+            if rec.is_enabled() {
+                rec.span_sim(
+                    "engine",
+                    "decode",
+                    t0,
+                    t,
+                    &[("batch", num(batch as f64)), ("mean_kv", num(mean_kv as f64))],
+                );
+            }
             if cfg.preemption == Preemption::Evict {
                 kv_reserved += batch;
                 state.stats.peak_kv_tokens = state.stats.peak_kv_tokens.max(kv_reserved);
@@ -786,6 +901,7 @@ fn run_monolithic(
                     let done = running.swap_remove(i);
                     state.metrics[done.idx].finish_s = t;
                     state.completed += 1;
+                    state.emit_done(done.idx, t);
                     kv_reserved -= state.release_on_completion(done.idx).min(kv_reserved);
                 } else {
                     i += 1;
@@ -819,8 +935,9 @@ fn run_chunked(
     cfg: &SchedulerConfig,
     requests: &[Request],
     chunk_tokens: u64,
+    rec: &Recorder,
 ) -> (Vec<RequestMetrics>, RunStats) {
-    let mut state = RunState::new(cfg, requests);
+    let mut state = RunState::new(cfg, requests, rec);
     let mut queue = WaitQueue::new(cfg.policy);
     let mut prefilling: Vec<Prefilling> = Vec::new();
     let mut running: Vec<Running> = Vec::new();
@@ -854,12 +971,15 @@ fn run_chunked(
             kv_reserved += need;
             queue.pop();
             let serial = state.next_serial();
+            state.emit_admitted(cand, t);
             prefilling.push(Prefilling { idx: cand, done: 0, serial });
         }
 
         state.stats.peak_kv_tokens = state.stats.peak_kv_tokens.max(kv_reserved);
         state.stats.peak_batch =
             state.stats.peak_batch.max((running.len() + prefilling.len()) as u64);
+        rec.counter_sim("kv_tokens", t, kv_reserved as f64);
+        rec.counter_sim("batch", t, (running.len() + prefilling.len()) as f64);
 
         if prefilling.is_empty() && running.is_empty() {
             if next_arrival >= requests.len() {
@@ -902,13 +1022,13 @@ fn run_chunked(
                     let (j, _) = pf_j.unwrap();
                     let pf = prefilling.remove(j);
                     kv_reserved -= state.admit_need(pf.idx).min(kv_reserved);
-                    state.note_preemption(pf.idx, pf.done);
+                    state.note_preemption(pf.idx, pf.done, t);
                     queue.requeue_preempted(pf.idx);
                 } else {
                     let (j, _) = run_j.unwrap();
                     let victim = running.remove(j);
                     kv_reserved -= victim.kv_tokens.min(kv_reserved);
-                    state.note_preemption(victim.idx, victim.kv_tokens);
+                    state.note_preemption(victim.idx, victim.kv_tokens, t);
                     queue.requeue_preempted(victim.idx);
                 }
             }
@@ -919,6 +1039,9 @@ fn run_chunked(
         let decode_b = running.len() as u64;
         let mut budget = chunk_tokens.saturating_sub(decode_b);
         let mut chunk = 0u64;
+        // (request, tokens) advanced this iteration — for the chunk trace
+        // spans, which can only be emitted once the latency is known.
+        let mut advanced: Vec<(usize, u64)> = Vec::new();
         for pf in prefilling.iter_mut() {
             if budget == 0 {
                 break;
@@ -928,6 +1051,9 @@ fn run_chunked(
             pf.done += give;
             budget -= give;
             chunk += give;
+            if rec.is_enabled() && give > 0 {
+                advanced.push((pf.idx, give));
+            }
         }
 
         // Fused-iteration latency: the chunk's compute and the decode
@@ -941,22 +1067,38 @@ fn run_chunked(
             0.0
         };
         let dt = lat_p.max(lat_d);
+        let t0 = t;
         t += dt;
-        match (chunk > 0, decode_b > 0) {
+        let kind = match (chunk > 0, decode_b > 0) {
             (true, true) => {
                 state.stats.mixed_iterations += 1;
                 state.stats.mixed_busy_s += dt;
+                "mixed"
             }
             (true, false) => {
                 state.stats.prefill_iterations += 1;
                 state.stats.prefill_busy_s += dt;
+                "prefill"
             }
             (false, true) => {
                 state.stats.decode_iterations += 1;
                 state.stats.decode_busy_s += dt;
+                "decode"
             }
             // prefilling/running non-empty ⇒ at least one leg has work.
             (false, false) => unreachable!("iteration with no work"),
+        };
+        if rec.is_enabled() {
+            rec.span_sim(
+                "engine",
+                kind,
+                t0,
+                t,
+                &[("chunk_tokens", num(chunk as f64)), ("decode_batch", num(decode_b as f64))],
+            );
+            for &(idx, give) in &advanced {
+                state.emit_prefill_span(idx, "chunk", t0, t, give);
+            }
         }
 
         // Decode completions and KV growth.
@@ -973,6 +1115,7 @@ fn run_chunked(
                 let done = running.swap_remove(i);
                 state.metrics[done.idx].finish_s = t;
                 state.completed += 1;
+                state.emit_done(done.idx, t);
                 kv_reserved -= state.release_on_completion(done.idx).min(kv_reserved);
             } else {
                 i += 1;
@@ -1056,7 +1199,8 @@ fn run_disaggregated(
         .unwrap_or_else(|| default_handoff_capacity(dec_cap, requests))
         .max(1);
 
-    let mut state = RunState::new(cfg, requests);
+    let rec: &Recorder = &sim.recorder;
+    let mut state = RunState::new(cfg, requests, rec);
     // Prefill side. Preempted requests carry the decode-pool time they
     // became available again.
     let mut queue = WaitQueue::new(cfg.policy);
@@ -1151,14 +1295,28 @@ fn run_disaggregated(
             // time — an empty admission would loop forever, so fail loud.
             assert!(!admitted.is_empty(), "prefill pool woke with nothing admittable");
             state.stats.prefill_peak_kv_tokens = state.stats.prefill_peak_kv_tokens.max(kv_p);
+            rec.counter_sim("kv_tokens (prefill pool)", t_p, kv_p as f64);
+            rec.counter_sim("batch (prefill pool)", t_p, admitted.len() as f64);
             let batch = admitted.len() as u64;
             let max_ctx = admitted.iter().map(|&i| state.prefill_target(i)).max().unwrap();
+            let t_p0 = t_p;
             let dt = oracle_p.prefill(batch, max_ctx);
             t_p += dt;
             state.stats.prefill_iterations += 1;
             state.stats.prefill_busy_s += dt;
+            if rec.is_enabled() {
+                rec.span_sim(
+                    "prefill pool",
+                    "prefill",
+                    t_p0,
+                    t_p,
+                    &[("batch", num(batch as f64)), ("max_ctx", num(max_ctx as f64))],
+                );
+            }
             for &i in &admitted {
                 let ctx = state.prefill_target(i);
+                state.emit_admitted(i, t_p0);
+                state.emit_prefill_span(i, "prefill", t_p0, t_p, ctx);
                 match state.finish_prefill(i, t_p) {
                     Some(_) => {
                         // KV handoff: LogGP peer-to-peer of the context KV
@@ -1168,6 +1326,15 @@ fn run_disaggregated(
                             + crate::perf::comm::peer_to_peer(&sys.interconnect, bytes).latency_s;
                         state.stats.transfer_total_s += xfer;
                         let serial = state.next_serial();
+                        if rec.is_enabled() {
+                            rec.span_sim(
+                                &state.track(i),
+                                "handoff",
+                                t_p,
+                                t_p + xfer,
+                                &[("kv_bytes", num(bytes as f64))],
+                            );
+                        }
                         handoff.push(Handoff { idx: i, ready_at: t_p + xfer, serial });
                     }
                     None => last_finish = last_finish.max(t_p),
@@ -1204,6 +1371,10 @@ fn run_disaggregated(
                 }
                 let h = handoff.remove(k);
                 state.stats.handoff_wait_s += t_d - h.ready_at;
+                if rec.is_enabled() && t_d > h.ready_at {
+                    rec.span_sim(&state.track(idx), "handoff_wait", h.ready_at, t_d, &[]);
+                }
+                state.decode_from[idx] = t_d;
                 kv_d += need;
                 running.push(Running {
                     idx,
@@ -1217,27 +1388,42 @@ fn run_disaggregated(
             if (handoff.len() as u64) < handoff_cap {
                 if let Some(since) = blocked_since.take() {
                     state.stats.handoff_stall_s += (t_d - since).max(0.0);
+                    if rec.is_enabled() && t_d > since {
+                        rec.span_sim("prefill pool", "handoff_stall", since, t_d, &[]);
+                    }
                     t_p = t_p.max(t_d);
                 }
             }
             state.stats.peak_kv_tokens = state.stats.peak_kv_tokens.max(kv_d);
             state.stats.peak_batch = state.stats.peak_batch.max(running.len() as u64);
+            rec.counter_sim("kv_tokens (decode pool)", t_d, kv_d as f64);
+            rec.counter_sim("batch (decode pool)", t_d, running.len() as f64);
             // The head of a ready handoff always fits an empty pool
             // (`validate` bounds every total by the decode budget), so an
             // empty batch here would loop forever — fail loud instead.
             assert!(!running.is_empty(), "decode pool woke with nothing admittable");
             if cfg.preemption == Preemption::Evict {
-                for idx in evict_for(&mut state, &mut running, &mut kv_d, dec_cap) {
+                for idx in evict_for(&mut state, &mut running, &mut kv_d, dec_cap, t_d) {
                     // Recompute happens back on the prefill pool.
                     resume_avail.push((idx, t_d));
                 }
             }
             let batch = running.len() as u64;
             let mean_kv = running.iter().map(|r| r.kv_tokens).sum::<u64>() / batch;
+            let t_d0 = t_d;
             let dt = oracle_d.decode(batch, mean_kv);
             t_d += dt;
             state.stats.decode_iterations += 1;
             state.stats.decode_busy_s += dt;
+            if rec.is_enabled() {
+                rec.span_sim(
+                    "decode pool",
+                    "decode",
+                    t_d0,
+                    t_d,
+                    &[("batch", num(batch as f64)), ("mean_kv", num(mean_kv as f64))],
+                );
+            }
             if cfg.preemption == Preemption::Evict {
                 kv_d += batch;
                 state.stats.peak_kv_tokens = state.stats.peak_kv_tokens.max(kv_d);
@@ -1252,6 +1438,7 @@ fn run_disaggregated(
                     state.metrics[done.idx].finish_s = t_d;
                     state.completed += 1;
                     last_finish = last_finish.max(t_d);
+                    state.emit_done(done.idx, t_d);
                     kv_d -= state.release_on_completion(done.idx).min(kv_d);
                 } else {
                     i += 1;

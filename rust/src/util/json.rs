@@ -244,6 +244,32 @@ pub fn diff_with_tolerance(expected: &Json, actual: &Json, rel_tol: f64, abs_tol
     out
 }
 
+/// [`diff_with_tolerance`] with an ignore list: a difference whose path
+/// equals an ignore entry, or is a descendant of one (`<entry>.` /
+/// `<entry>[` prefix), is dropped. This is how the golden harness
+/// excludes inherently nondeterministic report fields (host wall-clock
+/// telemetry) while every simulated field stays locked.
+pub fn diff_with_tolerance_ignoring(
+    expected: &Json,
+    actual: &Json,
+    rel_tol: f64,
+    abs_tol: f64,
+    ignore: &[&str],
+) -> Vec<JsonDiff> {
+    let ignored = |path: &str| {
+        ignore.iter().any(|p| {
+            path == *p
+                || (path.len() > p.len()
+                    && path.starts_with(p)
+                    && matches!(path.as_bytes()[p.len()], b'.' | b'['))
+        })
+    };
+    diff_with_tolerance(expected, actual, rel_tol, abs_tol)
+        .into_iter()
+        .filter(|d| !ignored(&d.path))
+        .collect()
+}
+
 // Keep mismatch reports readable: type + size for containers, the value
 // itself for leaves.
 fn render_leaf(v: &Json) -> String {
@@ -711,5 +737,35 @@ mod tests {
         // NaN sentinels compare equal to themselves.
         let n = Json::Num(f64::NAN);
         assert!(diff_with_tolerance(&n, &n.clone(), 1e-9, 1e-12).is_empty());
+    }
+
+    #[test]
+    fn diff_ignore_paths_drop_exact_matches_and_descendants_only() {
+        let a = Json::parse(
+            r#"{"telemetry": {"host": {"eval_wall_s": 0.5}, "mapper": {"searches": 3}},
+                "results": {"x": 1}}"#,
+        )
+        .unwrap();
+        let b = Json::parse(
+            r#"{"telemetry": {"host": {"eval_wall_s": 9.9}, "mapper": {"searches": 4}},
+                "results": {"x": 2}}"#,
+        )
+        .unwrap();
+        // The host subtree is excluded; everything else still reports.
+        let d = diff_with_tolerance_ignoring(&a, &b, 1e-9, 1e-12, &["telemetry.host"]);
+        let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+        assert_eq!(paths, vec!["results.x", "telemetry.mapper.searches"], "{paths:?}");
+        // An ignore entry matches itself (a host subtree of another shape)
+        // and array descendants, but never a sibling sharing the prefix.
+        let a = Json::parse(r#"{"host": [1], "hostile": 1}"#).unwrap();
+        let b = Json::parse(r#"{"host": [2], "hostile": 2}"#).unwrap();
+        let d = diff_with_tolerance_ignoring(&a, &b, 1e-9, 1e-12, &["host"]);
+        let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+        assert_eq!(paths, vec!["hostile"], "{paths:?}");
+        // Empty ignore list behaves exactly like diff_with_tolerance.
+        assert_eq!(
+            diff_with_tolerance_ignoring(&a, &b, 1e-9, 1e-12, &[]),
+            diff_with_tolerance(&a, &b, 1e-9, 1e-12)
+        );
     }
 }

@@ -1,5 +1,6 @@
 //! Self-contained substrates: JSON, CLI parsing, table/CSV emission, PRNG,
-//! thread pool, a mini property-testing framework, and statistics helpers.
+//! thread pool, a mini property-testing framework, statistics helpers, and
+//! the telemetry recorder (Chrome trace-event export).
 //!
 //! The build environment is fully offline and its vendored registry carries
 //! no serde/clap/criterion/proptest/rayon, so LLMCompass implements the
@@ -13,6 +14,7 @@ pub mod prng;
 pub mod pool;
 pub mod quick;
 pub mod stats;
+pub mod telemetry;
 
 /// Format a byte count using binary units (KiB/MiB/GiB).
 pub fn fmt_bytes(n: u64) -> String {

@@ -1,0 +1,523 @@
+//! Span/counter/event recorder with two clock domains, serialized as
+//! Chrome trace-event JSON (loadable in Perfetto or `chrome://tracing`).
+//!
+//! The framework simulates a cluster, so there are two distinct notions
+//! of time worth tracing:
+//!
+//! * **simulated seconds** — the discrete-event clock of the serving
+//!   scheduler and the graph schedules. Deterministic for a seeded
+//!   scenario; two runs of the same scenario emit byte-identical
+//!   simulated-time traces (asserted by the integration suite).
+//! * **host wall-clock** — where the *framework itself* spends time
+//!   (mapper parameter searches, per-scenario evaluation). Inherently
+//!   nondeterministic; kept in a separate buffer and excluded from the
+//!   golden comparisons.
+//!
+//! Both domains land in one trace file as separate Perfetto *processes*
+//! (`pid` 1 = simulated time, `pid` 2 = host wall-clock); every named
+//! track becomes a thread (`tid`) inside its process, labeled through
+//! `"M"` metadata events. Timestamps are microseconds, the unit the
+//! trace-event format mandates.
+//!
+//! The recorder is a no-op when disabled: every record method begins
+//! with a branch on an `Option` and returns before allocating or
+//! locking, so instrumented code paths cost one predictable branch per
+//! call site. Call sites that must *build* strings or argument lists
+//! guard on [`Recorder::is_enabled`] first. Handles are shared as
+//! `Arc<Recorder>` and threaded through `Evaluator`, `Simulator`, and
+//! the serving scheduler; the CLI only constructs an enabled recorder
+//! under `--trace <path>`.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Clock domain an event belongs to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Clock {
+    /// Simulated seconds (deterministic; golden-comparable).
+    Sim,
+    /// Host wall-clock seconds since the recorder was created.
+    Host,
+}
+
+/// Perfetto process id for the simulated-time clock domain.
+const SIM_PID: u64 = 1;
+/// Perfetto process id for the host wall-clock domain.
+const HOST_PID: u64 = 2;
+
+/// One trace event. `ph` is the Chrome trace-event phase: `X` complete
+/// span (with `dur`), `C` counter sample, `i` instant.
+struct Event {
+    ph: char,
+    name: String,
+    cat: &'static str,
+    ts_us: f64,
+    dur_us: f64,
+    tid: u64,
+    args: Vec<(String, Json)>,
+}
+
+impl Event {
+    fn to_json(&self, pid: u64) -> Json {
+        let mut o: Vec<(&str, Json)> = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cat", Json::Str(self.cat.to_string())),
+            ("ph", Json::Str(self.ph.to_string())),
+            ("ts", Json::Num(self.ts_us)),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(self.tid as f64)),
+        ];
+        if self.ph == 'X' {
+            o.push(("dur", Json::Num(self.dur_us)));
+        }
+        if self.ph == 'i' {
+            // Thread-scoped instant: renders as a marker on its track.
+            o.push(("s", Json::Str("t".to_string())));
+        }
+        if !self.args.is_empty() {
+            let mut args = BTreeMap::new();
+            for (k, v) in &self.args {
+                args.insert(k.clone(), v.clone());
+            }
+            o.push(("args", Json::Obj(args)));
+        }
+        json::obj(o)
+    }
+}
+
+/// Mutable recorder state behind the mutex: per-domain event buffers and
+/// the track-name → `tid` interning table.
+struct Inner {
+    sim: Vec<Event>,
+    host: Vec<Event>,
+    /// Track name → (clock, tid). tids are assigned per process in
+    /// first-use order, starting at 1.
+    tracks: BTreeMap<String, (Clock, u64)>,
+    next_tid: [u64; 2],
+}
+
+impl Inner {
+    fn track_id(&mut self, clock: Clock, track: &str) -> u64 {
+        if let Some(&(_, tid)) = self.tracks.get(track) {
+            return tid;
+        }
+        let slot = match clock {
+            Clock::Sim => 0,
+            Clock::Host => 1,
+        };
+        let tid = self.next_tid[slot];
+        self.next_tid[slot] += 1;
+        self.tracks.insert(track.to_string(), (clock, tid));
+        tid
+    }
+
+    fn push(&mut self, clock: Clock, ev: Event) {
+        match clock {
+            Clock::Sim => self.sim.push(ev),
+            Clock::Host => self.host.push(ev),
+        }
+    }
+}
+
+/// The recorder. Construct with [`Recorder::disabled`] (the default —
+/// every record call is a no-op) or [`Recorder::enabled`].
+pub struct Recorder {
+    inner: Option<Mutex<Inner>>,
+    /// Host-clock zero; host timestamps are relative to recorder
+    /// creation so traces start near t = 0 in both domains.
+    epoch: Instant,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::disabled()
+    }
+}
+
+impl Recorder {
+    /// A recorder that drops everything. All record methods early-return
+    /// without locking or allocating.
+    pub fn disabled() -> Recorder {
+        Recorder { inner: None, epoch: Instant::now() }
+    }
+
+    /// A recorder that buffers events for [`Recorder::write_chrome_trace`].
+    pub fn enabled() -> Recorder {
+        Recorder {
+            inner: Some(Mutex::new(Inner {
+                sim: Vec::new(),
+                host: Vec::new(),
+                tracks: BTreeMap::new(),
+                next_tid: [1, 1],
+            })),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Whether events are being buffered. Instrumentation that needs to
+    /// build names/args checks this first so the disabled path allocates
+    /// nothing.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Host wall-clock seconds since the recorder was created. Returns
+    /// 0.0 when disabled so callers can grab timestamps unconditionally.
+    #[inline]
+    pub fn host_now_s(&self) -> f64 {
+        if self.inner.is_none() {
+            return 0.0;
+        }
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a complete span (`ph: "X"`) from `start_s` to `end_s` on
+    /// the given clock. Spans with negative duration are clamped to 0.
+    pub fn span(
+        &self,
+        clock: Clock,
+        track: &str,
+        name: &str,
+        start_s: f64,
+        end_s: f64,
+        args: &[(&str, Json)],
+    ) {
+        let Some(m) = &self.inner else { return };
+        let mut inner = m.lock().unwrap();
+        let tid = inner.track_id(clock, track);
+        inner.push(
+            clock,
+            Event {
+                ph: 'X',
+                name: name.to_string(),
+                cat: cat_of(clock),
+                ts_us: start_s * 1e6,
+                dur_us: ((end_s - start_s).max(0.0)) * 1e6,
+                tid,
+                args: args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            },
+        );
+    }
+
+    /// Record an instant event (`ph: "i"`, thread scope) on a track.
+    pub fn instant(&self, clock: Clock, track: &str, name: &str, t_s: f64, args: &[(&str, Json)]) {
+        let Some(m) = &self.inner else { return };
+        let mut inner = m.lock().unwrap();
+        let tid = inner.track_id(clock, track);
+        inner.push(
+            clock,
+            Event {
+                ph: 'i',
+                name: name.to_string(),
+                cat: cat_of(clock),
+                ts_us: t_s * 1e6,
+                dur_us: 0.0,
+                tid,
+                args: args.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+            },
+        );
+    }
+
+    /// Record a counter sample (`ph: "C"`). Perfetto keys counter tracks
+    /// by `(pid, name)`, so `name` *is* the track; each sample carries a
+    /// single `value` series.
+    pub fn counter(&self, clock: Clock, name: &str, t_s: f64, value: f64) {
+        let Some(m) = &self.inner else { return };
+        let mut inner = m.lock().unwrap();
+        inner.push(
+            clock,
+            Event {
+                ph: 'C',
+                name: name.to_string(),
+                cat: cat_of(clock),
+                ts_us: t_s * 1e6,
+                dur_us: 0.0,
+                tid: 0,
+                args: vec![("value".to_string(), Json::Num(value))],
+            },
+        );
+    }
+
+    /// Convenience: a simulated-time span.
+    pub fn span_sim(&self, track: &str, name: &str, start_s: f64, end_s: f64, a: &[(&str, Json)]) {
+        self.span(Clock::Sim, track, name, start_s, end_s, a);
+    }
+
+    /// Convenience: a simulated-time instant.
+    pub fn instant_sim(&self, track: &str, name: &str, t_s: f64, args: &[(&str, Json)]) {
+        self.instant(Clock::Sim, track, name, t_s, args);
+    }
+
+    /// Convenience: a simulated-time counter sample.
+    pub fn counter_sim(&self, name: &str, t_s: f64, value: f64) {
+        self.counter(Clock::Sim, name, t_s, value);
+    }
+
+    /// Convenience: a host wall-clock span ending now. Pair with
+    /// [`Recorder::host_now_s`] for the start timestamp.
+    pub fn span_host(&self, track: &str, name: &str, start_s: f64, args: &[(&str, Json)]) {
+        if self.inner.is_none() {
+            return;
+        }
+        let end = self.host_now_s();
+        self.span(Clock::Host, track, name, start_s, end, args);
+    }
+
+    /// Convenience: a host wall-clock counter sample stamped now.
+    pub fn counter_host(&self, name: &str, value: f64) {
+        if self.inner.is_none() {
+            return;
+        }
+        let t = self.host_now_s();
+        self.counter(Clock::Host, name, t, value);
+    }
+
+    /// Number of buffered events across both clock domains (0 when
+    /// disabled). Metadata events are synthesized at serialization time
+    /// and not counted.
+    pub fn event_count(&self) -> usize {
+        match &self.inner {
+            None => 0,
+            Some(m) => {
+                let inner = m.lock().unwrap();
+                inner.sim.len() + inner.host.len()
+            }
+        }
+    }
+
+    /// The full trace as Chrome trace-event JSON:
+    /// `{"traceEvents": [...], "displayTimeUnit": "ms"}` with metadata
+    /// events first, then simulated-time events, then host events.
+    pub fn to_json(&self) -> Json {
+        self.serialize(true)
+    }
+
+    /// Only the deterministic simulated-time portion of the trace (same
+    /// envelope, no host process). Two runs of the same seeded scenario
+    /// produce byte-identical output from this method.
+    pub fn sim_trace_json(&self) -> Json {
+        self.serialize(false)
+    }
+
+    fn serialize(&self, include_host: bool) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        if let Some(m) = &self.inner {
+            let inner = m.lock().unwrap();
+            // Process metadata.
+            let mut meta = |pid: u64, kind: &str, name: &str, tid: Option<u64>| {
+                let mut o: Vec<(&str, Json)> = vec![
+                    ("name", Json::Str(kind.to_string())),
+                    ("ph", Json::Str("M".to_string())),
+                    ("pid", Json::Num(pid as f64)),
+                ];
+                if let Some(tid) = tid {
+                    o.push(("tid", Json::Num(tid as f64)));
+                }
+                let mut args = BTreeMap::new();
+                args.insert("name".to_string(), Json::Str(name.to_string()));
+                o.push(("args", Json::Obj(args)));
+                events.push(json::obj(o));
+            };
+            meta(SIM_PID, "process_name", "simulated time", None);
+            if include_host {
+                meta(HOST_PID, "process_name", "host wall-clock", None);
+            }
+            // Thread (track) metadata, in tid order per process for a
+            // stable serialization.
+            let mut named: Vec<(&String, &(Clock, u64))> = inner.tracks.iter().collect();
+            named.sort_by_key(|(_, (clock, tid))| (pid_of(*clock), *tid));
+            for (name, (clock, tid)) in named {
+                if *clock == Clock::Host && !include_host {
+                    continue;
+                }
+                meta(pid_of(*clock), "thread_name", name, Some(*tid));
+            }
+            for ev in &inner.sim {
+                events.push(ev.to_json(SIM_PID));
+            }
+            if include_host {
+                for ev in &inner.host {
+                    events.push(ev.to_json(HOST_PID));
+                }
+            }
+        }
+        json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+
+    /// Write the trace to `path` as compact JSON.
+    pub fn write_chrome_trace(&self, path: &std::path::Path) -> Result<(), String> {
+        let text = self.to_json().to_string_compact();
+        std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+fn cat_of(clock: Clock) -> &'static str {
+    match clock {
+        Clock::Sim => "sim",
+        Clock::Host => "host",
+    }
+}
+
+fn pid_of(clock: Clock) -> u64 {
+    match clock {
+        Clock::Sim => SIM_PID,
+        Clock::Host => HOST_PID,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace_events(j: &Json) -> Vec<Json> {
+        match j.get("traceEvents") {
+            Some(Json::Arr(a)) => a.clone(),
+            _ => panic!("trace lacks traceEvents array"),
+        }
+    }
+
+    #[test]
+    fn events_have_valid_shape() {
+        let rec = Recorder::enabled();
+        rec.span_sim("pool", "prefill", 0.001, 0.004, &[("batch", Json::Num(4.0))]);
+        rec.instant_sim("pool", "preempt", 0.002, &[]);
+        rec.counter_sim("kv_tokens", 0.003, 1234.0);
+        let t0 = rec.host_now_s();
+        rec.span_host("mapper", "search", t0, &[]);
+        let j = rec.to_json();
+        let events = trace_events(&j);
+        assert!(events.len() >= 4 + 3, "expected events + metadata, got {}", events.len());
+        for ev in &events {
+            let ph = ev.get("ph").and_then(Json::as_str).expect("ph present");
+            assert!(
+                ["X", "C", "i", "M"].contains(&ph),
+                "unexpected phase {ph:?}"
+            );
+            assert!(ev.get("name").is_some(), "event lacks name");
+            if ph != "M" {
+                let ts = ev.get("ts").and_then(Json::as_f64).expect("ts present");
+                assert!(ts >= 0.0 && ts.is_finite(), "ts out of range: {ts}");
+            }
+            if ph == "X" {
+                let dur = ev.get("dur").and_then(Json::as_f64).expect("X span has dur");
+                assert!(dur >= 0.0 && dur.is_finite(), "negative span duration: {dur}");
+            }
+            if ph == "i" {
+                assert_eq!(ev.get("s").and_then(Json::as_str), Some("t"));
+            }
+        }
+        // The serialized form parses back.
+        let round = Json::parse(&j.to_string_compact()).expect("trace JSON parses");
+        assert_eq!(trace_events(&round).len(), events.len());
+    }
+
+    #[test]
+    fn spans_are_monotone_and_clamped() {
+        let rec = Recorder::enabled();
+        rec.span_sim("t", "ok", 1.0, 3.0, &[]);
+        rec.span_sim("t", "inverted", 5.0, 4.0, &[]); // clamped to dur 0
+        for ev in trace_events(&rec.to_json()) {
+            if ev.get("ph").and_then(Json::as_str) == Some("X") {
+                assert!(ev.get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn clock_domains_are_separate_processes() {
+        let rec = Recorder::enabled();
+        rec.span_sim("sched", "iter", 0.0, 1.0, &[]);
+        let t0 = rec.host_now_s();
+        rec.span_host("mapper", "search", t0, &[]);
+        let pids: Vec<f64> = trace_events(&rec.to_json())
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("pid").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(pids, vec![SIM_PID as f64, HOST_PID as f64]);
+        // Sim-only serialization excludes the host process entirely.
+        let sim_only = rec.sim_trace_json();
+        assert!(trace_events(&sim_only)
+            .iter()
+            .all(|e| e.get("pid").and_then(Json::as_f64) == Some(SIM_PID as f64)));
+    }
+
+    #[test]
+    fn tracks_are_interned_with_metadata() {
+        let rec = Recorder::enabled();
+        rec.span_sim("pool a", "x", 0.0, 1.0, &[]);
+        rec.span_sim("pool b", "y", 0.0, 1.0, &[]);
+        rec.span_sim("pool a", "z", 1.0, 2.0, &[]);
+        let events = trace_events(&rec.to_json());
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("M")
+                    && e.get("name").and_then(Json::as_str) == Some("thread_name")
+            })
+            .map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str).unwrap())
+            .collect();
+        assert_eq!(names, vec!["pool a", "pool b"]);
+        // Both "pool a" spans share a tid; "pool b" differs.
+        let tids: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("tid").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert_eq!(tids[0], tids[2]);
+        assert_ne!(tids[0], tids[1]);
+    }
+
+    #[test]
+    fn disabled_recorder_is_noop() {
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        rec.span_sim("t", "a", 0.0, 1.0, &[]);
+        rec.instant_sim("t", "b", 0.5, &[]);
+        rec.counter_sim("c", 0.5, 1.0);
+        rec.span_host("t", "d", 0.0, &[]);
+        assert_eq!(rec.event_count(), 0);
+        assert_eq!(trace_events(&rec.to_json()).len(), 0);
+        assert_eq!(rec.host_now_s(), 0.0);
+    }
+
+    /// The disabled recorder must add no measurable overhead: a million
+    /// record calls are early-returned branches, so even a very slow CI
+    /// box finishes far inside the (generous) bound.
+    #[test]
+    fn disabled_recorder_has_no_measurable_overhead() {
+        let rec = Recorder::disabled();
+        let start = Instant::now();
+        for i in 0..1_000_000u64 {
+            rec.span_sim("track", "span", i as f64, i as f64 + 1.0, &[]);
+            rec.counter_sim("counter", i as f64, i as f64);
+        }
+        let elapsed = start.elapsed();
+        assert_eq!(rec.event_count(), 0);
+        assert!(
+            elapsed.as_millis() < 500,
+            "2M no-op record calls took {elapsed:?}; the disabled path must not lock or allocate"
+        );
+    }
+
+    #[test]
+    fn identical_recordings_serialize_identically() {
+        let run = || {
+            let rec = Recorder::enabled();
+            rec.span_sim("pool", "prefill", 0.25, 0.5, &[("batch", Json::Num(3.0))]);
+            rec.counter_sim("kv_tokens", 0.5, 768.0);
+            rec.instant_sim("req 1", "preempt", 0.75, &[("kv", Json::Num(128.0))]);
+            // Host events must not leak into the sim trace.
+            let t0 = rec.host_now_s();
+            rec.span_host("mapper", "search", t0, &[]);
+            rec.sim_trace_json().to_string_compact()
+        };
+        assert_eq!(run(), run());
+    }
+}

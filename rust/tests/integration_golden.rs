@@ -22,13 +22,19 @@
 //! thread timing; the winners never do).
 
 use llmcompass::eval::{self, Evaluator, SCHEMA_VERSION};
-use llmcompass::util::json::{diff_with_tolerance, Json};
+use llmcompass::util::json::{diff_with_tolerance_ignoring, Json};
 use std::path::{Path, PathBuf};
 
 /// Relative float tolerance for golden comparison: wide enough for libm
 /// differences across platforms, far tighter than any modeling change.
 const REL_TOL: f64 = 1e-9;
 const ABS_TOL: f64 = 1e-12;
+
+/// Report paths excluded from golden comparison: host wall-clock
+/// telemetry is nondeterministic by construction (it measures this
+/// machine, not the simulated one). The simulated-domain telemetry
+/// counters stay under the gate.
+const IGNORED_PATHS: &[&str] = &["telemetry.host"];
 
 fn scenarios_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
@@ -115,7 +121,8 @@ fn scenario_suite_matches_golden_reports() {
             .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
         let expected = Json::parse(&text)
             .unwrap_or_else(|e| panic!("golden {} is not valid JSON: {e}", path.display()));
-        let diffs = diff_with_tolerance(&expected, &actual, REL_TOL, ABS_TOL);
+        let diffs =
+            diff_with_tolerance_ignoring(&expected, &actual, REL_TOL, ABS_TOL, IGNORED_PATHS);
         if !diffs.is_empty() {
             let mut msg = format!(
                 "`{}`: report drifted from {} ({} field(s)):\n",

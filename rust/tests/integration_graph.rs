@@ -100,6 +100,9 @@ fn layer_reports_byte_identical_to_pre_refactor_path_on_designs_a_to_e() {
                     layers: m.layers,
                     per_layer: legacy_layer(&ev.sim, &sys, &m, phase),
                 }],
+                // Self-profiling is not under test (wall time can never be
+                // byte-equal); carry the evaluated report's section.
+                telemetry: rep.telemetry.clone(),
             };
             assert_eq!(
                 rep.to_json().to_string_pretty(),
@@ -139,6 +142,9 @@ fn request_reports_byte_identical_to_pre_refactor_path_on_designs_a_to_e() {
                 total_s: total,
                 tokens_per_s_per_request: s_out as f64 / total,
             }],
+            // Self-profiling is not under test (wall time can never be
+            // byte-equal); carry the evaluated report's section.
+            telemetry: rep.telemetry.clone(),
         };
         assert_eq!(
             rep.to_json().to_string_pretty(),

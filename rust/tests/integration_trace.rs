@@ -1,0 +1,145 @@
+//! Integration tests for the telemetry subsystem (`util::telemetry`):
+//! the Chrome-trace export attached to an `Evaluator` must tell the same
+//! story the serving report tells in aggregate.
+//!
+//! Three contracts:
+//! * every "preempt" instant in the trace is one scheduler preemption —
+//!   the event count equals `RunStats.preemptions` exactly;
+//! * the simulated-time trace is a pure function of the scenario: two
+//!   seeded runs serialize byte-identically (host wall-clock events live
+//!   in a separate trace process precisely so they can be excluded);
+//! * the shipped disaggregated sample produces the full observability
+//!   surface — request-lifecycle spans, per-pool KV/batch counter
+//!   tracks, and handoff instrumentation.
+
+use llmcompass::eval::{EvalResult, Evaluator, Scenario};
+use llmcompass::util::json::Json;
+use llmcompass::util::telemetry::Recorder;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+fn load(name: &str) -> Scenario {
+    Scenario::load(&scenarios_dir().join(name)).expect("shipped scenario loads")
+}
+
+/// Evaluate `sc` on a fresh serial evaluator with tracing on; return the
+/// recorder and the evaluated report.
+fn traced_eval(sc: &Scenario) -> (Arc<Recorder>, llmcompass::eval::EvalReport) {
+    let rec = Arc::new(Recorder::enabled());
+    let ev = Evaluator::new().with_recorder(rec.clone());
+    let rep = ev.evaluate(sc).expect("scenario evaluates");
+    (rec, rep)
+}
+
+fn events(trace: &Json) -> &[Json] {
+    trace.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array")
+}
+
+fn count_named(trace: &Json, ph: &str, name: &str) -> usize {
+    events(trace)
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some(ph)
+                && e.get("name").and_then(Json::as_str) == Some(name)
+        })
+        .count()
+}
+
+fn serving_stats(rep: &llmcompass::eval::EvalReport) -> &llmcompass::serve::RunStats {
+    rep.results
+        .iter()
+        .find_map(|r| match r {
+            EvalResult::Serving(sr) => Some(&sr.stats),
+            _ => None,
+        })
+        .expect("serving result present")
+}
+
+#[test]
+fn preempt_instants_match_the_preemption_counter_exactly() {
+    let sc = load("a100_evict.json");
+    let (rec, rep) = traced_eval(&sc);
+    let stats = serving_stats(&rep);
+    assert!(
+        stats.preemptions > 0,
+        "the evict sample must exercise preemption or this test is vacuous"
+    );
+    let trace = rec.to_json();
+    assert_eq!(
+        count_named(&trace, "i", "preempt") as u64,
+        stats.preemptions,
+        "one `preempt` instant per scheduler preemption, no more, no less"
+    );
+}
+
+#[test]
+fn seeded_runs_emit_byte_identical_simulated_time_traces() {
+    let sc = load("a100_evict.json");
+    let (rec_a, _) = traced_eval(&sc);
+    let (rec_b, _) = traced_eval(&sc);
+    let a = rec_a.sim_trace_json().to_string_compact();
+    let b = rec_b.sim_trace_json().to_string_compact();
+    assert!(!a.is_empty() && a.contains("traceEvents"));
+    assert_eq!(a, b, "simulated-time trace must be a pure function of the scenario");
+}
+
+#[test]
+fn disaggregated_trace_carries_lifecycle_pool_and_handoff_tracks() {
+    let sc = load("a100x4_disagg.json");
+    let (rec, rep) = traced_eval(&sc);
+    let stats = serving_stats(&rep);
+    let trace = rec.to_json();
+
+    // Request lifecycle: every request gets queued → prefill → handoff →
+    // decode spans plus first-token/done instants.
+    for name in ["queued", "prefill", "handoff", "decode"] {
+        assert!(count_named(&trace, "X", name) > 0, "missing lifecycle span `{name}`");
+    }
+    assert!(count_named(&trace, "i", "first_token") > 0);
+    assert!(count_named(&trace, "i", "done") > 0);
+
+    // Per-pool counter tracks sample KV occupancy and batch size.
+    for name in [
+        "kv_tokens (prefill pool)",
+        "batch (prefill pool)",
+        "kv_tokens (decode pool)",
+        "batch (decode pool)",
+    ] {
+        assert!(count_named(&trace, "C", name) > 0, "missing counter track `{name}`");
+    }
+
+    // Handoff stalls appear as spans iff the report says the prefill
+    // pool stalled.
+    let stalls = count_named(&trace, "X", "handoff_stall");
+    if stats.handoff_stall_s > 0.0 {
+        assert!(stalls > 0, "report shows stall time but the trace has no stall spans");
+    } else {
+        assert_eq!(stalls, 0, "trace shows stalls the report never accounted for");
+    }
+
+    // Every event in the export has a well-formed phase, and complete
+    // spans never run backwards.
+    for e in events(&trace) {
+        let ph = e.get("ph").and_then(Json::as_str).expect("event has ph");
+        assert!(["X", "C", "i", "M"].contains(&ph), "unexpected phase {ph:?}");
+        if ph == "X" {
+            assert!(e.get("dur").and_then(Json::as_f64).expect("span has dur") >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn disabled_recorder_leaves_reports_and_traces_empty_of_events() {
+    // The default evaluator carries the no-op recorder: same report,
+    // zero telemetry events, nothing to write.
+    let sc = load("a100_evict.json");
+    let ev = Evaluator::new();
+    let rep = ev.evaluate(&sc).expect("scenario evaluates");
+    assert!(serving_stats(&rep).preemptions > 0);
+    assert!(!ev.recorder().is_enabled());
+    assert_eq!(ev.recorder().event_count(), 0);
+}
