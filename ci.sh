@@ -47,6 +47,30 @@ else
         || { echo "trace has no events" >&2; exit 1; }
 fi
 
+# Tune smoke through the real CLI: a tiny design-space search (the
+# `smoke` preset: 2 core counts x 2 memories around the A100) over the
+# bursty sample must emit a valid TuneReport with at least one frontier
+# point and a best design.
+echo "== llmcompass tune --space smoke =="
+target/release/llmcompass tune --scenario ../scenarios/a100_bursty.json \
+    --space smoke > /tmp/llmcompass_tune.json
+if command -v python3 > /dev/null 2>&1; then
+    python3 -c '
+import json
+rep = json.load(open("/tmp/llmcompass_tune.json"))
+assert rep["schema_version"] == 1, "unexpected tune schema version"
+frontier = rep["frontier"]
+assert len(frontier) >= 1, "tune frontier is empty"
+best = rep.get("best")
+assert best, "tune produced no best design"
+print(f"tune OK: {len(frontier)} frontier point(s), best " + best["name"])
+'
+else
+    # No python3: at least require a non-empty frontier in the output.
+    grep -q '"frontier"' /tmp/llmcompass_tune.json \
+        || { echo "tune report has no frontier" >&2; exit 1; }
+fi
+
 if [[ "${1:-}" == "--fix" ]]; then
     echo "== cargo fmt =="
     cargo fmt

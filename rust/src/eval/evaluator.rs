@@ -343,6 +343,15 @@ impl Evaluator {
 
     /// Evaluate one scenario into a report.
     pub fn evaluate(&self, sc: &Scenario) -> Result<EvalReport, String> {
+        let system = config::resolve(&sc.hardware)?;
+        self.evaluate_on(sc, system)
+    }
+
+    /// Evaluate a scenario on an explicitly provided system, bypassing
+    /// the scenario's `hardware` field — the entry point the design-space
+    /// autotuner ([`crate::tune`]) uses to score synthesized candidate
+    /// designs that exist as no preset or file.
+    pub fn evaluate_on(&self, sc: &Scenario, system: SystemSpec) -> Result<EvalReport, String> {
         // Counter baselines for the report's telemetry deltas (exact when
         // scenarios run serially; see [`TelemetrySummary`]).
         let wall = Instant::now();
@@ -352,7 +361,6 @@ impl Evaluator {
         let rounds0 = self.sim.mapper.total_rounds();
         let candidates0 = self.sim.mapper.total_candidates();
         let cache_hits0 = self.sim.mapper.cache_hits();
-        let system = config::resolve(&sc.hardware)?;
         if sc.outputs.is_empty() {
             return Err(format!("scenario `{}` requests no outputs", sc.name));
         }

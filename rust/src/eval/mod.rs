@@ -34,4 +34,4 @@ pub use evaluator::{
     Evaluator, ServingReport, TelemetrySummary, SCHEMA_VERSION, TELEMETRY_SCHEMA_VERSION,
 };
 pub use crate::graph::ir::Parallelism;
-pub use scenario::{build_graph, GraphNodeSpec, Output, Scenario, TrafficSpec, Workload};
+pub use scenario::{build_graph, GraphNodeSpec, Output, Scenario, TrafficSpec, TuneSpec, Workload};

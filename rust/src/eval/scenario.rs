@@ -619,6 +619,71 @@ fn anchor_path(value: &mut String, dir: &std::path::Path) {
     }
 }
 
+/// The optional `tune` section of a scenario: how `llmcompass tune`
+/// should search a design space for this workload. Plain evaluation
+/// ignores it entirely, so tune scenarios still run (and golden-gate)
+/// as ordinary scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneSpec {
+    /// Design-space preset name or JSON file path (anchored to the
+    /// scenario's directory on load, like `hardware`).
+    pub space: String,
+    /// `perf-per-dollar` | `goodput-per-dollar`; `None` picks the
+    /// workload's natural objective.
+    pub objective: Option<crate::tune::Objective>,
+    pub max_area_mm2: Option<f64>,
+    pub max_power_w: Option<f64>,
+}
+
+impl TuneSpec {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("space", s(&self.space))];
+        if let Some(o) = self.objective {
+            fields.push(("objective", s(o.name())));
+        }
+        let mut cons: Vec<(&str, Json)> = Vec::new();
+        if let Some(a) = self.max_area_mm2 {
+            cons.push(("max_area_mm2", num(a)));
+        }
+        if let Some(p) = self.max_power_w {
+            cons.push(("max_power_w", num(p)));
+        }
+        if !cons.is_empty() {
+            fields.push(("constraints", obj(cons)));
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TuneSpec, String> {
+        if v.as_obj().is_none() {
+            return Err(
+                "scenario `tune` must be an object like {\"space\": \"section7\"}".to_string()
+            );
+        }
+        let objective = match opt_str(v, "objective")? {
+            None => None,
+            Some(text) => Some(crate::tune::Objective::parse(text).ok_or_else(|| {
+                format!("unknown tune objective `{text}` (perf-per-dollar | goodput-per-dollar)")
+            })?),
+        };
+        let (max_area_mm2, max_power_w) = match v.get("constraints") {
+            None => (None, None),
+            Some(c) => {
+                if c.as_obj().is_none() {
+                    return Err("tune `constraints` must be an object".to_string());
+                }
+                (opt_f64(c, "max_area_mm2")?, opt_f64(c, "max_power_w")?)
+            }
+        };
+        Ok(TuneSpec {
+            space: v.req_str("space").map_err(jerr)?.to_string(),
+            objective,
+            max_area_mm2,
+            max_power_w,
+        })
+    }
+}
+
 /// One evaluation scenario: hardware target, workload, requested outputs,
 /// and (optionally) how the workload maps onto the system's devices.
 #[derive(Debug, Clone, PartialEq)]
@@ -632,6 +697,8 @@ pub struct Scenario {
     /// across every device.
     pub parallelism: Option<Parallelism>,
     pub outputs: Vec<Output>,
+    /// Optional design-space search setup for `llmcompass tune`.
+    pub tune: Option<TuneSpec>,
 }
 
 impl Scenario {
@@ -644,12 +711,19 @@ impl Scenario {
             workload,
             parallelism: None,
             outputs,
+            tune: None,
         }
     }
 
     /// Set the device mapping (`tp × pp` must equal the device count).
     pub fn with_parallelism(mut self, par: Parallelism) -> Scenario {
         self.parallelism = Some(par);
+        self
+    }
+
+    /// Attach a `tune` section (the design-space search setup).
+    pub fn with_tune(mut self, tune: TuneSpec) -> Scenario {
+        self.tune = Some(tune);
         self
     }
 
@@ -687,6 +761,9 @@ impl Scenario {
                     ("microbatches", num(p.microbatches as f64)),
                 ]),
             ));
+        }
+        if let Some(t) = &self.tune {
+            fields.push(("tune", t.to_json()));
         }
         fields.push(("outputs", Json::Arr(self.outputs.iter().map(|o| s(o.name())).collect())));
         obj(fields)
@@ -743,12 +820,17 @@ impl Scenario {
                 Some(par)
             }
         };
+        let tune = match v.get("tune") {
+            None => None,
+            Some(t) => Some(TuneSpec::from_json(t)?),
+        };
         Ok(Scenario {
             name: opt_str(v, "name")?.unwrap_or("scenario").to_string(),
             hardware: v.req_str("hardware").map_err(jerr)?.to_string(),
             workload,
             parallelism,
             outputs,
+            tune,
         })
     }
 
@@ -780,6 +862,11 @@ impl Scenario {
             if let Workload::Traffic(t) = &mut sc.workload {
                 if let Some(trace) = &mut t.trace {
                     anchor_path(trace, dir);
+                }
+            }
+            if let Some(t) = &mut sc.tune {
+                if crate::tune::DesignSpace::preset(&t.space).is_none() {
+                    anchor_path(&mut t.space, dir);
                 }
             }
         }
@@ -852,6 +939,36 @@ mod tests {
         let mut t = TrafficSpec::poisson("gpt-small", 30.0, 64);
         t.mode = ServeMode::Disaggregated { prefill_devices: 0, transfer_base_s: 1e-3 };
         round_trip(&Scenario::new("disagg-auto", "a100x4", Workload::Traffic(t)));
+    }
+
+    #[test]
+    fn tune_section_round_trips() {
+        let req = Workload::Request {
+            model: "gpt-small".into(),
+            batch: 2,
+            prefill: 16,
+            decode: 8,
+            layers: Some(1),
+        };
+        round_trip(&Scenario::new("tuned", "a100", req.clone()).with_tune(TuneSpec {
+            space: "section7".into(),
+            objective: Some(crate::tune::Objective::PerfPerDollar),
+            max_area_mm2: Some(900.0),
+            max_power_w: None,
+        }));
+        // Objective and constraints are optional.
+        round_trip(&Scenario::new("tuned-min", "a100", req).with_tune(TuneSpec {
+            space: "smoke".into(),
+            objective: None,
+            max_area_mm2: None,
+            max_power_w: None,
+        }));
+        let bad = r#"{"hardware": "a100", "workload": {"type": "hardware"},
+                      "tune": {"space": "smoke", "objective": "nope"}}"#;
+        assert!(Scenario::parse(bad).unwrap_err().contains("objective"));
+        let missing = r#"{"hardware": "a100", "workload": {"type": "hardware"},
+                          "tune": {}}"#;
+        assert!(Scenario::parse(missing).is_err());
     }
 
     fn branchy_graph() -> Workload {

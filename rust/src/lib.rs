@@ -52,6 +52,17 @@
 //!   [`eval::EvalReport`]. The CLI subcommands and experiment context are
 //!   thin adapters over it, and suites of scenarios share one mapper
 //!   cache so repeated shapes are searched once.
+//! * [`tune`] — the design-space autotuner: a typed [`tune::DesignSpace`]
+//!   (core/device counts, lane count, systolic dims, SRAM sizes, memory
+//!   technology, fabric) searched by branch-and-bound for the paper's
+//!   Section-VII question — which hardware is the most cost-effective
+//!   for a workload. Reuses the mapper's tricks one level up: a provable
+//!   per-design roofline floor prunes designs no mapper search needs to
+//!   touch (provably frontier-preserving), candidate fan-out rides the
+//!   work-stealing pool, and evaluated designs persist in a cache keyed
+//!   by design fingerprint + scenario hash. Emits a [`tune::TuneReport`]:
+//!   a (latency, $/1M-tokens, area) Pareto frontier with full configs,
+//!   the best perf/$ or goodput/$ point, and the stock baseline.
 //! * [`runtime`] / [`calibrate`] / [`coordinator`] — the executable side:
 //!   load AOT-compiled JAX/Pallas artifacts via PJRT, time them, calibrate
 //!   a CPU device description, and serve batched inference end-to-end.
@@ -75,6 +86,7 @@ pub mod area;
 pub mod cost;
 pub mod serve;
 pub mod eval;
+pub mod tune;
 pub mod runtime;
 pub mod calibrate;
 pub mod coordinator;

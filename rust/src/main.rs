@@ -10,6 +10,12 @@
 //!   cover operators, layers, requests, arbitrary operator DAGs
 //!   (`"type": "graph"`), and serving traffic, with `parallelism`
 //!   `{tp, pp, microbatches}` device mappings
+//! * `tune`       — search a hardware design space for the most
+//!   cost-effective design: branch-and-bound over core/device counts,
+//!   systolic dims, SRAM sizes, and memory technology, pruned by a
+//!   provable per-design roofline floor, emitting a Pareto frontier
+//!   (latency vs $/1M-tokens vs area) and the best perf/$ or goodput/$
+//!   point vs the scenario's stock hardware
 //! * `simulate`   — simulate one operator or a Transformer layer/request
 //!   (`--pp`/`--microbatches` pipeline a request across device stages)
 //! * `area`       — die area breakdown (Fig. 6) and Table II parameters
@@ -52,6 +58,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "hardware" => cmd_hardware(rest),
         "eval" => cmd_eval(rest),
+        "tune" => cmd_tune(rest),
         "simulate" => cmd_simulate(rest),
         "area" => cmd_area(rest),
         "cost" => cmd_cost(rest),
@@ -85,6 +92,7 @@ fn print_usage() {
          commands:\n\
          \x20 hardware    list/show hardware descriptions\n\
          \x20 eval        evaluate JSON scenarios (--scenario file | --suite dir)\n\
+         \x20 tune        search a design space for cost-effective hardware (Pareto frontier)\n\
          \x20 simulate    simulate an operator or a transformer layer\n\
          \x20 area        die area breakdown\n\
          \x20 cost        die + memory cost\n\
@@ -111,6 +119,9 @@ const MAPPER_CACHE_HELP: &str = "persistent mapping cache: a JSON path, or `auto
 
 const TRACE_HELP: &str = "write a Chrome trace-event JSON here (open it in ui.perfetto.dev \
      or chrome://tracing); without this flag tracing is a no-op and costs nothing";
+
+const MAPPER_CACHE_CAP_HELP: &str = "LRU bound on the persistent mapping cache: keep at most \
+     N entries on save, evicting the least recently used (requires --mapper-cache)";
 
 /// `--trace <path>`: build an enabled telemetry recorder, or `None` when
 /// the flag is absent (every evaluator then keeps its no-op recorder).
@@ -140,13 +151,17 @@ fn mapper_cache_path(arg: &str) -> std::path::PathBuf {
 
 /// Build an evaluator for a CLI command: `budget` picks the mapper's
 /// candidate-loop mode; `--mapper-cache` backs it with the persistent
-/// on-disk mapping cache.
-fn evaluator_for(budget: SearchBudget, cache: Option<&str>) -> Evaluator {
+/// on-disk mapping cache, optionally LRU-bounded to `cache_cap` entries
+/// (`--mapper-cache-cap`).
+fn evaluator_for(budget: SearchBudget, cache: Option<&str>, cache_cap: Option<usize>) -> Evaluator {
     let mapper = match cache {
         None => Mapper::new(budget),
         Some(arg) => {
             let path = mapper_cache_path(arg);
-            let mapper = Mapper::with_cache(budget, &path);
+            let mapper = match cache_cap {
+                Some(cap) => Mapper::with_cache_capacity(budget, &path, cap),
+                None => Mapper::with_cache(budget, &path),
+            };
             if mapper.loaded_from_disk() > 0 {
                 eprintln!(
                     "[mapper cache: {} mappings loaded from {}]",
@@ -222,6 +237,7 @@ fn cmd_eval(raw: &[String]) -> R {
              hybrid over all cores; winners identical, rounds counters may vary)",
         )
         .opt("mapper-cache", None, MAPPER_CACHE_HELP)
+        .opt("mapper-cache-cap", None, MAPPER_CACHE_CAP_HELP)
         .opt("trace", None, TRACE_HELP)
         .flag("compact", "emit compact JSON instead of pretty-printed")
         .flag("pooled", "use the pooled (multi-threaded) mapper search");
@@ -238,6 +254,16 @@ fn cmd_eval(raw: &[String]) -> R {
         return Err("--threads applies to --suite only (use --pooled for one scenario)".into());
     }
     let cache = a.get("mapper-cache");
+    let cache_cap = match a.get_u64("mapper-cache-cap").map_err(|e| e.0)? {
+        Some(0) => return Err("--mapper-cache-cap must be ≥ 1".into()),
+        Some(n) => {
+            if cache.is_none() {
+                return Err("--mapper-cache-cap requires --mapper-cache".into());
+            }
+            Some(n as usize)
+        }
+        None => None,
+    };
     let emit = |j: &Json| {
         if a.flag("compact") {
             println!("{}", j.to_string_compact());
@@ -249,7 +275,7 @@ fn cmd_eval(raw: &[String]) -> R {
 
     if let Some(path) = a.get("scenario") {
         let budget = if a.flag("pooled") { SearchBudget::pooled() } else { SearchBudget::default() };
-        let mut ev = evaluator_for(budget, cache);
+        let mut ev = evaluator_for(budget, cache, cache_cap);
         let rec = trace_recorder(a.get("trace"));
         if let Some(r) = &rec {
             ev = ev.with_recorder(r.clone());
@@ -275,7 +301,7 @@ fn cmd_eval(raw: &[String]) -> R {
         // still running. An explicit --threads pins a fixed pool with a
         // serial per-search loop instead.
         let budget = if threads.is_some() { SearchBudget::default() } else { SearchBudget::hybrid() };
-        let mut ev = evaluator_for(budget, cache);
+        let mut ev = evaluator_for(budget, cache, cache_cap);
         let rec = trace_recorder(a.get("trace"));
         if let Some(r) = &rec {
             ev = ev.with_recorder(r.clone());
@@ -322,6 +348,17 @@ fn cmd_eval(raw: &[String]) -> R {
             lut_hits,
             lut_misses
         );
+        if let Some(path) = ev.sim.mapper.cache_path() {
+            let cap = match ev.sim.mapper.cache_capacity() {
+                Some(c) => format!(", LRU cap {c}"),
+                None => String::new(),
+            };
+            eprintln!(
+                "[mapper cache: {} ({} entries{cap})]",
+                path.display(),
+                ev.sim.mapper.cache_len()
+            );
+        }
         write_trace(rec.as_ref(), a.get("trace"))?;
         persist_mapper_cache(&ev);
         if failed > 0 {
@@ -331,6 +368,163 @@ fn cmd_eval(raw: &[String]) -> R {
     }
 
     Err(format!("eval needs --scenario <file> or --suite <dir>\n\n{}", cmd.help()))
+}
+
+fn cmd_tune(raw: &[String]) -> R {
+    use llmcompass::tune::{self, DesignSpace, Objective, TuneOptions};
+    let cmd = Command::new("tune", "search a design space for cost-effective hardware")
+        .opt("scenario", None, "scenario JSON file (an optional `tune` section supplies defaults)")
+        .opt(
+            "space",
+            None,
+            "design space: a preset (smoke | section7) or a JSON file \
+             (overrides the scenario's `tune.space`)",
+        )
+        .opt(
+            "objective",
+            None,
+            "perf-per-dollar | goodput-per-dollar (default: the scenario's `tune.objective`, \
+             else perf/$ for request workloads and goodput/$ for traffic)",
+        )
+        .opt(
+            "constraints",
+            None,
+            "comma-separated feasibility caps, e.g. `area=900,power=500` \
+             (die mm² / device W; override the scenario's)",
+        )
+        .opt(
+            "tune-cache",
+            None,
+            "persistent design-point cache: a JSON path, or `auto` for \
+             $LLMCOMPASS_ARTIFACT_DIR/tune_cache.json (keyed by design fingerprint + \
+             scenario hash; repeated runs skip evaluated designs)",
+        )
+        .opt("mapper-cache", None, MAPPER_CACHE_HELP)
+        .opt("mapper-cache-cap", None, MAPPER_CACHE_CAP_HELP)
+        .opt("trace", None, TRACE_HELP)
+        .flag(
+            "exhaustive",
+            "evaluate every feasible design instead of branch-and-bound pruning \
+             (identical frontier, more work — for verification and timing)",
+        )
+        .flag("compact", "emit compact JSON instead of pretty-printed");
+    let a = cmd.parse(raw).map_err(|e| e.0)?;
+    let Some(path) = a.get("scenario") else {
+        return Err(format!("tune needs --scenario <file>\n\n{}", cmd.help()));
+    };
+    let sc = Scenario::load(std::path::Path::new(path))?;
+    let spec = sc.tune.clone();
+    let space_arg = a
+        .get("space")
+        .map(str::to_string)
+        .or_else(|| spec.as_ref().map(|t| t.space.clone()))
+        .ok_or("no design space: pass --space <preset|file> or add a `tune` scenario section")?;
+    let space = DesignSpace::resolve(&space_arg)?;
+    let objective = match a.get("objective") {
+        Some(text) => Objective::parse(text).ok_or_else(|| {
+            format!("unknown --objective `{text}` (perf-per-dollar | goodput-per-dollar)")
+        })?,
+        None => spec
+            .as_ref()
+            .and_then(|t| t.objective)
+            .unwrap_or_else(|| Objective::default_for(&sc.workload)),
+    };
+    let mut constraints = tune::Constraints {
+        max_area_mm2: spec.as_ref().and_then(|t| t.max_area_mm2),
+        max_power_w: spec.as_ref().and_then(|t| t.max_power_w),
+    };
+    if let Some(text) = a.get("constraints") {
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                return Err(format!(
+                    "bad --constraints entry `{part}` (want area=<mm2> or power=<w>)"
+                ));
+            };
+            let v: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad --constraints value in `{part}`"))?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("--constraints values must be positive, got `{part}`"));
+            }
+            match key.trim() {
+                "area" => constraints.max_area_mm2 = Some(v),
+                "power" => constraints.max_power_w = Some(v),
+                other => return Err(format!("unknown constraint `{other}` (area | power)")),
+            }
+        }
+    }
+    let cache = a.get("mapper-cache");
+    let cache_cap = match a.get_u64("mapper-cache-cap").map_err(|e| e.0)? {
+        Some(0) => return Err("--mapper-cache-cap must be ≥ 1".into()),
+        Some(n) => {
+            if cache.is_none() {
+                return Err("--mapper-cache-cap requires --mapper-cache".into());
+            }
+            Some(n as usize)
+        }
+        None => None,
+    };
+    let tune_cache = a.get("tune-cache").map(|arg| {
+        if arg == "auto" {
+            experiments::default_artifact_dir().join("tune_cache.json")
+        } else {
+            std::path::PathBuf::from(arg)
+        }
+    });
+    // The design fan-out rides the shared work-stealing pool; the hybrid
+    // mapper budget lets idle design workers donate cores to whichever
+    // mapper search is still running (same policy as `eval --suite`).
+    let mut ev = evaluator_for(SearchBudget::hybrid(), cache, cache_cap);
+    let rec = trace_recorder(a.get("trace"));
+    if let Some(r) = &rec {
+        ev = ev.with_recorder(r.clone());
+    }
+    let opts =
+        TuneOptions { constraints, exhaustive: a.flag("exhaustive"), cache_path: tune_cache };
+    let start = std::time::Instant::now();
+    let report = tune::tune(&ev, &sc, &space, objective, &opts)?;
+    let j = report.to_json();
+    if a.flag("compact") {
+        println!("{}", j.to_string_compact());
+    } else {
+        print!("{}", j.to_string_pretty());
+    }
+    eprintln!(
+        "[tune: {} designs → {} infeasible, {} pruned, {} evaluated, {} cache hits in {} | \
+         frontier {} point(s)]",
+        report.designs_total,
+        report.infeasible,
+        report.pruned,
+        report.evaluated,
+        report.cache_hits,
+        llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),
+        report.frontier.len()
+    );
+    match (&report.best, report.gain_vs_baseline()) {
+        (Some(best), Some(gain)) => eprintln!(
+            "[best {}: {} = {:.3e}, {:.2}x the stock `{}` baseline]",
+            objective.name(),
+            best.name,
+            objective.value(best),
+            gain,
+            sc.hardware
+        ),
+        (Some(best), None) => eprintln!(
+            "[best {}: {} = {:.3e} (no baseline to compare)]",
+            objective.name(),
+            best.name,
+            objective.value(best)
+        ),
+        _ => eprintln!("[no feasible design in the space]"),
+    }
+    write_trace(rec.as_ref(), a.get("trace"))?;
+    persist_mapper_cache(&ev);
+    Ok(())
 }
 
 fn cmd_simulate(raw: &[String]) -> R {
@@ -351,7 +545,7 @@ fn cmd_simulate(raw: &[String]) -> R {
         .opt("trace", None, TRACE_HELP);
     let a = cmd.parse(raw).map_err(|e| e.0)?;
     let hw = a.get_or("hardware", "a100x4");
-    let mut ev = evaluator_for(SearchBudget::default(), a.get("mapper-cache"));
+    let mut ev = evaluator_for(SearchBudget::default(), a.get("mapper-cache"), None);
     let rec = trace_recorder(a.get("trace"));
     if let Some(r) = &rec {
         ev = ev.with_recorder(r.clone());
@@ -751,7 +945,7 @@ fn cmd_serve(raw: &[String]) -> R {
         }
     };
     let budget = if a.flag("pooled") { SearchBudget::pooled() } else { SearchBudget::default() };
-    let mut ev = evaluator_for(budget, a.get("mapper-cache"));
+    let mut ev = evaluator_for(budget, a.get("mapper-cache"), None);
     let rec = trace_recorder(a.get("trace"));
     if let Some(r) = &rec {
         ev = ev.with_recorder(r.clone());

@@ -319,6 +319,11 @@ pub const CACHE_VERSION: u64 = 1;
 struct CacheEntry {
     device: String,
     best: Best,
+    /// Logical-clock stamp of the entry's last hit or insert, used for
+    /// LRU eviction under a [`Mapper::with_cache_capacity`] cap. The
+    /// field is additive: pre-cap cache files parse it as 0, so their
+    /// entries are evicted first once a cap applies.
+    last_used: u64,
 }
 
 /// Persistent-cache state: where to save, entries for *other* budgets
@@ -355,6 +360,15 @@ pub struct Mapper {
     /// span plus counter samples. Disabled recorder ⇒ no-op.
     recorder: Arc<Recorder>,
     disk: Option<DiskCache>,
+    /// Optional bound on how many of this mapper's *own* entries
+    /// [`Mapper::persist`] writes; the least-recently-used entries beyond
+    /// the cap are evicted from the file (foreign-budget entries are
+    /// never evicted). `None` ⇒ unbounded.
+    cache_cap: Option<usize>,
+    /// Logical clock for the LRU stamps: bumped on every cache hit and
+    /// insert, seeded past the largest stamp loaded from disk so fresh
+    /// activity always outranks prior runs.
+    clock: AtomicU64,
 }
 
 impl Default for Mapper {
@@ -398,6 +412,8 @@ impl Mapper {
             cache_hits: AtomicU64::new(0),
             recorder: Arc::new(Recorder::disabled()),
             disk: None,
+            cache_cap: None,
+            clock: AtomicU64::new(0),
         }
     }
 
@@ -470,7 +486,9 @@ impl Mapper {
             },
         }
         let count = loaded.len() as u64;
+        let clock = loaded.values().map(|e| e.last_used).max().unwrap_or(0);
         *mapper.cache.get_mut().unwrap() = loaded;
+        mapper.clock = AtomicU64::new(clock);
         mapper.disk = Some(DiskCache {
             path: path.to_path_buf(),
             foreign,
@@ -478,6 +496,23 @@ impl Mapper {
             loaded: count,
         });
         mapper
+    }
+
+    /// [`Mapper::with_cache`] plus an LRU bound: `persist` keeps only the
+    /// `cap` most-recently-used of this mapper's own entries, so
+    /// long-running suites (or week-long `tune` searches) sharing one
+    /// cache file cannot grow it without bound. A cap of 0 is treated as
+    /// 1. Entries saved by differently budgeted runs are never evicted.
+    pub fn with_cache_capacity(budget: SearchBudget, path: &Path, cap: usize) -> Self {
+        let mut mapper = Mapper::with_cache(budget, path);
+        mapper.cache_cap = Some(cap.max(1));
+        mapper
+    }
+
+    /// The LRU entry cap, when one was set via
+    /// [`Mapper::with_cache_capacity`].
+    pub fn cache_capacity(&self) -> Option<usize> {
+        self.cache_cap
     }
 
     pub fn matmul(&self, dev: &DeviceSpec, shape: &Shape) -> Best {
@@ -503,8 +538,17 @@ impl Mapper {
         let lock_in_flight =
             || self.in_flight.lock().unwrap_or_else(|e| e.into_inner());
         loop {
-            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            if let Some(hit) = self.cache.lock().unwrap().get_mut(&key) {
+                hit.last_used = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
                 self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                // Recency only needs re-persisting when eviction can act
+                // on it; an uncapped warm run stays clean (and writes
+                // nothing on persist), as before.
+                if self.cache_cap.is_some() {
+                    if let Some(disk) = &self.disk {
+                        disk.dirty.store(true, Ordering::Relaxed);
+                    }
+                }
                 return hit.best.clone();
             }
             let mut in_flight = lock_in_flight();
@@ -557,10 +601,11 @@ impl Mapper {
             self.recorder.counter_host("lut hits", lut_hits as f64);
             self.recorder.counter_host("lut misses", lut_misses as f64);
         }
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key, CacheEntry { device: dev.name.clone(), best: best.clone() });
+        let stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        self.cache.lock().unwrap().insert(
+            key,
+            CacheEntry { device: dev.name.clone(), best: best.clone(), last_used: stamp },
+        );
         if let Some(disk) = &self.disk {
             disk.dirty.store(true, Ordering::Relaxed);
         }
@@ -591,7 +636,19 @@ impl Mapper {
             cache.iter().map(|(k, e)| (*k, e.clone())).collect()
         };
         items.sort_by_key(|(k, _)| (k.0, k.1, k.2, k.3, k.4, k.5.name(), k.6));
+        // `own` covers *every* key this mapper holds — including entries
+        // the LRU cap evicts below — so evicted keys are dropped from the
+        // file rather than resurrected as foreign entries.
         let own: HashSet<CacheKey> = items.iter().map(|(k, _)| *k).collect();
+        if let Some(cap) = self.cache_cap {
+            if items.len() > cap {
+                // Keep the `cap` most recently used; the stable sort over
+                // the key-ordered vector makes ties deterministic.
+                items.sort_by_key(|(_, e)| std::cmp::Reverse(e.last_used));
+                items.truncate(cap);
+                items.sort_by_key(|(k, _)| (k.0, k.1, k.2, k.3, k.4, k.5.name(), k.6));
+            }
+        }
         // Keep every entry on disk we don't own — other budgets, and
         // shapes another process saved since we loaded. A missing file is
         // a first save; any *other* read error refuses to overwrite
@@ -718,6 +775,7 @@ fn entry_to_json(key: &CacheKey, entry: &CacheEntry, budget: &SearchBudget) -> J
         ("n", num(n as f64)),
         ("dtype", s(dtype.name())),
         ("batched_b", Json::Bool(batched_b)),
+        ("last_used", num(entry.last_used as f64)),
         (
             "budget",
             obj(vec![
@@ -795,7 +853,10 @@ fn parse_entry(entry: &Json) -> Option<(CacheKey, CacheEntry)> {
         candidates: entry.get("candidates")?.as_u64()?,
     };
     let device = entry.get("device")?.as_str()?.to_string();
-    Some((key, CacheEntry { device, best }))
+    // Additive field: caches written before the LRU cap existed have no
+    // stamp; 0 ranks them oldest, which is the right eviction order.
+    let last_used = entry.get("last_used").and_then(Json::as_u64).unwrap_or(0);
+    Some((key, CacheEntry { device, best, last_used }))
 }
 
 #[cfg(test)]
@@ -1081,13 +1142,20 @@ mod tests {
             shape.dtype,
             shape.batched_b,
         );
-        let entry = CacheEntry { device: dev.name.clone(), best };
+        let entry = CacheEntry { device: dev.name.clone(), best, last_used: 7 };
         let j = entry_to_json(&key, &entry, &SearchBudget::default());
         assert!(budget_matches(&j, &SearchBudget::default()));
         assert!(!budget_matches(&j, &SearchBudget { gt_per_dim: 9, ..Default::default() }));
         let (k2, e2) = parse_entry(&j).unwrap();
         assert_eq!(k2, key);
         assert_eq!(e2.device, entry.device);
+        assert_eq!(e2.last_used, 7);
+        // A stampless (pre-LRU) entry still parses, ranked oldest.
+        let mut stripped = j.clone();
+        if let Json::Obj(map) = &mut stripped {
+            map.remove("last_used");
+        }
+        assert_eq!(parse_entry(&stripped).unwrap().1.last_used, 0);
         assert_eq!(e2.best.mapping, entry.best.mapping);
         assert_eq!(e2.best.outcome.seconds.to_bits(), entry.best.outcome.seconds.to_bits());
         assert_eq!(e2.best.rounds, entry.best.rounds);
@@ -1097,5 +1165,60 @@ mod tests {
         let (k3, e3) = parse_entry(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(k3, key);
         assert_eq!(e3.best.outcome.seconds.to_bits(), entry.best.outcome.seconds.to_bits());
+    }
+
+    #[test]
+    fn lru_cap_evicts_least_recently_used_on_persist() {
+        let path = temp_cache("lru");
+        let _ = std::fs::remove_file(&path);
+        let dev = a100();
+        let shapes = [
+            Shape::simple(64, 128, 64, DType::FP16),
+            Shape::simple(128, 128, 64, DType::FP16),
+            Shape::simple(256, 128, 64, DType::FP16),
+        ];
+        {
+            let mapper = Mapper::with_cache_capacity(SearchBudget::default(), &path, 2);
+            assert_eq!(mapper.cache_capacity(), Some(2));
+            for sh in &shapes {
+                mapper.matmul(&dev, sh);
+            }
+            // Re-touch the first shape: it becomes the most recently
+            // used, leaving shapes[1] as the LRU victim.
+            mapper.matmul(&dev, &shapes[0]);
+            mapper.persist().unwrap();
+        }
+        let reload = Mapper::with_cache(SearchBudget::default(), &path);
+        assert_eq!(reload.loaded_from_disk(), 2, "cap must bound the persisted cache");
+        reload.matmul(&dev, &shapes[0]);
+        reload.matmul(&dev, &shapes[2]);
+        assert_eq!(reload.searches(), 0, "survivors must be served from disk");
+        reload.matmul(&dev, &shapes[1]);
+        assert_eq!(reload.searches(), 1, "the LRU entry must have been evicted");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lru_cap_never_evicts_foreign_budget_entries() {
+        let path = temp_cache("lru-foreign");
+        let _ = std::fs::remove_file(&path);
+        let dev = a100();
+        let other_budget = SearchBudget { gt_per_dim: 2, ..SearchBudget::default() };
+        {
+            let other = Mapper::with_cache(other_budget, &path);
+            other.matmul(&dev, &Shape::simple(64, 128, 64, DType::FP16));
+            other.persist().unwrap();
+        }
+        {
+            let capped = Mapper::with_cache_capacity(SearchBudget::default(), &path, 1);
+            capped.matmul(&dev, &Shape::simple(128, 128, 64, DType::FP16));
+            capped.matmul(&dev, &Shape::simple(256, 128, 64, DType::FP16));
+            capped.persist().unwrap();
+        }
+        let own = Mapper::with_cache(SearchBudget::default(), &path);
+        assert_eq!(own.loaded_from_disk(), 1, "cap keeps exactly one own entry");
+        let foreign = Mapper::with_cache(other_budget, &path);
+        assert_eq!(foreign.loaded_from_disk(), 1, "foreign entries survived the cap");
+        let _ = std::fs::remove_file(&path);
     }
 }

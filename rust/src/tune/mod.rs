@@ -1,0 +1,1463 @@
+//! `tune` — the design-space autotuner: the outer search loop that turns
+//! the framework from a simulator of fixed designs into a tool that
+//! *finds* cost-effective ones (the paper's Section VII payoff: up to
+//! 3.41× perf/cost over an A100 by cutting compute capability or
+//! swapping HBM for commodity DRAM).
+//!
+//! The subsystem reuses the mapper's own tricks one level up:
+//!
+//! * a typed [`DesignSpace`] (core/device counts, vector lane count,
+//!   systolic array dims, SRAM sizes, memory technology, fabric preset)
+//!   enumerates into concrete [`SystemSpec`] candidates in a fixed,
+//!   documented nest order;
+//! * a provable per-design floor — the op-level roofline bound (the same
+//!   quantity the mapper's `matmul::lower_bound` prunes tilings with)
+//!   aggregated over the scenario's operators — rules a candidate out
+//!   *before any mapper search runs*. A design is skipped only when some
+//!   already-evaluated design beats its floor latency, floor
+//!   $/1M-tokens, *and* exact area strictly; since the floor never
+//!   exceeds the true metric, every pruned design is strictly dominated,
+//!   so the reported Pareto frontier is bit-identical to exhaustive
+//!   enumeration under any evaluation order (see [`tune`]);
+//! * candidate fan-out rides the process-wide work-stealing pool
+//!   ([`crate::util::pool::parallel_map_shared`]), sharing the worker
+//!   budget with each design's own mapper searches;
+//! * evaluated designs land in a persistent cache keyed by design
+//!   fingerprint + scenario hash, so re-running over a grown space only
+//!   evaluates the new designs.
+//!
+//! The objective is perf/$ ([`Objective::PerfPerDollar`]) or goodput/$
+//! ([`Objective::GoodputPerDollar`]) under optional area/power
+//! constraints, and the output is a [`TuneReport`]: a Pareto frontier
+//! over (latency, $/1M output tokens, die area) carrying the full
+//! hardware config of every non-dominated point, plus the stock
+//! baseline the scenario named, for direct best-vs-stock comparison.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::area::die_breakdown;
+use crate::cost::device_cost;
+use crate::eval::{model_by_name, traffic_requests, EvalReport, EvalResult, Evaluator};
+use crate::eval::{Output, Scenario, Workload};
+use crate::graph::layer::{layer_ops, Phase};
+use crate::hardware::{
+    presets, DeviceSpec, InterconnectSpec, MemProtocol, MemorySpec, SystemSpec,
+};
+use crate::perf::Op;
+use crate::serve::sweep::usd_per_mtok_at_slo;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::pool;
+
+/// Bump when the `TuneReport` JSON layout changes shape.
+pub const TUNE_SCHEMA_VERSION: u64 = 1;
+
+/// Bump when the on-disk tune-cache layout changes; mismatched entries
+/// are preserved verbatim but not reused.
+pub const TUNE_CACHE_VERSION: u64 = 1;
+
+/// Refuse to materialize spaces larger than this: the search is meant
+/// for curated grids, not accidental combinatorial explosions.
+pub const MAX_DESIGNS: usize = 4096;
+
+/// $/1M-tokens is clamped here so reports stay valid JSON even when a
+/// design serves zero goodput (infinite cost per token).
+pub const UNAFFORDABLE_USD_PER_MTOK: f64 = 1e30;
+
+// ---------------------------------------------------------------------------
+// Objective + constraints
+// ---------------------------------------------------------------------------
+
+/// What "better" means for [`best`](TuneReport::best) selection. The
+/// Pareto frontier itself is objective-independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// `(1 / latency) / cluster cost` — for request scenarios, where
+    /// latency is the end-to-end request time. Monotone in $/1M-tokens
+    /// there, so the winner always sits on the frontier.
+    PerfPerDollar,
+    /// `goodput tokens/s / cluster cost` — for traffic scenarios;
+    /// equivalent to minimizing $/1M tokens at the SLO.
+    GoodputPerDollar,
+}
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::PerfPerDollar => "perf-per-dollar",
+            Objective::GoodputPerDollar => "goodput-per-dollar",
+        }
+    }
+
+    pub fn parse(v: &str) -> Option<Objective> {
+        match v {
+            "perf-per-dollar" | "perf" => Some(Objective::PerfPerDollar),
+            "goodput-per-dollar" | "goodput" => Some(Objective::GoodputPerDollar),
+            _ => None,
+        }
+    }
+
+    /// Objective value of a point — higher is better.
+    pub fn value(self, p: &DesignPoint) -> f64 {
+        match self {
+            Objective::PerfPerDollar => 1.0 / (p.latency_s * p.cluster_cost_usd),
+            Objective::GoodputPerDollar => p.tok_s / p.cluster_cost_usd,
+        }
+    }
+
+    /// The natural objective for a workload: request latency → perf/$,
+    /// serving traffic → goodput/$.
+    pub fn default_for(w: &Workload) -> Objective {
+        match w {
+            Workload::Traffic(_) => Objective::GoodputPerDollar,
+            _ => Objective::PerfPerDollar,
+        }
+    }
+}
+
+/// User-set feasibility screens, applied before floors or evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Constraints {
+    /// Per-die area budget, mm².
+    pub max_area_mm2: Option<f64>,
+    /// Per-device power budget (the [`power_proxy_w`] estimate), watts.
+    pub max_power_w: Option<f64>,
+}
+
+impl Constraints {
+    pub fn satisfied(&self, area_mm2: f64, power_w: f64) -> bool {
+        self.max_area_mm2.map_or(true, |m| area_mm2 <= m)
+            && self.max_power_w.map_or(true, |m| power_w <= m)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(a) = self.max_area_mm2 {
+            fields.push(("max_area_mm2", num(a)));
+        }
+        if let Some(p) = self.max_power_w {
+            fields.push(("max_power_w", num(p)));
+        }
+        obj(fields)
+    }
+}
+
+/// A coarse analytic power estimate used only as a constraint screen —
+/// there is no microarchitectural power model in the framework (the
+/// paper stops at area and cost), so this charges published-order
+/// energy-per-op rates: ~0.5 pJ/FLOP for the FP16 systolic arrays,
+/// ~1 pJ/FLOP for the FP32 vector units, a per-byte toll on the full
+/// memory bandwidth by technology (HBM is the cheapest per bit), a
+/// small SRAM leakage term, and a fixed uncore floor. The A100 preset
+/// lands near 300 W against its 400 W TDP — good enough to rank
+/// designs, not to size a heatsink.
+pub fn power_proxy_w(dev: &DeviceSpec) -> f64 {
+    let mem_pj_per_byte = match dev.memory.protocol {
+        MemProtocol::HBM2E => 30.0,
+        MemProtocol::DDR5 => 50.0,
+        MemProtocol::PCIE5CXL => 60.0,
+        MemProtocol::HostDRAM => 60.0,
+    };
+    let compute_w = dev.peak_matrix_flops() * 0.5e-12 + dev.peak_vector_flops() * 1.0e-12;
+    let memory_w = dev.memory.bandwidth_bytes_per_s * mem_pj_per_byte * 1e-12;
+    let sram_w = dev.total_sram_bytes() as f64 * 0.05e-6;
+    50.0 + compute_w + memory_w + sram_w
+}
+
+// ---------------------------------------------------------------------------
+// Memory technology + fabric presets
+// ---------------------------------------------------------------------------
+
+/// A memory technology choice: protocol (drives PHY area and $/GB in
+/// the cost model) plus the bandwidth/capacity it ships with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemTech {
+    pub name: String,
+    pub protocol: MemProtocol,
+    pub bandwidth_bytes_per_s: f64,
+    pub capacity_bytes: u64,
+}
+
+impl MemTech {
+    /// Named presets: `hbm2e` (A100-class stacks), `ddr5` (commodity
+    /// DIMMs, the paper's HBM→DRAM swap), `lpddr5` (mobile-class DRAM;
+    /// the cost/area models have no dedicated LPDDR entry so it rides
+    /// the DDR5 protocol and commodity pricing with LPDDR-class
+    /// bandwidth), and `cxl` (DRAM behind PCIe 5.0/CXL, the paper's
+    /// throughput-oriented design memory).
+    pub fn preset(name: &str) -> Option<MemTech> {
+        let (protocol, bw, cap_gb): (MemProtocol, f64, u64) = match name {
+            "hbm2e" => (MemProtocol::HBM2E, 2.0e12, 80),
+            "ddr5" => (MemProtocol::DDR5, 0.3e12, 256),
+            "lpddr5" => (MemProtocol::DDR5, 0.55e12, 128),
+            "cxl" => (MemProtocol::PCIE5CXL, 1.0e12, 512),
+            _ => return None,
+        };
+        Some(MemTech {
+            name: name.to_string(),
+            protocol,
+            bandwidth_bytes_per_s: bw,
+            capacity_bytes: cap_gb * 1_000_000_000,
+        })
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &["hbm2e", "ddr5", "lpddr5", "cxl"]
+    }
+
+    /// The memory a device already has, as an axis value (used when a
+    /// space leaves the memory axis empty).
+    pub fn of_device(dev: &DeviceSpec) -> MemTech {
+        MemTech {
+            name: short_mem_label(dev.memory.protocol).to_string(),
+            protocol: dev.memory.protocol,
+            bandwidth_bytes_per_s: dev.memory.bandwidth_bytes_per_s,
+            capacity_bytes: dev.memory.capacity_bytes,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("protocol", s(self.protocol.name())),
+            ("bandwidth_gbs", num(self.bandwidth_bytes_per_s / 1e9)),
+            ("capacity_gb", num(self.capacity_bytes as f64 / 1e9)),
+        ])
+    }
+
+    /// A preset name string or a full `{name, protocol, bandwidth_gbs,
+    /// capacity_gb}` object.
+    pub fn from_json(v: &Json) -> Result<MemTech, String> {
+        if let Some(name) = v.as_str() {
+            return MemTech::preset(name).ok_or_else(|| {
+                format!(
+                    "unknown memory preset `{name}` (known: {})",
+                    MemTech::preset_names().join(", ")
+                )
+            });
+        }
+        let e = |x: crate::util::json::JsonError| x.msg;
+        Ok(MemTech {
+            name: v.req_str("name").map_err(e)?.to_string(),
+            protocol: MemProtocol::parse(v.req_str("protocol").map_err(e)?)
+                .ok_or_else(|| "unknown memory `protocol`".to_string())?,
+            bandwidth_bytes_per_s: v.req_f64("bandwidth_gbs").map_err(e)? * 1e9,
+            capacity_bytes: (v.req_f64("capacity_gb").map_err(e)? * 1e9) as u64,
+        })
+    }
+}
+
+fn short_mem_label(p: MemProtocol) -> &'static str {
+    match p {
+        MemProtocol::HBM2E => "hbm2e",
+        MemProtocol::DDR5 => "ddr5",
+        MemProtocol::PCIE5CXL => "cxl",
+        MemProtocol::HostDRAM => "host",
+    }
+}
+
+/// Fabric presets: `nvlink` (NVLink-class 600 GB/s links) or `pcie`
+/// (host PCIe-class links).
+pub fn fabric_preset(name: &str) -> Option<InterconnectSpec> {
+    match name {
+        "nvlink" => Some(InterconnectSpec::nvlink_like(600e9)),
+        "pcie" => Some(InterconnectSpec::pcie_host_like()),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DesignSpace
+// ---------------------------------------------------------------------------
+
+/// A grid of hardware designs around a base device preset. Empty axes
+/// inherit the base device's value (and `device_counts` defaults to
+/// `[1]`), so a space names only the dimensions it explores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignSpace {
+    pub name: String,
+    /// Base device preset the grid perturbs (e.g. `a100`).
+    pub base: String,
+    pub core_counts: Vec<u64>,
+    pub device_counts: Vec<u64>,
+    /// Vector/systolic lanes per core.
+    pub lane_counts: Vec<u64>,
+    /// Systolic array (rows, cols) per lane.
+    pub systolic: Vec<(u64, u64)>,
+    pub local_buffer_kb: Vec<u64>,
+    pub global_buffer_mb: Vec<u64>,
+    pub memories: Vec<MemTech>,
+    /// Fabric preset for multi-device candidates (`nvlink` | `pcie`).
+    pub fabric: String,
+}
+
+/// One materialized design: a readable name plus the full system spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub name: String,
+    pub system: SystemSpec,
+}
+
+impl DesignSpace {
+    /// An empty space around a base device: every axis inherits.
+    pub fn around(name: &str, base: &str) -> DesignSpace {
+        DesignSpace {
+            name: name.to_string(),
+            base: base.to_string(),
+            core_counts: Vec::new(),
+            device_counts: Vec::new(),
+            lane_counts: Vec::new(),
+            systolic: Vec::new(),
+            local_buffer_kb: Vec::new(),
+            global_buffer_mb: Vec::new(),
+            memories: Vec::new(),
+            fabric: "nvlink".to_string(),
+        }
+    }
+
+    /// Built-in spaces: `smoke` (2 core counts × 2 memories around the
+    /// A100 — the CI-sized space) and `section7` (the paper's
+    /// Section-VII moves: full/half/quarter compute × HBM-vs-DRAM).
+    pub fn preset(name: &str) -> Option<DesignSpace> {
+        match name {
+            "smoke" => {
+                let mut sp = DesignSpace::around("smoke", "a100");
+                sp.core_counts = vec![54, 108];
+                sp.memories =
+                    vec![MemTech::preset("hbm2e").unwrap(), MemTech::preset("ddr5").unwrap()];
+                Some(sp)
+            }
+            "section7" => {
+                let mut sp = DesignSpace::around("section7", "a100");
+                sp.core_counts = vec![27, 54, 108];
+                sp.memories =
+                    vec![MemTech::preset("hbm2e").unwrap(), MemTech::preset("ddr5").unwrap()];
+                Some(sp)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &["smoke", "section7"]
+    }
+
+    /// A preset name or a design-space JSON file path.
+    pub fn resolve(spec: &str) -> Result<DesignSpace, String> {
+        if let Some(sp) = DesignSpace::preset(spec) {
+            return Ok(sp);
+        }
+        let text = std::fs::read_to_string(spec).map_err(|e| {
+            format!(
+                "design space `{spec}` is neither a preset ({}) nor a readable file: {e}",
+                DesignSpace::preset_names().join(", ")
+            )
+        })?;
+        let v = Json::parse(&text).map_err(|e| format!("{spec}: {e}"))?;
+        DesignSpace::from_json(&v).map_err(|e| format!("{spec}: {e}"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let ints = |vals: &[u64]| {
+            Json::Arr(vals.iter().map(|v| num(*v as f64)).collect())
+        };
+        let mut fields = vec![
+            ("name", s(&self.name)),
+            ("base", s(&self.base)),
+            ("fabric", s(&self.fabric)),
+        ];
+        if !self.core_counts.is_empty() {
+            fields.push(("core_counts", ints(&self.core_counts)));
+        }
+        if !self.device_counts.is_empty() {
+            fields.push(("device_counts", ints(&self.device_counts)));
+        }
+        if !self.lane_counts.is_empty() {
+            fields.push(("lane_counts", ints(&self.lane_counts)));
+        }
+        if !self.systolic.is_empty() {
+            fields.push((
+                "systolic",
+                Json::Arr(
+                    self.systolic
+                        .iter()
+                        .map(|(r, c)| Json::Arr(vec![num(*r as f64), num(*c as f64)]))
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.local_buffer_kb.is_empty() {
+            fields.push(("local_buffer_kb", ints(&self.local_buffer_kb)));
+        }
+        if !self.global_buffer_mb.is_empty() {
+            fields.push(("global_buffer_mb", ints(&self.global_buffer_mb)));
+        }
+        if !self.memories.is_empty() {
+            fields.push((
+                "memories",
+                Json::Arr(self.memories.iter().map(MemTech::to_json).collect()),
+            ));
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<DesignSpace, String> {
+        let e = |x: crate::util::json::JsonError| x.msg;
+        let base = v.req_str("base").map_err(e)?.to_string();
+        let name = match v.get("name") {
+            None => "custom".to_string(),
+            Some(j) => j
+                .as_str()
+                .ok_or_else(|| "design space `name` must be a string".to_string())?
+                .to_string(),
+        };
+        let fabric = match v.get("fabric") {
+            None => "nvlink".to_string(),
+            Some(j) => j
+                .as_str()
+                .ok_or_else(|| "design space `fabric` must be a string".to_string())?
+                .to_string(),
+        };
+        let mut sp = DesignSpace::around(&name, &base);
+        sp.fabric = fabric;
+        sp.core_counts = u64_axis(v, "core_counts")?;
+        sp.device_counts = u64_axis(v, "device_counts")?;
+        sp.lane_counts = u64_axis(v, "lane_counts")?;
+        sp.local_buffer_kb = u64_axis(v, "local_buffer_kb")?;
+        sp.global_buffer_mb = u64_axis(v, "global_buffer_mb")?;
+        sp.systolic = systolic_axis(v)?;
+        if let Some(mems) = v.get("memories") {
+            let items = mems
+                .as_arr()
+                .ok_or_else(|| "design space `memories` must be an array".to_string())?;
+            for item in items {
+                sp.memories.push(MemTech::from_json(item)?);
+            }
+        }
+        Ok(sp)
+    }
+
+    /// Enumerate the grid into concrete systems, in a fixed nest order
+    /// (cores → lanes → systolic → local SRAM → global SRAM → memory →
+    /// device count). The order is part of the report contract: frontier
+    /// ties and `best` ties resolve to the earliest design.
+    pub fn materialize(&self) -> Result<Vec<Candidate>, String> {
+        let base = presets::device(&self.base).ok_or_else(|| {
+            format!(
+                "unknown base device `{}` (known: {})",
+                self.base,
+                presets::all_device_names().join(", ")
+            )
+        })?;
+        let fabric = fabric_preset(&self.fabric)
+            .ok_or_else(|| format!("unknown fabric preset `{}` (nvlink | pcie)", self.fabric))?;
+        let cores = axis_or(&self.core_counts, base.core_count, "core_counts")?;
+        let lanes = axis_or(&self.lane_counts, base.core.lane_count, "lane_counts")?;
+        let systolic = if self.systolic.is_empty() {
+            vec![(base.core.lane.systolic_rows, base.core.lane.systolic_cols)]
+        } else {
+            for (r, c) in &self.systolic {
+                if *r == 0 || *c == 0 {
+                    return Err("design space `systolic` dims must be ≥ 1".to_string());
+                }
+            }
+            self.systolic.clone()
+        };
+        let locals =
+            axis_or(&self.local_buffer_kb, base.core.local_buffer_bytes / 1024, "local_buffer_kb")?;
+        let globals = axis_or(
+            &self.global_buffer_mb,
+            base.global_buffer_bytes / (1024 * 1024),
+            "global_buffer_mb",
+        )?;
+        let mems = if self.memories.is_empty() {
+            vec![MemTech::of_device(&base)]
+        } else {
+            for m in &self.memories {
+                if m.bandwidth_bytes_per_s <= 0.0 || m.capacity_bytes == 0 {
+                    return Err(format!("memory `{}` needs bandwidth and capacity > 0", m.name));
+                }
+            }
+            self.memories.clone()
+        };
+        let counts = axis_or(&self.device_counts, 1, "device_counts")?;
+
+        let total = cores.len()
+            * lanes.len()
+            * systolic.len()
+            * locals.len()
+            * globals.len()
+            * mems.len()
+            * counts.len();
+        if total > MAX_DESIGNS {
+            return Err(format!(
+                "design space `{}` materializes {total} designs (max {MAX_DESIGNS})",
+                self.name
+            ));
+        }
+
+        let mut out: Vec<Candidate> = Vec::with_capacity(total);
+        for &c in &cores {
+            for &l in &lanes {
+                for &(r, cl) in &systolic {
+                    for &lkb in &locals {
+                        for &gmb in &globals {
+                            for mem in &mems {
+                                for &nd in &counts {
+                                    let name = format!(
+                                        "{}-c{}l{}-s{}x{}-lb{}k-gb{}m-{}-x{}",
+                                        self.base, c, l, r, cl, lkb, gmb, mem.name, nd
+                                    );
+                                    let mut dev = base.clone();
+                                    dev.name = name.clone();
+                                    dev.core_count = c;
+                                    dev.core.lane_count = l;
+                                    dev.core.lane.systolic_rows = r;
+                                    dev.core.lane.systolic_cols = cl;
+                                    dev.core.local_buffer_bytes = lkb * 1024;
+                                    dev.global_buffer_bytes = gmb * 1024 * 1024;
+                                    dev.memory = MemorySpec {
+                                        bandwidth_bytes_per_s: mem.bandwidth_bytes_per_s,
+                                        capacity_bytes: mem.capacity_bytes,
+                                        protocol: mem.protocol,
+                                    };
+                                    out.push(Candidate {
+                                        name,
+                                        system: SystemSpec {
+                                            device: dev,
+                                            device_count: nd,
+                                            interconnect: fabric.clone(),
+                                        },
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn u64_axis(v: &Json, key: &str) -> Result<Vec<u64>, String> {
+    match v.get(key) {
+        None => Ok(Vec::new()),
+        Some(j) => {
+            let items =
+                j.as_arr().ok_or_else(|| format!("design space `{key}` must be an array"))?;
+            items
+                .iter()
+                .map(|x| {
+                    x.as_u64().ok_or_else(|| {
+                        format!("design space `{key}` entries must be non-negative integers")
+                    })
+                })
+                .collect()
+        }
+    }
+}
+
+fn systolic_axis(v: &Json) -> Result<Vec<(u64, u64)>, String> {
+    let Some(j) = v.get("systolic") else { return Ok(Vec::new()) };
+    let items = j
+        .as_arr()
+        .ok_or_else(|| "design space `systolic` must be an array of [rows, cols]".to_string())?;
+    let mut out = Vec::new();
+    for item in items {
+        let pair = item.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+            "design space `systolic` entries must be [rows, cols] pairs".to_string()
+        })?;
+        let r = pair[0].as_u64().ok_or_else(|| "systolic rows must be an integer".to_string())?;
+        let c = pair[1].as_u64().ok_or_else(|| "systolic cols must be an integer".to_string())?;
+        out.push((r, c));
+    }
+    Ok(out)
+}
+
+fn axis_or(vals: &[u64], default: u64, key: &str) -> Result<Vec<u64>, String> {
+    if vals.is_empty() {
+        return Ok(vec![default]);
+    }
+    if vals.iter().any(|&v| v == 0) {
+        return Err(format!("design space `{key}` values must be ≥ 1"));
+    }
+    Ok(vals.to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// Design points + Pareto frontier
+// ---------------------------------------------------------------------------
+
+/// One evaluated design with its frontier metrics. `latency_s` is the
+/// end-to-end request time (request workloads) or mean TTFT (traffic);
+/// `tok_s` is generated tokens/s (request) or goodput at the SLO
+/// (traffic); `usd_per_mtok` amortizes the cluster cost over
+/// [`crate::serve::sweep::AMORT_SECONDS`] at that token rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub name: String,
+    pub system: SystemSpec,
+    pub latency_s: f64,
+    pub tok_s: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    pub cluster_cost_usd: f64,
+    pub usd_per_mtok: f64,
+}
+
+impl DesignPoint {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("system", self.system.to_json()),
+            ("latency_s", num(self.latency_s)),
+            ("tok_s", num(self.tok_s)),
+            ("area_mm2", num(self.area_mm2)),
+            ("power_w", num(self.power_w)),
+            ("cluster_cost_usd", num(self.cluster_cost_usd)),
+            ("usd_per_mtok", num(self.usd_per_mtok)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<DesignPoint, String> {
+        let e = |x: crate::util::json::JsonError| x.msg;
+        Ok(DesignPoint {
+            name: v.req_str("name").map_err(e)?.to_string(),
+            system: SystemSpec::from_json(
+                v.get("system").ok_or("design point missing `system`")?,
+            )?,
+            latency_s: v.req_f64("latency_s").map_err(e)?,
+            tok_s: v.req_f64("tok_s").map_err(e)?,
+            area_mm2: v.req_f64("area_mm2").map_err(e)?,
+            power_w: v.req_f64("power_w").map_err(e)?,
+            cluster_cost_usd: v.req_f64("cluster_cost_usd").map_err(e)?,
+            usd_per_mtok: v.req_f64("usd_per_mtok").map_err(e)?,
+        })
+    }
+}
+
+/// `a` dominates `b` over (latency, $/1M-tokens, area): no worse on
+/// every axis and strictly better on at least one.
+pub fn dominates(a: &DesignPoint, b: &DesignPoint) -> bool {
+    a.latency_s <= b.latency_s
+        && a.usd_per_mtok <= b.usd_per_mtok
+        && a.area_mm2 <= b.area_mm2
+        && (a.latency_s < b.latency_s
+            || a.usd_per_mtok < b.usd_per_mtok
+            || a.area_mm2 < b.area_mm2)
+}
+
+/// The non-dominated subset, preserving input order. Axis-for-axis
+/// duplicates are all kept (none dominates the other).
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    points
+        .iter()
+        .filter(|p| !points.iter().any(|q| dominates(q, p)))
+        .cloned()
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Per-design floors
+// ---------------------------------------------------------------------------
+
+/// Device-independent description of the scenario's work, from which a
+/// per-design lower bound is computed without running the mapper: op
+/// groups with multiplicities for the latency floor, and (for traffic)
+/// the dense FLOPs every generated token must pay for the goodput
+/// ceiling. Decode ops are taken at the *smallest* KV length and
+/// traffic prefill at the *shortest* prompt, keeping the bound provable.
+struct WorkFloor {
+    groups: Vec<(Vec<Op>, f64)>,
+    /// Generated tokens per request-workload run (0 for traffic).
+    tokens: f64,
+    /// Matrix FLOPs per generated token (0 for request workloads).
+    flops_per_token: f64,
+    traffic: bool,
+}
+
+/// Roofline floor for one op on one device: compute bound against the
+/// matching peak, memory bound against compulsory DRAM traffic.
+/// Communication ops floor at zero (a single-device design does none).
+fn op_floor_s(dev: &DeviceSpec, op: &Op) -> f64 {
+    let bw = dev.memory.bandwidth_bytes_per_s;
+    match op {
+        Op::Matmul { .. } => {
+            (op.flops() / dev.peak_matrix_flops()).max(op.min_dram_bytes() / bw)
+        }
+        Op::Softmax { .. } | Op::LayerNorm { .. } | Op::Gelu { .. } => {
+            (op.flops() / dev.peak_vector_flops()).max(op.min_dram_bytes() / bw)
+        }
+        Op::AllReduce { .. } | Op::PeerToPeer { .. } => 0.0,
+    }
+}
+
+impl WorkFloor {
+    fn of(sc: &Scenario) -> Result<WorkFloor, String> {
+        match &sc.workload {
+            Workload::Request { model, batch, prefill, decode, layers } => {
+                let m = model_by_name(model)?;
+                let layers = m.resolve_layers(*layers) as f64;
+                let prefill_ops: Vec<Op> =
+                    layer_ops(&m, Phase::Prefill { batch: *batch, seq: *prefill }, 1)
+                        .into_iter()
+                        .map(|n| n.op)
+                        .collect();
+                let decode_ops: Vec<Op> =
+                    layer_ops(&m, Phase::Decode { batch: *batch, kv_len: *prefill + 1 }, 1)
+                        .into_iter()
+                        .map(|n| n.op)
+                        .collect();
+                Ok(WorkFloor {
+                    groups: vec![
+                        (prefill_ops, layers),
+                        (decode_ops, layers * *decode as f64),
+                    ],
+                    tokens: (*batch * *decode) as f64,
+                    flops_per_token: 0.0,
+                    traffic: false,
+                })
+            }
+            Workload::Traffic(t) => {
+                let m = model_by_name(&t.model)?;
+                let requests = traffic_requests(t)?;
+                let min_prompt =
+                    requests.iter().map(|r| r.prompt_tokens).min().unwrap_or(1).max(1);
+                let prefill_ops: Vec<Op> =
+                    layer_ops(&m, Phase::Prefill { batch: 1, seq: min_prompt }, 1)
+                        .into_iter()
+                        .map(|n| n.op)
+                        .collect();
+                Ok(WorkFloor {
+                    groups: vec![(prefill_ops, m.layers as f64)],
+                    tokens: 0.0,
+                    flops_per_token: 2.0 * m.params_total() as f64,
+                    traffic: true,
+                })
+            }
+            _ => Err(
+                "tune needs a `request` or `traffic` workload (op/layer/graph/hardware \
+                 scenarios have no perf-per-dollar story)"
+                    .to_string(),
+            ),
+        }
+    }
+
+    /// Lower bound on the point's latency metric, assuming perfect
+    /// scaling across devices (real parallelism only adds overhead).
+    fn latency_floor_s(&self, dev: &DeviceSpec, devices: u64) -> f64 {
+        let one: f64 = self
+            .groups
+            .iter()
+            .map(|(ops, mult)| mult * ops.iter().map(|op| op_floor_s(dev, op)).sum::<f64>())
+            .sum();
+        one / devices as f64
+    }
+
+    /// Lower bound on $/1M tokens: the cluster cost amortized at the
+    /// highest token rate the design could possibly sustain.
+    fn usd_per_mtok_floor(&self, dev: &DeviceSpec, devices: u64, cluster_cost_usd: f64) -> f64 {
+        let tok_s_max = if self.traffic {
+            devices as f64 * dev.peak_matrix_flops() / self.flops_per_token
+        } else {
+            self.tokens / self.latency_floor_s(dev, devices)
+        };
+        clamp_mtok(usd_per_mtok_at_slo(cluster_cost_usd, tok_s_max))
+    }
+}
+
+fn clamp_mtok(v: f64) -> f64 {
+    v.min(UNAFFORDABLE_USD_PER_MTOK)
+}
+
+// ---------------------------------------------------------------------------
+// Persistent design-evaluation cache
+// ---------------------------------------------------------------------------
+
+fn fnv1a(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fingerprint of a candidate system — every field of the device,
+/// count, and fabric participates via the `Debug` rendering.
+pub fn design_fingerprint(sys: &SystemSpec) -> u64 {
+    fnv1a(&format!("{sys:?}"))
+}
+
+/// Hash of what the evaluation actually depends on: the workload and
+/// device mapping. The scenario's `hardware` (overridden per design),
+/// outputs, and `tune` section deliberately do not participate, so
+/// editing the search setup never invalidates cached evaluations.
+pub fn scenario_hash(sc: &Scenario) -> u64 {
+    let par = match &sc.parallelism {
+        Some(p) => format!("{p:?}"),
+        None => "none".to_string(),
+    };
+    fnv1a(&format!("{}|{par}", sc.workload.to_json().to_string_compact()))
+}
+
+/// On-disk cache of evaluated design points, keyed by (design
+/// fingerprint, scenario hash). Mirrors the mapper cache's contract:
+/// corrupt or missing files load as empty, entries from other versions
+/// are preserved verbatim, and persisting merges with whatever another
+/// process wrote since load before the tmp-file + rename swap.
+struct TuneCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<(u64, u64), DesignPoint>,
+    foreign: Vec<Json>,
+    dirty: bool,
+}
+
+impl TuneCache {
+    fn load(path: Option<PathBuf>) -> TuneCache {
+        let mut cache =
+            TuneCache { path, entries: BTreeMap::new(), foreign: Vec::new(), dirty: false };
+        if let Some(p) = cache.path.clone() {
+            if let Ok(text) = std::fs::read_to_string(&p) {
+                if let Ok(j) = Json::parse(&text) {
+                    cache.absorb(&j);
+                }
+            }
+        }
+        cache
+    }
+
+    fn absorb(&mut self, j: &Json) {
+        let version_ok =
+            j.get("version").and_then(|v| v.as_u64()) == Some(TUNE_CACHE_VERSION);
+        let Some(items) = j.get("entries").and_then(|e| e.as_arr()) else { return };
+        for item in items {
+            match TuneCache::parse_entry(item) {
+                Some((key, point)) if version_ok => {
+                    self.entries.entry(key).or_insert(point);
+                }
+                _ => self.foreign.push(item.clone()),
+            }
+        }
+    }
+
+    fn parse_entry(item: &Json) -> Option<((u64, u64), DesignPoint)> {
+        let design = u64::from_str_radix(item.get("design")?.as_str()?, 16).ok()?;
+        let scenario = u64::from_str_radix(item.get("scenario")?.as_str()?, 16).ok()?;
+        let point = DesignPoint::from_json(item.get("point")?).ok()?;
+        Some(((design, scenario), point))
+    }
+
+    fn get(&self, design: u64, scenario: u64) -> Option<&DesignPoint> {
+        self.entries.get(&(design, scenario))
+    }
+
+    fn insert(&mut self, design: u64, scenario: u64, point: &DesignPoint) {
+        self.entries.insert((design, scenario), point.clone());
+        self.dirty = true;
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn persist(&mut self) -> Result<(), String> {
+        let Some(path) = self.path.clone() else { return Ok(()) };
+        if !self.dirty {
+            return Ok(());
+        }
+        // Pick up entries another process persisted since we loaded;
+        // ours win on key collisions (they are the freshest).
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(j) = Json::parse(&text) {
+                self.absorb(&j);
+            }
+        }
+        let mut items: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|((d, sc), p)| {
+                obj(vec![
+                    ("design", s(&format!("{d:016x}"))),
+                    ("scenario", s(&format!("{sc:016x}"))),
+                    ("point", p.to_json()),
+                ])
+            })
+            .collect();
+        items.extend(self.foreign.iter().cloned());
+        let out = obj(vec![
+            ("version", num(TUNE_CACHE_VERSION as f64)),
+            ("entries", Json::Arr(items)),
+        ]);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, out.to_string_pretty())
+            .map_err(|e| format!("write tune cache {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("rename tune cache {}: {e}", path.display()))?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The search
+// ---------------------------------------------------------------------------
+
+/// Knobs of one tune run.
+#[derive(Debug, Clone, Default)]
+pub struct TuneOptions {
+    pub constraints: Constraints,
+    /// Disable branch-and-bound pruning and evaluate every feasible
+    /// design (the frontier is identical either way — this exists for
+    /// the identity test and for timing comparisons).
+    pub exhaustive: bool,
+    /// Persistent design-evaluation cache file (None = in-memory only).
+    pub cache_path: Option<PathBuf>,
+}
+
+/// The tune run's result: search accounting, the Pareto frontier with
+/// full configs, the best-objective point, and the stock baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneReport {
+    pub scenario: String,
+    pub scenario_hash: u64,
+    pub space: String,
+    pub objective: Objective,
+    pub constraints: Constraints,
+    pub exhaustive: bool,
+    pub designs_total: u64,
+    pub infeasible: u64,
+    pub pruned: u64,
+    pub evaluated: u64,
+    pub cache_hits: u64,
+    pub baseline: Option<DesignPoint>,
+    pub frontier: Vec<DesignPoint>,
+    pub best: Option<DesignPoint>,
+}
+
+impl TuneReport {
+    /// best objective / baseline objective (> 1 means the search found
+    /// a design that beats the scenario's stock hardware).
+    pub fn gain_vs_baseline(&self) -> Option<f64> {
+        let best = self.best.as_ref()?;
+        let base = self.baseline.as_ref()?;
+        Some(self.objective.value(best) / self.objective.value(base))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("schema_version", num(TUNE_SCHEMA_VERSION as f64)),
+            ("scenario", s(&self.scenario)),
+            ("scenario_hash", s(&format!("{:016x}", self.scenario_hash))),
+            ("space", s(&self.space)),
+            ("objective", s(self.objective.name())),
+            ("constraints", self.constraints.to_json()),
+            (
+                "search",
+                obj(vec![
+                    ("designs", num(self.designs_total as f64)),
+                    ("infeasible", num(self.infeasible as f64)),
+                    ("pruned", num(self.pruned as f64)),
+                    ("evaluated", num(self.evaluated as f64)),
+                    ("cache_hits", num(self.cache_hits as f64)),
+                    ("exhaustive", Json::Bool(self.exhaustive)),
+                ]),
+            ),
+            (
+                "frontier",
+                Json::Arr(self.frontier.iter().map(DesignPoint::to_json).collect()),
+            ),
+        ];
+        if let Some(b) = &self.best {
+            fields.push(("best", b.to_json()));
+        }
+        if let Some(b) = &self.baseline {
+            fields.push(("baseline", b.to_json()));
+        }
+        if let Some(g) = self.gain_vs_baseline() {
+            fields.push(("gain_vs_baseline", num(g)));
+        }
+        obj(fields)
+    }
+}
+
+enum Verdict {
+    Point(DesignPoint, bool),
+    Pruned,
+    Infeasible,
+}
+
+/// Search a design space for the scenario's workload.
+///
+/// Why pruning cannot change the frontier: a candidate is skipped only
+/// when some evaluated point `e` satisfies `e.latency <
+/// floor_latency(d)`, `e.usd_per_mtok < floor_mtok(d)`, and `e.area <
+/// area(d)` — strictly, on all three axes. The floors never exceed the
+/// true metrics and the area is exact, so `e` strictly dominates the
+/// values `d` would have evaluated to; by transitivity anything `d`
+/// would have excluded from the frontier is also excluded by `e`, and
+/// `d` itself can never be non-dominated. Hence
+/// `frontier(evaluated) == frontier(all feasible designs)` under any
+/// evaluation order — the branch-and-bound result is bit-identical to
+/// `exhaustive: true`.
+pub fn tune(
+    ev: &Evaluator,
+    sc: &Scenario,
+    space: &DesignSpace,
+    objective: Objective,
+    opts: &TuneOptions,
+) -> Result<TuneReport, String> {
+    let work = WorkFloor::of(sc)?;
+    let candidates = space.materialize()?;
+    if candidates.is_empty() {
+        return Err(format!("design space `{}` is empty", space.name));
+    }
+    let sc_hash = scenario_hash(sc);
+    let rec = ev.recorder().clone();
+    let t_search = rec.host_now_s();
+
+    let baseline = evaluate_baseline(ev, sc, &work)?;
+
+    let cache = Mutex::new(TuneCache::load(opts.cache_path.clone()));
+    let seen: Mutex<Vec<DesignPoint>> = Mutex::new(Vec::new());
+
+    let verdicts: Vec<Result<Verdict, String>> = pool::parallel_map_shared(&candidates, |cand| {
+        let dev = &cand.system.device;
+        let devices = cand.system.device_count;
+        let link_bw = cand.system.interconnect.link_bandwidth_bytes_per_s;
+        let area_mm2 = die_breakdown(&ev.area_params, dev, link_bw).total_mm2();
+        let power_w = power_proxy_w(dev);
+        if !opts.constraints.satisfied(area_mm2, power_w) {
+            return Ok(Verdict::Infeasible);
+        }
+        let fingerprint = design_fingerprint(&cand.system);
+        if let Some(hit) = cache.lock().unwrap().get(fingerprint, sc_hash).cloned() {
+            seen.lock().unwrap().push(hit.clone());
+            return Ok(Verdict::Point(hit, true));
+        }
+        let cluster_cost = device_cost(&ev.cost_params, dev).total_usd() * devices as f64;
+        if !opts.exhaustive {
+            let floor_lat = work.latency_floor_s(dev, devices);
+            let floor_mtok = work.usd_per_mtok_floor(dev, devices, cluster_cost);
+            let dominated = seen.lock().unwrap().iter().any(|e| {
+                e.latency_s < floor_lat && e.usd_per_mtok < floor_mtok && e.area_mm2 < area_mm2
+            });
+            if dominated {
+                return Ok(Verdict::Pruned);
+            }
+        }
+        let t_design = rec.host_now_s();
+        let point = evaluate_design(ev, sc, &work, cand, area_mm2, power_w, cluster_cost)
+            .map_err(|e| format!("design `{}`: {e}", cand.name))?;
+        rec.span_host(
+            "tune",
+            &format!("design {}", cand.name),
+            t_design,
+            &[
+                ("latency_s", num(point.latency_s)),
+                ("usd_per_mtok", num(point.usd_per_mtok)),
+                ("area_mm2", num(point.area_mm2)),
+            ],
+        );
+        seen.lock().unwrap().push(point.clone());
+        cache.lock().unwrap().insert(fingerprint, sc_hash, &point);
+        Ok(Verdict::Point(point, false))
+    });
+
+    // Rebuild results in enumeration order (the shared `seen` list is
+    // completion-ordered and only used for pruning checks).
+    let mut points: Vec<DesignPoint> = Vec::new();
+    let (mut cache_hits, mut pruned, mut infeasible) = (0u64, 0u64, 0u64);
+    let mut first_err: Option<String> = None;
+    for v in verdicts {
+        match v {
+            Ok(Verdict::Point(p, was_cached)) => {
+                if was_cached {
+                    cache_hits += 1;
+                }
+                points.push(p);
+            }
+            Ok(Verdict::Pruned) => pruned += 1,
+            Ok(Verdict::Infeasible) => infeasible += 1,
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    cache.lock().unwrap().persist()?;
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    let mut frontier = pareto_frontier(&points);
+    frontier.sort_by(|a, b| {
+        a.latency_s
+            .partial_cmp(&b.latency_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(
+                a.usd_per_mtok
+                    .partial_cmp(&b.usd_per_mtok)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(a.name.cmp(&b.name))
+    });
+    let best = points
+        .iter()
+        .fold(None::<DesignPoint>, |acc, p| match acc {
+            Some(a) if objective.value(&a) >= objective.value(p) => Some(a),
+            _ => Some(p.clone()),
+        });
+
+    let evaluated = points.len() as u64 - cache_hits;
+    rec.span_host(
+        "tune",
+        &format!("search {} ({} designs)", space.name, candidates.len()),
+        t_search,
+        &[
+            ("evaluated", num(evaluated as f64)),
+            ("pruned", num(pruned as f64)),
+            ("cache_hits", num(cache_hits as f64)),
+            ("frontier", num(frontier.len() as f64)),
+        ],
+    );
+
+    Ok(TuneReport {
+        scenario: sc.name.clone(),
+        scenario_hash: sc_hash,
+        space: space.name.clone(),
+        objective,
+        constraints: opts.constraints,
+        exhaustive: opts.exhaustive,
+        designs_total: candidates.len() as u64,
+        infeasible,
+        pruned,
+        evaluated,
+        cache_hits,
+        baseline,
+        frontier,
+        best,
+    })
+}
+
+/// Evaluate the scenario's own (stock) hardware as a comparison point.
+/// The baseline never seeds pruning: it is not part of the space, so
+/// letting it eliminate candidates could hide genuine frontier points.
+fn evaluate_baseline(
+    ev: &Evaluator,
+    sc: &Scenario,
+    work: &WorkFloor,
+) -> Result<Option<DesignPoint>, String> {
+    let mut sub = sc.clone();
+    sub.tune = None;
+    sub.outputs = vec![if work.traffic { Output::Serving } else { Output::Latency }];
+    let report = ev.evaluate(&sub)?;
+    let name = format!("baseline:{}", sc.hardware);
+    point_from_report(ev, &name, &report, work).map(Some)
+}
+
+fn evaluate_design(
+    ev: &Evaluator,
+    sc: &Scenario,
+    work: &WorkFloor,
+    cand: &Candidate,
+    area_mm2: f64,
+    power_w: f64,
+    cluster_cost_usd: f64,
+) -> Result<DesignPoint, String> {
+    let mut sub = sc.clone();
+    sub.tune = None;
+    sub.outputs = vec![if work.traffic { Output::Serving } else { Output::Latency }];
+    let report = ev.evaluate_on(&sub, cand.system.clone())?;
+    let mut point = point_from_report(ev, &cand.name, &report, work)?;
+    // Reuse the screening-time values verbatim so the report can never
+    // disagree with the feasibility decision.
+    point.area_mm2 = area_mm2;
+    point.power_w = power_w;
+    if !work.traffic {
+        point.cluster_cost_usd = cluster_cost_usd;
+    }
+    Ok(point)
+}
+
+fn point_from_report(
+    ev: &Evaluator,
+    name: &str,
+    report: &EvalReport,
+    work: &WorkFloor,
+) -> Result<DesignPoint, String> {
+    let sys = &report.system;
+    let link_bw = sys.interconnect.link_bandwidth_bytes_per_s;
+    let area_mm2 = die_breakdown(&ev.area_params, &sys.device, link_bw).total_mm2();
+    let power_w = power_proxy_w(&sys.device);
+    let (latency_s, tok_s, cluster_cost_usd, usd_per_mtok) = match report.results.first() {
+        Some(EvalResult::RequestLatency { total_s, .. }) => {
+            let cost = device_cost(&ev.cost_params, &sys.device).total_usd()
+                * sys.device_count as f64;
+            let tok_s = if *total_s > 0.0 { work.tokens / total_s } else { 0.0 };
+            (*total_s, tok_s, cost, usd_per_mtok_at_slo(cost, tok_s))
+        }
+        Some(EvalResult::Serving(sr)) => (
+            sr.summary.ttft_mean_s,
+            sr.summary.goodput_tok_s,
+            sr.cluster_cost_usd,
+            sr.usd_per_mtok,
+        ),
+        _ => return Err(format!("design `{name}`: unexpected evaluation result")),
+    };
+    Ok(DesignPoint {
+        name: name.to_string(),
+        system: sys.clone(),
+        latency_s,
+        tok_s,
+        area_mm2,
+        power_w,
+        cluster_cost_usd,
+        usd_per_mtok: clamp_mtok(usd_per_mtok),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+
+    fn request_scenario() -> Scenario {
+        Scenario::new(
+            "tune-unit",
+            "a100",
+            Workload::Request {
+                model: "gpt-small".to_string(),
+                batch: 2,
+                prefill: 16,
+                decode: 4,
+                layers: Some(1),
+            },
+        )
+    }
+
+    #[test]
+    fn objective_names_roundtrip() {
+        for o in [Objective::PerfPerDollar, Objective::GoodputPerDollar] {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+        assert_eq!(Objective::parse("nope"), None);
+        assert_eq!(
+            Objective::default_for(&request_scenario().workload),
+            Objective::PerfPerDollar
+        );
+    }
+
+    #[test]
+    fn memtech_presets_and_json_roundtrip() {
+        for name in MemTech::preset_names() {
+            let m = MemTech::preset(name).unwrap();
+            let back = MemTech::from_json(&m.to_json()).unwrap();
+            assert_eq!(m, back, "{name}");
+            // Preset-string form parses too.
+            let short = MemTech::from_json(&s(name)).unwrap();
+            assert_eq!(m, short);
+        }
+        // The hbm2e preset matches the A100's stock memory, so a space
+        // over [hbm2e] contains the unmodified base device.
+        let a100 = presets::device("a100").unwrap();
+        let hbm = MemTech::preset("hbm2e").unwrap();
+        assert_eq!(hbm.bandwidth_bytes_per_s, a100.memory.bandwidth_bytes_per_s);
+        assert_eq!(hbm.capacity_bytes, a100.memory.capacity_bytes);
+        assert_eq!(hbm.protocol, a100.memory.protocol);
+    }
+
+    #[test]
+    fn design_space_json_roundtrip() {
+        for name in DesignSpace::preset_names() {
+            let sp = DesignSpace::preset(name).unwrap();
+            let back = DesignSpace::from_json(&sp.to_json()).unwrap();
+            assert_eq!(sp, back, "{name}");
+        }
+        let mut sp = DesignSpace::around("x", "a100");
+        sp.systolic = vec![(8, 8), (16, 16)];
+        sp.device_counts = vec![1, 2];
+        let back = DesignSpace::from_json(&sp.to_json()).unwrap();
+        assert_eq!(sp, back);
+    }
+
+    #[test]
+    fn materialize_counts_and_contains_stock() {
+        let sp = DesignSpace::preset("smoke").unwrap();
+        let cands = sp.materialize().unwrap();
+        assert_eq!(cands.len(), 4);
+        let names: std::collections::BTreeSet<&str> =
+            cands.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names.len(), 4, "duplicate candidate names");
+        // One candidate is the stock A100 in everything but name.
+        let a100 = presets::device("a100").unwrap();
+        assert!(cands.iter().any(|c| {
+            let d = &c.system.device;
+            d.core_count == a100.core_count
+                && d.memory == a100.memory
+                && d.core == a100.core
+                && c.system.device_count == 1
+        }));
+    }
+
+    #[test]
+    fn materialize_rejects_bad_axes() {
+        let mut sp = DesignSpace::around("bad", "a100");
+        sp.core_counts = vec![0];
+        assert!(sp.materialize().unwrap_err().contains("core_counts"));
+        let mut huge = DesignSpace::around("huge", "a100");
+        huge.core_counts = (1..=100).collect();
+        huge.lane_counts = (1..=100).collect();
+        assert!(huge.materialize().unwrap_err().contains("max"));
+        assert!(DesignSpace::around("x", "nope").materialize().is_err());
+    }
+
+    #[test]
+    fn power_proxy_is_sane() {
+        let w = power_proxy_w(&presets::device("a100").unwrap());
+        assert!((100.0..1000.0).contains(&w), "A100 proxy {w} W");
+        // Cutting compute must cut power.
+        let mut half = presets::device("a100").unwrap();
+        half.core_count /= 2;
+        assert!(power_proxy_w(&half) < w);
+    }
+
+    #[test]
+    fn frontier_never_contains_dominated_points() {
+        quick::forall("tune_frontier_nondominated", 200, |g| {
+            let n = g.usize(1, 12);
+            let points: Vec<DesignPoint> = (0..n)
+                .map(|i| DesignPoint {
+                    name: format!("p{i}"),
+                    system: SystemSpec::single(presets::device("a100").unwrap()),
+                    latency_s: g.f64(0.1, 10.0),
+                    tok_s: g.f64(1.0, 100.0),
+                    area_mm2: g.f64(100.0, 1000.0),
+                    power_w: 100.0,
+                    cluster_cost_usd: g.f64(100.0, 1000.0),
+                    usd_per_mtok: g.f64(0.01, 10.0),
+                })
+                .collect();
+            let front = pareto_frontier(&points);
+            let mut ok = !front.is_empty();
+            // No frontier point dominates another...
+            for a in &front {
+                for b in &front {
+                    if dominates(a, b) {
+                        ok = false;
+                    }
+                }
+            }
+            // ...and every dropped point is dominated by a frontier one.
+            for p in &points {
+                if !front.iter().any(|f| f.name == p.name)
+                    && !front.iter().any(|f| dominates(f, p))
+                {
+                    ok = false;
+                }
+            }
+            let case: Vec<(f64, f64, f64)> =
+                points.iter().map(|p| (p.latency_s, p.usd_per_mtok, p.area_mm2)).collect();
+            (case, ok)
+        });
+    }
+
+    #[test]
+    fn floors_never_exceed_actuals() {
+        let sc = request_scenario();
+        let work = WorkFloor::of(&sc).unwrap();
+        let ev = Evaluator::new();
+        let report = ev.evaluate(&sc).unwrap();
+        let Some(EvalResult::RequestLatency { total_s, .. }) = report.results.first() else {
+            panic!("expected a request latency result");
+        };
+        let dev = presets::device("a100").unwrap();
+        let floor = work.latency_floor_s(&dev, 1);
+        assert!(floor > 0.0);
+        assert!(
+            floor <= *total_s,
+            "floor {floor} exceeds simulated latency {total_s}"
+        );
+        let cost = device_cost(&ev.cost_params, &dev).total_usd();
+        let actual_mtok = clamp_mtok(usd_per_mtok_at_slo(cost, work.tokens / total_s));
+        let floor_mtok = work.usd_per_mtok_floor(&dev, 1, cost);
+        assert!(floor_mtok <= actual_mtok);
+    }
+
+    #[test]
+    fn work_floor_rejects_op_workloads() {
+        let sc = Scenario::new("op", "a100", Workload::Hardware);
+        assert!(WorkFloor::of(&sc).is_err());
+    }
+
+    #[test]
+    fn tune_cache_roundtrips_and_survives_corruption() {
+        let path = std::env::temp_dir()
+            .join(format!("llmcompass_tune_cache_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let point = DesignPoint {
+            name: "d1".to_string(),
+            system: SystemSpec::single(presets::device("a100").unwrap()),
+            latency_s: 0.5,
+            tok_s: 16.0,
+            area_mm2: 800.0,
+            power_w: 300.0,
+            cluster_cost_usd: 700.0,
+            usd_per_mtok: 0.9,
+        };
+        let mut cache = TuneCache::load(Some(path.clone()));
+        cache.insert(7, 9, &point);
+        cache.persist().unwrap();
+        let reloaded = TuneCache::load(Some(path.clone()));
+        assert_eq!(reloaded.len(), 1);
+        assert_eq!(reloaded.get(7, 9), Some(&point));
+        assert_eq!(reloaded.get(7, 8), None);
+        // Corrupt files load as empty instead of failing.
+        std::fs::write(&path, "{ not json").unwrap();
+        assert_eq!(TuneCache::load(Some(path.clone())).len(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tune_smoke_on_tiny_space() {
+        let sc = request_scenario();
+        let mut sp = DesignSpace::around("tiny", "a100");
+        sp.core_counts = vec![54, 108];
+        let report = tune(
+            &Evaluator::new(),
+            &sc,
+            &sp,
+            Objective::PerfPerDollar,
+            &TuneOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(report.designs_total, 2);
+        assert_eq!(report.infeasible, 0);
+        assert!(!report.frontier.is_empty());
+        assert!(report.best.is_some());
+        assert!(report.baseline.is_some());
+        assert!(report.gain_vs_baseline().unwrap() > 0.0);
+        // Report JSON parses back.
+        let text = report.to_json().to_string_pretty();
+        Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn constraints_screen_infeasible_designs() {
+        let sc = request_scenario();
+        let mut sp = DesignSpace::around("tiny", "a100");
+        sp.core_counts = vec![54, 108];
+        let opts = TuneOptions {
+            constraints: Constraints { max_area_mm2: Some(1.0), max_power_w: None },
+            ..TuneOptions::default()
+        };
+        let report =
+            tune(&Evaluator::new(), &sc, &sp, Objective::PerfPerDollar, &opts).unwrap();
+        assert_eq!(report.infeasible, 2);
+        assert!(report.frontier.is_empty());
+        assert!(report.best.is_none());
+    }
+}
