@@ -71,6 +71,59 @@ else
         || { echo "tune report has no frontier" >&2; exit 1; }
 fi
 
+# Fault-injection smoke through the real CLI: a crash+drain spec with a
+# zero retry budget must complete the run with requests actually lost,
+# availability strictly below 1.0, and conserved accounting
+# (completed + lost + shed == submitted). Exercises the --fault-spec
+# flag end to end, including the parseable `faults:` stats line.
+echo "== llmcompass serve --fault-spec (crash + drain) =="
+cat > /tmp/llmcompass_faults.json <<'EOF'
+{
+  "seed": 5,
+  "events": [
+    {"kind": "crash", "at_s": 0.05, "duration_s": 0.4},
+    {"kind": "drain", "at_s": 1.0, "duration_s": 0.5}
+  ],
+  "recovery": {"max_retries": 0}
+}
+EOF
+target/release/llmcompass serve --hardware a100 --model gpt-small \
+    --requests 60 --rate 80 --seed 42 \
+    --fault-spec /tmp/llmcompass_faults.json | tee /tmp/llmcompass_fault_smoke.txt
+if command -v python3 > /dev/null 2>&1; then
+    python3 -c '
+import re
+out = open("/tmp/llmcompass_fault_smoke.txt").read()
+faults = re.search(r"faults: injected=(\d+) lost=(\d+) retried=(\d+) shed=(\d+) "
+                   r"retry_tokens_recomputed=(\d+) downtime_s=([\d.]+) "
+                   r"availability=([\d.]+)", out)
+assert faults, "no parseable faults line in serve output"
+injected, lost, retried, shed = (int(faults.group(i)) for i in range(1, 5))
+availability = float(faults.group(7))
+completed = int(re.search(r"^requests (\d+) \|", out, re.M).group(1))
+assert injected >= 2, f"both fault windows must open, got {injected}"
+assert lost > 0, "crash with max_retries=0 must lose requests"
+assert availability < 1.0, f"availability {availability} must reflect downtime"
+assert completed + lost + shed == 60, \
+    f"accounting leak: {completed} completed + {lost} lost + {shed} shed != 60"
+print(f"fault smoke OK: {completed} completed, {lost} lost, "
+      f"{shed} shed, availability {availability}")
+'
+else
+    # No python3: at least require the faults line with nonzero loss and
+    # sub-1.0 availability.
+    grep -Eq "faults: injected=[0-9]+ lost=[1-9]" /tmp/llmcompass_fault_smoke.txt \
+        || { echo "fault smoke lost no requests" >&2; exit 1; }
+    grep -Eq "availability=0\." /tmp/llmcompass_fault_smoke.txt \
+        || { echo "fault smoke shows no downtime" >&2; exit 1; }
+fi
+
+# The shipped faulty samples run through the suite smoke above; run the
+# serving/property fault suites explicitly so a filtered `cargo test`
+# invocation can never skip them.
+echo "== cargo test --test integration_serve --test property_serve =="
+cargo test -q --test integration_serve --test property_serve
+
 if [[ "${1:-}" == "--fix" ]]; then
     echo "== cargo fmt =="
     cargo fmt

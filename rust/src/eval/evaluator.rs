@@ -652,6 +652,10 @@ pub fn scheduler_config_for(
             model.name, system.device.name
         ));
     }
+    if let Some(spec) = &t.faults {
+        spec.validate()?;
+        cfg.faults = Some(spec.clone());
+    }
     Ok(cfg)
 }
 

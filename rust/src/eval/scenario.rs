@@ -29,12 +29,54 @@ use crate::graph::ir::{self, Parallelism};
 use crate::graph::layer::Phase;
 use crate::hardware::DType;
 use crate::perf::Op;
-use crate::serve::{Policy, Preemption, ServeMode, Slo};
+use crate::serve::{FaultSpec, Policy, Preemption, ServeMode, Slo};
 use crate::util::json::{num, obj, s, Json, JsonError};
 
 fn jerr(e: JsonError) -> String {
     e.to_string()
 }
+
+/// Reject object keys outside `allowed`, naming the offending key — a
+/// typo'd knob must fail loudly instead of silently running a different
+/// experiment with the default value ([`Scenario::load`] prefixes the
+/// scenario file path).
+fn check_known_fields(v: &Json, allowed: &[&str], ctx: &str) -> Result<(), String> {
+    if let Some(m) = v.as_obj() {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown {ctx} field `{k}` (allowed: {})",
+                    allowed.join(", ")
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Top-level keys a scenario file may carry.
+const SCENARIO_KEYS: &[&str] = &["name", "hardware", "workload", "parallelism", "outputs", "tune"];
+/// Keys of a `traffic` workload object.
+const TRAFFIC_KEYS: &[&str] = &[
+    "type",
+    "model",
+    "requests",
+    "rate_per_s",
+    "burst_multiplier",
+    "trace",
+    "policy",
+    "max_batch",
+    "mode",
+    "chunk_tokens",
+    "prefill_devices",
+    "transfer_base_s",
+    "preemption",
+    "max_kv_tokens",
+    "handoff_capacity",
+    "slo",
+    "seed",
+    "faults",
+];
 
 /// Optional-field accessors that error when the key is present but has
 /// the wrong type — in a hand-written schema, silently falling back to a
@@ -151,6 +193,10 @@ pub struct TrafficSpec {
     pub handoff_capacity: Option<u64>,
     pub slo: Slo,
     pub seed: u64,
+    /// Optional fault-injection schedule + recovery policy
+    /// ([`crate::serve::fault`]). `None` (and the inert
+    /// [`FaultSpec::none`]) serve the trace in a perfect world.
+    pub faults: Option<FaultSpec>,
 }
 
 impl TrafficSpec {
@@ -171,6 +217,7 @@ impl TrafficSpec {
             handoff_capacity: None,
             slo: Slo::interactive(),
             seed: 42,
+            faults: None,
         }
     }
 }
@@ -363,6 +410,9 @@ impl Workload {
                 if let Some(path) = &t.trace {
                     fields.push(("trace", s(path)));
                 }
+                if let Some(f) = &t.faults {
+                    fields.push(("faults", f.to_json()));
+                }
                 obj(fields)
             }
         }
@@ -446,6 +496,7 @@ impl Workload {
                 Ok(Workload::Graph { nodes, edges })
             }
             "traffic" => {
+                check_known_fields(v, TRAFFIC_KEYS, "traffic workload")?;
                 let trace = opt_str(v, "trace")?.map(str::to_string);
                 let rate_per_s = match opt_f64(v, "rate_per_s")? {
                     Some(r) => r,
@@ -485,10 +536,17 @@ impl Workload {
                 };
                 let slo = match v.get("slo") {
                     None => Slo::interactive(),
-                    Some(sv) => Slo {
-                        ttft_s: sv.req_f64("ttft_s").map_err(jerr)?,
-                        tpot_s: sv.req_f64("tpot_s").map_err(jerr)?,
-                    },
+                    Some(sv) => {
+                        check_known_fields(sv, &["ttft_s", "tpot_s"], "traffic `slo`")?;
+                        Slo {
+                            ttft_s: sv.req_f64("ttft_s").map_err(jerr)?,
+                            tpot_s: sv.req_f64("tpot_s").map_err(jerr)?,
+                        }
+                    }
+                };
+                let faults = match v.get("faults") {
+                    None => None,
+                    Some(fv) => Some(FaultSpec::from_json(fv)?),
                 };
                 let requests = match opt_u64(v, "requests")? {
                     Some(n) => n as usize,
@@ -513,6 +571,7 @@ impl Workload {
                     handoff_capacity: opt_u64(v, "handoff_capacity")?,
                     slo,
                     seed: opt_u64(v, "seed")?.unwrap_or(42),
+                    faults,
                 }))
             }
             other => Err(format!(
@@ -773,6 +832,7 @@ impl Scenario {
     /// `name` defaults to `"scenario"` (overridden by the file stem in
     /// [`Scenario::load`]); missing `outputs` default per workload.
     pub fn from_json(v: &Json) -> Result<Scenario, String> {
+        check_known_fields(v, SCENARIO_KEYS, "scenario")?;
         let workload = Workload::from_json(
             v.get("workload").ok_or_else(|| "scenario needs a `workload` object".to_string())?,
         )?;
@@ -1287,5 +1347,108 @@ mod tests {
         )
         .unwrap();
         assert_eq!(sc.outputs, vec![Output::Cost, Output::Area]);
+    }
+
+    #[test]
+    fn fault_spec_round_trips_through_the_scenario() {
+        use crate::serve::{FaultEvent, FaultKind, FaultTarget, RecoveryPolicy};
+        let mut t = TrafficSpec::poisson("gpt-small", 20.0, 32);
+        t.faults = Some(FaultSpec {
+            seed: 7,
+            events: vec![
+                FaultEvent {
+                    kind: FaultKind::Crash,
+                    at_s: 0.5,
+                    duration_s: 1.0,
+                    target: FaultTarget::Decode,
+                },
+                FaultEvent {
+                    kind: FaultKind::LinkDegrade { factor: 4.0 },
+                    at_s: 0.0,
+                    duration_s: 3.0,
+                    target: FaultTarget::All,
+                },
+            ],
+            mtbf_s: Some(3600.0),
+            mttr_s: 20.0,
+            recovery: RecoveryPolicy {
+                max_retries: 1,
+                retry_backoff_s: 0.2,
+                request_timeout_s: Some(10.0),
+                shed_queue_depth: Some(128),
+                degraded_chunk_tokens: None,
+            },
+        });
+        round_trip(&Scenario::new("faulty", "a100x4", Workload::Traffic(t)));
+        // Parsed from scratch, including the mtbf_hours sugar.
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0,
+                "faults": {"seed": 3, "mtbf_hours": 1.0, "mttr_s": 30.0,
+                           "events": [{"kind": "drain", "at_s": 1.0, "duration_s": 2.0}]}}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        let f = t.faults.as_ref().unwrap();
+        assert_eq!(f.mtbf_s, Some(3600.0));
+        assert_eq!(f.events.len(), 1);
+        round_trip(&sc);
+        // Absent faults stay absent (legacy scenarios byte-identical).
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(t.faults, None);
+        assert!(sc.to_json().get("workload").unwrap().get("faults").is_none());
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_by_name() {
+        // Top-level scenario typo.
+        let err = Scenario::parse(
+            r#"{"hardware": "a100", "wrkload": {"type": "hardware"},
+                "workload": {"type": "hardware"}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown scenario field `wrkload`"), "{err}");
+        // Traffic workload typo (the classic silently-ignored knob).
+        let err = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "max_bacth": 32}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown traffic workload field `max_bacth`"), "{err}");
+        // SLO object typo.
+        let err = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "slo": {"ttft": 2.0, "tpot_s": 0.1}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown traffic `slo` field `ttft`"), "{err}");
+        // Fault-spec typo surfaces through the scenario parser too.
+        let err = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "faults": {"mtbf": 100.0}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown fault spec field `mtbf`"), "{err}");
+    }
+
+    #[test]
+    fn load_prefixes_unknown_field_errors_with_the_file_path() {
+        let dir = std::env::temp_dir().join("llmcompass-test-scenario-unknown-field");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("typo.json");
+        std::fs::write(
+            &path,
+            r#"{"hardware": "a100", "workload": {"type": "hardware"}, "outpts": ["cost"]}"#,
+        )
+        .unwrap();
+        let err = Scenario::load(&path).unwrap_err();
+        assert!(err.contains("typo.json"), "no file path in `{err}`");
+        assert!(err.contains("unknown scenario field `outpts`"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

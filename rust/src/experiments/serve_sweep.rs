@@ -19,8 +19,8 @@ use std::fmt::Write as _;
 
 fn render_rows(title: &str, rows: &[SweepRow], out: &mut String, csv: &mut Table) {
     let mut t = Table::new(&[
-        "system", "mode", "rate/s", "TTFT mean", "TTFT p50/p99", "TPOT p50/p99",
-        "goodput tok/s", "SLO %", "preempt", "$/1M tok",
+        "system", "mode", "rate/s", "MTBF h", "avail %", "TTFT mean", "TTFT p50/p99",
+        "TPOT p50/p99", "goodput tok/s", "SLO %", "preempt", "$/1M tok",
     ])
     .with_title(title);
     for r in rows {
@@ -29,6 +29,13 @@ fn render_rows(title: &str, rows: &[SweepRow], out: &mut String, csv: &mut Table
             r.system.clone(),
             r.mode.to_string(),
             format!("{:.1}", r.rate_per_s),
+            match r.mtbf_hours {
+                // Sub-tenth-of-an-hour MTBFs (smoke-scale traces) read better in seconds.
+                Some(h) if h < 0.1 => format!("{:.0}s", h * 3600.0),
+                Some(h) => format!("{h:.1}"),
+                None => "-".into(),
+            },
+            format!("{:.2}", r.availability * 100.0),
             crate::util::fmt_seconds(s.ttft_mean_s),
             format!(
                 "{} / {}",
@@ -54,6 +61,12 @@ fn render_rows(title: &str, rows: &[SweepRow], out: &mut String, csv: &mut Table
             r.system.clone(),
             r.mode.to_string(),
             format!("{}", r.rate_per_s),
+            match r.mtbf_hours {
+                Some(h) => format!("{h}"),
+                None => String::new(),
+            },
+            format!("{}", r.availability),
+            format!("{}", r.requests_lost),
             format!("{}", s.ttft_mean_s),
             format!("{}", s.ttft_p50_s),
             format!("{}", s.ttft_p99_s),
@@ -81,9 +94,9 @@ pub fn run(ctx: &Ctx) -> Result<String> {
 
     let mut out = String::new();
     let mut csv_all = Table::new(&[
-        "sweep", "system", "mode", "rate/s", "ttft_mean_s", "ttft_p50_s", "ttft_p99_s",
-        "tpot_p50_s", "tpot_p99_s", "goodput_tok_s", "attainment", "preemptions",
-        "cluster_usd", "usd_per_mtok",
+        "sweep", "system", "mode", "rate/s", "mtbf_hours", "availability", "requests_lost",
+        "ttft_mean_s", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s", "goodput_tok_s",
+        "attainment", "preemptions", "cluster_usd", "usd_per_mtok",
     ]);
     for (slo_name, slo) in &slos {
         let cfg = if ctx.quick {
@@ -92,6 +105,7 @@ pub fn run(ctx: &Ctx) -> Result<String> {
                 rates: vec![20.0, 60.0],
                 requests: 48,
                 slo: *slo,
+                fault_mtbf_hours: Vec::new(),
                 ..SweepConfig::paper_default(48, *slo)
             }
         } else {
@@ -139,6 +153,24 @@ pub fn run(ctx: &Ctx) -> Result<String> {
         model.name
     );
     render_rows(&title, &mode_rows, &mut out, &mut csv_all);
+    out.push('\n');
+
+    // SLO-under-fault study: the same seeded traffic with MTBF-driven crash
+    // faults injected, answering "what do goodput, availability, and
+    // $/1M-tokens-at-SLO look like when replicas actually fail?". The MTBF
+    // points are scaled to the trace length so each one strikes: these are
+    // smoke-scale traces of tens of simulated seconds, not production days.
+    let mut fault_cfg = SweepConfig::mode_comparison(system, requests, Slo::relaxed());
+    fault_cfg.rates = vec![if ctx.quick { 30.0 } else { 40.0 }];
+    fault_cfg.fault_mtbf_hours = vec![10.0 / 3600.0, 60.0 / 3600.0];
+    fault_cfg.fault_mttr_s = 2.0;
+    let fault_rows = run_sweep(ctx.sim(), &model, &fault_cfg).map_err(anyhow::Error::msg)?;
+    let title = format!(
+        "SLO under fault — {} on {system}, {requests} requests, seeded MTBF crash/recovery \
+         (fault-free baseline vs MTBF 10s / 60s, MTTR 2s)",
+        model.name
+    );
+    render_rows(&title, &fault_rows, &mut out, &mut csv_all);
     out.push('\n');
 
     write_report("serve_sweep.csv", &csv_all.to_csv())?;

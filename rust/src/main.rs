@@ -904,6 +904,30 @@ fn cmd_serve(raw: &[String]) -> R {
         .opt("slo-ttft", Some("2.0"), "SLO: max time-to-first-token, seconds")
         .opt("slo-tpot", Some("0.1"), "SLO: max time-per-output-token, seconds")
         .opt("seed", Some("42"), "workload seed")
+        .opt(
+            "fault-spec",
+            None,
+            "fault-injection spec JSON file (the scenario `faults` object: seed, \
+             events, mtbf_s/mtbf_hours, recovery)",
+        )
+        .opt(
+            "fault-mtbf-hours",
+            None,
+            "inject seeded MTBF-driven crash faults with this mean time between \
+             failures in hours (with --sweep: comma-separated list of MTBF points, \
+             each swept alongside the fault-free baseline)",
+        )
+        .opt(
+            "fault-mttr-s",
+            Some("30.0"),
+            "mean time to recovery for --fault-mtbf-hours faults, seconds",
+        )
+        .opt(
+            "fault-seed",
+            None,
+            "fault RNG seed — an independent stream from the workload seed \
+             (default: --seed; also overrides the seed in --fault-spec)",
+        )
         .flag(
             "sweep",
             "run the SLO-aware $/1M-token sweep across the paper's preset ladder \
@@ -956,6 +980,9 @@ fn cmd_serve(raw: &[String]) -> R {
         if a.get("replay").is_some() {
             return Err("--sweep generates its own workloads; drop --replay".into());
         }
+        if a.get("fault-spec").is_some() {
+            return Err("--sweep injects faults via --fault-mtbf-hours; drop --fault-spec".into());
+        }
         let mut cfg = llmcompass::serve::sweep::SweepConfig::paper_default(requests_n, slo);
         cfg.seed = seed;
         cfg.policy = policy;
@@ -965,10 +992,21 @@ fn cmd_serve(raw: &[String]) -> R {
             .split(',')
             .map(|m| mode_of(m.trim()))
             .collect::<Result<Vec<_>, _>>()?;
+        if let Some(list) = a.get("fault-mtbf-hours") {
+            cfg.fault_mtbf_hours = list
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|_| format!("bad --fault-mtbf-hours entry `{}`", s.trim()))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            cfg.fault_mttr_s = a.get_f64("fault-mttr-s").map_err(|e| e.0)?.unwrap();
+        }
         let rows = llmcompass::serve::sweep::run_sweep(&ev.sim, &model, &cfg)?;
         let mut t = Table::new(&[
-            "system", "mode", "rate/s", "TTFT mean", "goodput tok/s", "SLO %", "preempt",
-            "$/1M tok",
+            "system", "mode", "rate/s", "MTBF h", "avail %", "TTFT mean", "goodput tok/s",
+            "SLO %", "preempt", "$/1M tok",
         ])
         .with_title("SLO-aware serving sweep");
         for r in &rows {
@@ -976,6 +1014,11 @@ fn cmd_serve(raw: &[String]) -> R {
                 r.system.clone(),
                 r.mode.to_string(),
                 format!("{:.1}", r.rate_per_s),
+                match r.mtbf_hours {
+                    Some(h) => format!("{h:.2}"),
+                    None => "-".into(),
+                },
+                format!("{:.2}", r.availability * 100.0),
                 llmcompass::util::fmt_seconds(r.summary.ttft_mean_s),
                 format!("{:.1}", r.summary.goodput_tok_s),
                 format!("{:.1}", r.summary.slo_attainment * 100.0),
@@ -1014,6 +1057,37 @@ fn cmd_serve(raw: &[String]) -> R {
     if !rate.is_finite() || rate <= 0.0 {
         return Err(format!("--rate must be a positive number, got {rate}"));
     }
+    let fault_seed = a.get_u64("fault-seed").map_err(|e| e.0)?;
+    let faults: Option<llmcompass::serve::FaultSpec> = match (a.get("fault-spec"), a.get_f64("fault-mtbf-hours").map_err(|e| e.0)?) {
+        (Some(_), Some(_)) => {
+            return Err("pass either --fault-spec or --fault-mtbf-hours, not both".into())
+        }
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("read fault spec {path}: {e}"))?;
+            let v = llmcompass::util::json::Json::parse(&text)
+                .map_err(|e| format!("{path}: {e}"))?;
+            let mut spec = llmcompass::serve::FaultSpec::from_json(&v)
+                .map_err(|e| format!("{path}: {e}"))?;
+            if let Some(fs) = fault_seed {
+                spec.seed = fs;
+            }
+            Some(spec)
+        }
+        (None, Some(h)) => {
+            if !h.is_finite() || h <= 0.0 {
+                return Err(format!("--fault-mtbf-hours must be positive, got {h}"));
+            }
+            let mttr = a.get_f64("fault-mttr-s").map_err(|e| e.0)?.unwrap();
+            Some(llmcompass::serve::FaultSpec::mtbf(
+                fault_seed.unwrap_or(seed),
+                h * 3600.0,
+                mttr,
+            ))
+        }
+        (None, None) => None,
+    };
+    let fault_run = faults.is_some();
     let traffic = TrafficSpec {
         model: model_name.to_string(),
         requests: requests_n,
@@ -1032,6 +1106,7 @@ fn cmd_serve(raw: &[String]) -> R {
         handoff_capacity: a.get_u64("handoff-capacity").map_err(|e| e.0)?,
         slo,
         seed,
+        faults,
     };
     // Materialize the trace up front so the fit checks and the preamble
     // banner run before the (slow) simulation, matching the historical
@@ -1082,6 +1157,20 @@ fn cmd_serve(raw: &[String]) -> R {
         llmcompass::util::fmt_seconds(stats.handoff_wait_s),
         llmcompass::util::fmt_seconds(stats.handoff_stall_s)
     );
+    if fault_run {
+        // Key=value so scripts (and the CI fault smoke) can grep the fields.
+        println!(
+            "faults: injected={} lost={} retried={} shed={} retry_tokens_recomputed={} \
+             downtime_s={:.3} availability={:.6}",
+            stats.faults_injected,
+            stats.requests_lost,
+            stats.requests_retried,
+            stats.requests_shed,
+            stats.retry_tokens_recomputed,
+            stats.fault_downtime_s,
+            stats.availability
+        );
+    }
     println!(
         "[simulated in {} wall-clock | mapper: {} rounds, {} cached shapes]",
         llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),

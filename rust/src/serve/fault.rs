@@ -1,0 +1,911 @@
+//! Fault injection for the serving simulator: seeded, deterministic
+//! replica/pool failures plus the recovery policy that reacts to them.
+//!
+//! A [`FaultSpec`] schedules four kinds of events against the
+//! discrete-event engines in [`super::scheduler`]:
+//!
+//! * **crash** — the pool goes down for a window: every in-flight request
+//!   on it loses its KV state and progress (re-dispatched or lost per the
+//!   [`RecoveryPolicy`]); no admission until the window ends.
+//! * **drain** — the pool stops admitting for a window but finishes its
+//!   in-flight work, then rejoins (a maintenance restart).
+//! * **slowdown** — iteration latencies on the pool are multiplied for a
+//!   window (thermal throttle, a degraded HBM stack).
+//! * **link degradation** — the modeled interconnect transfer time is
+//!   multiplied for a window (a cut fabric lane), stressing the
+//!   disaggregated KV-handoff path.
+//!
+//! Events come from an explicit list and/or an MTBF process: with
+//! [`FaultSpec::mtbf_s`] set, whole-pool crashes recur with exponential
+//! inter-arrival gaps drawn from a **dedicated seeded RNG stream**
+//! ([`FaultSpec::seed`]), generated lazily but monotonically so replay is
+//! byte-identical regardless of how the engines interleave their pool
+//! clocks. A spec with no events, no MTBF, and no recovery pressure knobs
+//! is completely inert: the engines take the exact same float path as a
+//! run with no spec at all (multiplying a latency by `1.0` is bit-exact),
+//! which the tests assert as byte-identical `ServeReport` JSON.
+//!
+//! The [`Faults`] runtime answers the engines' questions (`admitting?`,
+//! `pending crash?`, `latency multiplier?`) against a pool identity:
+//! single-pool engines (monolithic, chunked) match every target;
+//! disaggregated matches `prefill`/`decode` targets to the corresponding
+//! pool. Window membership is half-open `[start, end)` — at `end` the
+//! pool is back.
+
+use crate::util::prng::Rng;
+
+/// Default mean-time-to-repair for MTBF-generated crashes, seconds.
+pub const DEFAULT_MTTR_S: f64 = 30.0;
+/// Default retry budget of the recovery policy.
+pub const DEFAULT_MAX_RETRIES: u64 = 2;
+/// Default base backoff before a crashed request is re-dispatched,
+/// seconds (doubles per retry).
+pub const DEFAULT_RETRY_BACKOFF_S: f64 = 0.5;
+
+/// Which pool a fault event strikes. Single-pool engines treat every
+/// target as "this engine"; disaggregated mode routes `Prefill`/`Decode`
+/// to the matching pool and `All` to both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    All,
+    Prefill,
+    Decode,
+}
+
+impl FaultTarget {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultTarget::All => "all",
+            FaultTarget::Prefill => "prefill",
+            FaultTarget::Decode => "decode",
+        }
+    }
+
+    pub fn parse(v: &str) -> Option<FaultTarget> {
+        match v {
+            "all" => Some(FaultTarget::All),
+            "prefill" => Some(FaultTarget::Prefill),
+            "decode" => Some(FaultTarget::Decode),
+            _ => None,
+        }
+    }
+}
+
+/// The kind of a scheduled fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Pool down for the window; in-flight requests lose their KV state.
+    Crash,
+    /// Pool stops admitting for the window, finishes in-flight work.
+    Drain,
+    /// Iteration latency × `multiplier` for the window (must be > 0;
+    /// values < 1 model a speedup, which is allowed but unusual).
+    Slowdown { multiplier: f64 },
+    /// Interconnect transfer latency × `factor` for the window (a
+    /// bandwidth cut by `factor`; must be ≥ 1).
+    LinkDegrade { factor: f64 },
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Drain => "drain",
+            FaultKind::Slowdown { .. } => "slowdown",
+            FaultKind::LinkDegrade { .. } => "link_degrade",
+        }
+    }
+}
+
+/// One scheduled fault: a kind, a start time, a duration, and a target
+/// pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub at_s: f64,
+    pub duration_s: f64,
+    pub target: FaultTarget,
+}
+
+/// How the scheduler reacts to faults (and, for the pressure knobs, to
+/// overload generally — shedding and timeouts act even without a fault
+/// window when configured).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Re-dispatch budget per request after a crash loses it; beyond
+    /// this the request is counted lost.
+    pub max_retries: u64,
+    /// Base delay before a crashed request re-enters the queue, seconds;
+    /// doubles with each retry (exponential backoff).
+    pub retry_backoff_s: f64,
+    /// Drop requests that have waited in the queue longer than this
+    /// since arrival (counted lost). `None`: never.
+    pub request_timeout_s: Option<f64>,
+    /// Refuse fresh arrivals while the waiting queue is at least this
+    /// deep (admission shedding; counted shed). `None`: never.
+    pub shed_queue_depth: Option<u64>,
+    /// Chunked mode only: cap the per-iteration token budget at this
+    /// while any fault window is active on the pool (degraded-mode
+    /// chunking keeps decode pace at the cost of prefill progress).
+    pub degraded_chunk_tokens: Option<u64>,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            max_retries: DEFAULT_MAX_RETRIES,
+            retry_backoff_s: DEFAULT_RETRY_BACKOFF_S,
+            request_timeout_s: None,
+            shed_queue_depth: None,
+            degraded_chunk_tokens: None,
+        }
+    }
+}
+
+/// A seeded, deterministic fault schedule plus its recovery policy —
+/// the declarative form carried by `TrafficSpec` / scenario JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Seed of the dedicated fault RNG stream (MTBF gap draws). Never
+    /// shared with the workload generator, so adding faults does not
+    /// change the trace.
+    pub seed: u64,
+    /// Explicitly scheduled events.
+    pub events: Vec<FaultEvent>,
+    /// Mean time between whole-pool crashes, seconds; `None` disables
+    /// the random crash process.
+    pub mtbf_s: Option<f64>,
+    /// Downtime per MTBF-generated crash, seconds.
+    pub mttr_s: f64,
+    pub recovery: RecoveryPolicy,
+}
+
+impl FaultSpec {
+    /// A spec that injects nothing and pressures nothing — guaranteed to
+    /// reproduce the no-spec report byte-for-byte.
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            seed: 0,
+            events: Vec::new(),
+            mtbf_s: None,
+            mttr_s: DEFAULT_MTTR_S,
+            recovery: RecoveryPolicy::default(),
+        }
+    }
+
+    /// MTBF-only crashes: mean `mtbf_s` between crashes, `mttr_s` down
+    /// per crash, default recovery.
+    pub fn mtbf(seed: u64, mtbf_s: f64, mttr_s: f64) -> FaultSpec {
+        FaultSpec { seed, events: Vec::new(), mtbf_s: Some(mtbf_s), mttr_s, recovery: RecoveryPolicy::default() }
+    }
+
+    /// Reject physically meaningless specs with a message instead of
+    /// letting the engines mis-simulate. Mirrors `scheduler::validate`'s
+    /// role for the rest of the config.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.at_s.is_finite() || e.at_s < 0.0 {
+                return Err(format!("fault event {i}: at_s must be finite and ≥ 0"));
+            }
+            if !e.duration_s.is_finite() || e.duration_s < 0.0 {
+                return Err(format!("fault event {i}: duration_s must be finite and ≥ 0"));
+            }
+            match e.kind {
+                FaultKind::Slowdown { multiplier } => {
+                    if !multiplier.is_finite() || multiplier <= 0.0 {
+                        return Err(format!(
+                            "fault event {i}: slowdown multiplier must be finite and > 0"
+                        ));
+                    }
+                }
+                FaultKind::LinkDegrade { factor } => {
+                    if !factor.is_finite() || factor < 1.0 {
+                        return Err(format!(
+                            "fault event {i}: link_degrade factor must be finite and ≥ 1"
+                        ));
+                    }
+                }
+                FaultKind::Crash | FaultKind::Drain => {}
+            }
+        }
+        if let Some(m) = self.mtbf_s {
+            if !m.is_finite() || m <= 0.0 {
+                return Err("fault mtbf_s must be finite and > 0".to_string());
+            }
+            if !self.mttr_s.is_finite() || self.mttr_s <= 0.0 {
+                return Err("fault mttr_s must be finite and > 0 when mtbf_s is set".to_string());
+            }
+        } else if !self.mttr_s.is_finite() || self.mttr_s < 0.0 {
+            return Err("fault mttr_s must be finite and ≥ 0".to_string());
+        }
+        let r = &self.recovery;
+        if !r.retry_backoff_s.is_finite() || r.retry_backoff_s < 0.0 {
+            return Err("fault recovery retry_backoff_s must be finite and ≥ 0".to_string());
+        }
+        if let Some(t) = r.request_timeout_s {
+            if !t.is_finite() || t <= 0.0 {
+                return Err("fault recovery request_timeout_s must be finite and > 0".to_string());
+            }
+        }
+        if r.shed_queue_depth == Some(0) {
+            return Err("fault recovery shed_queue_depth must be ≥ 1".to_string());
+        }
+        if r.degraded_chunk_tokens == Some(0) {
+            return Err("fault recovery degraded_chunk_tokens must be ≥ 1".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Pool index used by the engines: single-pool engines and the
+/// disaggregated prefill pool.
+pub const POOL_PREFILL: usize = 0;
+/// Pool index of the disaggregated decode pool.
+pub const POOL_DECODE: usize = 1;
+
+/// One resolved fault window.
+struct Win {
+    kind: FaultKind,
+    target: FaultTarget,
+    start: f64,
+    end: f64,
+}
+
+/// Per-run fault state: the resolved explicit windows, the lazily
+/// generated MTBF crash windows, and per-pool "crash applied" marks.
+///
+/// All methods take `&mut self` only because the MTBF process extends
+/// lazily; extension is monotone and independent of which pool asks
+/// first, so disaggregated mode's interleaved pool clocks cannot perturb
+/// the draw sequence.
+pub struct Faults {
+    events: Vec<Win>,
+    /// Per explicit event, per pool: crash already applied there.
+    event_applied: Vec<[bool; 2]>,
+    /// MTBF crash windows `(start, end)`, monotone in start.
+    auto: Vec<(f64, f64)>,
+    auto_applied: Vec<[bool; 2]>,
+    rng: Rng,
+    mtbf_s: Option<f64>,
+    mttr_s: f64,
+    /// Monolithic/chunked: one pool matches every target.
+    single_pool: bool,
+    pub recovery: RecoveryPolicy,
+}
+
+impl Faults {
+    pub fn new(spec: &FaultSpec, single_pool: bool) -> Faults {
+        let mut events: Vec<Win> = spec
+            .events
+            .iter()
+            .map(|e| Win {
+                kind: e.kind,
+                target: e.target,
+                start: e.at_s,
+                end: e.at_s + e.duration_s,
+            })
+            .collect();
+        events.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        let n = events.len();
+        Faults {
+            events,
+            event_applied: vec![[false; 2]; n],
+            auto: Vec::new(),
+            auto_applied: Vec::new(),
+            rng: Rng::new(spec.seed),
+            mtbf_s: spec.mtbf_s,
+            mttr_s: spec.mttr_s,
+            single_pool,
+            recovery: spec.recovery.clone(),
+        }
+    }
+
+    fn matches(&self, target: FaultTarget, pool: usize) -> bool {
+        if self.single_pool {
+            return true;
+        }
+        match target {
+            FaultTarget::All => true,
+            FaultTarget::Prefill => pool == POOL_PREFILL,
+            FaultTarget::Decode => pool == POOL_DECODE,
+        }
+    }
+
+    /// Extend the MTBF crash sequence until at least one window starts
+    /// strictly after `t`. Exponential inter-arrival gaps; each window
+    /// lasts `mttr_s`. No-op (and no RNG draw) without `mtbf_s`.
+    fn ensure(&mut self, t: f64) {
+        let Some(mtbf) = self.mtbf_s else { return };
+        while self.auto.last().map(|&(s, _)| s <= t).unwrap_or(true) {
+            let from = self.auto.last().map(|&(_, e)| e).unwrap_or(0.0);
+            // Inverse-CDF exponential draw; `1 - f64()` is in (0, 1], so
+            // the log is finite and the gap non-negative.
+            let gap = -mtbf * (1.0 - self.rng.f64()).ln();
+            let start = from + gap;
+            self.auto.push((start, start + self.mttr_s));
+            self.auto_applied.push([false; 2]);
+        }
+    }
+
+    /// The earliest not-yet-applied crash on `pool` with start ≤ `t`,
+    /// marked applied. Engines call this in a loop at each iteration
+    /// boundary and drop the pool's in-flight state for each hit (the
+    /// discretization: an iteration spanning a crash instant completes
+    /// first, then the crash lands).
+    pub fn pending_crash(&mut self, t: f64, pool: usize) -> Option<(f64, f64)> {
+        self.ensure(t);
+        let mut best: Option<(f64, f64, bool, usize)> = None;
+        for (i, w) in self.events.iter().enumerate() {
+            if matches!(w.kind, FaultKind::Crash)
+                && w.start <= t
+                && !self.event_applied[i][pool]
+                && self.matches(w.target, pool)
+                && best.map(|(s, ..)| w.start < s).unwrap_or(true)
+            {
+                best = Some((w.start, w.end, false, i));
+            }
+        }
+        for (i, &(s, e)) in self.auto.iter().enumerate() {
+            if s <= t
+                && !self.auto_applied[i][pool]
+                && best.map(|(bs, ..)| s < bs).unwrap_or(true)
+            {
+                best = Some((s, e, true, i));
+            }
+        }
+        best.map(|(s, e, is_auto, i)| {
+            if is_auto {
+                self.auto_applied[i][pool] = true;
+            } else {
+                self.event_applied[i][pool] = true;
+            }
+            (s, e)
+        })
+    }
+
+    /// Whether `pool` admits new work at `t`: outside every crash and
+    /// drain window that matches it.
+    pub fn admitting(&mut self, t: f64, pool: usize) -> bool {
+        self.ensure(t);
+        let blocked = self.events.iter().any(|w| {
+            matches!(w.kind, FaultKind::Crash | FaultKind::Drain)
+                && self.matches(w.target, pool)
+                && w.start <= t
+                && t < w.end
+        });
+        !blocked && !self.auto.iter().any(|&(s, e)| s <= t && t < e)
+    }
+
+    /// Earliest time ≥ `t` at which `pool` admits again. Jumps window
+    /// end to window end, so chained/overlapping outages resolve to the
+    /// final rejoin time.
+    pub fn next_admit_time(&mut self, t: f64, pool: usize) -> f64 {
+        let mut at = t;
+        loop {
+            self.ensure(at);
+            let mut covering_end: Option<f64> = None;
+            for w in &self.events {
+                if matches!(w.kind, FaultKind::Crash | FaultKind::Drain)
+                    && self.matches(w.target, pool)
+                    && w.start <= at
+                    && at < w.end
+                {
+                    covering_end =
+                        Some(covering_end.map(|e: f64| e.max(w.end)).unwrap_or(w.end));
+                }
+            }
+            for &(s, e) in &self.auto {
+                if s <= at && at < e {
+                    covering_end = Some(covering_end.map(|x: f64| x.max(e)).unwrap_or(e));
+                }
+            }
+            match covering_end {
+                Some(e) => at = e,
+                None => return at,
+            }
+        }
+    }
+
+    /// Iteration-latency multiplier on `pool` at `t`: the product of
+    /// active slowdown windows (1.0 outside any — bit-exact no-op).
+    pub fn latency_mult(&mut self, t: f64, pool: usize) -> f64 {
+        self.ensure(t);
+        let mut m = 1.0;
+        for w in &self.events {
+            if let FaultKind::Slowdown { multiplier } = w.kind {
+                if self.matches(w.target, pool) && w.start <= t && t < w.end {
+                    m *= multiplier;
+                }
+            }
+        }
+        m
+    }
+
+    /// Interconnect-transfer multiplier at `t`: the product of active
+    /// link-degradation factors (targets are ignored — the fabric is
+    /// shared).
+    pub fn link_mult(&mut self, t: f64) -> f64 {
+        let mut m = 1.0;
+        for w in &self.events {
+            if let FaultKind::LinkDegrade { factor } = w.kind {
+                if w.start <= t && t < w.end {
+                    m *= factor;
+                }
+            }
+        }
+        m
+    }
+
+    /// Whether any fault window matching `pool` is active at `t` (the
+    /// degraded-mode trigger for `degraded_chunk_tokens`).
+    pub fn degraded(&mut self, t: f64, pool: usize) -> bool {
+        self.ensure(t);
+        self.events
+            .iter()
+            .any(|w| self.matches(w.target, pool) && w.start <= t && t < w.end)
+            || self.auto.iter().any(|&(s, e)| s <= t && t < e)
+    }
+
+    /// Earliest retry-ready / window-edge time strictly after `t` that
+    /// could unblock `pool` (window starts matter for degraded-mode
+    /// re-evaluation, ends for admission). INFINITY when none.
+    pub fn next_change_after(&mut self, t: f64, pool: usize) -> f64 {
+        self.ensure(t);
+        let mut next = f64::INFINITY;
+        for w in &self.events {
+            if !self.matches(w.target, pool) {
+                continue;
+            }
+            if w.start > t {
+                next = next.min(w.start);
+            }
+            if w.end > t {
+                next = next.min(w.end);
+            }
+        }
+        for &(s, e) in &self.auto {
+            if s > t {
+                next = next.min(s);
+            }
+            if e > t {
+                next = next.min(e);
+            }
+        }
+        next
+    }
+
+    /// Total wall-clock in `[0, makespan]` with at least one pool inside
+    /// a crash or drain window: the union of outage windows (explicit
+    /// crash/drain events + MTBF crashes), clipped to the run. Slowdown
+    /// and link windows degrade service but do not count as downtime.
+    pub fn downtime_in(&mut self, makespan: f64) -> f64 {
+        self.ensure(makespan);
+        let mut wins: Vec<(f64, f64)> = self
+            .events
+            .iter()
+            .filter(|w| matches!(w.kind, FaultKind::Crash | FaultKind::Drain))
+            .map(|w| (w.start, w.end))
+            .chain(self.auto.iter().copied())
+            .map(|(s, e)| (s.max(0.0), e.min(makespan)))
+            .filter(|&(s, e)| e > s)
+            .collect();
+        wins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut total = 0.0;
+        let mut cur: Option<(f64, f64)> = None;
+        for (s, e) in wins {
+            match cur {
+                Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+                Some((cs, ce)) => {
+                    total += ce - cs;
+                    cur = Some((s, e));
+                }
+                None => cur = Some((s, e)),
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            total += ce - cs;
+        }
+        total
+    }
+
+    /// Number of fault events whose window started by `makespan` — the
+    /// `faults_injected` report counter. Extends the MTBF sequence to the
+    /// makespan so late crashes are counted deterministically.
+    pub fn injected_count(&mut self, makespan: f64) -> u64 {
+        self.ensure(makespan);
+        let explicit = self.events.iter().filter(|w| w.start <= makespan).count();
+        let auto = self.auto.iter().filter(|&&(s, _)| s <= makespan).count();
+        (explicit + auto) as u64
+    }
+
+    /// The explicit windows, for upfront telemetry span emission:
+    /// `(kind name, target name, start, end)`.
+    pub fn event_windows(&self) -> Vec<(&'static str, &'static str, f64, f64)> {
+        self.events
+            .iter()
+            .map(|w| (w.kind.name(), w.target.name(), w.start, w.end))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON (scenario / CLI `--fault-spec` format)
+// ---------------------------------------------------------------------------
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Keys accepted at each level of the fault JSON — shared with the
+/// scenario parser's unknown-field rejection.
+pub const FAULT_SPEC_KEYS: &[&str] = &["seed", "events", "mtbf_s", "mtbf_hours", "mttr_s", "recovery"];
+pub const FAULT_EVENT_KEYS: &[&str] =
+    &["kind", "at_s", "duration_s", "target", "multiplier", "factor"];
+pub const RECOVERY_KEYS: &[&str] = &[
+    "max_retries",
+    "retry_backoff_s",
+    "request_timeout_s",
+    "shed_queue_depth",
+    "degraded_chunk_tokens",
+];
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| format!("fault `{key}` must be a non-negative integer")),
+    }
+}
+
+fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>, String> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => x.as_f64().map(Some).ok_or_else(|| format!("fault `{key}` must be a number")),
+    }
+}
+
+/// Reject keys outside `allowed` so a typo'd fault knob fails loudly.
+fn check_known(v: &Json, allowed: &[&str], ctx: &str) -> Result<(), String> {
+    if let Some(m) = v.as_obj() {
+        for k in m.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown {ctx} field `{k}` (allowed: {})",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    } else {
+        Err(format!("{ctx} must be an object"))
+    }
+}
+
+impl FaultSpec {
+    /// Stable JSON rendering (round-trips through [`FaultSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("seed", num(self.seed as f64))];
+        if let Some(m) = self.mtbf_s {
+            fields.push(("mtbf_s", num(m)));
+        }
+        fields.push(("mttr_s", num(self.mttr_s)));
+        if !self.events.is_empty() {
+            fields.push((
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            let mut ef = vec![
+                                ("kind", s(e.kind.name())),
+                                ("at_s", num(e.at_s)),
+                                ("duration_s", num(e.duration_s)),
+                            ];
+                            match e.kind {
+                                FaultKind::Slowdown { multiplier } => {
+                                    ef.push(("multiplier", num(multiplier)))
+                                }
+                                FaultKind::LinkDegrade { factor } => {
+                                    ef.push(("factor", num(factor)))
+                                }
+                                _ => {}
+                            }
+                            if e.target != FaultTarget::All {
+                                ef.push(("target", s(e.target.name())));
+                            }
+                            obj(ef)
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if self.recovery != RecoveryPolicy::default() {
+            let r = &self.recovery;
+            let mut rf = vec![
+                ("max_retries", num(r.max_retries as f64)),
+                ("retry_backoff_s", num(r.retry_backoff_s)),
+            ];
+            if let Some(t) = r.request_timeout_s {
+                rf.push(("request_timeout_s", num(t)));
+            }
+            if let Some(d) = r.shed_queue_depth {
+                rf.push(("shed_queue_depth", num(d as f64)));
+            }
+            if let Some(c) = r.degraded_chunk_tokens {
+                rf.push(("degraded_chunk_tokens", num(c as f64)));
+            }
+            fields.push(("recovery", obj(rf)));
+        }
+        obj(fields)
+    }
+
+    /// Parse the scenario/CLI fault object. Unknown keys at any level are
+    /// rejected by name; `mtbf_hours` is accepted as sugar for
+    /// `mtbf_s = hours × 3600` (`to_json` always emits `mtbf_s`).
+    pub fn from_json(v: &Json) -> Result<FaultSpec, String> {
+        check_known(v, FAULT_SPEC_KEYS, "fault spec")?;
+        let mtbf_s = match (opt_f64(v, "mtbf_s")?, opt_f64(v, "mtbf_hours")?) {
+            (Some(_), Some(_)) => {
+                return Err("fault spec sets both `mtbf_s` and `mtbf_hours`".to_string())
+            }
+            (Some(sv), None) => Some(sv),
+            (None, Some(h)) => Some(h * 3600.0),
+            (None, None) => None,
+        };
+        let mut events = Vec::new();
+        match v.get("events") {
+            None => {}
+            Some(Json::Arr(items)) => {
+                for item in items {
+                    check_known(item, FAULT_EVENT_KEYS, "fault event")?;
+                    let kind_name = item
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| "fault event needs a string `kind`".to_string())?;
+                    let kind = match kind_name {
+                        "crash" => FaultKind::Crash,
+                        "drain" => FaultKind::Drain,
+                        "slowdown" => FaultKind::Slowdown {
+                            multiplier: opt_f64(item, "multiplier")?.ok_or_else(|| {
+                                "slowdown fault event needs `multiplier`".to_string()
+                            })?,
+                        },
+                        "link_degrade" => FaultKind::LinkDegrade {
+                            factor: opt_f64(item, "factor")?.ok_or_else(|| {
+                                "link_degrade fault event needs `factor`".to_string()
+                            })?,
+                        },
+                        other => {
+                            return Err(format!(
+                                "unknown fault kind `{other}` (crash | drain | slowdown | \
+                                 link_degrade)"
+                            ))
+                        }
+                    };
+                    let target = match item.get("target") {
+                        None => FaultTarget::All,
+                        Some(t) => {
+                            let t = t
+                                .as_str()
+                                .ok_or_else(|| "fault event `target` must be a string".to_string())?;
+                            FaultTarget::parse(t).ok_or_else(|| {
+                                format!("unknown fault target `{t}` (all | prefill | decode)")
+                            })?
+                        }
+                    };
+                    events.push(FaultEvent {
+                        kind,
+                        at_s: opt_f64(item, "at_s")?
+                            .ok_or_else(|| "fault event needs `at_s`".to_string())?,
+                        duration_s: opt_f64(item, "duration_s")?
+                            .ok_or_else(|| "fault event needs `duration_s`".to_string())?,
+                        target,
+                    });
+                }
+            }
+            Some(_) => return Err("fault `events` must be an array".to_string()),
+        }
+        let recovery = match v.get("recovery") {
+            None => RecoveryPolicy::default(),
+            Some(r) => {
+                check_known(r, RECOVERY_KEYS, "fault recovery")?;
+                let d = RecoveryPolicy::default();
+                RecoveryPolicy {
+                    max_retries: opt_u64(r, "max_retries")?.unwrap_or(d.max_retries),
+                    retry_backoff_s: opt_f64(r, "retry_backoff_s")?.unwrap_or(d.retry_backoff_s),
+                    request_timeout_s: opt_f64(r, "request_timeout_s")?,
+                    shed_queue_depth: opt_u64(r, "shed_queue_depth")?,
+                    degraded_chunk_tokens: opt_u64(r, "degraded_chunk_tokens")?,
+                }
+            }
+        };
+        let spec = FaultSpec {
+            seed: opt_u64(v, "seed")?.unwrap_or(0),
+            events,
+            mtbf_s,
+            mttr_s: opt_f64(v, "mttr_s")?.unwrap_or(DEFAULT_MTTR_S),
+            recovery,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_spec_is_inert() {
+        let mut f = Faults::new(&FaultSpec::none(), true);
+        assert!(f.admitting(0.0, POOL_PREFILL));
+        assert!(f.pending_crash(1e9, POOL_PREFILL).is_none());
+        assert_eq!(f.latency_mult(5.0, POOL_PREFILL), 1.0);
+        assert_eq!(f.link_mult(5.0), 1.0);
+        assert!(!f.degraded(5.0, POOL_PREFILL));
+        assert_eq!(f.next_change_after(0.0, POOL_PREFILL), f64::INFINITY);
+        assert_eq!(f.injected_count(1e9), 0);
+    }
+
+    #[test]
+    fn windows_gate_admission_and_multiply_latency() {
+        let spec = FaultSpec {
+            seed: 1,
+            events: vec![
+                FaultEvent {
+                    kind: FaultKind::Drain,
+                    at_s: 1.0,
+                    duration_s: 2.0,
+                    target: FaultTarget::Prefill,
+                },
+                FaultEvent {
+                    kind: FaultKind::Slowdown { multiplier: 3.0 },
+                    at_s: 0.5,
+                    duration_s: 1.0,
+                    target: FaultTarget::All,
+                },
+                FaultEvent {
+                    kind: FaultKind::LinkDegrade { factor: 4.0 },
+                    at_s: 0.0,
+                    duration_s: 10.0,
+                    target: FaultTarget::All,
+                },
+            ],
+            mtbf_s: None,
+            mttr_s: 0.0,
+            recovery: RecoveryPolicy::default(),
+        };
+        spec.validate().unwrap();
+        let mut f = Faults::new(&spec, false);
+        assert!(f.admitting(0.9, POOL_PREFILL));
+        assert!(!f.admitting(1.0, POOL_PREFILL), "window start is inclusive");
+        assert!(!f.admitting(2.9, POOL_PREFILL));
+        assert!(f.admitting(3.0, POOL_PREFILL), "window end is exclusive");
+        assert!(f.admitting(2.0, POOL_DECODE), "prefill drain leaves decode admitting");
+        assert_eq!(f.next_admit_time(1.5, POOL_PREFILL), 3.0);
+        assert_eq!(f.next_admit_time(1.5, POOL_DECODE), 1.5);
+        assert_eq!(f.latency_mult(1.0, POOL_DECODE), 3.0);
+        assert_eq!(f.latency_mult(1.6, POOL_DECODE), 1.0);
+        assert_eq!(f.link_mult(5.0), 4.0);
+        assert_eq!(f.link_mult(11.0), 1.0);
+        assert!(f.degraded(2.5, POOL_PREFILL));
+        assert!(!f.degraded(2.5, POOL_DECODE), "only the link window covers decode at 2.5");
+        assert_eq!(f.injected_count(100.0), 3);
+    }
+
+    #[test]
+    fn crash_applies_once_per_pool_and_counts() {
+        let spec = FaultSpec {
+            seed: 9,
+            events: vec![FaultEvent {
+                kind: FaultKind::Crash,
+                at_s: 2.0,
+                duration_s: 1.0,
+                target: FaultTarget::All,
+            }],
+            mtbf_s: None,
+            mttr_s: 0.0,
+            recovery: RecoveryPolicy::default(),
+        };
+        let mut f = Faults::new(&spec, false);
+        assert!(f.pending_crash(1.0, POOL_PREFILL).is_none(), "not yet struck");
+        assert_eq!(f.pending_crash(2.5, POOL_PREFILL), Some((2.0, 3.0)));
+        assert!(f.pending_crash(2.5, POOL_PREFILL).is_none(), "applied once per pool");
+        assert_eq!(f.pending_crash(9.0, POOL_DECODE), Some((2.0, 3.0)));
+        assert!(!f.admitting(2.5, POOL_DECODE), "crash window blocks admission");
+    }
+
+    #[test]
+    fn mtbf_sequence_is_deterministic_and_order_independent() {
+        let spec = FaultSpec::mtbf(7, 100.0, 5.0);
+        let mut a = Faults::new(&spec, false);
+        let mut b = Faults::new(&spec, false);
+        // Interleave queries differently; the generated windows must agree.
+        a.ensure(1000.0);
+        let _ = b.pending_crash(50.0, POOL_DECODE);
+        let _ = b.admitting(400.0, POOL_PREFILL);
+        b.ensure(1000.0);
+        assert_eq!(a.auto, b.auto, "MTBF windows depend only on the seed");
+        assert!(a.auto.iter().all(|&(s, e)| e - s == 5.0));
+        assert!(
+            a.auto.windows(2).all(|w| w[1].0 >= w[0].1),
+            "windows are sequential (downtime separates crashes)"
+        );
+        // Different seed, different schedule.
+        let mut c = Faults::new(&FaultSpec::mtbf(8, 100.0, 5.0), false);
+        c.ensure(1000.0);
+        assert_ne!(a.auto, c.auto);
+    }
+
+    #[test]
+    fn spec_json_round_trips() {
+        let mut spec = FaultSpec {
+            seed: 11,
+            events: vec![
+                FaultEvent {
+                    kind: FaultKind::Crash,
+                    at_s: 1.5,
+                    duration_s: 0.5,
+                    target: FaultTarget::Decode,
+                },
+                FaultEvent {
+                    kind: FaultKind::Slowdown { multiplier: 2.0 },
+                    at_s: 0.25,
+                    duration_s: 4.0,
+                    target: FaultTarget::All,
+                },
+            ],
+            mtbf_s: Some(7200.0),
+            mttr_s: 12.0,
+            recovery: RecoveryPolicy {
+                max_retries: 3,
+                retry_backoff_s: 0.25,
+                request_timeout_s: Some(30.0),
+                shed_queue_depth: Some(64),
+                degraded_chunk_tokens: Some(256),
+            },
+        };
+        let text = spec.to_json().to_string_pretty();
+        let again = FaultSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(spec, again, "round trip changed the spec:\n{text}");
+        // Default recovery and empty events stay implicit.
+        spec.events.clear();
+        spec.recovery = RecoveryPolicy::default();
+        let text = spec.to_json().to_string_pretty();
+        assert!(!text.contains("recovery") && !text.contains("events"));
+        assert_eq!(spec, FaultSpec::from_json(&Json::parse(&text).unwrap()).unwrap());
+        // mtbf_hours sugar.
+        let sugared = Json::parse(r#"{"seed": 2, "mtbf_hours": 2.0, "mttr_s": 30.0}"#).unwrap();
+        assert_eq!(FaultSpec::from_json(&sugared).unwrap().mtbf_s, Some(7200.0));
+    }
+
+    #[test]
+    fn bad_specs_error_by_name() {
+        for (text, needle) in [
+            (r#"{"seed": 1, "mtbf": 10.0}"#, "unknown fault spec field `mtbf`"),
+            (r#"{"events": [{"kind": "crash", "at_s": 1.0}]}"#, "duration_s"),
+            (r#"{"events": [{"kind": "explode", "at_s": 1.0, "duration_s": 1.0}]}"#, "explode"),
+            (
+                r#"{"events": [{"kind": "slowdown", "at_s": 1.0, "duration_s": 1.0}]}"#,
+                "multiplier",
+            ),
+            (
+                r#"{"events": [{"kind": "crash", "at_s": 1.0, "duration_s": 1.0, "oops": 1}]}"#,
+                "unknown fault event field `oops`",
+            ),
+            (r#"{"recovery": {"max_retry": 3}}"#, "unknown fault recovery field `max_retry`"),
+            (r#"{"mtbf_s": 10.0, "mttr_s": 0.0}"#, "mttr_s"),
+            (r#"{"mtbf_s": 1.0, "mtbf_hours": 1.0, "mttr_s": 1.0}"#, "both"),
+            (
+                r#"{"events": [{"kind": "link_degrade", "at_s": 0.0, "duration_s": 1.0,
+                    "factor": 0.5}]}"#,
+                "factor",
+            ),
+            (r#"{"recovery": {"shed_queue_depth": 0}}"#, "shed_queue_depth"),
+        ] {
+            let v = Json::parse(text).unwrap();
+            let err = FaultSpec::from_json(&v).unwrap_err();
+            assert!(err.contains(needle), "`{text}` → `{err}` (wanted `{needle}`)");
+        }
+    }
+}

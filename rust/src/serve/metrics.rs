@@ -21,6 +21,10 @@ pub struct RequestMetrics {
     pub first_token_s: f64,
     /// When the last output token was emitted; NaN until finished.
     pub finish_s: f64,
+    /// Whether a fault ever hit this request (its KV state was lost to a
+    /// crash and it was re-dispatched). Fault-conditioned tail
+    /// percentiles aggregate over exactly these requests.
+    pub faulted: bool,
 }
 
 impl RequestMetrics {
@@ -92,6 +96,15 @@ pub struct Summary {
     pub goodput_tok_s: f64,
     /// Fraction of requests meeting the SLO.
     pub slo_attainment: f64,
+    /// Completed requests that were hit by a fault along the way
+    /// (crashed and re-dispatched; lost/shed requests never reach the
+    /// summary).
+    pub faulted_requests: usize,
+    /// p99 TTFT over the faulted subset only (0 when none) — how bad the
+    /// first-token experience gets for the requests that had to retry.
+    pub ttft_p99_faulted_s: f64,
+    /// p99 TPOT over the faulted subset only (0 when none).
+    pub tpot_p99_faulted_s: f64,
 }
 
 /// Summarize per-request metrics under an SLO. `makespan_s` should be the
@@ -103,6 +116,9 @@ pub fn summarize(metrics: &[RequestMetrics], slo: &Slo, makespan_s: f64) -> Summ
     let output_tokens: u64 = metrics.iter().map(|m| m.output_tokens).sum();
     let good: Vec<&RequestMetrics> = metrics.iter().filter(|m| slo.met_by(m)).collect();
     let good_tokens: u64 = good.iter().map(|m| m.output_tokens).sum();
+    let faulted: Vec<&RequestMetrics> = metrics.iter().filter(|m| m.faulted).collect();
+    let ttft_faulted: Vec<f64> = faulted.iter().map(|m| m.ttft_s()).collect();
+    let tpot_faulted: Vec<f64> = faulted.iter().map(|m| m.tpot_s()).collect();
     let span = makespan_s.max(f64::MIN_POSITIVE);
     Summary {
         requests: metrics.len(),
@@ -123,6 +139,9 @@ pub fn summarize(metrics: &[RequestMetrics], slo: &Slo, makespan_s: f64) -> Summ
         } else {
             good.len() as f64 / metrics.len() as f64
         },
+        faulted_requests: faulted.len(),
+        ttft_p99_faulted_s: stats::percentile(&ttft_faulted, 99.0),
+        tpot_p99_faulted_s: stats::percentile(&tpot_faulted, 99.0),
     }
 }
 
@@ -145,6 +164,9 @@ impl Summary {
             ("throughput_tok_s", num(self.throughput_tok_s)),
             ("goodput_tok_s", num(self.goodput_tok_s)),
             ("slo_attainment", num(self.slo_attainment)),
+            ("faulted_requests", num(self.faulted_requests as f64)),
+            ("ttft_p99_faulted_s", num(self.ttft_p99_faulted_s)),
+            ("tpot_p99_faulted_s", num(self.tpot_p99_faulted_s)),
         ])
     }
 
@@ -184,6 +206,7 @@ mod tests {
             output_tokens: out,
             first_token_s: first,
             finish_s: finish,
+            faulted: false,
         }
     }
 
@@ -237,5 +260,24 @@ mod tests {
         assert_eq!(s.ttft_p50_s, 0.0);
         assert_eq!(s.ttft_mean_s, 0.0);
         assert_eq!(s.goodput_tok_s, 0.0);
+        assert_eq!(s.faulted_requests, 0);
+        assert_eq!(s.ttft_p99_faulted_s, 0.0);
+    }
+
+    #[test]
+    fn fault_conditioned_percentiles_cover_only_faulted_requests() {
+        let mut slow = req(0.0, 8.0, 10.0, 11); // retried after a crash
+        slow.faulted = true;
+        let metrics = vec![req(0.0, 0.5, 1.5, 11), req(0.0, 0.6, 1.6, 11), slow];
+        let s = summarize(&metrics, &Slo::interactive(), 10.0);
+        assert_eq!(s.faulted_requests, 1);
+        assert!((s.ttft_p99_faulted_s - 8.0).abs() < 1e-12);
+        assert!((s.tpot_p99_faulted_s - 0.2).abs() < 1e-12);
+        // The overall p50 is still dominated by the healthy requests.
+        assert!(s.ttft_p50_s < 1.0);
+        // Without faulted requests the conditioned tails stay zero.
+        let healthy = summarize(&metrics[..2], &Slo::interactive(), 10.0);
+        assert_eq!(healthy.faulted_requests, 0);
+        assert_eq!(healthy.ttft_p99_faulted_s, 0.0);
     }
 }

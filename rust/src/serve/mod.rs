@@ -20,6 +20,10 @@
 //!   conservative or eviction-based ([`Preemption`]) KV admission. All
 //!   iteration latencies come from the graph-lowered layer costs of the
 //!   analytical simulator through the quantizing [`IterOracle`].
+//! * [`fault`] — seeded, deterministic fault injection (crash / drain /
+//!   slowdown / link degradation) plus the recovery policy (bounded retry
+//!   with backoff, timeouts, admission shedding, degraded chunk sizes)
+//!   that turns best-case serving numbers into under-fault numbers.
 //! * [`metrics`] — per-request timelines, percentile aggregation, and
 //!   SLO goodput.
 //! * [`sweep`] — the SLO-aware cost sweep reporting $/1M-tokens-at-SLO
@@ -30,11 +34,13 @@
 //! oracle keeps mapper work bounded, so thousand-request traces of
 //! GPT-3-class models simulate in seconds.
 
+pub mod fault;
 pub mod metrics;
 pub mod scheduler;
 pub mod sweep;
 pub mod workload;
 
+pub use fault::{FaultEvent, FaultKind, FaultSpec, FaultTarget, RecoveryPolicy};
 pub use metrics::{RequestMetrics, Slo, Summary};
 pub use scheduler::{
     kv_capacity_tokens, IterOracle, Policy, Preemption, RunStats, SchedulerConfig, ServeMode,

@@ -43,6 +43,7 @@
 //! iteration latencies, transfer completions, or idle gaps to the next
 //! arrival.
 
+use super::fault::{FaultSpec, Faults, RecoveryPolicy, POOL_DECODE, POOL_PREFILL};
 use super::metrics::RequestMetrics;
 use super::workload::Request;
 use crate::graph::inference::Simulator;
@@ -197,6 +198,9 @@ pub struct SchedulerConfig {
     /// [`RunStats::handoff_stall_s`]. `None` derives the decode pool's KV
     /// budget measured in mean-trace-length sequences.
     pub handoff_capacity: Option<u64>,
+    /// Fault-injection schedule + recovery policy (`None`: a perfect
+    /// fleet — identical behavior to a zero-event [`FaultSpec`]).
+    pub faults: Option<FaultSpec>,
 }
 
 impl SchedulerConfig {
@@ -212,6 +216,7 @@ impl SchedulerConfig {
             mode: ServeMode::Monolithic,
             preemption: Preemption::Conservative,
             handoff_capacity: None,
+            faults: None,
         }
     }
 
@@ -268,6 +273,9 @@ pub fn validate(
     }
     if cfg.handoff_capacity == Some(0) {
         return Err("handoff_capacity must be ≥ 1".to_string());
+    }
+    if let Some(spec) = &cfg.faults {
+        spec.validate()?;
     }
     let mode = cfg.mode.resolved(device_count)?;
     let (pre_cap, dec_cap) = SchedulerConfig { mode, ..cfg.clone() }.pool_budgets(device_count);
@@ -424,6 +432,26 @@ pub struct RunStats {
     pub handoff_stall_s: f64,
     /// Wall-clock of the simulated run (last completion time).
     pub makespan_s: f64,
+    /// Fault events whose window opened during the run (explicit
+    /// [`FaultSpec`] events + MTBF-generated crashes).
+    pub faults_injected: u64,
+    /// Requests dropped for good: a crash exhausted their retry budget,
+    /// or they exceeded the recovery policy's queue timeout.
+    pub requests_lost: u64,
+    /// Distinct requests re-dispatched at least once after losing KV
+    /// state to a crash.
+    pub requests_retried: u64,
+    /// Fresh arrivals refused by admission shedding.
+    pub requests_shed: u64,
+    /// Context tokens dropped by crashes that retries must re-prefill
+    /// (the fault twin of `recompute_tokens`).
+    pub retry_tokens_recomputed: u64,
+    /// Wall-clock with at least one pool inside a crash or drain window
+    /// (union of outage windows, clipped to the makespan).
+    pub fault_downtime_s: f64,
+    /// `1 − fault_downtime_s / makespan_s` — exactly 1.0 in fault-free
+    /// runs.
+    pub availability: f64,
 }
 
 impl RunStats {
@@ -448,6 +476,13 @@ impl RunStats {
             ("handoff_wait_s", num(self.handoff_wait_s)),
             ("handoff_stall_s", num(self.handoff_stall_s)),
             ("makespan_s", num(self.makespan_s)),
+            ("faults_injected", num(self.faults_injected as f64)),
+            ("requests_lost", num(self.requests_lost as f64)),
+            ("requests_retried", num(self.requests_retried as f64)),
+            ("requests_shed", num(self.requests_shed as f64)),
+            ("retry_tokens_recomputed", num(self.retry_tokens_recomputed as f64)),
+            ("fault_downtime_s", num(self.fault_downtime_s)),
+            ("availability", num(self.availability)),
         ])
     }
 }
@@ -493,6 +528,15 @@ struct RunState<'a> {
     decode_from: Vec<f64>,
     completed: usize,
     serial: u64,
+    /// Crash re-dispatches consumed per request (bounded by the recovery
+    /// policy's `max_retries`).
+    retries: Vec<u64>,
+    /// Dropped for good: retry budget exhausted or queue timeout.
+    lost: Vec<bool>,
+    /// Refused at arrival by admission shedding.
+    shed: Vec<bool>,
+    /// `lost.count(true) + shed.count(true)` — settled-without-finishing.
+    lost_or_shed: usize,
 }
 
 impl<'a> RunState<'a> {
@@ -506,6 +550,7 @@ impl<'a> RunState<'a> {
                 output_tokens: r.output_tokens,
                 first_token_s: f64::NAN,
                 finish_s: f64::NAN,
+                faulted: false,
             })
             .collect();
         RunState {
@@ -520,7 +565,17 @@ impl<'a> RunState<'a> {
             decode_from: vec![0.0; requests.len()],
             completed: 0,
             serial: 0,
+            retries: vec![0; requests.len()],
+            lost: vec![false; requests.len()],
+            shed: vec![false; requests.len()],
+            lost_or_shed: 0,
         }
+    }
+
+    /// Requests that need no further work: finished, lost, or shed. The
+    /// engines loop until every request is settled.
+    fn settled(&self) -> usize {
+        self.completed + self.lost_or_shed
     }
 
     /// Per-request trace track name.
@@ -645,6 +700,100 @@ impl<'a> RunState<'a> {
             Preemption::Evict => self.prefill_target(i), // == current kv
         }
     }
+
+    /// A crash dropped request `i`'s built KV (`kv_built` tokens) at
+    /// time `t`; the pool rejoins at `rejoin`. While retry budget
+    /// remains the request is re-dispatched through the retry queue with
+    /// exponential backoff (and must re-prefill from scratch — all
+    /// generation progress is gone); beyond the budget it is lost.
+    fn crash_request(
+        &mut self,
+        i: usize,
+        kv_built: u64,
+        t: f64,
+        rejoin: f64,
+        recovery: &RecoveryPolicy,
+        retry_q: &mut Vec<(f64, usize)>,
+    ) {
+        self.metrics[i].faulted = true;
+        self.metrics[i].first_token_s = f64::NAN;
+        self.generated[i] = 0;
+        if self.rec.is_enabled() {
+            self.rec.instant_sim(
+                &self.track(i),
+                "crash",
+                t,
+                &[("kv_tokens", num(kv_built as f64))],
+            );
+        }
+        if self.retries[i] < recovery.max_retries {
+            self.retries[i] += 1;
+            if self.retries[i] == 1 {
+                self.stats.requests_retried += 1;
+            }
+            self.stats.retry_tokens_recomputed += kv_built;
+            let backoff =
+                recovery.retry_backoff_s * (1u64 << (self.retries[i] - 1).min(62)) as f64;
+            let ready = rejoin.max(t) + backoff;
+            self.queued_since[i] = ready;
+            retry_q.push((ready, i));
+        } else {
+            self.lost[i] = true;
+            self.lost_or_shed += 1;
+            self.stats.requests_lost += 1;
+            if self.rec.is_enabled() {
+                self.rec.instant_sim(&self.track(i), "lost", t, &[]);
+            }
+        }
+    }
+
+    /// Admission shedding refused fresh arrival `i` at time `t`.
+    fn shed_request(&mut self, i: usize, t: f64) {
+        self.shed[i] = true;
+        self.lost_or_shed += 1;
+        self.stats.requests_shed += 1;
+        if self.rec.is_enabled() {
+            self.rec.instant_sim(&self.track(i), "shed", t, &[]);
+        }
+    }
+
+    /// Request `i` exceeded the recovery policy's queue deadline at `t`.
+    fn lose_to_timeout(&mut self, i: usize, t: f64) {
+        self.lost[i] = true;
+        self.lost_or_shed += 1;
+        self.stats.requests_lost += 1;
+        if self.rec.is_enabled() {
+            self.rec.instant_sim(&self.track(i), "timeout", t, &[]);
+        }
+    }
+
+    /// Close out fault accounting against the final makespan and build
+    /// the report: lost/shed requests are dropped from the metrics (they
+    /// produced no tokens) and live on only in the stats counters.
+    fn into_results(self, f: &mut Faults) -> (Vec<RequestMetrics>, RunStats) {
+        let mut stats = self.stats;
+        let makespan = stats.makespan_s;
+        stats.faults_injected = f.injected_count(makespan);
+        stats.fault_downtime_s = f.downtime_in(makespan);
+        stats.availability = if makespan > 0.0 {
+            ((makespan - stats.fault_downtime_s) / makespan).max(0.0)
+        } else {
+            1.0
+        };
+        debug_assert_eq!(
+            self.completed + self.lost_or_shed,
+            self.requests.len(),
+            "request accounting does not conserve"
+        );
+        let metrics = self
+            .metrics
+            .into_iter()
+            .zip(self.lost.iter().zip(self.shed.iter()))
+            .filter(|(_, (&l, &s))| !l && !s)
+            .map(|(m, _)| m)
+            .collect();
+        (metrics, stats)
+    }
 }
 
 /// Policy-ordered waiting queue of request indices. Preempted requests
@@ -684,6 +833,34 @@ impl WaitQueue {
         self.waiting.is_empty() && self.resume.is_empty()
     }
 
+    /// Depth of the backlog (waiting + resume) — the admission-shedding
+    /// pressure signal.
+    fn len(&self) -> usize {
+        self.waiting.len() + self.resume.len()
+    }
+
+    /// Drop every queued request whose time since arrival exceeds
+    /// `timeout` (the recovery policy's per-request deadline). Returns
+    /// the dropped indices.
+    fn drop_timed_out(&mut self, t: f64, timeout: f64, requests: &[Request]) -> Vec<usize> {
+        let mut dropped = Vec::new();
+        self.waiting.retain(|&i| {
+            let keep = t - requests[i].arrival_s <= timeout;
+            if !keep {
+                dropped.push(i);
+            }
+            keep
+        });
+        self.resume.retain(|&i| {
+            let keep = t - requests[i].arrival_s <= timeout;
+            if !keep {
+                dropped.push(i);
+            }
+            keep
+        });
+        dropped
+    }
+
     fn peek(&self) -> Option<usize> {
         self.resume.first().copied().or_else(|| self.waiting.first().copied())
     }
@@ -695,6 +872,21 @@ impl WaitQueue {
             Some(self.waiting.remove(0))
         } else {
             None
+        }
+    }
+}
+
+/// Move crash retries whose backoff has elapsed back into the waiting
+/// queue, through the resume lane — a retried request was admitted once
+/// already, so it outranks fresh arrivals.
+fn drain_retries(retry_q: &mut Vec<(f64, usize)>, t: f64, queue: &mut WaitQueue) {
+    let mut k = 0;
+    while k < retry_q.len() {
+        if retry_q[k].0 <= t {
+            let (_, idx) = retry_q.remove(k);
+            queue.requeue_preempted(idx);
+        } else {
+            k += 1;
         }
     }
 }
@@ -743,6 +935,21 @@ pub fn simulate(
     }
     let mode = cfg.mode.resolved(sys.device_count).unwrap();
     let rec: &Recorder = &sim.recorder;
+    // Scheduled fault windows go on their own trace track up front; MTBF
+    // crashes are emitted as they land (they are generated lazily).
+    if rec.is_enabled() {
+        if let Some(spec) = &cfg.faults {
+            for e in &spec.events {
+                rec.span_sim(
+                    "faults",
+                    e.kind.name(),
+                    e.at_s,
+                    e.at_s + e.duration_s,
+                    &[("target", crate::util::json::s(e.target.name()))],
+                );
+            }
+        }
+    }
     match mode {
         ServeMode::Monolithic => {
             let oracle = IterOracle::new(sim, sys, model);
@@ -779,6 +986,9 @@ fn run_monolithic(
     requests: &[Request],
     rec: &Recorder,
 ) -> (Vec<RequestMetrics>, RunStats) {
+    let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
+    let mut f = Faults::new(&spec, true);
+    let mut retry_q: Vec<(f64, usize)> = Vec::new();
     let mut state = RunState::new(cfg, requests, rec);
     let mut queue = WaitQueue::new(cfg.policy);
     let mut running: Vec<Running> = Vec::new();
@@ -786,20 +996,61 @@ fn run_monolithic(
     let mut t = 0.0f64;
     let mut next_arrival = 0usize;
 
-    while state.completed < requests.len() {
-        // 1. Ingest arrivals up to the current clock.
+    while state.settled() < requests.len() {
+        // 0. Faults: crashes land at iteration boundaries — the in-flight
+        //    iteration (modeled atomically) finishes, then the pool loses
+        //    its KV state and admits nothing until the window ends.
+        let mut crashed = false;
+        while let Some((tc, rec_end)) = f.pending_crash(t, POOL_PREFILL) {
+            if rec.is_enabled() {
+                rec.instant_sim("faults", "crash", tc, &[]);
+                rec.span_sim("faults", "downtime", tc, rec_end, &[]);
+            }
+            for r in running.drain(..) {
+                state.crash_request(r.idx, r.kv_tokens, tc, rec_end, &f.recovery, &mut retry_q);
+            }
+            kv_reserved = 0;
+            state.stats.idle_s += (rec_end - t).max(0.0);
+            t = t.max(rec_end);
+            crashed = true;
+        }
+        if crashed {
+            continue;
+        }
+
+        // 1. Ingest arrivals up to the current clock (shedding fresh
+        //    arrivals while the backlog is over the pressure bound), plus
+        //    crashed requests whose retry backoff has elapsed; then drop
+        //    whatever has overstayed the queue deadline.
         while next_arrival < requests.len() && requests[next_arrival].arrival_s <= t {
-            queue.arrive(next_arrival, requests);
+            let over = f
+                .recovery
+                .shed_queue_depth
+                .map(|d| queue.len() as u64 >= d)
+                .unwrap_or(false);
+            if over {
+                state.shed_request(next_arrival, requests[next_arrival].arrival_s);
+            } else {
+                queue.arrive(next_arrival, requests);
+            }
             next_arrival += 1;
+        }
+        drain_retries(&mut retry_q, t, &mut queue);
+        if let Some(timeout) = f.recovery.request_timeout_s {
+            for idx in queue.drop_timed_out(t, timeout, requests) {
+                state.lose_to_timeout(idx, t);
+            }
         }
 
         // 2. Admit from the waiting queue under the KV budget + batch cap.
         //    Admission is greedy in queue order (no skipping ahead past a
         //    request that does not fit — FCFS head-of-line blocking is
         //    part of what the policy choice is about). Preempted requests
-        //    resume first.
+        //    resume first. A crash/drain window suspends admission.
+        let can_admit = f.admitting(t, POOL_PREFILL);
         let mut admitted: Vec<usize> = Vec::new();
-        while admitted.len() < cfg.max_prefill_batch as usize
+        while can_admit
+            && admitted.len() < cfg.max_prefill_batch as usize
             && running.len() + admitted.len() < cfg.max_batch as usize
         {
             let Some(cand) = queue.peek() else { break };
@@ -829,7 +1080,7 @@ fn run_monolithic(
             let batch = admitted.len() as u64;
             let max_ctx = admitted.iter().map(|&i| state.prefill_target(i)).max().unwrap();
             let t0 = t;
-            let dt = oracle.prefill(batch, max_ctx);
+            let dt = oracle.prefill(batch, max_ctx) * f.latency_mult(t0, POOL_PREFILL);
             t += dt;
             state.stats.prefill_iterations += 1;
             state.stats.prefill_busy_s += dt;
@@ -875,7 +1126,7 @@ fn run_monolithic(
             let batch = running.len() as u64;
             let mean_kv = running.iter().map(|r| r.kv_tokens).sum::<u64>() / batch;
             let t0 = t;
-            let dt = oracle.decode(batch, mean_kv);
+            let dt = oracle.decode(batch, mean_kv) * f.latency_mult(t0, POOL_PREFILL);
             t += dt;
             state.stats.decode_iterations += 1;
             state.stats.decode_busy_s += dt;
@@ -908,22 +1159,39 @@ fn run_monolithic(
                 }
             }
         } else {
-            // 3c. Idle: nothing running and nothing admittable. Requests
-            // waiting over budget with an idle cluster cannot happen —
-            // `validate` guarantees every request fits an empty cluster.
-            debug_assert!(queue.is_empty(), "waiting requests with an idle cluster");
-            if next_arrival >= requests.len() {
-                break; // all requests ingested and completed
+            // 3c. Idle: nothing running and nothing admittable. Wake at
+            // the next arrival, the next retry re-dispatch, or — when the
+            // backlog is fault-blocked — the moment the pool rejoins
+            // (`validate` guarantees a queue head always fits an empty,
+            // healthy cluster, so a non-empty queue here means admission
+            // is inside a crash/drain window).
+            let mut wake = f64::INFINITY;
+            if next_arrival < requests.len() {
+                wake = wake.min(requests[next_arrival].arrival_s);
             }
-            // Step 1 ingested everything with arrival ≤ t, so the gap is
-            // strictly positive here.
-            state.stats.idle_s += requests[next_arrival].arrival_s - t;
-            t = requests[next_arrival].arrival_s;
+            for &(at, _) in &retry_q {
+                wake = wake.min(at);
+            }
+            if !queue.is_empty() {
+                debug_assert!(
+                    !f.admitting(t, POOL_PREFILL),
+                    "waiting requests with an idle, healthy cluster"
+                );
+                wake = wake.min(f.next_admit_time(t, POOL_PREFILL));
+            }
+            if !wake.is_finite() {
+                break; // nothing in flight and nothing left to happen
+            }
+            // Step 1 ingested/drained everything ≤ t, and a non-empty
+            // queue implies a blocking window ending after t.
+            debug_assert!(wake > t, "idle wake did not advance the clock");
+            state.stats.idle_s += wake - t;
+            t = wake;
         }
     }
 
     state.stats.makespan_s = t;
-    (state.metrics, state.stats)
+    state.into_results(&mut f)
 }
 
 // ---------------------------------------------------------------------------
@@ -937,6 +1205,9 @@ fn run_chunked(
     chunk_tokens: u64,
     rec: &Recorder,
 ) -> (Vec<RequestMetrics>, RunStats) {
+    let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
+    let mut f = Faults::new(&spec, true);
+    let mut retry_q: Vec<(f64, usize)> = Vec::new();
     let mut state = RunState::new(cfg, requests, rec);
     let mut queue = WaitQueue::new(cfg.policy);
     let mut prefilling: Vec<Prefilling> = Vec::new();
@@ -945,18 +1216,59 @@ fn run_chunked(
     let mut t = 0.0f64;
     let mut next_arrival = 0usize;
 
-    while state.completed < requests.len() {
+    while state.settled() < requests.len() {
+        // Faults: crashes land at iteration boundaries and wipe both the
+        // running batch and every partial prefill.
+        let mut crashed = false;
+        while let Some((tc, rec_end)) = f.pending_crash(t, POOL_PREFILL) {
+            if rec.is_enabled() {
+                rec.instant_sim("faults", "crash", tc, &[]);
+                rec.span_sim("faults", "downtime", tc, rec_end, &[]);
+            }
+            for r in running.drain(..) {
+                state.crash_request(r.idx, r.kv_tokens, tc, rec_end, &f.recovery, &mut retry_q);
+            }
+            for pf in prefilling.drain(..) {
+                state.crash_request(pf.idx, pf.done, tc, rec_end, &f.recovery, &mut retry_q);
+            }
+            kv_reserved = 0;
+            state.stats.idle_s += (rec_end - t).max(0.0);
+            t = t.max(rec_end);
+            crashed = true;
+        }
+        if crashed {
+            continue;
+        }
+
         while next_arrival < requests.len() && requests[next_arrival].arrival_s <= t {
-            queue.arrive(next_arrival, requests);
+            let over = f
+                .recovery
+                .shed_queue_depth
+                .map(|d| queue.len() as u64 >= d)
+                .unwrap_or(false);
+            if over {
+                state.shed_request(next_arrival, requests[next_arrival].arrival_s);
+            } else {
+                queue.arrive(next_arrival, requests);
+            }
             next_arrival += 1;
+        }
+        drain_retries(&mut retry_q, t, &mut queue);
+        if let Some(timeout) = f.recovery.request_timeout_s {
+            for idx in queue.drop_timed_out(t, timeout, requests) {
+                state.lose_to_timeout(idx, t);
+            }
         }
 
         // Admit into the partial-prefill set (resumed requests first).
         // Under eviction, admission also leaves headroom for this
         // iteration's +1-per-running-sequence decode growth — otherwise
         // every admission near capacity would be immediately undone by
-        // the evict pass below (admit/evict churn).
-        while prefilling.len() < cfg.max_prefill_batch as usize
+        // the evict pass below (admit/evict churn). A crash/drain window
+        // suspends admission.
+        let can_admit = f.admitting(t, POOL_PREFILL);
+        while can_admit
+            && prefilling.len() < cfg.max_prefill_batch as usize
             && running.len() + prefilling.len() < cfg.max_batch as usize
         {
             let Some(cand) = queue.peek() else { break };
@@ -982,11 +1294,28 @@ fn run_chunked(
         rec.counter_sim("batch", t, (running.len() + prefilling.len()) as f64);
 
         if prefilling.is_empty() && running.is_empty() {
-            if next_arrival >= requests.len() {
+            // Idle: wake at the next arrival, retry re-dispatch, or — for
+            // a fault-blocked backlog — the end of the blocking window.
+            let mut wake = f64::INFINITY;
+            if next_arrival < requests.len() {
+                wake = wake.min(requests[next_arrival].arrival_s);
+            }
+            for &(at, _) in &retry_q {
+                wake = wake.min(at);
+            }
+            if !queue.is_empty() {
+                debug_assert!(
+                    !f.admitting(t, POOL_PREFILL),
+                    "waiting requests with an idle, healthy cluster"
+                );
+                wake = wake.min(f.next_admit_time(t, POOL_PREFILL));
+            }
+            if !wake.is_finite() {
                 break;
             }
-            state.stats.idle_s += requests[next_arrival].arrival_s - t;
-            t = requests[next_arrival].arrival_s;
+            debug_assert!(wake > t, "idle wake did not advance the clock");
+            state.stats.idle_s += wake - t;
+            t = wake;
             continue;
         }
 
@@ -1036,8 +1365,14 @@ fn run_chunked(
 
         // Build the iteration: every running sequence decodes one token;
         // the remaining budget advances prompts in admission order.
+        // Degraded mode caps the budget while any fault window is active
+        // (keep decode pace, slow prefill progress).
         let decode_b = running.len() as u64;
-        let mut budget = chunk_tokens.saturating_sub(decode_b);
+        let iter_budget = match f.recovery.degraded_chunk_tokens {
+            Some(d) if f.degraded(t, POOL_PREFILL) => chunk_tokens.min(d),
+            _ => chunk_tokens,
+        };
+        let mut budget = iter_budget.saturating_sub(decode_b);
         let mut chunk = 0u64;
         // (request, tokens) advanced this iteration — for the chunk trace
         // spans, which can only be emitted once the latency is known.
@@ -1066,7 +1401,7 @@ fn run_chunked(
         } else {
             0.0
         };
-        let dt = lat_p.max(lat_d);
+        let dt = lat_p.max(lat_d) * f.latency_mult(t, POOL_PREFILL);
         let t0 = t;
         t += dt;
         let kind = match (chunk > 0, decode_b > 0) {
@@ -1143,7 +1478,7 @@ fn run_chunked(
     }
 
     state.stats.makespan_s = t;
-    (state.metrics, state.stats)
+    state.into_results(&mut f)
 }
 
 // ---------------------------------------------------------------------------
@@ -1200,6 +1535,11 @@ fn run_disaggregated(
         .max(1);
 
     let rec: &Recorder = &sim.recorder;
+    let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
+    // Two pools: `prefill`/`decode` fault targets strike one of them,
+    // `all` (and every MTBF crash) strikes both.
+    let mut f = Faults::new(&spec, false);
+    let mut retry_q: Vec<(f64, usize)> = Vec::new();
     let mut state = RunState::new(cfg, requests, rec);
     // Prefill side. Preempted requests carry the decode-pool time they
     // became available again.
@@ -1217,21 +1557,30 @@ fn run_disaggregated(
     // queue (None: not blocked).
     let mut blocked_since: Option<f64> = None;
 
-    while state.completed < requests.len() {
+    while state.settled() < requests.len() {
         // Earliest time each pool could do useful work (INFINITY: never).
-        let raw_prefill_work = if !queue.is_empty() {
-            t_p
-        } else {
-            let arr = if next_arrival < requests.len() {
-                requests[next_arrival].arrival_s
+        // A pool blocked by a crash/drain window wakes when it rejoins.
+        let raw_prefill_work = {
+            let retry = retry_q.iter().map(|&(at, _)| at).fold(f64::INFINITY, f64::min);
+            let base = if !queue.is_empty() {
+                t_p
             } else {
-                f64::INFINITY
+                let arr = if next_arrival < requests.len() {
+                    requests[next_arrival].arrival_s
+                } else {
+                    f64::INFINITY
+                };
+                let res = resume_avail
+                    .iter()
+                    .map(|&(_, at)| at)
+                    .fold(f64::INFINITY, f64::min);
+                t_p.max(arr.min(res).min(retry))
             };
-            let res = resume_avail
-                .iter()
-                .map(|&(_, at)| at)
-                .fold(f64::INFINITY, f64::min);
-            t_p.max(arr.min(res))
+            if base.is_finite() && !f.admitting(base, POOL_PREFILL) {
+                f.next_admit_time(base, POOL_PREFILL)
+            } else {
+                base
+            }
         };
         // Backpressure: a full handoff queue blocks the prefill pool until
         // the decode pool drains a slot. (The queue holds work for the
@@ -1249,10 +1598,15 @@ fn run_disaggregated(
             t_d
         } else {
             let ready = handoff.iter().map(|h| h.ready_at).fold(f64::INFINITY, f64::min);
-            t_d.max(ready)
+            let base = t_d.max(ready);
+            if base.is_finite() && !f.admitting(base, POOL_DECODE) {
+                f.next_admit_time(base, POOL_DECODE)
+            } else {
+                base
+            }
         };
         if !next_prefill_work.is_finite() && !next_decode_work.is_finite() {
-            debug_assert!(state.completed == requests.len(), "stalled with work remaining");
+            debug_assert!(state.settled() == requests.len(), "stalled with work remaining");
             break;
         }
 
@@ -1260,7 +1614,16 @@ fn run_disaggregated(
             // ---- Prefill-pool step ----
             t_p = next_prefill_work;
             while next_arrival < requests.len() && requests[next_arrival].arrival_s <= t_p {
-                queue.arrive(next_arrival, requests);
+                let over = f
+                    .recovery
+                    .shed_queue_depth
+                    .map(|d| queue.len() as u64 >= d)
+                    .unwrap_or(false);
+                if over {
+                    state.shed_request(next_arrival, requests[next_arrival].arrival_s);
+                } else {
+                    queue.arrive(next_arrival, requests);
+                }
                 next_arrival += 1;
             }
             let mut k = 0;
@@ -1271,6 +1634,17 @@ fn run_disaggregated(
                 } else {
                     k += 1;
                 }
+            }
+            drain_retries(&mut retry_q, t_p, &mut queue);
+            if let Some(timeout) = f.recovery.request_timeout_s {
+                for idx in queue.drop_timed_out(t_p, timeout, requests) {
+                    state.lose_to_timeout(idx, t_p);
+                }
+            }
+            if queue.is_empty() {
+                // Everything this wake-up materialized was shed or timed
+                // out — nothing to admit, re-evaluate the next event.
+                continue;
             }
             // Admit a prefill batch under the prefill-pool KV budget (the
             // pool holds a batch's context KV only for the duration of
@@ -1300,7 +1674,7 @@ fn run_disaggregated(
             let batch = admitted.len() as u64;
             let max_ctx = admitted.iter().map(|&i| state.prefill_target(i)).max().unwrap();
             let t_p0 = t_p;
-            let dt = oracle_p.prefill(batch, max_ctx);
+            let dt = oracle_p.prefill(batch, max_ctx) * f.latency_mult(t_p0, POOL_PREFILL);
             t_p += dt;
             state.stats.prefill_iterations += 1;
             state.stats.prefill_busy_s += dt;
@@ -1322,8 +1696,11 @@ fn run_disaggregated(
                         // KV handoff: LogGP peer-to-peer of the context KV
                         // over one interconnect link, plus the base.
                         let bytes = ctx * kv_bytes_per_token;
-                        let xfer = transfer_base_s
-                            + crate::perf::comm::peer_to_peer(&sys.interconnect, bytes).latency_s;
+                        // Link degradation stretches the whole transfer
+                        // (base + modeled fabric time).
+                        let xfer = (transfer_base_s
+                            + crate::perf::comm::peer_to_peer(&sys.interconnect, bytes).latency_s)
+                            * f.link_mult(t_p);
                         state.stats.transfer_total_s += xfer;
                         let serial = state.next_serial();
                         if rec.is_enabled() {
@@ -1349,10 +1726,61 @@ fn run_disaggregated(
                 state.stats.idle_s += next_decode_work - t_d;
                 t_d = next_decode_work;
             }
-            // Admit transfer-complete requests in ready order.
+            // Crashes strike the decode pool at its iteration boundary:
+            // running sequences and handoffs that were in flight before
+            // the pool rejoined lose their KV and go back through the
+            // prefill pool as retries.
+            let mut crashed = false;
+            while let Some((tc, rec_end)) = f.pending_crash(t_d, POOL_DECODE) {
+                if rec.is_enabled() {
+                    rec.instant_sim("faults", "crash", tc, &[]);
+                    rec.span_sim("faults", "downtime", tc, rec_end, &[]);
+                }
+                for r in running.drain(..) {
+                    state.crash_request(
+                        r.idx,
+                        r.kv_tokens,
+                        tc,
+                        rec_end,
+                        &f.recovery,
+                        &mut retry_q,
+                    );
+                }
+                let mut k = 0;
+                while k < handoff.len() {
+                    if handoff[k].ready_at < rec_end {
+                        let h = handoff.remove(k);
+                        let kv = state.prefill_target(h.idx);
+                        state.crash_request(h.idx, kv, tc, rec_end, &f.recovery, &mut retry_q);
+                    } else {
+                        k += 1;
+                    }
+                }
+                kv_d = 0;
+                state.stats.idle_s += (rec_end - t_d).max(0.0);
+                t_d = t_d.max(rec_end);
+                crashed = true;
+            }
+            if crashed {
+                // The drained handoff queue may release a stalled
+                // prefill pool.
+                if (handoff.len() as u64) < handoff_cap {
+                    if let Some(since) = blocked_since.take() {
+                        state.stats.handoff_stall_s += (t_d - since).max(0.0);
+                        if rec.is_enabled() && t_d > since {
+                            rec.span_sim("prefill pool", "handoff_stall", since, t_d, &[]);
+                        }
+                        t_p = t_p.max(t_d);
+                    }
+                }
+                continue;
+            }
+            // Admit transfer-complete requests in ready order. A drain
+            // window suspends admission (in-flight decodes continue).
+            let can_admit = f.admitting(t_d, POOL_DECODE);
             let mut k = 0;
             while k < handoff.len() {
-                if running.len() >= cfg.max_batch as usize {
+                if !can_admit || running.len() >= cfg.max_batch as usize {
                     break;
                 }
                 if handoff[k].ready_at > t_d {
@@ -1411,7 +1839,7 @@ fn run_disaggregated(
             let batch = running.len() as u64;
             let mean_kv = running.iter().map(|r| r.kv_tokens).sum::<u64>() / batch;
             let t_d0 = t_d;
-            let dt = oracle_d.decode(batch, mean_kv);
+            let dt = oracle_d.decode(batch, mean_kv) * f.latency_mult(t_d0, POOL_DECODE);
             t_d += dt;
             state.stats.decode_iterations += 1;
             state.stats.decode_busy_s += dt;
@@ -1448,7 +1876,7 @@ fn run_disaggregated(
     }
 
     state.stats.makespan_s = last_finish;
-    (state.metrics, state.stats)
+    state.into_results(&mut f)
 }
 
 #[cfg(test)]
@@ -1782,5 +2210,259 @@ mod tests {
         assert!(ds.transfer_total_s >= base);
         // Same tokens produced either way.
         assert_eq!(mm[0].output_tokens, dm[0].output_tokens);
+    }
+
+    // ---------------- fault injection ----------------
+
+    use crate::serve::fault::{FaultEvent, FaultKind, FaultTarget};
+
+    fn all_modes() -> [ServeMode; 3] {
+        [
+            ServeMode::Monolithic,
+            ServeMode::Chunked { chunk_tokens: 512 },
+            ServeMode::Disaggregated { prefill_devices: 1, transfer_base_s: 0.002 },
+        ]
+    }
+
+    fn event(kind: FaultKind, at_s: f64, duration_s: f64) -> FaultEvent {
+        FaultEvent { kind, at_s, duration_s, target: FaultTarget::All }
+    }
+
+    #[test]
+    fn zero_fault_spec_matches_no_spec_baseline_in_all_modes() {
+        let sim = Simulator::new();
+        let sys = presets::system("a100x2").unwrap();
+        let model = ModelConfig::gpt_small();
+        for mode in all_modes() {
+            let mut base = cfg_for(&sys, &model, Policy::Fcfs);
+            base.mode = mode;
+            let mut zero = base.clone();
+            zero.faults = Some(FaultSpec::none());
+            let reqs = generate(&WorkloadSpec::poisson(15.0, 60, 11));
+            let (am, astats) = simulate(&sim, &sys, &model, &base, &reqs);
+            let (bm, bstats) = simulate(&sim, &sys, &model, &zero, &reqs);
+            assert_eq!(
+                astats.to_json().to_string_pretty(),
+                bstats.to_json().to_string_pretty(),
+                "zero-fault stats diverged in {mode:?}"
+            );
+            for (x, y) in am.iter().zip(&bm) {
+                assert_eq!(x.first_token_s.to_bits(), y.first_token_s.to_bits());
+                assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+                assert!(!y.faulted);
+            }
+            assert_eq!(bstats.availability, 1.0);
+            assert_eq!(bstats.faults_injected, 0);
+        }
+    }
+
+    #[test]
+    fn crash_without_retry_loses_inflight_requests() {
+        let (sim, sys, model) = small_setup();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        cfg.max_batch = 8;
+        let mut spec = FaultSpec::none();
+        spec.events.push(event(FaultKind::Crash, 0.05, 2.0));
+        spec.recovery.max_retries = 0;
+        cfg.faults = Some(spec);
+        // Everything in flight at t=0.05 with long decodes: the crash hits.
+        let reqs: Vec<Request> = (0..8u64)
+            .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 64, output_tokens: 400 })
+            .collect();
+        let (metrics, stats) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert!(stats.requests_lost > 0, "crash at t=0.05 lost nothing");
+        assert_eq!(stats.requests_retried, 0);
+        assert_eq!(
+            metrics.len() as u64 + stats.requests_lost + stats.requests_shed,
+            reqs.len() as u64,
+            "accounting does not conserve"
+        );
+        assert!(stats.availability < 1.0, "downtime not reflected in availability");
+        assert!(stats.fault_downtime_s > 0.0);
+        assert_eq!(stats.faults_injected, 1);
+        // Survivors (late retries disabled ⇒ only never-admitted ones) finish.
+        assert!(metrics.iter().all(|m| m.finish_s.is_finite()));
+    }
+
+    #[test]
+    fn crash_with_retry_recomputes_and_completes_everything() {
+        let (sim, sys, model) = small_setup();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        cfg.max_batch = 8;
+        let mut spec = FaultSpec::none();
+        spec.events.push(event(FaultKind::Crash, 0.05, 0.5));
+        spec.recovery.max_retries = 3;
+        spec.recovery.retry_backoff_s = 0.1;
+        cfg.faults = Some(spec);
+        let reqs: Vec<Request> = (0..8u64)
+            .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 64, output_tokens: 64 })
+            .collect();
+        let (metrics, stats) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert_eq!(metrics.len(), reqs.len(), "retries should recover every request");
+        assert_eq!(stats.requests_lost, 0);
+        assert!(stats.requests_retried > 0, "no request was retried");
+        assert!(stats.retry_tokens_recomputed > 0, "retried prefills recompute KV");
+        assert!(metrics.iter().any(|m| m.faulted), "retried requests are fault-marked");
+        assert!(metrics.iter().all(|m| m.finish_s.is_finite()));
+        let tokens: u64 = metrics.iter().map(|m| m.output_tokens).sum();
+        assert_eq!(tokens, 8 * 64, "token output not conserved across retries");
+    }
+
+    #[test]
+    fn drain_pauses_admission_but_loses_nothing() {
+        let (sim, sys, model) = small_setup();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        let mut spec = FaultSpec::none();
+        spec.events.push(event(FaultKind::Drain, 0.0, 1.0));
+        cfg.faults = Some(spec);
+        let reqs = generate(&WorkloadSpec::poisson(30.0, 24, 7));
+        let (metrics, stats) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert_eq!(metrics.len(), reqs.len());
+        assert_eq!(stats.requests_lost, 0);
+        assert_eq!(stats.requests_retried, 0);
+        // Nothing admits inside [0, 1): every first token lands after rejoin.
+        assert!(metrics.iter().all(|m| m.first_token_s >= 1.0));
+        assert!(stats.availability < 1.0);
+        // Baseline without the drain starts strictly earlier.
+        cfg.faults = None;
+        let (base, _) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert!(base.iter().any(|m| m.first_token_s < 1.0));
+    }
+
+    #[test]
+    fn slowdown_window_stretches_the_makespan() {
+        let (sim, sys, model) = small_setup();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        // Everything at t=0 so the makespan is service-dominated (an
+        // arrival-limited trace would hide the slowdown in idle time).
+        let reqs: Vec<Request> = (0..16u64)
+            .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 256, output_tokens: 64 })
+            .collect();
+        let (_, base) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        let mut spec = FaultSpec::none();
+        spec.events
+            .push(event(FaultKind::Slowdown { multiplier: 4.0 }, 0.0, 1e9));
+        cfg.faults = Some(spec);
+        let (metrics, slow) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert_eq!(metrics.len(), reqs.len());
+        assert!(
+            slow.makespan_s > base.makespan_s * 1.5,
+            "4x slowdown barely moved makespan: {} vs {}",
+            slow.makespan_s,
+            base.makespan_s
+        );
+        // A slowdown is degradation, not downtime.
+        assert_eq!(slow.availability, 1.0);
+    }
+
+    #[test]
+    fn link_degradation_inflates_disagg_transfer_time() {
+        let sim = Simulator::new();
+        let sys = presets::system("a100x2").unwrap();
+        let model = ModelConfig::gpt_small();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        cfg.mode = ServeMode::Disaggregated { prefill_devices: 1, transfer_base_s: 0.002 };
+        let reqs = generate(&WorkloadSpec::poisson(30.0, 32, 5));
+        let (_, base) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        let mut spec = FaultSpec::none();
+        spec.events
+            .push(event(FaultKind::LinkDegrade { factor: 8.0 }, 0.0, 1e9));
+        cfg.faults = Some(spec);
+        let (metrics, degraded) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert_eq!(metrics.len(), reqs.len());
+        assert!(
+            degraded.transfer_total_s > base.transfer_total_s * 4.0,
+            "8x link cut should multiply transfer time: {} vs {}",
+            degraded.transfer_total_s,
+            base.transfer_total_s
+        );
+    }
+
+    #[test]
+    fn shedding_and_timeouts_bound_the_queue() {
+        let (sim, sys, model) = small_setup();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        cfg.max_batch = 2;
+        cfg.max_prefill_batch = 1;
+        let mut spec = FaultSpec::none();
+        // Long drain builds a backlog; a tiny shed threshold rejects the
+        // overflow at arrival, and a timeout reaps stale waiters.
+        spec.events.push(event(FaultKind::Drain, 0.0, 5.0));
+        spec.recovery.shed_queue_depth = Some(4);
+        spec.recovery.request_timeout_s = Some(2.0);
+        cfg.faults = Some(spec);
+        let reqs: Vec<Request> = (0..30u64)
+            .map(|i| Request {
+                id: i,
+                arrival_s: i as f64 * 0.01,
+                prompt_tokens: 64,
+                output_tokens: 16,
+            })
+            .collect();
+        let (metrics, stats) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert!(stats.requests_shed > 0, "queue depth 4 under 30 arrivals never shed");
+        assert!(stats.requests_lost > 0, "2s timeout under a 5s drain never fired");
+        assert_eq!(
+            metrics.len() as u64 + stats.requests_lost + stats.requests_shed,
+            reqs.len() as u64
+        );
+    }
+
+    #[test]
+    fn mtbf_fault_runs_are_byte_identical_across_replays() {
+        let sim = Simulator::new();
+        let sys = presets::system("a100x2").unwrap();
+        let model = ModelConfig::gpt_small();
+        for mode in all_modes() {
+            let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+            cfg.mode = mode;
+            // Aggressive MTBF so the run is statistically certain to be
+            // struck several times within its few-second makespan.
+            let mut spec = FaultSpec::mtbf(33, 0.5, 0.2);
+            spec.recovery.max_retries = 2;
+            cfg.faults = Some(spec);
+            let reqs = generate(&WorkloadSpec::poisson(15.0, 60, 13));
+            let (am, astats) = simulate(&sim, &sys, &model, &cfg, &reqs);
+            let (bm, bstats) = simulate(&sim, &sys, &model, &cfg, &reqs);
+            assert_eq!(
+                astats.to_json().to_string_pretty(),
+                bstats.to_json().to_string_pretty(),
+                "MTBF replay diverged in {mode:?}"
+            );
+            assert_eq!(am.len(), bm.len());
+            for (x, y) in am.iter().zip(&bm) {
+                assert_eq!(x.first_token_s.to_bits(), y.first_token_s.to_bits());
+                assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+                assert_eq!(x.faulted, y.faulted);
+            }
+            assert!(astats.faults_injected > 0, "4s MTBF over a long run never struck");
+            assert_eq!(
+                am.len() as u64 + astats.requests_lost + astats.requests_shed,
+                reqs.len() as u64
+            );
+        }
+    }
+
+    #[test]
+    fn degraded_chunk_budget_shrinks_chunked_iterations() {
+        let (sim, sys, model) = small_setup();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        cfg.mode = ServeMode::Chunked { chunk_tokens: 512 };
+        let reqs: Vec<Request> = (0..8u64)
+            .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 1024, output_tokens: 8 })
+            .collect();
+        let (_, base) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        let mut spec = FaultSpec::none();
+        spec.events
+            .push(event(FaultKind::Slowdown { multiplier: 1.0 }, 0.0, 1e9));
+        spec.recovery.degraded_chunk_tokens = Some(64);
+        cfg.faults = Some(spec);
+        let (metrics, deg) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert_eq!(metrics.len(), reqs.len());
+        assert!(
+            deg.prefill_iterations + deg.mixed_iterations
+                > base.prefill_iterations + base.mixed_iterations,
+            "64-token degraded chunks should take more iterations"
+        );
     }
 }

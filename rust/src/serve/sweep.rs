@@ -13,6 +13,7 @@
 //! system isolates the scheduler's contribution: monolithic vs. chunked
 //! prefill vs. disaggregated pools on identical hardware and traffic.
 
+use super::fault::{FaultSpec, DEFAULT_MTTR_S};
 use super::metrics::{Slo, Summary};
 use super::scheduler::{Policy, Preemption, SchedulerConfig, ServeMode};
 use super::workload::{generate, WorkloadSpec};
@@ -53,6 +54,14 @@ pub struct SweepConfig {
     pub slo: Slo,
     pub policy: Policy,
     pub seed: u64,
+    /// SLO-under-fault axis: MTBF values (hours) to sweep in addition to
+    /// the implicit fault-free point. Each value serves every (system,
+    /// mode, rate) point under a seeded MTBF crash process, answering
+    /// "goodput and $/1M-token at the SLO given an MTBF of X hours".
+    /// Empty: fault-free sweep only.
+    pub fault_mtbf_hours: Vec<f64>,
+    /// Downtime per MTBF-generated crash, seconds.
+    pub fault_mttr_s: f64,
 }
 
 impl SweepConfig {
@@ -74,6 +83,8 @@ impl SweepConfig {
             slo,
             policy: Policy::Fcfs,
             seed: 42,
+            fault_mtbf_hours: Vec::new(),
+            fault_mttr_s: DEFAULT_MTTR_S,
         }
     }
 
@@ -94,11 +105,13 @@ impl SweepConfig {
             slo,
             policy: Policy::Fcfs,
             seed: 42,
+            fault_mtbf_hours: Vec::new(),
+            fault_mttr_s: DEFAULT_MTTR_S,
         }
     }
 }
 
-/// One (system, mode, rate) sweep point.
+/// One (system, mode, rate, MTBF) sweep point.
 #[derive(Debug, Clone)]
 pub struct SweepRow {
     pub system: String,
@@ -112,6 +125,14 @@ pub struct SweepRow {
     /// $ per million output tokens at the SLO (hardware amortized over
     /// [`AMORT_SECONDS`]); infinite when nothing met the SLO.
     pub usd_per_mtok: f64,
+    /// MTBF of this point's crash process, hours; `None` for the
+    /// fault-free point.
+    pub mtbf_hours: Option<f64>,
+    /// Fraction of the makespan with every pool up (1.0 fault-free).
+    pub availability: f64,
+    /// Requests dropped for good at this point (crashes past the retry
+    /// budget + queue timeouts).
+    pub requests_lost: u64,
 }
 
 /// Run the sweep for one model across all (system, mode, rate) points. The
@@ -142,44 +163,67 @@ pub fn run_sweep(
                     model.name
                 ));
             }
+            // The fault axis: the implicit fault-free point, then one
+            // seeded MTBF crash process per requested value.
+            let mut fault_points: Vec<Option<f64>> = vec![None];
+            fault_points.extend(cfg.fault_mtbf_hours.iter().map(|&h| Some(h)));
             for &rate in &cfg.rates {
                 // Same seed across systems, modes, and rates: identical
                 // request lengths, only the arrival spacing scales.
                 let requests = generate(&WorkloadSpec::poisson(rate, cfg.requests, cfg.seed));
-                super::scheduler::validate(&sched, sys.device_count, &requests)?;
-                let (report, _) =
-                    super::serve_once(sim, &sys, model, &sched, &requests, &cfg.slo);
-                let usd_per_mtok =
-                    usd_per_mtok_at_slo(cluster_cost_usd, report.summary.goodput_tok_s);
-                rows.push(SweepRow {
-                    system: name.clone(),
-                    mode: resolved.name(),
-                    rate_per_s: rate,
-                    cluster_cost_usd,
-                    summary: report.summary,
-                    preemptions: report.stats.preemptions,
-                    usd_per_mtok,
-                });
+                for &mtbf_hours in &fault_points {
+                    sched.faults = match mtbf_hours {
+                        None => None,
+                        Some(h) => {
+                            if !(h > 0.0) || !h.is_finite() {
+                                return Err(format!(
+                                    "sweep fault MTBF must be finite and > 0 hours, got {h}"
+                                ));
+                            }
+                            Some(FaultSpec::mtbf(cfg.seed, h * 3600.0, cfg.fault_mttr_s))
+                        }
+                    };
+                    super::scheduler::validate(&sched, sys.device_count, &requests)?;
+                    let (report, _) =
+                        super::serve_once(sim, &sys, model, &sched, &requests, &cfg.slo);
+                    let usd_per_mtok =
+                        usd_per_mtok_at_slo(cluster_cost_usd, report.summary.goodput_tok_s);
+                    rows.push(SweepRow {
+                        system: name.clone(),
+                        mode: resolved.name(),
+                        rate_per_s: rate,
+                        cluster_cost_usd,
+                        summary: report.summary,
+                        preemptions: report.stats.preemptions,
+                        usd_per_mtok,
+                        mtbf_hours,
+                        availability: report.stats.availability,
+                        requests_lost: report.stats.requests_lost,
+                    });
+                }
             }
         }
     }
     Ok(rows)
 }
 
-/// Best (cheapest $/1M-tokens-at-SLO) row per (system, mode), preserving
-/// the sweep's system/mode order.
+/// Best (cheapest $/1M-tokens-at-SLO) row per (system, mode, MTBF point),
+/// preserving the sweep's order. Fault-free and each MTBF value group
+/// separately, so the under-fault economics never hide behind the
+/// best-case row.
 pub fn best_per_system(rows: &[SweepRow]) -> Vec<&SweepRow> {
-    let mut order: Vec<(&str, &str)> = Vec::new();
+    let key = |r: &SweepRow| (r.system.clone(), r.mode, r.mtbf_hours.map(f64::to_bits));
+    let mut order: Vec<(String, &str, Option<u64>)> = Vec::new();
     for r in rows {
-        if !order.contains(&(r.system.as_str(), r.mode)) {
-            order.push((r.system.as_str(), r.mode));
+        if !order.contains(&key(r)) {
+            order.push(key(r));
         }
     }
     order
         .into_iter()
-        .map(|(name, mode)| {
+        .map(|k| {
             rows.iter()
-                .filter(|r| r.system == name && r.mode == mode)
+                .filter(|r| key(r) == k)
                 .min_by(|a, b| a.usd_per_mtok.partial_cmp(&b.usd_per_mtok).unwrap())
                 .unwrap()
         })
@@ -200,6 +244,8 @@ mod tests {
             slo: Slo::relaxed(),
             policy: Policy::Fcfs,
             seed: 3,
+            fault_mtbf_hours: Vec::new(),
+            fault_mttr_s: DEFAULT_MTTR_S,
         }
     }
 
@@ -240,6 +286,39 @@ mod tests {
         single.systems = vec!["a100".into()];
         let rows = run_sweep(&sim, &ModelConfig::gpt_small(), &single).unwrap();
         assert_eq!(rows.len(), 2, "mono + chunked only");
+    }
+
+    #[test]
+    fn fault_axis_adds_mtbf_points_with_degraded_availability() {
+        let sim = Simulator::new();
+        let mut cfg = quick_cfg();
+        cfg.systems = vec!["ga100".into()];
+        cfg.rates = vec![40.0];
+        // Absurdly low MTBF (one crash every ~0.1s of simulated time) so
+        // the short smoke trace is statistically certain to be struck.
+        cfg.fault_mtbf_hours = vec![0.1 / 3600.0];
+        cfg.fault_mttr_s = 0.5;
+        let rows = run_sweep(&sim, &ModelConfig::gpt_small(), &cfg).unwrap();
+        assert_eq!(rows.len(), 2, "fault-free point + one MTBF point");
+        let free = &rows[0];
+        let faulty = &rows[1];
+        assert_eq!(free.mtbf_hours, None);
+        assert_eq!(free.availability, 1.0);
+        assert_eq!(free.requests_lost, 0);
+        assert!(faulty.mtbf_hours.is_some());
+        assert!(faulty.availability < 1.0, "0.1s MTBF never degraded availability");
+        // Under faults the same hardware serves fewer good tokens, so the
+        // $/1M-token at SLO can only get worse (or stay equal).
+        assert!(faulty.usd_per_mtok >= free.usd_per_mtok);
+        // Both points group separately in the best-per-system view.
+        assert_eq!(best_per_system(&rows).len(), 2);
+        // Determinism: the same sweep reproduces byte-identical numbers.
+        let again = run_sweep(&sim, &ModelConfig::gpt_small(), &cfg).unwrap();
+        assert_eq!(rows[1].availability.to_bits(), again[1].availability.to_bits());
+        assert_eq!(
+            rows[1].summary.goodput_tok_s.to_bits(),
+            again[1].summary.goodput_tok_s.to_bits()
+        );
     }
 
     #[test]

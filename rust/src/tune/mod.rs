@@ -838,6 +838,10 @@ impl TuneCache {
                 Some((key, point)) if version_ok => {
                     self.entries.entry(key).or_insert(point);
                 }
+                // Deduplicate: persist() re-absorbs the on-disk file to
+                // merge concurrent writers, and without this check every
+                // persist would append another copy of each foreign row.
+                _ if self.foreign.contains(item) => {}
                 _ => self.foreign.push(item.clone()),
             }
         }
@@ -1418,6 +1422,36 @@ mod tests {
         // Corrupt files load as empty instead of failing.
         std::fs::write(&path, "{ not json").unwrap();
         assert_eq!(TuneCache::load(Some(path.clone())).len(), 0);
+        // Outright garbage bytes (not even UTF-8 structure) also load as
+        // empty — and persisting over the wreckage replaces it with a
+        // valid cache file instead of panicking or appending to it.
+        std::fs::write(&path, [0xffu8, 0x00, 0x9c, 0x7b, 0x22, 0xfe, 0x01]).unwrap();
+        let mut over = TuneCache::load(Some(path.clone()));
+        assert_eq!(over.len(), 0);
+        over.insert(3, 4, &point);
+        over.persist().unwrap();
+        let healed = TuneCache::load(Some(path.clone()));
+        assert_eq!(healed.len(), 1);
+        assert_eq!(healed.get(3, 4), Some(&point));
+        // A version-mismatched file contributes no entries to this
+        // process, but its rows ride along verbatim through persist so a
+        // newer toolchain's cache is never destroyed by an older one.
+        let foreign_text = format!(
+            "{{\"version\": 999, \"entries\": [{}]}}",
+            "{\"design\": \"00000000000000aa\", \"scenario\": \"00000000000000bb\", \
+             \"point\": {\"future\": true}}"
+        );
+        std::fs::write(&path, foreign_text).unwrap();
+        let mut mixed = TuneCache::load(Some(path.clone()));
+        assert_eq!(mixed.len(), 0, "foreign-version entries must not be trusted");
+        mixed.insert(7, 9, &point);
+        mixed.persist().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).expect("persisted cache is valid JSON again");
+        let entries = j.get("entries").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(entries.len(), 2, "ours plus the preserved foreign row");
+        assert!(text.contains("00000000000000aa"), "foreign row dropped on persist");
+        assert_eq!(TuneCache::load(Some(path.clone())).len(), 1);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -215,6 +215,13 @@ fn serving_reports_carry_scheduler_v2_counters() {
         "handoff_wait_s",
         "handoff_stall_s",
         "prefill_peak_kv_tokens",
+        "faults_injected",
+        "requests_lost",
+        "requests_retried",
+        "requests_shed",
+        "retry_tokens_recomputed",
+        "fault_downtime_s",
+        "availability",
     ] {
         assert!(stats.get(key).is_some(), "serving stats lost `{key}`");
     }
@@ -225,4 +232,7 @@ fn serving_reports_carry_scheduler_v2_counters() {
         .unwrap();
     assert!(summary.get("ttft_mean_s").is_some());
     assert!(summary.get("tpot_mean_s").is_some());
+    assert!(summary.get("faulted_requests").is_some());
+    assert!(summary.get("ttft_p99_faulted_s").is_some());
+    assert!(summary.get("tpot_p99_faulted_s").is_some());
 }

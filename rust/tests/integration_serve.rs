@@ -215,6 +215,60 @@ fn evict_sample_scenario_preempts_and_completes() {
     assert!(rep.stats.recompute_tokens > 0);
 }
 
+/// Faulty disaggregated sample: the decode-pool crash with a zero retry
+/// budget must lose in-flight requests for good, the link degradation
+/// must leave transfers visible, and the under-fault accounting must
+/// conserve every submitted request.
+#[test]
+fn faulty_disagg_sample_loses_requests_but_conserves_accounting() {
+    let rep = serve_scenario("a100x4-disagg-faulty");
+    let stats = &rep.stats;
+    assert_eq!(stats.faults_injected, 2, "both scheduled fault windows must open");
+    assert!(stats.requests_lost > 0, "decode crash with max_retries=0 must lose requests");
+    assert_eq!(stats.requests_retried, 0, "retry budget is zero");
+    assert!(stats.fault_downtime_s > 0.0);
+    assert!(
+        stats.availability < 1.0,
+        "availability {} must reflect the crash window",
+        stats.availability
+    );
+    assert!(stats.transfer_total_s > 0.0);
+    assert_eq!(
+        rep.summary.requests as u64 + stats.requests_lost + stats.requests_shed,
+        48,
+        "completed + lost + shed must equal the submitted trace"
+    );
+}
+
+/// Degraded bursty sample: the slowdown window is not an outage
+/// (availability stays 1.0) but admission shedding must refuse part of
+/// the thundering herd — refused, never dropped after admission.
+#[test]
+fn degraded_bursty_sample_sheds_but_never_loses() {
+    let rep = serve_scenario("a100-bursty-degraded");
+    let stats = &rep.stats;
+    assert_eq!(stats.faults_injected, 1);
+    assert!(stats.requests_shed > 0, "24-deep shed threshold must refuse part of the burst");
+    assert_eq!(stats.requests_lost, 0, "shedding refuses work; it never drops admitted work");
+    assert_eq!(stats.availability, 1.0, "a slowdown is degradation, not downtime");
+    assert_eq!(rep.summary.requests as u64 + stats.requests_shed, 96);
+    // The same traffic without faults completes everything — the shed
+    // counter is the only accounting difference.
+    let base = serve_scenario("a100-bursty");
+    assert_eq!(base.summary.requests, 96);
+    assert_eq!(base.stats.requests_shed, 0);
+}
+
+/// Fault replay determinism at the scenario level: evaluating the faulty
+/// sample twice (fresh simulator each time) must produce byte-identical
+/// report JSON — the fault RNG stream is part of the seeded state.
+#[test]
+fn faulty_scenario_replay_is_byte_identical() {
+    let a = serve_scenario("a100x4-disagg-faulty").to_json().to_string_pretty();
+    let b = serve_scenario("a100x4-disagg-faulty").to_json().to_string_pretty();
+    assert_eq!(a, b, "faulty scenario replay diverged");
+}
+
 /// Deterministic replay: two runs of the same seeded workload — through
 /// the work-stealing hybrid simulator, which exercises the shared worker
 /// pool — must produce byte-identical `ServeReport` JSON. Guards the
@@ -272,5 +326,7 @@ fn serve_experiment_runs_quick() {
     assert!(out.contains("throughput-oriented"));
     assert!(out.contains("scheduler-mode comparison"), "missing mode study:\n{out}");
     assert!(out.contains("disaggregated"), "mode study lacks disaggregated:\n{out}");
+    assert!(out.contains("SLO under fault"), "missing fault study:\n{out}");
+    assert!(out.contains("avail %"), "missing availability column:\n{out}");
     assert!(std::path::Path::new("reports/serve_sweep.csv").exists());
 }

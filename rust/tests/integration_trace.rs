@@ -132,6 +132,22 @@ fn disaggregated_trace_carries_lifecycle_pool_and_handoff_tracks() {
     }
 }
 
+/// The faulty disaggregated sample must surface its injected faults in
+/// the trace: scheduled windows as spans on the "faults" track, plus a
+/// crash-application instant and a downtime span when the crash lands.
+#[test]
+fn fault_windows_surface_on_their_own_trace_track() {
+    let sc = load("a100x4_disagg_faulty.json");
+    let (rec, rep) = traced_eval(&sc);
+    let stats = serving_stats(&rep);
+    assert!(stats.requests_lost > 0, "the faulty sample must actually lose requests");
+    let trace = rec.to_json();
+    assert!(count_named(&trace, "X", "link_degrade") > 0, "scheduled link_degrade span missing");
+    assert!(count_named(&trace, "X", "crash") > 0, "scheduled crash span missing");
+    assert!(count_named(&trace, "i", "crash") > 0, "crash-application instant missing");
+    assert!(count_named(&trace, "X", "downtime") > 0, "downtime span missing");
+}
+
 #[test]
 fn disabled_recorder_leaves_reports_and_traces_empty_of_events() {
     // The default evaluator carries the no-op recorder: same report,

@@ -6,7 +6,12 @@
 //!    and since the simulator runs traces to completion, *everything*
 //!    completes, preempted or not, with a sane timeline;
 //! 3. total generated tokens are conserved across
-//!    monolithic/chunked/disaggregated executions of the same trace.
+//!    monolithic/chunked/disaggregated executions of the same trace;
+//! 4. under any seeded random [`FaultSpec`], request accounting conserves
+//!    (`completed + lost + shed == submitted`), retry counters stay
+//!    bounded, and KV occupancy still respects capacity;
+//! 5. an inert (zero-fault) spec reproduces the no-spec `ServeReport`
+//!    byte-for-byte in every mode.
 //!
 //! One shared `Simulator` keeps mapper searches cached across trials, so
 //! hundreds of random schedules cost oracle-cache lookups, not searches.
@@ -15,7 +20,8 @@ use llmcompass::graph::inference::Simulator;
 use llmcompass::graph::ModelConfig;
 use llmcompass::hardware::presets;
 use llmcompass::serve::{
-    self, scheduler, Policy, Preemption, Request, SchedulerConfig, ServeMode,
+    self, scheduler, FaultEvent, FaultKind, FaultSpec, FaultTarget, Policy, Preemption,
+    RecoveryPolicy, Request, SchedulerConfig, ServeMode,
 };
 use llmcompass::util::quick::{forall, Gen};
 
@@ -69,6 +75,42 @@ fn gen_cfg(g: &mut Gen, sys_devices: u64, trace: &[Request]) -> SchedulerConfig 
         mode,
         preemption: *g.pick(&[Preemption::Conservative, Preemption::Evict]),
         handoff_capacity,
+        faults: None,
+    }
+}
+
+/// Random fault schedule: up to a handful of explicit events of every
+/// kind/target, an optional aggressive MTBF process, and a recovery
+/// policy with every pressure knob randomly armed. Durations and times
+/// are sized to the sub-2-second traces `gen_trace` produces so windows
+/// actually overlap live work.
+fn gen_fault_spec(g: &mut Gen) -> FaultSpec {
+    let n = g.usize(0, 4);
+    let events = (0..n)
+        .map(|_| FaultEvent {
+            kind: match g.u64(0, 3) {
+                0 => FaultKind::Crash,
+                1 => FaultKind::Drain,
+                2 => FaultKind::Slowdown { multiplier: g.f64(1.0, 6.0) },
+                _ => FaultKind::LinkDegrade { factor: g.f64(1.0, 8.0) },
+            },
+            at_s: g.f64(0.0, 1.5),
+            duration_s: g.f64(0.0, 1.0),
+            target: *g.pick(&[FaultTarget::All, FaultTarget::Prefill, FaultTarget::Decode]),
+        })
+        .collect();
+    FaultSpec {
+        seed: g.u64(0, 1 << 20),
+        events,
+        mtbf_s: if g.u64(0, 2) == 0 { Some(g.f64(0.2, 2.0)) } else { None },
+        mttr_s: g.f64(0.05, 0.5),
+        recovery: RecoveryPolicy {
+            max_retries: g.u64(0, 3),
+            retry_backoff_s: g.f64(0.0, 0.3),
+            request_timeout_s: if g.u64(0, 2) == 0 { Some(g.f64(0.5, 5.0)) } else { None },
+            shed_queue_depth: if g.u64(0, 2) == 0 { Some(g.u64(1, 12)) } else { None },
+            degraded_chunk_tokens: if g.u64(0, 2) == 0 { Some(g.u64(32, 256)) } else { None },
+        },
     }
 }
 
@@ -160,6 +202,7 @@ fn generated_tokens_conserved_across_modes_on_the_same_trace() {
                 mode,
                 preemption,
                 handoff_capacity: None,
+                faults: None,
             };
             let (metrics, stats) = scheduler::simulate(&sim, &sys, &model, &cfg, &trace);
             let summary =
@@ -169,5 +212,80 @@ fn generated_tokens_conserved_across_modes_on_the_same_trace() {
         .collect();
         let ok = totals.iter().all(|&t| t == expected);
         (format!("expected {expected}, per mode {totals:?}"), ok)
+    });
+}
+
+#[test]
+fn fault_accounting_conserves_requests_under_any_spec() {
+    let sim = Simulator::new();
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    forall("completed + lost + shed == submitted", 40, |g| {
+        let trace = gen_trace(g, 24);
+        let mut cfg = gen_cfg(g, sys.device_count, &trace);
+        cfg.faults = Some(gen_fault_spec(g));
+        let (pre_cap, dec_cap) = cfg.pool_budgets(sys.device_count);
+        let (metrics, stats) = scheduler::simulate(&sim, &sys, &model, &cfg, &trace);
+        let submitted = trace.len() as u64;
+        let conserved =
+            metrics.len() as u64 + stats.requests_lost + stats.requests_shed == submitted;
+        // Survivors have sane timelines; crash victims and shed arrivals
+        // are filtered out of the returned metrics entirely.
+        let survivors_sane = metrics.iter().all(|m| {
+            m.first_token_s.is_finite()
+                && m.finish_s >= m.first_token_s
+                && m.first_token_s > m.arrival_s
+        });
+        let counters_bounded = stats.requests_retried <= submitted
+            && stats.requests_lost <= submitted
+            && stats.requests_shed <= submitted
+            && (stats.requests_retried > 0 || stats.retry_tokens_recomputed == 0)
+            && stats.fault_downtime_s <= stats.makespan_s + 1e-9
+            && (0.0..=1.0).contains(&stats.availability);
+        let kv_ok = stats.peak_kv_tokens <= dec_cap && stats.prefill_peak_kv_tokens <= pre_cap;
+        (
+            format!(
+                "mode {:?}: {} completed + {} lost + {} shed of {submitted}, retried {}, \
+                 availability {:.4}, kv {}/{} (≤ {}/{})",
+                cfg.mode,
+                metrics.len(),
+                stats.requests_lost,
+                stats.requests_shed,
+                stats.requests_retried,
+                stats.availability,
+                stats.prefill_peak_kv_tokens,
+                stats.peak_kv_tokens,
+                pre_cap,
+                dec_cap
+            ),
+            conserved && survivors_sane && counters_bounded && kv_ok,
+        )
+    });
+}
+
+#[test]
+fn inert_fault_spec_reproduces_the_no_spec_report_byte_for_byte() {
+    let sim = Simulator::new();
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    forall("zero-fault spec ⇒ byte-identical report", 15, |g| {
+        let trace = gen_trace(g, 16);
+        let cfg = gen_cfg(g, sys.device_count, &trace);
+        let mut faulted = cfg.clone();
+        faulted.faults = Some(FaultSpec::none());
+        let slo = serve::Slo::relaxed();
+        let (base, _) = serve::serve_once(&sim, &sys, &model, &cfg, &trace, &slo);
+        let (inert, _) = serve::serve_once(&sim, &sys, &model, &faulted, &trace, &slo);
+        let (a, b) =
+            (base.to_json().to_string_pretty(), inert.to_json().to_string_pretty());
+        (
+            format!(
+                "mode {:?}: no-spec report {} inert-spec report ({} bytes)",
+                cfg.mode,
+                if a == b { "==" } else { "!=" },
+                a.len()
+            ),
+            a == b && inert.stats.faults_injected == 0 && inert.stats.availability == 1.0,
+        )
     });
 }
