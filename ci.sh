@@ -118,6 +118,53 @@ else
         || { echo "fault smoke shows no downtime" >&2; exit 1; }
 fi
 
+# Fleet smoke through the real CLI: four data-parallel replicas behind
+# the least-KV-pressure balancer under bursty traffic, with replica 1
+# crashing mid-trace and staying down. The run must complete with
+# conserved accounting (completed + lost + shed == submitted),
+# availability strictly below 1.0, and the key=value stats line (plus
+# the per-replica lines) still parseable.
+echo "== llmcompass serve --replicas 4 --balancer least_kv_pressure (replica crash) =="
+cat > /tmp/llmcompass_fleet_faults.json <<'EOF'
+{
+  "seed": 11,
+  "events": [
+    {"kind": "crash", "at_s": 0.3, "duration_s": 30.0, "target": "replica:1"}
+  ],
+  "recovery": {"max_retries": 2, "retry_backoff_s": 0.05}
+}
+EOF
+target/release/llmcompass serve --hardware a100 --model gpt-small \
+    --requests 64 --rate 30 --arrival bursty --burst-mult 6 --seed 42 \
+    --replicas 4 --balancer least_kv_pressure \
+    --fault-spec /tmp/llmcompass_fleet_faults.json | tee /tmp/llmcompass_fleet_smoke.txt
+if command -v python3 > /dev/null 2>&1; then
+    python3 -c '
+import re
+out = open("/tmp/llmcompass_fleet_smoke.txt").read()
+faults = re.search(r"faults: injected=(\d+) lost=(\d+) retried=(\d+) shed=(\d+) "
+                   r"retry_tokens_recomputed=(\d+) downtime_s=([\d.]+) "
+                   r"availability=([\d.]+)", out)
+assert faults, "no parseable faults line in fleet serve output"
+lost, retried, shed = (int(faults.group(i)) for i in (2, 3, 4))
+availability = float(faults.group(7))
+completed = int(re.search(r"^requests (\d+) \|", out, re.M).group(1))
+replicas = re.findall(r"^replica (\d+):", out, re.M)
+assert replicas == ["0", "1", "2", "3"], f"expected 4 replica lines, got {replicas}"
+assert availability < 1.0, f"availability {availability} must reflect the replica outage"
+assert completed + lost + shed == 64, \
+    f"fleet accounting leak: {completed} completed + {lost} lost + {shed} shed != 64"
+print(f"fleet smoke OK: {completed} completed, {lost} lost, {shed} shed, "
+      f"{retried} retried, availability {availability}")
+'
+else
+    # No python3: at least require 4 replica lines and sub-1.0 availability.
+    [[ "$(grep -cE '^replica [0-9]+:' /tmp/llmcompass_fleet_smoke.txt)" == "4" ]] \
+        || { echo "fleet smoke missing per-replica lines" >&2; exit 1; }
+    grep -Eq "availability=0\." /tmp/llmcompass_fleet_smoke.txt \
+        || { echo "fleet smoke shows no downtime" >&2; exit 1; }
+fi
+
 # The shipped faulty samples run through the suite smoke above; run the
 # serving/property fault suites explicitly so a filtered `cargo test`
 # invocation can never skip them.

@@ -59,6 +59,8 @@ pub fn traffic_requests(t: &TrafficSpec) -> Result<Vec<serve::Request>, String> 
             mean_phase_requests: 50.0,
         };
     }
+    spec.diurnal = t.diurnal;
+    spec.flash_crowd = t.flash_crowd;
     Ok(serve::workload::generate(&spec))
 }
 
@@ -67,8 +69,13 @@ pub fn traffic_requests(t: &TrafficSpec) -> Result<Vec<serve::Request>, String> 
 pub struct ServingReport {
     pub summary: serve::Summary,
     pub stats: serve::RunStats,
+    /// Per-replica scheduler stats when the scenario ran a fleet
+    /// (`replicas > 1`); empty — and omitted from the JSON — on the
+    /// legacy single-engine path.
+    pub replica_stats: Vec<serve::RunStats>,
     pub kv_capacity_tokens: u64,
-    /// Die + memory cost of the whole cluster.
+    /// Die + memory cost of the whole cluster — all replicas, when the
+    /// scenario runs a fleet.
     pub cluster_cost_usd: f64,
     /// $ per million output tokens at the SLO (hardware amortized over
     /// [`serve::sweep::AMORT_SECONDS`]); infinite when nothing met it.
@@ -185,13 +192,22 @@ impl EvalResult {
             }
             EvalResult::Area(b) => b.to_json(),
             EvalResult::Cost(c) => c.to_json(),
-            EvalResult::Serving(r) => obj(vec![
-                ("kv_capacity_tokens", num(r.kv_capacity_tokens as f64)),
-                ("cluster_cost_usd", num(r.cluster_cost_usd)),
-                ("usd_per_mtok", num(r.usd_per_mtok)),
-                ("summary", r.summary.to_json()),
-                ("stats", r.stats.to_json()),
-            ]),
+            EvalResult::Serving(r) => {
+                let mut fields = vec![
+                    ("kv_capacity_tokens", num(r.kv_capacity_tokens as f64)),
+                    ("cluster_cost_usd", num(r.cluster_cost_usd)),
+                    ("usd_per_mtok", num(r.usd_per_mtok)),
+                    ("summary", r.summary.to_json()),
+                    ("stats", r.stats.to_json()),
+                ];
+                if !r.replica_stats.is_empty() {
+                    fields.push((
+                        "replicas",
+                        Json::Arr(r.replica_stats.iter().map(|st| st.to_json()).collect()),
+                    ));
+                }
+                obj(fields)
+            }
         }
     }
 }
@@ -602,16 +618,21 @@ impl Evaluator {
         let cfg = scheduler_config_for(system, &model, t)
             .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
         let requests = traffic_requests(t)?;
-        serve::scheduler::validate(&cfg, system.device_count, &requests)
+        let fleet = serve::FleetConfig { replicas: t.replicas, balancer: t.balancer };
+        serve::validate_fleet(&cfg, system.device_count, &fleet, &requests)
             .map_err(|e| format!("scenario `{}`: {e}", sc.name))?;
-        let (report, _) = serve::serve_once(&self.sim, system, &model, &cfg, &requests, &t.slo);
-        let cluster_cost_usd =
-            device_cost(&self.cost_params, &system.device).total_usd() * system.device_count as f64;
+        let (report, _) =
+            serve::serve_fleet(&self.sim, system, &model, &cfg, &fleet, &requests, &t.slo);
+        // A fleet buys the whole cluster once per replica.
+        let cluster_cost_usd = device_cost(&self.cost_params, &system.device).total_usd()
+            * system.device_count as f64
+            * t.replicas as f64;
         let usd_per_mtok =
             serve::sweep::usd_per_mtok_at_slo(cluster_cost_usd, report.summary.goodput_tok_s);
         Ok(EvalResult::Serving(ServingReport {
             summary: report.summary,
             stats: report.stats,
+            replica_stats: report.replica_stats,
             kv_capacity_tokens: cfg.kv_capacity_tokens,
             cluster_cost_usd,
             usd_per_mtok,

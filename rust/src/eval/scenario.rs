@@ -29,7 +29,9 @@ use crate::graph::ir::{self, Parallelism};
 use crate::graph::layer::Phase;
 use crate::hardware::DType;
 use crate::perf::Op;
-use crate::serve::{FaultSpec, Policy, Preemption, ServeMode, Slo};
+use crate::serve::{
+    Balancer, Diurnal, FaultSpec, FlashCrowd, Policy, Preemption, ServeMode, Slo,
+};
 use crate::util::json::{num, obj, s, Json, JsonError};
 
 fn jerr(e: JsonError) -> String {
@@ -76,6 +78,10 @@ const TRAFFIC_KEYS: &[&str] = &[
     "slo",
     "seed",
     "faults",
+    "replicas",
+    "balancer",
+    "diurnal",
+    "flash_crowd",
 ];
 
 /// Optional-field accessors that error when the key is present but has
@@ -197,6 +203,16 @@ pub struct TrafficSpec {
     /// ([`crate::serve::fault`]). `None` (and the inert
     /// [`FaultSpec::none`]) serve the trace in a perfect world.
     pub faults: Option<FaultSpec>,
+    /// Data-parallel replica count ([`crate::serve::fleet`]). 1 is the
+    /// historical single-engine path.
+    pub replicas: u64,
+    /// Fleet load balancer (`"balancer"`: round_robin | least_kv_pressure
+    /// | session_affinity); only consulted when `replicas > 1`.
+    pub balancer: Balancer,
+    /// Optional diurnal (raised-cosine) arrival-rate modulation.
+    pub diurnal: Option<Diurnal>,
+    /// Optional flash-crowd burst window multiplying the arrival rate.
+    pub flash_crowd: Option<FlashCrowd>,
 }
 
 impl TrafficSpec {
@@ -218,6 +234,10 @@ impl TrafficSpec {
             slo: Slo::interactive(),
             seed: 42,
             faults: None,
+            replicas: 1,
+            balancer: Balancer::RoundRobin,
+            diurnal: None,
+            flash_crowd: None,
         }
     }
 }
@@ -413,6 +433,33 @@ impl Workload {
                 if let Some(f) = &t.faults {
                     fields.push(("faults", f.to_json()));
                 }
+                // Fleet + modulation knobs are emitted only off their
+                // defaults, keeping legacy scenarios byte-identical.
+                if t.replicas != 1 {
+                    fields.push(("replicas", num(t.replicas as f64)));
+                }
+                if t.balancer != Balancer::RoundRobin {
+                    fields.push(("balancer", s(t.balancer.name())));
+                }
+                if let Some(d) = t.diurnal {
+                    fields.push((
+                        "diurnal",
+                        obj(vec![
+                            ("period_s", num(d.period_s)),
+                            ("peak_multiplier", num(d.peak_multiplier)),
+                        ]),
+                    ));
+                }
+                if let Some(fc) = t.flash_crowd {
+                    fields.push((
+                        "flash_crowd",
+                        obj(vec![
+                            ("at_s", num(fc.at_s)),
+                            ("duration_s", num(fc.duration_s)),
+                            ("multiplier", num(fc.multiplier)),
+                        ]),
+                    ));
+                }
                 obj(fields)
             }
         }
@@ -548,6 +595,48 @@ impl Workload {
                     None => None,
                     Some(fv) => Some(FaultSpec::from_json(fv)?),
                 };
+                let replicas = opt_u64(v, "replicas")?.unwrap_or(1);
+                if replicas == 0 {
+                    return Err("traffic `replicas` must be ≥ 1".to_string());
+                }
+                let balancer = match opt_str(v, "balancer")? {
+                    None => Balancer::RoundRobin,
+                    Some(b) => Balancer::parse(b).ok_or_else(|| {
+                        format!(
+                            "unknown traffic `balancer` `{b}` (round_robin | \
+                             least_kv_pressure | session_affinity)"
+                        )
+                    })?,
+                };
+                let diurnal = match v.get("diurnal") {
+                    None => None,
+                    Some(d) => {
+                        check_known_fields(
+                            d,
+                            &["period_s", "peak_multiplier"],
+                            "traffic `diurnal`",
+                        )?;
+                        Some(Diurnal {
+                            period_s: d.req_f64("period_s").map_err(jerr)?,
+                            peak_multiplier: d.req_f64("peak_multiplier").map_err(jerr)?,
+                        })
+                    }
+                };
+                let flash_crowd = match v.get("flash_crowd") {
+                    None => None,
+                    Some(fc) => {
+                        check_known_fields(
+                            fc,
+                            &["at_s", "duration_s", "multiplier"],
+                            "traffic `flash_crowd`",
+                        )?;
+                        Some(FlashCrowd {
+                            at_s: fc.req_f64("at_s").map_err(jerr)?,
+                            duration_s: fc.req_f64("duration_s").map_err(jerr)?,
+                            multiplier: fc.req_f64("multiplier").map_err(jerr)?,
+                        })
+                    }
+                };
                 let requests = match opt_u64(v, "requests")? {
                     Some(n) => n as usize,
                     None if trace.is_some() => 0, // replay ignores `requests`
@@ -572,6 +661,10 @@ impl Workload {
                     slo,
                     seed: opt_u64(v, "seed")?.unwrap_or(42),
                     faults,
+                    replicas,
+                    balancer,
+                    diurnal,
+                    flash_crowd,
                 }))
             }
             other => Err(format!(
@@ -1371,6 +1464,7 @@ mod tests {
             ],
             mtbf_s: Some(3600.0),
             mttr_s: 20.0,
+            correlated_fraction: 0.5,
             recovery: RecoveryPolicy {
                 max_retries: 1,
                 retry_backoff_s: 0.2,
@@ -1402,6 +1496,63 @@ mod tests {
         let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
         assert_eq!(t.faults, None);
         assert!(sc.to_json().get("workload").unwrap().get("faults").is_none());
+    }
+
+    #[test]
+    fn fleet_and_modulation_knobs_round_trip() {
+        let mut t = TrafficSpec::poisson("gpt-small", 30.0, 64);
+        t.replicas = 4;
+        t.balancer = Balancer::LeastKvPressure;
+        t.diurnal = Some(Diurnal { period_s: 60.0, peak_multiplier: 3.0 });
+        t.flash_crowd = Some(FlashCrowd { at_s: 10.0, duration_s: 5.0, multiplier: 6.0 });
+        round_trip(&Scenario::new("fleet", "a100x2", Workload::Traffic(t)));
+        // Parsed from scratch.
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100x2", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 16, "rate_per_s": 10.0, "replicas": 3,
+                "balancer": "session_affinity",
+                "diurnal": {"period_s": 120.0, "peak_multiplier": 2.0},
+                "flash_crowd": {"at_s": 4.0, "duration_s": 2.0, "multiplier": 5.0}}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(t.replicas, 3);
+        assert_eq!(t.balancer, Balancer::SessionAffinity);
+        assert_eq!(t.diurnal, Some(Diurnal { period_s: 120.0, peak_multiplier: 2.0 }));
+        assert_eq!(
+            t.flash_crowd,
+            Some(FlashCrowd { at_s: 4.0, duration_s: 2.0, multiplier: 5.0 })
+        );
+        round_trip(&sc);
+        // Defaults: absent knobs stay absent (legacy scenarios
+        // byte-identical) and parse to the single-engine path.
+        let sc = Scenario::parse(
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0}}"#,
+        )
+        .unwrap();
+        let Workload::Traffic(t) = &sc.workload else { panic!("not traffic") };
+        assert_eq!(t.replicas, 1);
+        assert_eq!(t.balancer, Balancer::RoundRobin);
+        let w = sc.to_json();
+        let w = w.get("workload").unwrap();
+        for absent in ["replicas", "balancer", "diurnal", "flash_crowd"] {
+            assert!(w.get(absent).is_none(), "`{absent}` leaked into a legacy scenario");
+        }
+        // Bad values reject the file.
+        for bad in [
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "replicas": 0}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "balancer": "coin_flip"}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0, "diurnal": {"period": 60.0}}}"#,
+            r#"{"hardware": "a100", "workload": {"type": "traffic", "model": "gpt-small",
+                "requests": 8, "rate_per_s": 5.0,
+                "flash_crowd": {"at_s": 1.0, "duration_s": 2.0}}}"#,
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted bad scenario: {bad}");
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::fmt::Write as _;
 
 fn render_rows(title: &str, rows: &[SweepRow], out: &mut String, csv: &mut Table) {
     let mut t = Table::new(&[
-        "system", "mode", "rate/s", "MTBF h", "avail %", "TTFT mean", "TTFT p50/p99",
+        "system", "mode", "repl", "rate/s", "MTBF h", "avail %", "TTFT mean", "TTFT p50/p99",
         "TPOT p50/p99", "goodput tok/s", "SLO %", "preempt", "$/1M tok",
     ])
     .with_title(title);
@@ -28,6 +28,7 @@ fn render_rows(title: &str, rows: &[SweepRow], out: &mut String, csv: &mut Table
         t.row(vec![
             r.system.clone(),
             r.mode.to_string(),
+            r.replicas.to_string(),
             format!("{:.1}", r.rate_per_s),
             match r.mtbf_hours {
                 // Sub-tenth-of-an-hour MTBFs (smoke-scale traces) read better in seconds.
@@ -60,6 +61,7 @@ fn render_rows(title: &str, rows: &[SweepRow], out: &mut String, csv: &mut Table
             title.to_string(),
             r.system.clone(),
             r.mode.to_string(),
+            format!("{}", r.replicas),
             format!("{}", r.rate_per_s),
             match r.mtbf_hours {
                 Some(h) => format!("{h}"),
@@ -94,7 +96,8 @@ pub fn run(ctx: &Ctx) -> Result<String> {
 
     let mut out = String::new();
     let mut csv_all = Table::new(&[
-        "sweep", "system", "mode", "rate/s", "mtbf_hours", "availability", "requests_lost",
+        "sweep", "system", "mode", "replicas", "rate/s", "mtbf_hours", "availability",
+        "requests_lost",
         "ttft_mean_s", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s", "goodput_tok_s",
         "attainment", "preemptions", "cluster_usd", "usd_per_mtok",
     ]);

@@ -43,7 +43,15 @@
 //!   recompute-on-resume, TTFT/TPOT/goodput metrics, and an SLO-aware
 //!   $/1M-token cost sweep across hardware presets *and* scheduler modes
 //!   — the layer that evaluates designs under traffic instead of
-//!   isolated batches.
+//!   isolated batches. Scales out to multi-replica data-parallel
+//!   *fleets* ([`serve::fleet`]): N replica engines behind a pluggable
+//!   load balancer (round-robin / least-KV-pressure / session-affinity)
+//!   driven off a deterministic global event heap ([`serve::events`]),
+//!   with per-replica fault targeting (`replica:<i>`, correlated
+//!   outages), cross-replica re-dispatch of crash losses, diurnal +
+//!   flash-crowd arrival modulation, and a fleet-size axis on the cost
+//!   sweep; `replicas = 1` reproduces the single-engine reports byte
+//!   for byte.
 //! * [`eval`] — the unified scenario API: one typed, JSON-serializable
 //!   [`eval::Scenario`] (hardware target + workload — operator, layer,
 //!   request, arbitrary operator DAG, or traffic — + optional

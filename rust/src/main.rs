@@ -905,6 +905,37 @@ fn cmd_serve(raw: &[String]) -> R {
         .opt("slo-tpot", Some("0.1"), "SLO: max time-per-output-token, seconds")
         .opt("seed", Some("42"), "workload seed")
         .opt(
+            "replicas",
+            Some("1"),
+            "data-parallel fleet size — each replica is a full copy of the system \
+             behind the load balancer (1 = the single-engine path)",
+        )
+        .opt(
+            "balancer",
+            Some("round_robin"),
+            "fleet load balancer: round_robin | least_kv_pressure | session_affinity",
+        )
+        .opt(
+            "diurnal-period-s",
+            None,
+            "modulate the arrival rate with a raised-cosine diurnal cycle of this \
+             period, seconds (requires --diurnal-peak)",
+        )
+        .opt(
+            "diurnal-peak",
+            None,
+            "diurnal: peak rate multiplier at the top of the cycle (trough stays \
+             at the base rate)",
+        )
+        .opt(
+            "flash-at-s",
+            None,
+            "flash crowd: multiply the arrival rate from this time (requires \
+             --flash-duration-s and --flash-mult)",
+        )
+        .opt("flash-duration-s", None, "flash crowd: window length, seconds")
+        .opt("flash-mult", None, "flash crowd: rate multiplier inside the window")
+        .opt(
             "fault-spec",
             None,
             "fault-injection spec JSON file (the scenario `faults` object: seed, \
@@ -939,6 +970,12 @@ fn cmd_serve(raw: &[String]) -> R {
             Some("monolithic"),
             "sweep: comma-separated scheduler modes to compare on every system \
              (monolithic,chunked,disaggregated; knob flags above apply)",
+        )
+        .opt(
+            "fleet-sizes",
+            None,
+            "sweep: comma-separated replica counts to add as a fleet-size axis \
+             (cluster cost scales with the count; default 1)",
         )
         .flag("pooled", "use the pooled (multi-threaded) mapper search")
         .opt("mapper-cache", None, MAPPER_CACHE_HELP)
@@ -1003,16 +1040,27 @@ fn cmd_serve(raw: &[String]) -> R {
                 .collect::<Result<Vec<_>, _>>()?;
             cfg.fault_mttr_s = a.get_f64("fault-mttr-s").map_err(|e| e.0)?.unwrap();
         }
+        if let Some(list) = a.get("fleet-sizes") {
+            cfg.fleet_sizes = list
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<u64>()
+                        .map_err(|_| format!("bad --fleet-sizes entry `{}`", s.trim()))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+        }
         let rows = llmcompass::serve::sweep::run_sweep(&ev.sim, &model, &cfg)?;
         let mut t = Table::new(&[
-            "system", "mode", "rate/s", "MTBF h", "avail %", "TTFT mean", "goodput tok/s",
-            "SLO %", "preempt", "$/1M tok",
+            "system", "mode", "repl", "rate/s", "MTBF h", "avail %", "TTFT mean",
+            "goodput tok/s", "SLO %", "preempt", "$/1M tok",
         ])
         .with_title("SLO-aware serving sweep");
         for r in &rows {
             t.row(vec![
                 r.system.clone(),
                 r.mode.to_string(),
+                r.replicas.to_string(),
                 format!("{:.1}", r.rate_per_s),
                 match r.mtbf_hours {
                     Some(h) => format!("{h:.2}"),
@@ -1031,12 +1079,13 @@ fn cmd_serve(raw: &[String]) -> R {
             ]);
         }
         println!("{}", t.render());
-        println!("best per system/mode ($/1M output tokens at SLO):");
+        println!("best per system/mode/fleet ($/1M output tokens at SLO):");
         for b in llmcompass::serve::sweep::best_per_system(&rows) {
             println!(
-                "  {:<24} {:<14} {:>10} at {:.1} req/s",
+                "  {:<24} {:<14} x{:<3} {:>10} at {:.1} req/s",
                 b.system,
                 b.mode,
+                b.replicas,
                 if b.usd_per_mtok.is_finite() {
                     format!("${:.3}", b.usd_per_mtok)
                 } else {
@@ -1088,6 +1137,37 @@ fn cmd_serve(raw: &[String]) -> R {
         (None, None) => None,
     };
     let fault_run = faults.is_some();
+    let replicas = a.get_u64("replicas").map_err(|e| e.0)?.unwrap();
+    if replicas == 0 {
+        return Err("--replicas must be ≥ 1".into());
+    }
+    let balancer = llmcompass::serve::Balancer::parse(a.get_or("balancer", "round_robin"))
+        .ok_or("bad --balancer (round_robin | least_kv_pressure | session_affinity)")?;
+    let diurnal = match (
+        a.get_f64("diurnal-period-s").map_err(|e| e.0)?,
+        a.get_f64("diurnal-peak").map_err(|e| e.0)?,
+    ) {
+        (Some(period_s), Some(peak_multiplier)) => {
+            Some(llmcompass::serve::Diurnal { period_s, peak_multiplier })
+        }
+        (None, None) => None,
+        _ => return Err("--diurnal-period-s and --diurnal-peak must be passed together".into()),
+    };
+    let flash_crowd = match (
+        a.get_f64("flash-at-s").map_err(|e| e.0)?,
+        a.get_f64("flash-duration-s").map_err(|e| e.0)?,
+        a.get_f64("flash-mult").map_err(|e| e.0)?,
+    ) {
+        (Some(at_s), Some(duration_s), Some(multiplier)) => {
+            Some(llmcompass::serve::FlashCrowd { at_s, duration_s, multiplier })
+        }
+        (None, None, None) => None,
+        _ => {
+            return Err(
+                "--flash-at-s, --flash-duration-s and --flash-mult must be passed together".into()
+            )
+        }
+    };
     let traffic = TrafficSpec {
         model: model_name.to_string(),
         requests: requests_n,
@@ -1107,6 +1187,10 @@ fn cmd_serve(raw: &[String]) -> R {
         slo,
         seed,
         faults,
+        replicas,
+        balancer,
+        diurnal,
+        flash_crowd,
     };
     // Materialize the trace up front so the fit checks and the preamble
     // banner run before the (slow) simulation, matching the historical
@@ -1116,10 +1200,16 @@ fn cmd_serve(raw: &[String]) -> R {
     // evaluator re-checks and errors rather than misbehaving).
     let trace = eval::traffic_requests(&traffic)?;
     let sched = eval::scheduler_config_for(&sys, &model, &traffic)?;
-    llmcompass::serve::scheduler::validate(&sched, sys.device_count, &trace)?;
+    let fleet = llmcompass::serve::FleetConfig { replicas, balancer };
+    llmcompass::serve::validate_fleet(&sched, sys.device_count, &fleet, &trace)?;
+    let fleet_note = if replicas > 1 {
+        format!(", {replicas} replicas via {}", balancer.name())
+    } else {
+        String::new()
+    };
     println!(
         "serving {} requests of {} on {} x{} (mode {}, policy {policy:?}, preemption {}, \
-         KV budget {} tokens)…",
+         KV budget {} tokens{fleet_note})…",
         trace.len(),
         model.name,
         sys.device.name,
@@ -1157,6 +1247,18 @@ fn cmd_serve(raw: &[String]) -> R {
         llmcompass::util::fmt_seconds(stats.handoff_wait_s),
         llmcompass::util::fmt_seconds(stats.handoff_stall_s)
     );
+    for (i, rs) in sr.replica_stats.iter().enumerate() {
+        println!(
+            "replica {i}: {} prefill + {} decode + {} mixed iterations | makespan {} | \
+             peak KV {} tokens | downtime {}",
+            rs.prefill_iterations,
+            rs.decode_iterations,
+            rs.mixed_iterations,
+            llmcompass::util::fmt_seconds(rs.makespan_s),
+            rs.peak_kv_tokens,
+            llmcompass::util::fmt_seconds(rs.fault_downtime_s)
+        );
+    }
     if fault_run {
         // Key=value so scripts (and the CI fault smoke) can grep the fields.
         println!(

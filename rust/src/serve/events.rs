@@ -1,0 +1,157 @@
+//! The global event heap: a deterministic min-heap of timestamped events
+//! shared by every clock in the serving simulator.
+//!
+//! Ordering is total and reproducible: events pop by `(time, priority,
+//! seq)` — time via `f64::total_cmp` (no NaN panics, `-0.0 < 0.0`),
+//! priority as an explicit tie-break between same-time event classes
+//! (e.g. the disaggregated engine gives the prefill pool priority 0 and
+//! the decode pool priority 1, reproducing the historical
+//! "prefill wins ties" clock pick bit for bit), and an insertion serial
+//! so equal `(time, priority)` events pop in push order. The fleet layer
+//! reuses the same heap to order replica loss events for re-dispatch.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<T> {
+    time: f64,
+    priority: u8,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> Entry<T> {
+    /// Reversed key comparison: the *greatest* entry under this ordering
+    /// is the earliest event, so `BinaryHeap` (a max-heap) pops min-first.
+    fn key_cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.priority.cmp(&self.priority))
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key_cmp(other) == Ordering::Equal
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.key_cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key_cmp(other)
+    }
+}
+
+/// Deterministic min-heap of `(time, priority, payload)` events.
+pub struct EventHeap<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventHeap<T> {
+    fn default() -> Self {
+        EventHeap::new()
+    }
+}
+
+impl<T> EventHeap<T> {
+    pub fn new() -> EventHeap<T> {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `payload` at `time`. Lower `priority` pops first among
+    /// same-time events; equal `(time, priority)` pops in push order.
+    pub fn push(&mut self, time: f64, priority: u8, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time, priority, seq, payload });
+    }
+
+    /// Pop the earliest event as `(time, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time, e.payload))
+    }
+
+    /// Timestamp of the earliest event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Drop all pending events (the insertion serial keeps counting, so
+    /// ordering stays stable across reuse).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        h.push(3.0, 0, "c");
+        h.push(1.0, 0, "a");
+        h.push(2.0, 0, "b");
+        assert_eq!(h.peek_time(), Some(1.0));
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.pop(), Some((1.0, "a")));
+        assert_eq!(h.pop(), Some((2.0, "b")));
+        assert_eq!(h.pop(), Some((3.0, "c")));
+        assert_eq!(h.pop(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn priority_breaks_time_ties_then_push_order() {
+        let mut h = EventHeap::new();
+        h.push(1.0, 1, "decode");
+        h.push(1.0, 0, "prefill");
+        assert_eq!(h.pop(), Some((1.0, "prefill")), "lower priority pops first");
+        assert_eq!(h.pop(), Some((1.0, "decode")));
+        // Equal (time, priority): FIFO by insertion serial.
+        h.push(2.0, 0, "first");
+        h.push(2.0, 0, "second");
+        assert_eq!(h.pop(), Some((2.0, "first")));
+        assert_eq!(h.pop(), Some((2.0, "second")));
+    }
+
+    #[test]
+    fn total_cmp_handles_infinities_and_negative_zero() {
+        let mut h = EventHeap::new();
+        h.push(f64::INFINITY, 0, "never");
+        h.push(0.0, 0, "zero");
+        h.push(-0.0, 0, "neg zero");
+        assert_eq!(h.pop(), Some((-0.0, "neg zero")), "-0.0 sorts before 0.0 under total_cmp");
+        assert_eq!(h.pop(), Some((0.0, "zero")));
+        assert_eq!(h.pop(), Some((f64::INFINITY, "never")));
+    }
+
+    #[test]
+    fn clear_keeps_the_serial_monotone() {
+        let mut h = EventHeap::new();
+        h.push(1.0, 0, 1u32);
+        h.clear();
+        assert!(h.is_empty());
+        h.push(1.0, 0, 2u32);
+        h.push(1.0, 0, 3u32);
+        assert_eq!(h.pop(), Some((1.0, 2)));
+        assert_eq!(h.pop(), Some((1.0, 3)));
+    }
+}

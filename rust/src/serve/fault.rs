@@ -42,22 +42,28 @@ pub const DEFAULT_MAX_RETRIES: u64 = 2;
 /// seconds (doubles per retry).
 pub const DEFAULT_RETRY_BACKOFF_S: f64 = 0.5;
 
-/// Which pool a fault event strikes. Single-pool engines treat every
-/// target as "this engine"; disaggregated mode routes `Prefill`/`Decode`
-/// to the matching pool and `All` to both.
+/// Which pool (or fleet replica) a fault event strikes. Single-pool
+/// engines treat every pool target as "this engine"; disaggregated mode
+/// routes `Prefill`/`Decode` to the matching pool and `All` to both.
+/// `Replica(i)` pins the event to replica `i` of a fleet
+/// ([`FaultSpec::for_replica`] rewrites it to `All` inside that replica
+/// and drops it everywhere else); outside a fleet only replica 0 exists,
+/// so `replica:0` behaves like `all` and other indices are inert.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultTarget {
     All,
     Prefill,
     Decode,
+    Replica(u64),
 }
 
 impl FaultTarget {
-    pub fn name(self) -> &'static str {
+    pub fn name(self) -> String {
         match self {
-            FaultTarget::All => "all",
-            FaultTarget::Prefill => "prefill",
-            FaultTarget::Decode => "decode",
+            FaultTarget::All => "all".to_string(),
+            FaultTarget::Prefill => "prefill".to_string(),
+            FaultTarget::Decode => "decode".to_string(),
+            FaultTarget::Replica(i) => format!("replica:{i}"),
         }
     }
 
@@ -66,7 +72,10 @@ impl FaultTarget {
             "all" => Some(FaultTarget::All),
             "prefill" => Some(FaultTarget::Prefill),
             "decode" => Some(FaultTarget::Decode),
-            _ => None,
+            _ => v
+                .strip_prefix("replica:")
+                .and_then(|i| i.parse().ok())
+                .map(FaultTarget::Replica),
         }
     }
 }
@@ -157,6 +166,12 @@ pub struct FaultSpec {
     pub mtbf_s: Option<f64>,
     /// Downtime per MTBF-generated crash, seconds.
     pub mttr_s: f64,
+    /// Fleet correlation of pool-targeted events, in [0, 1]: each
+    /// `all`/`prefill`/`decode` event strikes a seeded subset of
+    /// `max(1, round(fraction × N))` replicas. 0 (the default) models
+    /// independent single-replica incidents; 1 a fleet-wide outage
+    /// (shared switch, bad rollout). Ignored outside fleets.
+    pub correlated_fraction: f64,
     pub recovery: RecoveryPolicy,
 }
 
@@ -169,6 +184,7 @@ impl FaultSpec {
             events: Vec::new(),
             mtbf_s: None,
             mttr_s: DEFAULT_MTTR_S,
+            correlated_fraction: 0.0,
             recovery: RecoveryPolicy::default(),
         }
     }
@@ -176,7 +192,7 @@ impl FaultSpec {
     /// MTBF-only crashes: mean `mtbf_s` between crashes, `mttr_s` down
     /// per crash, default recovery.
     pub fn mtbf(seed: u64, mtbf_s: f64, mttr_s: f64) -> FaultSpec {
-        FaultSpec { seed, events: Vec::new(), mtbf_s: Some(mtbf_s), mttr_s, recovery: RecoveryPolicy::default() }
+        FaultSpec { mtbf_s: Some(mtbf_s), mttr_s, seed, ..FaultSpec::none() }
     }
 
     /// Reject physically meaningless specs with a message instead of
@@ -233,8 +249,90 @@ impl FaultSpec {
         if r.degraded_chunk_tokens == Some(0) {
             return Err("fault recovery degraded_chunk_tokens must be ≥ 1".to_string());
         }
+        if !self.correlated_fraction.is_finite()
+            || !(0.0..=1.0).contains(&self.correlated_fraction)
+        {
+            return Err("fault correlated_fraction must be in [0, 1]".to_string());
+        }
         Ok(())
     }
+
+    /// Highest replica index named by a `replica:<i>` event target, if any
+    /// — the fleet validates it against its size.
+    pub fn max_replica_target(&self) -> Option<u64> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.target {
+                FaultTarget::Replica(i) => Some(i),
+                _ => None,
+            })
+            .max()
+    }
+
+    /// Project this fleet-level spec onto replica `replica` of an
+    /// N-replica fleet:
+    ///
+    /// * `replica:<i>` events land only on replica `i`, rewritten to
+    ///   target `all` pools of that replica's engine;
+    /// * pool-targeted events strike a seeded deterministic subset of
+    ///   `max(1, round(correlated_fraction × N))` replicas, drawn per
+    ///   event from the spec seed so replay is byte-identical;
+    /// * the MTBF crash process becomes an independent per-replica stream
+    ///   under a replica-derived seed.
+    ///
+    /// With `fleet_size ≤ 1` the spec passes through unchanged, so the
+    /// fleet path reproduces the single-engine run byte for byte.
+    pub fn for_replica(&self, replica: u64, fleet_size: u64) -> FaultSpec {
+        if fleet_size <= 1 {
+            return self.clone();
+        }
+        let strike =
+            ((self.correlated_fraction * fleet_size as f64).round() as u64).clamp(1, fleet_size);
+        let mut events = Vec::new();
+        for (j, e) in self.events.iter().enumerate() {
+            match e.target {
+                FaultTarget::Replica(r) => {
+                    if r == replica {
+                        events.push(FaultEvent { target: FaultTarget::All, ..e.clone() });
+                    }
+                }
+                _ => {
+                    if struck_replicas(self.seed, j as u64, fleet_size, strike)
+                        .contains(&replica)
+                    {
+                        events.push(e.clone());
+                    }
+                }
+            }
+        }
+        FaultSpec {
+            seed: self
+                .seed
+                .wrapping_add(replica.wrapping_add(1).wrapping_mul(0x9e37_79b9_7f4a_7c15)),
+            events,
+            mtbf_s: self.mtbf_s,
+            mttr_s: self.mttr_s,
+            correlated_fraction: 0.0,
+            recovery: self.recovery.clone(),
+        }
+    }
+}
+
+/// The `strike`-sized replica subset hit by pool-targeted event
+/// `event_idx`: a partial Fisher–Yates draw from a per-event RNG stream,
+/// so the subset depends only on (seed, event index, fleet size).
+fn struck_replicas(seed: u64, event_idx: u64, fleet_size: u64, strike: u64) -> Vec<u64> {
+    let mut rng = Rng::new(
+        seed ^ event_idx.wrapping_mul(0xd1b5_4a32_d192_ed03).wrapping_add(0x2545_f491_4f6c_dd1d),
+    );
+    let mut ids: Vec<u64> = (0..fleet_size).collect();
+    let k = strike.min(fleet_size) as usize;
+    for i in 0..k {
+        let j = i + rng.below((ids.len() - i) as u64) as usize;
+        ids.swap(i, j);
+    }
+    ids.truncate(k);
+    ids
 }
 
 /// Pool index used by the engines: single-pool engines and the
@@ -285,7 +383,7 @@ impl Faults {
                 end: e.at_s + e.duration_s,
             })
             .collect();
-        events.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        events.sort_by(|a, b| a.start.total_cmp(&b.start));
         let n = events.len();
         Faults {
             events,
@@ -301,11 +399,16 @@ impl Faults {
     }
 
     fn matches(&self, target: FaultTarget, pool: usize) -> bool {
+        // Replica targets reaching an engine directly (no fleet projection)
+        // mean "this single replica" — index 0 — and are inert otherwise.
+        if let FaultTarget::Replica(r) = target {
+            return r == 0;
+        }
         if self.single_pool {
             return true;
         }
         match target {
-            FaultTarget::All => true,
+            FaultTarget::All | FaultTarget::Replica(_) => true,
             FaultTarget::Prefill => pool == POOL_PREFILL,
             FaultTarget::Decode => pool == POOL_DECODE,
         }
@@ -422,12 +525,15 @@ impl Faults {
     }
 
     /// Interconnect-transfer multiplier at `t`: the product of active
-    /// link-degradation factors (targets are ignored — the fabric is
-    /// shared).
+    /// link-degradation factors (pool targets are ignored — the fabric is
+    /// shared; replica targets still only bind to this replica).
     pub fn link_mult(&mut self, t: f64) -> f64 {
         let mut m = 1.0;
         for w in &self.events {
             if let FaultKind::LinkDegrade { factor } = w.kind {
+                if matches!(w.target, FaultTarget::Replica(r) if r != 0) {
+                    continue;
+                }
                 if w.start <= t && t < w.end {
                     m *= factor;
                 }
@@ -489,7 +595,7 @@ impl Faults {
             .map(|(s, e)| (s.max(0.0), e.min(makespan)))
             .filter(|&(s, e)| e > s)
             .collect();
-        wins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        wins.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
         let mut total = 0.0;
         let mut cur: Option<(f64, f64)> = None;
         for (s, e) in wins {
@@ -520,7 +626,7 @@ impl Faults {
 
     /// The explicit windows, for upfront telemetry span emission:
     /// `(kind name, target name, start, end)`.
-    pub fn event_windows(&self) -> Vec<(&'static str, &'static str, f64, f64)> {
+    pub fn event_windows(&self) -> Vec<(&'static str, String, f64, f64)> {
         self.events
             .iter()
             .map(|w| (w.kind.name(), w.target.name(), w.start, w.end))
@@ -536,7 +642,15 @@ use crate::util::json::{num, obj, s, Json};
 
 /// Keys accepted at each level of the fault JSON — shared with the
 /// scenario parser's unknown-field rejection.
-pub const FAULT_SPEC_KEYS: &[&str] = &["seed", "events", "mtbf_s", "mtbf_hours", "mttr_s", "recovery"];
+pub const FAULT_SPEC_KEYS: &[&str] = &[
+    "seed",
+    "events",
+    "mtbf_s",
+    "mtbf_hours",
+    "mttr_s",
+    "correlated_fraction",
+    "recovery",
+];
 pub const FAULT_EVENT_KEYS: &[&str] =
     &["kind", "at_s", "duration_s", "target", "multiplier", "factor"];
 pub const RECOVERY_KEYS: &[&str] = &[
@@ -589,6 +703,9 @@ impl FaultSpec {
             fields.push(("mtbf_s", num(m)));
         }
         fields.push(("mttr_s", num(self.mttr_s)));
+        if self.correlated_fraction > 0.0 {
+            fields.push(("correlated_fraction", num(self.correlated_fraction)));
+        }
         if !self.events.is_empty() {
             fields.push((
                 "events",
@@ -610,8 +727,9 @@ impl FaultSpec {
                                 }
                                 _ => {}
                             }
+                            let target_name = e.target.name();
                             if e.target != FaultTarget::All {
-                                ef.push(("target", s(e.target.name())));
+                                ef.push(("target", s(&target_name)));
                             }
                             obj(ef)
                         })
@@ -689,7 +807,10 @@ impl FaultSpec {
                                 .as_str()
                                 .ok_or_else(|| "fault event `target` must be a string".to_string())?;
                             FaultTarget::parse(t).ok_or_else(|| {
-                                format!("unknown fault target `{t}` (all | prefill | decode)")
+                                format!(
+                                    "unknown fault target `{t}` (all | prefill | decode | \
+                                     replica:<i>)"
+                                )
                             })?
                         }
                     };
@@ -724,6 +845,7 @@ impl FaultSpec {
             events,
             mtbf_s,
             mttr_s: opt_f64(v, "mttr_s")?.unwrap_or(DEFAULT_MTTR_S),
+            correlated_fraction: opt_f64(v, "correlated_fraction")?.unwrap_or(0.0),
             recovery,
         };
         spec.validate()?;
@@ -773,6 +895,7 @@ mod tests {
             ],
             mtbf_s: None,
             mttr_s: 0.0,
+            correlated_fraction: 0.0,
             recovery: RecoveryPolicy::default(),
         };
         spec.validate().unwrap();
@@ -805,6 +928,7 @@ mod tests {
             }],
             mtbf_s: None,
             mttr_s: 0.0,
+            correlated_fraction: 0.0,
             recovery: RecoveryPolicy::default(),
         };
         let mut f = Faults::new(&spec, false);
@@ -854,9 +978,16 @@ mod tests {
                     duration_s: 4.0,
                     target: FaultTarget::All,
                 },
+                FaultEvent {
+                    kind: FaultKind::Crash,
+                    at_s: 3.0,
+                    duration_s: 1.0,
+                    target: FaultTarget::Replica(2),
+                },
             ],
             mtbf_s: Some(7200.0),
             mttr_s: 12.0,
+            correlated_fraction: 0.5,
             recovery: RecoveryPolicy {
                 max_retries: 3,
                 retry_backoff_s: 0.25,
@@ -902,10 +1033,96 @@ mod tests {
                 "factor",
             ),
             (r#"{"recovery": {"shed_queue_depth": 0}}"#, "shed_queue_depth"),
+            (r#"{"correlated_fraction": 1.5}"#, "correlated_fraction"),
+            (
+                r#"{"events": [{"kind": "crash", "at_s": 0.0, "duration_s": 1.0,
+                    "target": "replica:x"}]}"#,
+                "unknown fault target",
+            ),
         ] {
             let v = Json::parse(text).unwrap();
             let err = FaultSpec::from_json(&v).unwrap_err();
             assert!(err.contains(needle), "`{text}` → `{err}` (wanted `{needle}`)");
+        }
+    }
+
+    #[test]
+    fn replica_targets_parse_and_bind_to_replica_zero_outside_fleets() {
+        assert_eq!(FaultTarget::parse("replica:3"), Some(FaultTarget::Replica(3)));
+        assert_eq!(FaultTarget::Replica(3).name(), "replica:3");
+        assert_eq!(FaultTarget::parse("replica:"), None);
+        // Outside a fleet only replica 0 exists: replica:0 gates, others
+        // are inert.
+        let mk = |r: u64| FaultSpec {
+            events: vec![FaultEvent {
+                kind: FaultKind::Drain,
+                at_s: 0.0,
+                duration_s: 5.0,
+                target: FaultTarget::Replica(r),
+            }],
+            ..FaultSpec::none()
+        };
+        let mut hit = Faults::new(&mk(0), true);
+        assert!(!hit.admitting(1.0, POOL_PREFILL));
+        let mut miss = Faults::new(&mk(4), true);
+        assert!(miss.admitting(1.0, POOL_PREFILL));
+        assert_eq!(mk(4).max_replica_target(), Some(4));
+        assert_eq!(FaultSpec::none().max_replica_target(), None);
+    }
+
+    #[test]
+    fn for_replica_projects_targets_and_correlation_deterministically() {
+        let mut spec = FaultSpec::none();
+        spec.seed = 13;
+        spec.events = vec![
+            FaultEvent {
+                kind: FaultKind::Crash,
+                at_s: 1.0,
+                duration_s: 0.5,
+                target: FaultTarget::Replica(2),
+            },
+            FaultEvent {
+                kind: FaultKind::Drain,
+                at_s: 2.0,
+                duration_s: 1.0,
+                target: FaultTarget::All,
+            },
+        ];
+        // Fleet of 1: pass-through, byte for byte.
+        assert_eq!(spec.for_replica(0, 1), spec);
+
+        let n = 4;
+        let per: Vec<FaultSpec> = (0..n).map(|r| spec.for_replica(r, n)).collect();
+        // The replica:2 crash lands only on replica 2, rewritten to `all`.
+        for (r, p) in per.iter().enumerate() {
+            let has_crash = p.events.iter().any(|e| matches!(e.kind, FaultKind::Crash));
+            assert_eq!(has_crash, r == 2, "crash leaked to replica {r}");
+            if r == 2 {
+                let crash = p.events.iter().find(|e| matches!(e.kind, FaultKind::Crash));
+                assert_eq!(crash.unwrap().target, FaultTarget::All);
+            }
+        }
+        // correlated_fraction 0 ⇒ the pool-targeted drain strikes exactly
+        // one replica; which one is seed-stable.
+        let drained: Vec<usize> = (0..n as usize)
+            .filter(|&r| per[r].events.iter().any(|e| matches!(e.kind, FaultKind::Drain)))
+            .collect();
+        assert_eq!(drained.len(), 1, "c=0 must strike exactly one replica");
+        let again: Vec<FaultSpec> = (0..n).map(|r| spec.for_replica(r, n)).collect();
+        assert_eq!(per, again, "projection must be deterministic");
+        // Per-replica MTBF streams get distinct derived seeds.
+        let seeds: std::collections::BTreeSet<u64> = per.iter().map(|p| p.seed).collect();
+        assert_eq!(seeds.len(), n as usize);
+
+        // correlated_fraction 1 ⇒ everyone is hit.
+        spec.correlated_fraction = 1.0;
+        for r in 0..n {
+            let p = spec.for_replica(r, n);
+            assert!(
+                p.events.iter().any(|e| matches!(e.kind, FaultKind::Drain)),
+                "c=1 drain missing on replica {r}"
+            );
+            assert_eq!(p.correlated_fraction, 0.0, "projection is already resolved");
         }
     }
 }

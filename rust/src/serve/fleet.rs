@@ -1,0 +1,588 @@
+//! Multi-replica data-parallel serving: N replica engines (each a full
+//! prefill/decode pool pair running the existing [`super::scheduler`]
+//! engine) behind a pluggable load balancer, with cross-replica
+//! re-dispatch of crash losses.
+//!
+//! # Dispatch
+//!
+//! Arrivals are assigned to replicas up front, in arrival order, by the
+//! configured [`Balancer`]:
+//!
+//! * `round_robin` — a rotating counter; ignores request shape.
+//! * `least_kv_pressure` — the replica with the least *cumulative
+//!   assigned KV-token load* (Σ `prompt + output` of everything sent its
+//!   way so far). A deterministic stand-in for instantaneous-KV routing:
+//!   it balances the memory bill each replica will foot, without the
+//!   balancer needing a latency oracle of its own.
+//! * `session_affinity` — a stable hash of the request id picks the
+//!   replica, so repeat sessions land where their (future, PR-carried)
+//!   prefix KV would live; re-dispatch offsets the hash by attempt.
+//!
+//! # Re-dispatch
+//!
+//! Each replica runs with its fault spec projected through
+//! [`FaultSpec::for_replica`] and its *replica-level* retry budget zeroed:
+//! a crash victim surfaces immediately as a loss, and the fleet owns the
+//! retry budget. Losses are committed in global loss-time order through
+//! the same [`EventHeap`] that drives the engine clocks: repeatedly, the
+//! earliest crash loss with budget left is re-dispatched — once, with
+//! exponential backoff — to a balancer-chosen replica *other than* the
+//! one that lost it, and only the receiving replica is re-simulated.
+//! This is stable because an engine is causal (an arrival at time `t`
+//! cannot change anything before `t`) and every re-dispatched arrival is
+//! at or after the committed loss time: decisions already taken never
+//! invalidate. The lost instance stays in the losing replica's trace —
+//! the work it wasted there is real and stays modeled — but the
+//! request's *authoritative* outcome is wherever it was sent last.
+//! Queue-timeout losses and shed arrivals are final (re-dispatching a
+//! request that already blew its deadline would just blow it again).
+//!
+//! # Reporting
+//!
+//! The fleet aggregate [`RunStats`] sums work counters across replicas,
+//! takes maxima for peaks, uses the slowest replica's makespan as the
+//! fleet makespan, and defines availability as
+//! `1 − Σ downtime_i / (N · makespan)` — replica-hours lost over
+//! replica-hours offered (1.0 for a zero-span run). Request counters
+//! (`requests_lost`/`shed`/`retried`) count *global* requests by final
+//! outcome, not per-instance events. Per-replica stats ride along in
+//! [`ServeReport::replica_stats`]. A completed re-dispatched request
+//! keeps its original arrival time in the metrics (the user waited the
+//! whole saga) and is fault-marked. With `--trace`, every replica gets
+//! its own "replica N …" track set plus a fleet-level "redispatch"
+//! instant per committed retry.
+//!
+//! `replicas = 1` delegates to [`serve_once`] untouched — the fleet path
+//! reproduces the single-pool `ServeReport` byte for byte.
+
+use super::events::EventHeap;
+use super::metrics::{self, RequestMetrics, Slo};
+use super::scheduler::{self, Outcome, RunStats, SchedulerConfig};
+use super::workload::Request;
+use super::{serve_once, ServeReport};
+use crate::graph::inference::Simulator;
+use crate::graph::ModelConfig;
+use crate::hardware::SystemSpec;
+use crate::util::json::num;
+use crate::util::telemetry::{Recorder, ScopedRecorder};
+
+#[cfg(doc)]
+use super::fault::FaultSpec;
+
+/// Load-balancing policy assigning arrivals (and re-dispatches) to
+/// replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Balancer {
+    RoundRobin,
+    LeastKvPressure,
+    SessionAffinity,
+}
+
+impl Balancer {
+    pub fn parse(v: &str) -> Option<Balancer> {
+        match v {
+            "round_robin" | "round-robin" | "rr" => Some(Balancer::RoundRobin),
+            "least_kv_pressure" | "least-kv-pressure" | "least_kv" => {
+                Some(Balancer::LeastKvPressure)
+            }
+            "session_affinity" | "session-affinity" | "affinity" => Some(Balancer::SessionAffinity),
+            _ => None,
+        }
+    }
+
+    /// Canonical name, accepted back by [`Balancer::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Balancer::RoundRobin => "round_robin",
+            Balancer::LeastKvPressure => "least_kv_pressure",
+            Balancer::SessionAffinity => "session_affinity",
+        }
+    }
+}
+
+/// Fleet shape: how many replica engines, and how arrivals are routed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Replica count. Each replica is a full copy of the configured
+    /// system (same devices, same `SchedulerConfig`); 1 is the plain
+    /// single-pool path.
+    pub replicas: u64,
+    pub balancer: Balancer,
+}
+
+impl FleetConfig {
+    /// The degenerate single-replica fleet (balancer is irrelevant).
+    pub fn single() -> FleetConfig {
+        FleetConfig { replicas: 1, balancer: Balancer::RoundRobin }
+    }
+}
+
+/// Validate a fleet configuration the way [`scheduler::validate`] guards
+/// the single-pool path: callers evaluating user input get an error here
+/// instead of a panic from [`serve_fleet`].
+pub fn validate_fleet(
+    cfg: &SchedulerConfig,
+    device_count: u64,
+    fleet: &FleetConfig,
+    requests: &[Request],
+) -> Result<(), String> {
+    if fleet.replicas == 0 {
+        return Err("replicas must be ≥ 1".to_string());
+    }
+    if let Some(spec) = &cfg.faults {
+        if let Some(r) = spec.max_replica_target() {
+            if r >= fleet.replicas {
+                return Err(format!(
+                    "fault target replica:{r} is out of range for a {}-replica fleet",
+                    fleet.replicas
+                ));
+            }
+        }
+    }
+    // Every replica trace is a subset of the full request set, so one
+    // pass over it covers all of them.
+    scheduler::validate(cfg, device_count, requests)
+}
+
+/// 64-bit finalizer (MurmurHash3 fmix64): the stable session hash behind
+/// `session_affinity`.
+fn fmix64(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^= h >> 33;
+    h
+}
+
+/// Balancer state threaded through initial dispatch and re-dispatch.
+struct Dispatcher {
+    balancer: Balancer,
+    n: usize,
+    rr_next: u64,
+    /// Cumulative assigned KV-token load per replica (`least_kv_pressure`).
+    kv_load: Vec<u64>,
+}
+
+impl Dispatcher {
+    fn new(balancer: Balancer, n: usize) -> Dispatcher {
+        Dispatcher { balancer, n, rr_next: 0, kv_load: vec![0; n] }
+    }
+
+    /// Pick a replica for `req` (re-dispatch attempt `attempt`; 0 for
+    /// the initial assignment), avoiding the replica that just lost it.
+    fn assign(&mut self, req: &Request, attempt: u64, avoid: Option<usize>) -> usize {
+        let pick = match self.balancer {
+            Balancer::RoundRobin => {
+                let mut p = (self.rr_next % self.n as u64) as usize;
+                self.rr_next += 1;
+                if Some(p) == avoid && self.n > 1 {
+                    p = (self.rr_next % self.n as u64) as usize;
+                    self.rr_next += 1;
+                }
+                p
+            }
+            Balancer::LeastKvPressure => {
+                let mut best = None;
+                for i in 0..self.n {
+                    if Some(i) == avoid && self.n > 1 {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => self.kv_load[i] < self.kv_load[b],
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                best.expect("at least one replica to assign to")
+            }
+            Balancer::SessionAffinity => {
+                let mut p = (fmix64(req.id).wrapping_add(attempt) % self.n as u64) as usize;
+                if Some(p) == avoid && self.n > 1 {
+                    p = (p + 1) % self.n;
+                }
+                p
+            }
+        };
+        self.kv_load[pick] += req.total_tokens();
+        pick
+    }
+}
+
+/// One replica's slice of the fleet: its trace (in arrival order), the
+/// instance id of every trace entry, and the cached engine result —
+/// invalidated whenever the trace gains a re-dispatched arrival.
+#[derive(Default)]
+struct Replica {
+    trace: Vec<Request>,
+    instance: Vec<u64>,
+    result: Option<(Vec<RequestMetrics>, RunStats, Vec<Outcome>)>,
+}
+
+impl Replica {
+    fn insert(&mut self, req: Request, instance: u64) {
+        let pos = self.trace.partition_point(|r| r.arrival_s <= req.arrival_s);
+        self.trace.insert(pos, req);
+        self.instance.insert(pos, instance);
+        self.result = None;
+    }
+
+    /// Local trace index of an instance id (linear scan; traces are
+    /// simulation-sized).
+    fn local_idx(&self, instance: u64) -> Option<usize> {
+        self.instance.iter().position(|&x| x == instance)
+    }
+}
+
+/// One global request's routing state: where its live instance currently
+/// is and how much fleet retry budget it has burned.
+struct Tracked {
+    req: Request,
+    replica: usize,
+    instance: u64,
+    attempts: u64,
+}
+
+/// Serve one workload on an N-replica fleet end to end. `replicas ≤ 1`
+/// is exactly [`serve_once`]. Panics on configurations
+/// [`validate_fleet`] rejects — callers evaluating user input should
+/// validate first.
+pub fn serve_fleet(
+    sim: &Simulator,
+    sys: &SystemSpec,
+    model: &ModelConfig,
+    cfg: &SchedulerConfig,
+    fleet: &FleetConfig,
+    requests: &[Request],
+    slo: &Slo,
+) -> (ServeReport, Vec<RequestMetrics>) {
+    if fleet.replicas <= 1 {
+        return serve_once(sim, sys, model, cfg, requests, slo);
+    }
+    if let Err(e) = validate_fleet(cfg, sys.device_count, fleet, requests) {
+        panic!("{e}");
+    }
+    let n = fleet.replicas as usize;
+
+    // The fleet owns the retry budget; each replica engine surfaces
+    // crash victims immediately (max_retries = 0) under its projected
+    // fault spec.
+    let (max_retries, retry_backoff_s) = cfg
+        .faults
+        .as_ref()
+        .map(|s| (s.recovery.max_retries, s.recovery.retry_backoff_s))
+        .unwrap_or((0, 0.0));
+    let cfgs: Vec<SchedulerConfig> = (0..n)
+        .map(|r| {
+            let faults = cfg.faults.as_ref().map(|s| {
+                let mut proj = s.for_replica(r as u64, fleet.replicas);
+                proj.recovery.max_retries = 0;
+                proj
+            });
+            SchedulerConfig { faults, ..cfg.clone() }
+        })
+        .collect();
+
+    // Initial dispatch, in arrival order (the input is sorted, so every
+    // per-replica trace comes out sorted too).
+    let mut dispatcher = Dispatcher::new(fleet.balancer, n);
+    let mut replicas: Vec<Replica> = (0..n).map(|_| Replica::default()).collect();
+    let mut tracked: Vec<Tracked> = Vec::with_capacity(requests.len());
+    for (gi, r) in requests.iter().enumerate() {
+        let pick = dispatcher.assign(r, 0, None);
+        replicas[pick].trace.push(r.clone());
+        replicas[pick].instance.push(gi as u64);
+        tracked.push(Tracked { req: r.clone(), replica: pick, instance: gi as u64, attempts: 0 });
+    }
+    let mut next_instance = requests.len() as u64;
+
+    // Working runs are quiet — traces mutate during re-dispatch, so
+    // telemetry is emitted in one authoritative pass at the end.
+    let quiet = Recorder::disabled();
+    let quiet_scope = ScopedRecorder::new(&quiet, "");
+    let run = |cfg_r: &SchedulerConfig, trace: &[Request]| {
+        scheduler::simulate_scoped(sim, sys, model, cfg_r, trace, &quiet_scope)
+    };
+
+    let mut retry_tokens = 0u64;
+    // (loss time, request id) per committed re-dispatch, for telemetry.
+    let mut redispatches: Vec<(f64, u64)> = Vec::new();
+    loop {
+        for (r, rep) in replicas.iter_mut().enumerate() {
+            if rep.result.is_none() {
+                rep.result = Some(run(&cfgs[r], &rep.trace));
+            }
+        }
+        // Commit the globally earliest pending crash loss with budget
+        // left. Causality makes everything earlier than it stable, so
+        // committing one loss per pass (and re-running only the replica
+        // that receives the retry) converges deterministically.
+        let mut pending: EventHeap<usize> = EventHeap::new();
+        for (gi, tr) in tracked.iter().enumerate() {
+            if tr.attempts >= max_retries {
+                continue;
+            }
+            let rep = &replicas[tr.replica];
+            let (_, _, outcomes) = rep.result.as_ref().expect("replica result cached");
+            let Some(li) = rep.local_idx(tr.instance) else { continue };
+            if let Outcome::Lost { at_s, crash_kv: Some(_) } = outcomes[li] {
+                pending.push(at_s, 0, gi);
+            }
+        }
+        let Some((loss_at, gi)) = pending.pop() else { break };
+        let (from, crash_kv) = {
+            let tr = &tracked[gi];
+            let rep = &replicas[tr.replica];
+            let li = rep.local_idx(tr.instance).expect("live instance in its replica");
+            match rep.result.as_ref().expect("replica result cached").2[li] {
+                Outcome::Lost { crash_kv: Some(kv), .. } => (tr.replica, kv),
+                _ => unreachable!("pending loss vanished between scans"),
+            }
+        };
+        tracked[gi].attempts += 1;
+        let attempts = tracked[gi].attempts;
+        let backoff = retry_backoff_s * (1u64 << (attempts - 1).min(62)) as f64;
+        let dest = dispatcher.assign(&tracked[gi].req, attempts, Some(from));
+        let instance = next_instance;
+        next_instance += 1;
+        let req = Request { arrival_s: loss_at + backoff, ..tracked[gi].req.clone() };
+        replicas[dest].insert(req, instance);
+        tracked[gi].replica = dest;
+        tracked[gi].instance = instance;
+        retry_tokens += crash_kv;
+        redispatches.push((loss_at, tracked[gi].req.id));
+    }
+
+    // Aggregate: sum the work, max the peaks, slowest replica sets the
+    // fleet makespan.
+    let replica_stats: Vec<RunStats> =
+        replicas.iter().map(|r| r.result.as_ref().unwrap().1.clone()).collect();
+    let mut agg = RunStats::default();
+    let mut downtime_sum = 0.0;
+    for st in &replica_stats {
+        agg.prefill_iterations += st.prefill_iterations;
+        agg.decode_iterations += st.decode_iterations;
+        agg.mixed_iterations += st.mixed_iterations;
+        agg.prefill_busy_s += st.prefill_busy_s;
+        agg.decode_busy_s += st.decode_busy_s;
+        agg.mixed_busy_s += st.mixed_busy_s;
+        agg.idle_s += st.idle_s;
+        agg.peak_kv_tokens = agg.peak_kv_tokens.max(st.peak_kv_tokens);
+        agg.prefill_peak_kv_tokens = agg.prefill_peak_kv_tokens.max(st.prefill_peak_kv_tokens);
+        agg.peak_batch = agg.peak_batch.max(st.peak_batch);
+        agg.preemptions += st.preemptions;
+        agg.preempted_requests += st.preempted_requests;
+        agg.recompute_tokens += st.recompute_tokens;
+        agg.transfer_total_s += st.transfer_total_s;
+        agg.handoff_wait_s += st.handoff_wait_s;
+        agg.handoff_stall_s += st.handoff_stall_s;
+        agg.faults_injected += st.faults_injected;
+        downtime_sum += st.fault_downtime_s;
+        agg.makespan_s = agg.makespan_s.max(st.makespan_s);
+    }
+    agg.fault_downtime_s = downtime_sum;
+    // Replica-hours lost over replica-hours offered; a zero-span fleet
+    // was never unavailable.
+    agg.availability = if agg.makespan_s > 0.0 {
+        (1.0 - downtime_sum / (fleet.replicas as f64 * agg.makespan_s)).clamp(0.0, 1.0)
+    } else {
+        1.0
+    };
+
+    // Request counters by *final* outcome (per global request, not per
+    // instance — a re-dispatched-then-completed request is not lost).
+    let mut metrics_out: Vec<RequestMetrics> = Vec::new();
+    for tr in &tracked {
+        let rep = &replicas[tr.replica];
+        let (mets, _, outcomes) = rep.result.as_ref().unwrap();
+        let li = rep.local_idx(tr.instance).expect("live instance in its replica");
+        match outcomes[li] {
+            Outcome::Completed => {
+                // A replica's metrics keep one entry per completed
+                // instance, and only one instance of a request ever
+                // completes, so lookup by id is unambiguous.
+                let mut m =
+                    mets.iter().find(|m| m.id == tr.req.id).expect("completed metrics").clone();
+                if tr.attempts > 0 {
+                    // The user waited from the *original* arrival.
+                    m.arrival_s = tr.req.arrival_s;
+                    m.faulted = true;
+                }
+                metrics_out.push(m);
+            }
+            Outcome::Lost { .. } => agg.requests_lost += 1,
+            Outcome::Shed { .. } => agg.requests_shed += 1,
+        }
+    }
+    agg.requests_retried = tracked.iter().filter(|t| t.attempts > 0).count() as u64;
+    agg.retry_tokens_recomputed = retry_tokens;
+    debug_assert_eq!(
+        metrics_out.len() as u64 + agg.requests_lost + agg.requests_shed,
+        requests.len() as u64,
+        "fleet request accounting does not conserve"
+    );
+
+    // Authoritative telemetry pass: each replica's final trace once,
+    // under its own track prefix, plus fleet-level re-dispatch markers.
+    if sim.recorder.is_enabled() {
+        for (r, rep) in replicas.iter().enumerate() {
+            let scope = ScopedRecorder::new(&sim.recorder, &format!("replica {r} "));
+            let _ = scheduler::simulate_scoped(sim, sys, model, &cfgs[r], &rep.trace, &scope);
+        }
+        for &(at, id) in &redispatches {
+            sim.recorder.instant_sim("fleet", "redispatch", at, &[("req", num(id as f64))]);
+        }
+    }
+
+    let summary = metrics::summarize(&metrics_out, slo, agg.makespan_s);
+    (ServeReport { summary, stats: agg, replica_stats }, metrics_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::presets;
+    use crate::serve::fault::{FaultEvent, FaultKind, FaultSpec, FaultTarget};
+    use crate::serve::scheduler::Policy;
+    use crate::serve::workload::{generate, WorkloadSpec};
+    use crate::serve::ServeMode;
+
+    fn setup() -> (Simulator, SystemSpec, crate::graph::ModelConfig) {
+        let model = crate::graph::ModelConfig::gpt_small();
+        (Simulator::new(), presets::system("a100x2").unwrap(), model)
+    }
+
+    #[test]
+    fn balancer_names_round_trip() {
+        for b in [Balancer::RoundRobin, Balancer::LeastKvPressure, Balancer::SessionAffinity] {
+            assert_eq!(Balancer::parse(b.name()), Some(b));
+        }
+        assert_eq!(Balancer::parse("rr"), Some(Balancer::RoundRobin));
+        assert_eq!(Balancer::parse("nope"), None);
+    }
+
+    #[test]
+    fn single_replica_fleet_is_exactly_serve_once() {
+        let (sim, sys, model) = setup();
+        let reqs = generate(&WorkloadSpec::poisson(20.0, 40, 3));
+        for mode in [
+            ServeMode::Monolithic,
+            ServeMode::Chunked { chunk_tokens: 512 },
+            ServeMode::Disaggregated { prefill_devices: 1, transfer_base_s: 0.002 },
+        ] {
+            let mut cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
+            cfg.mode = mode;
+            let (single, per_single) =
+                serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
+            let (fleet, per_fleet) = serve_fleet(
+                &sim,
+                &sys,
+                &model,
+                &cfg,
+                &FleetConfig::single(),
+                &reqs,
+                &Slo::relaxed(),
+            );
+            assert_eq!(
+                single.to_json().to_string_pretty(),
+                fleet.to_json().to_string_pretty(),
+                "replicas=1 must reproduce the single-pool report byte for byte ({})",
+                mode.name()
+            );
+            assert_eq!(per_single.len(), per_fleet.len());
+        }
+    }
+
+    #[test]
+    fn fleet_splits_load_and_conserves_requests() {
+        let (sim, sys, model) = setup();
+        let cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
+        let reqs = generate(&WorkloadSpec::poisson(30.0, 60, 5));
+        for balancer in [Balancer::RoundRobin, Balancer::LeastKvPressure, Balancer::SessionAffinity]
+        {
+            let fleet = FleetConfig { replicas: 3, balancer };
+            let (report, per_req) =
+                serve_fleet(&sim, &sys, &model, &cfg, &fleet, &reqs, &Slo::relaxed());
+            assert_eq!(per_req.len(), reqs.len(), "no faults: everything completes");
+            assert_eq!(report.replica_stats.len(), 3);
+            assert_eq!(report.stats.requests_lost, 0);
+            assert_eq!(report.stats.availability, 1.0);
+            // Work landed on more than one replica.
+            let active = report
+                .replica_stats
+                .iter()
+                .filter(|s| s.decode_iterations + s.prefill_iterations > 0)
+                .count();
+            assert!(active >= 2, "{balancer:?} routed everything to one replica");
+            // The report carries the per-replica stats only for fleets.
+            let j = report.to_json();
+            assert!(j.get("replicas").is_some());
+        }
+    }
+
+    #[test]
+    fn replica_crash_redispatches_to_survivors() {
+        let (sim, sys, model) = setup();
+        let mut cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
+        let mut spec = FaultSpec::none();
+        // Replica 1 crashes mid-trace, once decode queues have built up;
+        // retries land elsewhere.
+        spec.events.push(FaultEvent {
+            kind: FaultKind::Crash,
+            at_s: 0.5,
+            duration_s: 5.0,
+            target: FaultTarget::Replica(1),
+        });
+        spec.recovery.max_retries = 2;
+        spec.recovery.retry_backoff_s = 0.05;
+        cfg.faults = Some(spec);
+        let reqs = generate(&WorkloadSpec::poisson(40.0, 60, 9));
+        let fleet = FleetConfig { replicas: 3, balancer: Balancer::RoundRobin };
+        let (report, per_req) =
+            serve_fleet(&sim, &sys, &model, &cfg, &fleet, &reqs, &Slo::relaxed());
+        let stats = &report.stats;
+        assert_eq!(
+            per_req.len() as u64 + stats.requests_lost + stats.requests_shed,
+            reqs.len() as u64,
+            "conservation"
+        );
+        assert!(stats.requests_retried > 0, "the crash re-dispatched nobody");
+        assert!(stats.retry_tokens_recomputed > 0);
+        assert!(stats.availability < 1.0, "a replica outage must dent availability");
+        assert!(stats.availability > 0.0, "two of three replicas stayed up");
+        assert!(
+            per_req.iter().any(|m| m.faulted),
+            "re-dispatched completions carry the fault mark"
+        );
+        // Determinism: the whole pipeline replays bit for bit.
+        let (replay, _) = serve_fleet(&sim, &sys, &model, &cfg, &fleet, &reqs, &Slo::relaxed());
+        assert_eq!(
+            report.to_json().to_string_pretty(),
+            replay.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn validate_fleet_rejects_bad_shapes() {
+        let (_, sys, model) = setup();
+        let cfg = SchedulerConfig::for_system(&sys, &model, Policy::Fcfs);
+        let fleet = FleetConfig { replicas: 0, balancer: Balancer::RoundRobin };
+        assert!(validate_fleet(&cfg, sys.device_count, &fleet, &[]).is_err());
+        // A replica target beyond the fleet size is a config error.
+        let mut faulty = cfg.clone();
+        let mut spec = FaultSpec::none();
+        spec.events.push(FaultEvent {
+            kind: FaultKind::Crash,
+            at_s: 1.0,
+            duration_s: 1.0,
+            target: FaultTarget::Replica(7),
+        });
+        faulty.faults = Some(spec);
+        let fleet = FleetConfig { replicas: 4, balancer: Balancer::RoundRobin };
+        let err = validate_fleet(&faulty, sys.device_count, &fleet, &[]).unwrap_err();
+        assert!(err.contains("replica:7"), "unhelpful error: {err}");
+        assert!(validate_fleet(&cfg, sys.device_count, &fleet, &[]).is_ok());
+    }
+}

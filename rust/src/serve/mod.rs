@@ -24,28 +24,39 @@
 //!   slowdown / link degradation) plus the recovery policy (bounded retry
 //!   with backoff, timeouts, admission shedding, degraded chunk sizes)
 //!   that turns best-case serving numbers into under-fault numbers.
+//! * [`events`] — the deterministic global event heap (`(time, priority,
+//!   seq)` min-order via `total_cmp`) shared by the engine clocks and the
+//!   fleet re-dispatch loop.
+//! * [`fleet`] — multi-replica data-parallel serving: N replica engines
+//!   behind a pluggable load balancer ([`Balancer`]) with cross-replica
+//!   re-dispatch of crash losses, per-replica fault targeting
+//!   (`replica:<i>` + `correlated_fraction`), and fleet-aggregate
+//!   reporting.
 //! * [`metrics`] — per-request timelines, percentile aggregation, and
 //!   SLO goodput.
 //! * [`sweep`] — the SLO-aware cost sweep reporting $/1M-tokens-at-SLO
 //!   across hardware presets *and* scheduler modes (the Table IV
-//!   comparison, under traffic).
+//!   comparison, under traffic), optionally across fleet sizes.
 //!
 //! Everything is deterministic in the workload seed, and the quantizing
 //! oracle keeps mapper work bounded, so thousand-request traces of
 //! GPT-3-class models simulate in seconds.
 
+pub mod events;
 pub mod fault;
+pub mod fleet;
 pub mod metrics;
 pub mod scheduler;
 pub mod sweep;
 pub mod workload;
 
 pub use fault::{FaultEvent, FaultKind, FaultSpec, FaultTarget, RecoveryPolicy};
+pub use fleet::{serve_fleet, validate_fleet, Balancer, FleetConfig};
 pub use metrics::{RequestMetrics, Slo, Summary};
 pub use scheduler::{
     kv_capacity_tokens, IterOracle, Policy, Preemption, RunStats, SchedulerConfig, ServeMode,
 };
-pub use workload::{Arrival, LengthDist, Request, WorkloadSpec};
+pub use workload::{Arrival, Diurnal, FlashCrowd, LengthDist, Request, WorkloadSpec};
 
 use crate::graph::inference::Simulator;
 use crate::graph::ModelConfig;
@@ -59,13 +70,22 @@ use crate::hardware::SystemSpec;
 pub struct ServeReport {
     pub summary: Summary,
     pub stats: RunStats,
+    /// Per-replica stats when the run came from [`serve_fleet`] with
+    /// `replicas > 1`; empty for single-pool runs (and omitted from the
+    /// JSON, keeping the legacy report byte-identical).
+    pub replica_stats: Vec<RunStats>,
 }
 
 impl ServeReport {
     /// Stable JSON rendering (part of the `eval` report schema).
     pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::obj;
-        obj(vec![("summary", self.summary.to_json()), ("stats", self.stats.to_json())])
+        use crate::util::json::{obj, Json};
+        let mut fields = vec![("summary", self.summary.to_json()), ("stats", self.stats.to_json())];
+        if !self.replica_stats.is_empty() {
+            let per = self.replica_stats.iter().map(|s| s.to_json()).collect();
+            fields.push(("replicas", Json::Arr(per)));
+        }
+        obj(fields)
     }
 }
 
@@ -82,7 +102,7 @@ pub fn serve_once(
 ) -> (ServeReport, Vec<RequestMetrics>) {
     let (per_req, stats) = scheduler::simulate(sim, sys, model, cfg, requests);
     let summary = metrics::summarize(&per_req, slo, stats.makespan_s);
-    (ServeReport { summary, stats }, per_req)
+    (ServeReport { summary, stats, replica_stats: vec![] }, per_req)
 }
 
 #[cfg(test)]

@@ -43,6 +43,7 @@
 //! iteration latencies, transfer completions, or idle gaps to the next
 //! arrival.
 
+use super::events::EventHeap;
 use super::fault::{FaultSpec, Faults, RecoveryPolicy, POOL_DECODE, POOL_PREFILL};
 use super::metrics::RequestMetrics;
 use super::workload::Request;
@@ -50,7 +51,7 @@ use crate::graph::inference::Simulator;
 use crate::graph::ModelConfig;
 use crate::hardware::SystemSpec;
 use crate::util::json::num;
-use crate::util::telemetry::Recorder;
+use crate::util::telemetry::ScopedRecorder;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -487,6 +488,22 @@ impl RunStats {
     }
 }
 
+/// How one request ended, as seen by the engine that ran it. The fleet
+/// layer consumes these to decide which losses to re-dispatch to a
+/// surviving replica; the public [`simulate`] entry point discards them
+/// (its per-request story is told by which [`RequestMetrics`] survive).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Outcome {
+    /// Generated all its tokens.
+    Completed,
+    /// Dropped for good at `at_s`. `crash_kv` is `Some(kv_built)` when a
+    /// crash killed it (the KV tokens it had built, i.e. what a re-dispatch
+    /// must re-prefill); `None` when it exceeded the queue timeout.
+    Lost { at_s: f64, crash_kv: Option<u64> },
+    /// Refused at arrival by admission shedding.
+    Shed { at_s: f64 },
+}
+
 /// One request in flight on the decode side.
 struct Running {
     idx: usize,
@@ -511,8 +528,10 @@ struct RunState<'a> {
     requests: &'a [Request],
     /// Telemetry recorder (no-op when disabled). Lifecycle spans and
     /// preemption instants are emitted here so all three engines share
-    /// one instrumentation vocabulary.
-    rec: &'a Recorder,
+    /// one instrumentation vocabulary. Scoped so a fleet replica's
+    /// tracks carry a "replica N " prefix; single-pool runs use an
+    /// empty prefix (byte-identical to recording directly).
+    rec: &'a ScopedRecorder<'a>,
     metrics: Vec<RequestMetrics>,
     stats: RunStats,
     /// Tokens generated so far per request (survives preemption).
@@ -533,14 +552,25 @@ struct RunState<'a> {
     retries: Vec<u64>,
     /// Dropped for good: retry budget exhausted or queue timeout.
     lost: Vec<bool>,
+    /// When the request was lost (NaN while not lost), and the KV it had
+    /// built if a crash (rather than a timeout) killed it — the fleet
+    /// layer re-dispatches crash losses and bills the rebuilt KV.
+    lost_at: Vec<f64>,
+    lost_crash_kv: Vec<Option<u64>>,
     /// Refused at arrival by admission shedding.
     shed: Vec<bool>,
+    /// When the request was shed (NaN while not shed).
+    shed_at: Vec<f64>,
     /// `lost.count(true) + shed.count(true)` — settled-without-finishing.
     lost_or_shed: usize,
 }
 
 impl<'a> RunState<'a> {
-    fn new(cfg: &'a SchedulerConfig, requests: &'a [Request], rec: &'a Recorder) -> Self {
+    fn new(
+        cfg: &'a SchedulerConfig,
+        requests: &'a [Request],
+        rec: &'a ScopedRecorder<'a>,
+    ) -> Self {
         let metrics = requests
             .iter()
             .map(|r| RequestMetrics {
@@ -567,7 +597,10 @@ impl<'a> RunState<'a> {
             serial: 0,
             retries: vec![0; requests.len()],
             lost: vec![false; requests.len()],
+            lost_at: vec![f64::NAN; requests.len()],
+            lost_crash_kv: vec![None; requests.len()],
             shed: vec![false; requests.len()],
+            shed_at: vec![f64::NAN; requests.len()],
             lost_or_shed: 0,
         }
     }
@@ -739,6 +772,8 @@ impl<'a> RunState<'a> {
             retry_q.push((ready, i));
         } else {
             self.lost[i] = true;
+            self.lost_at[i] = t;
+            self.lost_crash_kv[i] = Some(kv_built);
             self.lost_or_shed += 1;
             self.stats.requests_lost += 1;
             if self.rec.is_enabled() {
@@ -750,6 +785,7 @@ impl<'a> RunState<'a> {
     /// Admission shedding refused fresh arrival `i` at time `t`.
     fn shed_request(&mut self, i: usize, t: f64) {
         self.shed[i] = true;
+        self.shed_at[i] = t;
         self.lost_or_shed += 1;
         self.stats.requests_shed += 1;
         if self.rec.is_enabled() {
@@ -760,6 +796,7 @@ impl<'a> RunState<'a> {
     /// Request `i` exceeded the recovery policy's queue deadline at `t`.
     fn lose_to_timeout(&mut self, i: usize, t: f64) {
         self.lost[i] = true;
+        self.lost_at[i] = t;
         self.lost_or_shed += 1;
         self.stats.requests_lost += 1;
         if self.rec.is_enabled() {
@@ -769,12 +806,16 @@ impl<'a> RunState<'a> {
 
     /// Close out fault accounting against the final makespan and build
     /// the report: lost/shed requests are dropped from the metrics (they
-    /// produced no tokens) and live on only in the stats counters.
-    fn into_results(self, f: &mut Faults) -> (Vec<RequestMetrics>, RunStats) {
+    /// produced no tokens) and live on only in the stats counters and
+    /// the per-request [`Outcome`] list (in input order).
+    fn into_results(self, f: &mut Faults) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
         let mut stats = self.stats;
         let makespan = stats.makespan_s;
         stats.faults_injected = f.injected_count(makespan);
         stats.fault_downtime_s = f.downtime_in(makespan);
+        // A zero-span run (no requests, or nothing ever started) had no
+        // window to be unavailable in: report availability 1.0, never
+        // 0/0 = NaN.
         stats.availability = if makespan > 0.0 {
             ((makespan - stats.fault_downtime_s) / makespan).max(0.0)
         } else {
@@ -785,6 +826,17 @@ impl<'a> RunState<'a> {
             self.requests.len(),
             "request accounting does not conserve"
         );
+        let outcomes = (0..self.requests.len())
+            .map(|i| {
+                if self.lost[i] {
+                    Outcome::Lost { at_s: self.lost_at[i], crash_kv: self.lost_crash_kv[i] }
+                } else if self.shed[i] {
+                    Outcome::Shed { at_s: self.shed_at[i] }
+                } else {
+                    Outcome::Completed
+                }
+            })
+            .collect();
         let metrics = self
             .metrics
             .into_iter()
@@ -792,7 +844,7 @@ impl<'a> RunState<'a> {
             .filter(|(_, (&l, &s))| !l && !s)
             .map(|(m, _)| m)
             .collect();
-        (metrics, stats)
+        (metrics, stats, outcomes)
     }
 }
 
@@ -930,22 +982,41 @@ pub fn simulate(
     cfg: &SchedulerConfig,
     requests: &[Request],
 ) -> (Vec<RequestMetrics>, RunStats) {
+    let rec = ScopedRecorder::new(&sim.recorder, "");
+    let (metrics, stats, _) = simulate_scoped(sim, sys, model, cfg, requests, &rec);
+    (metrics, stats)
+}
+
+/// [`simulate`] with an explicit (possibly track-prefixed) recorder, also
+/// returning each request's [`Outcome`]. The fleet layer runs replica
+/// engines through here: probe runs against a disabled recorder, the
+/// final authoritative pass against the real one under a "replica N "
+/// prefix. `simulate` itself is this with the simulator's own recorder
+/// and an empty prefix.
+pub(crate) fn simulate_scoped(
+    sim: &Simulator,
+    sys: &SystemSpec,
+    model: &ModelConfig,
+    cfg: &SchedulerConfig,
+    requests: &[Request],
+    rec: &ScopedRecorder<'_>,
+) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
     if let Err(e) = validate(cfg, sys.device_count, requests) {
         panic!("{e}");
     }
     let mode = cfg.mode.resolved(sys.device_count).unwrap();
-    let rec: &Recorder = &sim.recorder;
     // Scheduled fault windows go on their own trace track up front; MTBF
     // crashes are emitted as they land (they are generated lazily).
     if rec.is_enabled() {
         if let Some(spec) = &cfg.faults {
             for e in &spec.events {
+                let target_name = e.target.name();
                 rec.span_sim(
                     "faults",
                     e.kind.name(),
                     e.at_s,
                     e.at_s + e.duration_s,
-                    &[("target", crate::util::json::s(e.target.name()))],
+                    &[("target", crate::util::json::s(&target_name))],
                 );
             }
         }
@@ -967,6 +1038,7 @@ pub fn simulate(
             requests,
             prefill_devices,
             transfer_base_s,
+            rec,
         ),
     }
 }
@@ -984,8 +1056,8 @@ fn run_monolithic(
     oracle: &IterOracle<'_>,
     cfg: &SchedulerConfig,
     requests: &[Request],
-    rec: &Recorder,
-) -> (Vec<RequestMetrics>, RunStats) {
+    rec: &ScopedRecorder<'_>,
+) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
     let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
     let mut f = Faults::new(&spec, true);
     let mut retry_q: Vec<(f64, usize)> = Vec::new();
@@ -1203,8 +1275,8 @@ fn run_chunked(
     cfg: &SchedulerConfig,
     requests: &[Request],
     chunk_tokens: u64,
-    rec: &Recorder,
-) -> (Vec<RequestMetrics>, RunStats) {
+    rec: &ScopedRecorder<'_>,
+) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
     let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
     let mut f = Faults::new(&spec, true);
     let mut retry_q: Vec<(f64, usize)> = Vec::new();
@@ -1506,6 +1578,20 @@ fn default_handoff_capacity(dec_cap: u64, requests: &[Request]) -> u64 {
     (dec_cap / mean).max(1)
 }
 
+/// Which pool a scheduled event wakes. Prefill carries the lower event
+/// priority so a time tie pops the prefill pool first — the same pick the
+/// two-clock `if next_prefill_work <= next_decode_work` comparison made
+/// before the event heap existed (byte-identity depends on it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum PoolStep {
+    Prefill,
+    Decode,
+}
+
+const PRIO_PREFILL: u8 = 0;
+const PRIO_DECODE: u8 = 1;
+
+#[allow(clippy::too_many_arguments)]
 fn run_disaggregated(
     sim: &Simulator,
     sys: &SystemSpec,
@@ -1514,7 +1600,8 @@ fn run_disaggregated(
     requests: &[Request],
     prefill_devices: u64,
     transfer_base_s: f64,
-) -> (Vec<RequestMetrics>, RunStats) {
+    rec: &ScopedRecorder<'_>,
+) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
     let sys_p = sub_system(sys, prefill_devices);
     let sys_d = sub_system(sys, sys.device_count - prefill_devices);
     let oracle_p = IterOracle::new(sim, &sys_p, model);
@@ -1534,11 +1621,14 @@ fn run_disaggregated(
         .unwrap_or_else(|| default_handoff_capacity(dec_cap, requests))
         .max(1);
 
-    let rec: &Recorder = &sim.recorder;
     let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
     // Two pools: `prefill`/`decode` fault targets strike one of them,
     // `all` (and every MTBF crash) strikes both.
     let mut f = Faults::new(&spec, false);
+    // The global event heap orders the two pool clocks: each pass
+    // schedules both pools' next useful-work times and pops the earliest
+    // (prefill priority wins ties, as the old clock comparison did).
+    let mut events: EventHeap<PoolStep> = EventHeap::new();
     let mut retry_q: Vec<(f64, usize)> = Vec::new();
     let mut state = RunState::new(cfg, requests, rec);
     // Prefill side. Preempted requests carry the decode-pool time they
@@ -1605,12 +1695,20 @@ fn run_disaggregated(
                 base
             }
         };
-        if !next_prefill_work.is_finite() && !next_decode_work.is_finite() {
+        events.clear();
+        if next_prefill_work.is_finite() {
+            events.push(next_prefill_work, PRIO_PREFILL, PoolStep::Prefill);
+        }
+        if next_decode_work.is_finite() {
+            events.push(next_decode_work, PRIO_DECODE, PoolStep::Decode);
+        }
+        let Some((_, step)) = events.pop() else {
+            // Neither pool will ever have work again.
             debug_assert!(state.settled() == requests.len(), "stalled with work remaining");
             break;
-        }
+        };
 
-        if next_prefill_work <= next_decode_work {
+        if step == PoolStep::Prefill {
             // ---- Prefill-pool step ----
             t_p = next_prefill_work;
             while next_arrival < requests.len() && requests[next_arrival].arrival_s <= t_p {
@@ -1717,9 +1815,7 @@ fn run_disaggregated(
                     None => last_finish = last_finish.max(t_p),
                 }
             }
-            handoff.sort_by(|a, b| {
-                a.ready_at.partial_cmp(&b.ready_at).unwrap().then(a.serial.cmp(&b.serial))
-            });
+            handoff.sort_by(|a, b| a.ready_at.total_cmp(&b.ready_at).then(a.serial.cmp(&b.serial)));
         } else {
             // ---- Decode-pool step ----
             if next_decode_work > t_d {
@@ -2226,6 +2322,59 @@ mod tests {
 
     fn event(kind: FaultKind, at_s: f64, duration_s: f64) -> FaultEvent {
         FaultEvent { kind, at_s, duration_s, target: FaultTarget::All }
+    }
+
+    #[test]
+    fn empty_workload_reports_full_availability_in_all_modes() {
+        // Regression: a zero-request run has makespan 0; availability must
+        // come out 1.0 (never 0/0 = NaN or a spurious 0.0).
+        let sim = Simulator::new();
+        let sys = presets::system("a100x2").unwrap();
+        let model = ModelConfig::gpt_small();
+        for mode in all_modes() {
+            let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+            cfg.mode = mode;
+            let (metrics, stats) = simulate(&sim, &sys, &model, &cfg, &[]);
+            assert!(metrics.is_empty());
+            assert_eq!(stats.makespan_s, 0.0);
+            assert_eq!(stats.availability, 1.0, "zero-span run must be fully available");
+            assert_eq!(stats.fault_downtime_s, 0.0);
+        }
+        // Even with scheduled fault windows on the books: no requests ⇒
+        // no span for the outage to overlap.
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        let mut spec = FaultSpec::none();
+        spec.events.push(event(FaultKind::Crash, 1.0, 5.0));
+        cfg.faults = Some(spec);
+        let (_, stats) = simulate(&sim, &sys, &model, &cfg, &[]);
+        assert_eq!(stats.availability, 1.0);
+        assert!(stats.availability.is_finite());
+    }
+
+    #[test]
+    fn all_requests_lost_still_reports_finite_availability() {
+        // Regression companion: when a crash wipes out every request the
+        // run still has a positive makespan and a well-defined (< 1.0)
+        // availability — nothing divides by zero or goes NaN.
+        let sim = Simulator::new();
+        let sys = presets::system("a100x2").unwrap();
+        let model = ModelConfig::gpt_small();
+        let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
+        let mut spec = FaultSpec::none();
+        spec.events.push(event(FaultKind::Crash, 0.05, 2.0));
+        spec.recovery.max_retries = 0;
+        spec.recovery.request_timeout_s = Some(0.5);
+        cfg.faults = Some(spec);
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 64, output_tokens: 400 })
+            .collect();
+        let (metrics, stats) = simulate(&sim, &sys, &model, &cfg, &reqs);
+        assert!(metrics.is_empty(), "every request should be lost");
+        assert_eq!(stats.requests_lost, reqs.len() as u64);
+        assert!(stats.makespan_s > 0.0);
+        assert!(stats.availability.is_finite());
+        assert!(stats.availability < 1.0, "downtime overlapped the whole run");
+        assert!(stats.availability >= 0.0);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! prefill vs. disaggregated pools on identical hardware and traffic.
 
 use super::fault::{FaultSpec, DEFAULT_MTTR_S};
+use super::fleet::{serve_fleet, validate_fleet, Balancer, FleetConfig};
 use super::metrics::{Slo, Summary};
 use super::scheduler::{Policy, Preemption, SchedulerConfig, ServeMode};
 use super::workload::{generate, WorkloadSpec};
@@ -62,6 +63,10 @@ pub struct SweepConfig {
     pub fault_mtbf_hours: Vec<f64>,
     /// Downtime per MTBF-generated crash, seconds.
     pub fault_mttr_s: f64,
+    /// Fleet-size axis: replica counts to sweep (round-robin balanced;
+    /// each replica is a full copy of the system, so the cluster cost
+    /// scales with it). `vec![1]` is the single-engine sweep.
+    pub fleet_sizes: Vec<u64>,
 }
 
 impl SweepConfig {
@@ -85,6 +90,7 @@ impl SweepConfig {
             seed: 42,
             fault_mtbf_hours: Vec::new(),
             fault_mttr_s: DEFAULT_MTTR_S,
+            fleet_sizes: vec![1],
         }
     }
 
@@ -107,6 +113,7 @@ impl SweepConfig {
             seed: 42,
             fault_mtbf_hours: Vec::new(),
             fault_mttr_s: DEFAULT_MTTR_S,
+            fleet_sizes: vec![1],
         }
     }
 }
@@ -128,6 +135,8 @@ pub struct SweepRow {
     /// MTBF of this point's crash process, hours; `None` for the
     /// fault-free point.
     pub mtbf_hours: Option<f64>,
+    /// Data-parallel replica count of this point (1: single engine).
+    pub replicas: u64,
     /// Fraction of the makespan with every pool up (1.0 fault-free).
     pub availability: f64,
     /// Requests dropped for good at this point (crashes past the retry
@@ -167,39 +176,48 @@ pub fn run_sweep(
             // seeded MTBF crash process per requested value.
             let mut fault_points: Vec<Option<f64>> = vec![None];
             fault_points.extend(cfg.fault_mtbf_hours.iter().map(|&h| Some(h)));
-            for &rate in &cfg.rates {
-                // Same seed across systems, modes, and rates: identical
-                // request lengths, only the arrival spacing scales.
-                let requests = generate(&WorkloadSpec::poisson(rate, cfg.requests, cfg.seed));
-                for &mtbf_hours in &fault_points {
-                    sched.faults = match mtbf_hours {
-                        None => None,
-                        Some(h) => {
-                            if !(h > 0.0) || !h.is_finite() {
-                                return Err(format!(
-                                    "sweep fault MTBF must be finite and > 0 hours, got {h}"
-                                ));
+            for &replicas in &cfg.fleet_sizes {
+                if replicas == 0 {
+                    return Err("sweep fleet_sizes entries must be ≥ 1".to_string());
+                }
+                let fleet = FleetConfig { replicas, balancer: Balancer::RoundRobin };
+                // A fleet buys the whole cluster once per replica.
+                let fleet_cost_usd = cluster_cost_usd * replicas as f64;
+                for &rate in &cfg.rates {
+                    // Same seed across systems, modes, and rates: identical
+                    // request lengths, only the arrival spacing scales.
+                    let requests = generate(&WorkloadSpec::poisson(rate, cfg.requests, cfg.seed));
+                    for &mtbf_hours in &fault_points {
+                        sched.faults = match mtbf_hours {
+                            None => None,
+                            Some(h) => {
+                                if !(h > 0.0) || !h.is_finite() {
+                                    return Err(format!(
+                                        "sweep fault MTBF must be finite and > 0 hours, got {h}"
+                                    ));
+                                }
+                                Some(FaultSpec::mtbf(cfg.seed, h * 3600.0, cfg.fault_mttr_s))
                             }
-                            Some(FaultSpec::mtbf(cfg.seed, h * 3600.0, cfg.fault_mttr_s))
-                        }
-                    };
-                    super::scheduler::validate(&sched, sys.device_count, &requests)?;
-                    let (report, _) =
-                        super::serve_once(sim, &sys, model, &sched, &requests, &cfg.slo);
-                    let usd_per_mtok =
-                        usd_per_mtok_at_slo(cluster_cost_usd, report.summary.goodput_tok_s);
-                    rows.push(SweepRow {
-                        system: name.clone(),
-                        mode: resolved.name(),
-                        rate_per_s: rate,
-                        cluster_cost_usd,
-                        summary: report.summary,
-                        preemptions: report.stats.preemptions,
-                        usd_per_mtok,
-                        mtbf_hours,
-                        availability: report.stats.availability,
-                        requests_lost: report.stats.requests_lost,
-                    });
+                        };
+                        validate_fleet(&sched, sys.device_count, &fleet, &requests)?;
+                        let (report, _) =
+                            serve_fleet(sim, &sys, model, &sched, &fleet, &requests, &cfg.slo);
+                        let usd_per_mtok =
+                            usd_per_mtok_at_slo(fleet_cost_usd, report.summary.goodput_tok_s);
+                        rows.push(SweepRow {
+                            system: name.clone(),
+                            mode: resolved.name(),
+                            rate_per_s: rate,
+                            cluster_cost_usd: fleet_cost_usd,
+                            summary: report.summary,
+                            preemptions: report.stats.preemptions,
+                            usd_per_mtok,
+                            mtbf_hours,
+                            replicas,
+                            availability: report.stats.availability,
+                            requests_lost: report.stats.requests_lost,
+                        });
+                    }
                 }
             }
         }
@@ -207,13 +225,15 @@ pub fn run_sweep(
     Ok(rows)
 }
 
-/// Best (cheapest $/1M-tokens-at-SLO) row per (system, mode, MTBF point),
-/// preserving the sweep's order. Fault-free and each MTBF value group
-/// separately, so the under-fault economics never hide behind the
-/// best-case row.
+/// Best (cheapest $/1M-tokens-at-SLO) row per (system, mode, fleet size,
+/// MTBF point), preserving the sweep's order. Fault-free and each MTBF
+/// value group separately, so the under-fault economics never hide behind
+/// the best-case row; fleet sizes likewise, so the sweep surfaces the
+/// cost of buying N clusters rather than silently preferring one.
 pub fn best_per_system(rows: &[SweepRow]) -> Vec<&SweepRow> {
-    let key = |r: &SweepRow| (r.system.clone(), r.mode, r.mtbf_hours.map(f64::to_bits));
-    let mut order: Vec<(String, &str, Option<u64>)> = Vec::new();
+    let key =
+        |r: &SweepRow| (r.system.clone(), r.mode, r.replicas, r.mtbf_hours.map(f64::to_bits));
+    let mut order: Vec<(String, &str, u64, Option<u64>)> = Vec::new();
     for r in rows {
         if !order.contains(&key(r)) {
             order.push(key(r));
@@ -224,7 +244,10 @@ pub fn best_per_system(rows: &[SweepRow]) -> Vec<&SweepRow> {
         .map(|k| {
             rows.iter()
                 .filter(|r| key(r) == k)
-                .min_by(|a, b| a.usd_per_mtok.partial_cmp(&b.usd_per_mtok).unwrap())
+                // total_cmp: rows where nothing met the SLO carry an
+                // infinite (or, before the summarize guards, NaN) price —
+                // ordering must not panic on them.
+                .min_by(|a, b| a.usd_per_mtok.total_cmp(&b.usd_per_mtok))
                 .unwrap()
         })
         .collect()
@@ -246,6 +269,7 @@ mod tests {
             seed: 3,
             fault_mtbf_hours: Vec::new(),
             fault_mttr_s: DEFAULT_MTTR_S,
+            fleet_sizes: vec![1],
         }
     }
 
@@ -319,6 +343,32 @@ mod tests {
             rows[1].summary.goodput_tok_s.to_bits(),
             again[1].summary.goodput_tok_s.to_bits()
         );
+    }
+
+    #[test]
+    fn fleet_axis_adds_rows_and_scales_cost() {
+        let sim = Simulator::new();
+        let mut cfg = quick_cfg();
+        cfg.systems = vec!["ga100".into()];
+        cfg.rates = vec![40.0];
+        cfg.fleet_sizes = vec![1, 2];
+        let rows = run_sweep(&sim, &ModelConfig::gpt_small(), &cfg).unwrap();
+        assert_eq!(rows.len(), 2, "one rate × two fleet sizes");
+        let (single, fleet) = (&rows[0], &rows[1]);
+        assert_eq!(single.replicas, 1);
+        assert_eq!(fleet.replicas, 2);
+        assert!(
+            (fleet.cluster_cost_usd - 2.0 * single.cluster_cost_usd).abs() < 1e-9,
+            "two replicas cost two clusters"
+        );
+        // Same traffic either way; the fleet just splits it.
+        assert_eq!(single.summary.requests, fleet.summary.requests);
+        assert_eq!(single.summary.output_tokens, fleet.summary.output_tokens);
+        // Fleet sizes group separately in the best-per-system view.
+        assert_eq!(best_per_system(&rows).len(), 2);
+        // Zero is a config error, not a hang.
+        cfg.fleet_sizes = vec![0];
+        assert!(run_sweep(&sim, &ModelConfig::gpt_small(), &cfg).is_err());
     }
 
     #[test]

@@ -78,6 +78,25 @@ impl LengthDist {
     }
 }
 
+/// Smooth day/night swing of the arrival rate: a raised-cosine cycle of
+/// `period_s` seconds that multiplies the base rate by 1.0 at the trough
+/// (t = 0) and by `peak_multiplier` at the crest (t = period/2). Composes
+/// multiplicatively with the base process and with [`FlashCrowd`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Diurnal {
+    pub period_s: f64,
+    pub peak_multiplier: f64,
+}
+
+/// A one-off traffic spike (launch event, viral moment): the arrival rate
+/// is multiplied by `multiplier` inside `[at_s, at_s + duration_s)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlashCrowd {
+    pub at_s: f64,
+    pub duration_s: f64,
+    pub multiplier: f64,
+}
+
 /// A complete workload specification.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
@@ -86,6 +105,10 @@ pub struct WorkloadSpec {
     pub output: LengthDist,
     pub requests: usize,
     pub seed: u64,
+    /// Optional diurnal rate modulation on top of the base process.
+    pub diurnal: Option<Diurnal>,
+    /// Optional flash-crowd spike on top of the base process.
+    pub flash_crowd: Option<FlashCrowd>,
 }
 
 impl WorkloadSpec {
@@ -98,7 +121,25 @@ impl WorkloadSpec {
             output: LengthDist::Skewed { max: 512 },
             requests,
             seed,
+            diurnal: None,
+            flash_crowd: None,
         }
+    }
+
+    /// Rate multiplier contributed by diurnal/flash-crowd modulation at
+    /// trace time `t` (1.0 when no modulation is configured).
+    pub fn rate_multiplier_at(&self, t: f64) -> f64 {
+        let mut m = 1.0;
+        if let Some(d) = self.diurnal {
+            let phase = t / d.period_s.max(1e-9) * std::f64::consts::TAU;
+            m *= 1.0 + (d.peak_multiplier.max(1.0) - 1.0) * 0.5 * (1.0 - phase.cos());
+        }
+        if let Some(f) = self.flash_crowd {
+            if t >= f.at_s && t < f.at_s + f.duration_s {
+                m *= f.multiplier.max(1.0);
+            }
+        }
+        m
     }
 }
 
@@ -126,6 +167,15 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<Request> {
             }
         };
         assert!(rate > 0.0, "arrival rate must be positive");
+        // Diurnal/flash modulation: piecewise-constant approximation — the
+        // effective rate is evaluated at the previous arrival's timestamp,
+        // so the no-modulation path stays bit-identical to older traces
+        // (no extra RNG draws, no multiply by 1.0).
+        let rate = if spec.diurnal.is_some() || spec.flash_crowd.is_some() {
+            rate * spec.rate_multiplier_at(t)
+        } else {
+            rate
+        };
         // Exponential inter-arrival gap: −ln(1−u)/λ, u ∈ [0,1).
         t += -(1.0 - rng.f64()).ln() / rate;
         out.push(Request {
@@ -173,7 +223,7 @@ pub fn parse_trace(text: &str) -> Result<Vec<Request>, String> {
         }
         out.push(Request { id: 0, arrival_s, prompt_tokens, output_tokens });
     }
-    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     for (i, r) in out.iter_mut().enumerate() {
         r.id = i as u64;
     }
@@ -230,6 +280,62 @@ mod tests {
         let cv_b = cv(&gaps(&bursty));
         assert!((cv_p - 1.0).abs() < 0.15, "poisson CV {cv_p:.2}");
         assert!(cv_b > cv_p, "bursty CV {cv_b:.2} vs poisson {cv_p:.2}");
+    }
+
+    #[test]
+    fn diurnal_modulation_concentrates_arrivals_near_the_crest() {
+        let base = WorkloadSpec::poisson(4.0, 4000, 9);
+        let period = 100.0;
+        let spec = WorkloadSpec {
+            diurnal: Some(Diurnal { period_s: period, peak_multiplier: 8.0 }),
+            ..base.clone()
+        };
+        let flat = generate(&base);
+        let waved = generate(&spec);
+        // The unmodulated path is untouched by the (None, None) fields.
+        assert_eq!(flat, generate(&WorkloadSpec { diurnal: None, ..base.clone() }));
+        assert_ne!(flat, waved);
+        // Crest half of each cycle ([P/4, 3P/4), cosine minimum at P/2)
+        // must hold clearly more arrivals than the trough half.
+        let (mut crest, mut trough) = (0usize, 0usize);
+        for r in &waved {
+            let phase = (r.arrival_s / period).fract();
+            if (0.25..0.75).contains(&phase) {
+                crest += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            crest as f64 > trough as f64 * 2.0,
+            "diurnal peak 8x left crest/trough at {crest}/{trough}"
+        );
+        // Multiplier is exact at the landmarks: 1.0 at trough, peak at crest.
+        assert!((spec.rate_multiplier_at(0.0) - 1.0).abs() < 1e-9);
+        assert!((spec.rate_multiplier_at(period / 2.0) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flash_crowd_spikes_local_density() {
+        let base = WorkloadSpec::poisson(2.0, 2000, 21);
+        let spec = WorkloadSpec {
+            flash_crowd: Some(FlashCrowd { at_s: 50.0, duration_s: 20.0, multiplier: 10.0 }),
+            ..base
+        };
+        let reqs = generate(&spec);
+        let count_in = |lo: f64, hi: f64| {
+            reqs.iter().filter(|r| r.arrival_s >= lo && r.arrival_s < hi).count()
+        };
+        let inside = count_in(50.0, 70.0);
+        let before = count_in(20.0, 40.0);
+        assert!(
+            inside as f64 > before as f64 * 3.0,
+            "10x flash crowd barely moved density: {inside} in-window vs {before} before"
+        );
+        // Outside the window the multiplier is exactly 1.
+        assert_eq!(spec.rate_multiplier_at(49.9), 1.0);
+        assert_eq!(spec.rate_multiplier_at(70.0), 1.0);
+        assert_eq!(spec.rate_multiplier_at(55.0), 10.0);
     }
 
     #[test]

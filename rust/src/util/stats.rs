@@ -28,14 +28,16 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Percentile with linear interpolation; `p` in [0, 100].
+/// Percentile with linear interpolation; `p` in [0, 100]. NaN samples are
+/// dropped before ranking (an unserved request's NaN timestamp must not
+/// poison the tail of everyone else); an empty or all-NaN slice reports 0.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p));
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -81,7 +83,7 @@ pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
     }
     let rank = |v: &[f64]| -> Vec<f64> {
         let mut idx: Vec<usize> = (0..v.len()).collect();
-        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        idx.sort_by(|&a, &b| v[a].total_cmp(&v[b]));
         let mut r = vec![0.0; v.len()];
         for (rank_pos, &i) in idx.iter().enumerate() {
             r[i] = rank_pos as f64;
@@ -211,6 +213,20 @@ mod tests {
     #[should_panic]
     fn percentile_rejects_out_of_range_p() {
         percentile(&[1.0], 101.0);
+    }
+
+    #[test]
+    fn percentile_drops_nan_samples_instead_of_panicking() {
+        // Regression: `partial_cmp().unwrap()` used to panic the moment a
+        // NaN (e.g. an unserved request's timestamp) reached the sort.
+        let xs = [4.0, f64::NAN, 1.0, 2.0, f64::NAN, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        // All-NaN behaves like empty.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 99.0), 0.0);
+        assert_eq!(median(&[f64::NAN]), 0.0);
     }
 
     #[test]

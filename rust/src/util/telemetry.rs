@@ -357,6 +357,60 @@ impl Recorder {
     }
 }
 
+/// A borrowed view of a [`Recorder`] that prefixes every track name —
+/// how each fleet replica gets its own set of trace tracks ("replica 0
+/// engine", "replica 0 req 7", …) without threading a prefix through
+/// every instrumentation call site. An empty prefix is a pure
+/// pass-through: identical track names, byte-identical traces.
+pub struct ScopedRecorder<'a> {
+    rec: &'a Recorder,
+    prefix: String,
+}
+
+impl<'a> ScopedRecorder<'a> {
+    pub fn new(rec: &'a Recorder, prefix: &str) -> ScopedRecorder<'a> {
+        ScopedRecorder { rec, prefix: prefix.to_string() }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.rec.is_enabled()
+    }
+
+    pub fn span_sim(&self, track: &str, name: &str, start_s: f64, end_s: f64, a: &[(&str, Json)]) {
+        if !self.rec.is_enabled() {
+            return;
+        }
+        if self.prefix.is_empty() {
+            self.rec.span_sim(track, name, start_s, end_s, a);
+        } else {
+            self.rec.span_sim(&format!("{}{track}", self.prefix), name, start_s, end_s, a);
+        }
+    }
+
+    pub fn instant_sim(&self, track: &str, name: &str, t_s: f64, args: &[(&str, Json)]) {
+        if !self.rec.is_enabled() {
+            return;
+        }
+        if self.prefix.is_empty() {
+            self.rec.instant_sim(track, name, t_s, args);
+        } else {
+            self.rec.instant_sim(&format!("{}{track}", self.prefix), name, t_s, args);
+        }
+    }
+
+    pub fn counter_sim(&self, name: &str, t_s: f64, value: f64) {
+        if !self.rec.is_enabled() {
+            return;
+        }
+        if self.prefix.is_empty() {
+            self.rec.counter_sim(name, t_s, value);
+        } else {
+            self.rec.counter_sim(&format!("{}{name}", self.prefix), t_s, value);
+        }
+    }
+}
+
 fn cat_of(clock: Clock) -> &'static str {
     match clock {
         Clock::Sim => "sim",
@@ -504,6 +558,40 @@ mod tests {
             elapsed.as_millis() < 500,
             "2M no-op record calls took {elapsed:?}; the disabled path must not lock or allocate"
         );
+    }
+
+    #[test]
+    fn scoped_recorder_prefixes_tracks_and_passes_through_when_empty() {
+        // Empty prefix: byte-identical to recording on the Recorder itself.
+        let direct = {
+            let rec = Recorder::enabled();
+            rec.span_sim("engine", "prefill", 0.0, 1.0, &[]);
+            rec.counter_sim("kv_tokens", 0.5, 64.0);
+            rec.sim_trace_json().to_string_compact()
+        };
+        let scoped_empty = {
+            let rec = Recorder::enabled();
+            let sc = ScopedRecorder::new(&rec, "");
+            sc.span_sim("engine", "prefill", 0.0, 1.0, &[]);
+            sc.counter_sim("kv_tokens", 0.5, 64.0);
+            rec.sim_trace_json().to_string_compact()
+        };
+        assert_eq!(direct, scoped_empty);
+        // Non-empty prefix lands on prefixed tracks.
+        let rec = Recorder::enabled();
+        let sc = ScopedRecorder::new(&rec, "replica 2 ");
+        assert!(sc.is_enabled());
+        sc.span_sim("engine", "decode", 0.0, 1.0, &[]);
+        sc.instant_sim("req 1", "done", 1.0, &[]);
+        let text = rec.sim_trace_json().to_string_compact();
+        assert!(text.contains("replica 2 engine"), "missing prefixed track: {text}");
+        assert!(text.contains("replica 2 req 1"), "missing prefixed track: {text}");
+        // Disabled recorder: still a no-op through the scope.
+        let off = Recorder::disabled();
+        let sc = ScopedRecorder::new(&off, "replica 0 ");
+        assert!(!sc.is_enabled());
+        sc.span_sim("engine", "decode", 0.0, 1.0, &[]);
+        assert_eq!(off.event_count(), 0);
     }
 
     #[test]

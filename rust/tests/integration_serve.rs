@@ -20,7 +20,8 @@ fn scenarios_dir() -> PathBuf {
 }
 
 /// Run one shipped traffic scenario through the exact configuration the
-/// evaluator would use, returning the full report.
+/// evaluator would use — including its fleet shape — returning the full
+/// report.
 fn serve_scenario(name: &str) -> serve::ServeReport {
     let suite = eval::load_suite(&scenarios_dir()).unwrap();
     let sc = suite
@@ -33,7 +34,8 @@ fn serve_scenario(name: &str) -> serve::ServeReport {
     let cfg = eval::scheduler_config_for(&sys, &model, t).unwrap();
     let requests = eval::traffic_requests(t).unwrap();
     let sim = Simulator::new();
-    let (report, _) = serve::serve_once(&sim, &sys, &model, &cfg, &requests, &t.slo);
+    let fleet = serve::FleetConfig { replicas: t.replicas, balancer: t.balancer };
+    let (report, _) = serve::serve_fleet(&sim, &sys, &model, &cfg, &fleet, &requests, &t.slo);
     report
 }
 
@@ -93,6 +95,8 @@ fn gpt3_on_a100x8_respects_kv_budget() {
         output: serve::LengthDist::Fixed(64),
         requests: 50,
         seed: 7,
+        diurnal: None,
+        flash_crowd: None,
     };
     let reqs = serve::workload::generate(&spec);
     let (report, _) = serve::serve_once(&sim, &sys, &model, &cfg, &reqs, &Slo::relaxed());
@@ -267,6 +271,45 @@ fn faulty_scenario_replay_is_byte_identical() {
     let a = serve_scenario("a100x4-disagg-faulty").to_json().to_string_pretty();
     let b = serve_scenario("a100x4-disagg-faulty").to_json().to_string_pretty();
     assert_eq!(a, b, "faulty scenario replay diverged");
+}
+
+/// The shipped 4-replica diurnal fleet sample: replica 1 crashes
+/// mid-trace and stays down past the end of the trace, so the fleet must
+/// re-dispatch its in-flight work to the three survivors, availability
+/// must fall strictly below 1.0, and request accounting must conserve —
+/// the fleet acceptance criterion, against the scenario CI also smokes.
+#[test]
+fn fleet_diurnal_sample_survives_replica_crash_with_conservation() {
+    let rep = serve_scenario("a100-fleet4-diurnal");
+    let stats = &rep.stats;
+    assert_eq!(rep.replica_stats.len(), 4, "four replicas must report individually");
+    assert_eq!(
+        rep.summary.requests as u64 + stats.requests_lost + stats.requests_shed,
+        64,
+        "completed + lost + shed must equal the submitted trace"
+    );
+    assert!(
+        stats.availability < 1.0,
+        "availability {} must reflect the replica-1 outage",
+        stats.availability
+    );
+    assert!(stats.availability > 0.0, "three of four replicas stayed up");
+    assert!(stats.requests_retried > 0, "crash victims must re-dispatch to survivors");
+    assert!(stats.retry_tokens_recomputed > 0, "re-dispatch re-prefills the lost KV");
+    // The surviving replicas actually shared the load.
+    let active = rep
+        .replica_stats
+        .iter()
+        .filter(|rs| rs.prefill_iterations + rs.decode_iterations + rs.mixed_iterations > 0)
+        .count();
+    assert!(active >= 3, "load balancer left survivors idle: {active} active");
+    // Fleet replay is byte-identical, diurnal modulation and all.
+    let again = serve_scenario("a100-fleet4-diurnal");
+    assert_eq!(
+        rep.to_json().to_string_pretty(),
+        again.to_json().to_string_pretty(),
+        "fleet scenario replay diverged"
+    );
 }
 
 /// Deterministic replay: two runs of the same seeded workload — through

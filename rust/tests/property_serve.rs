@@ -11,7 +11,13 @@
 //!    (`completed + lost + shed == submitted`), retry counters stay
 //!    bounded, and KV occupancy still respects capacity;
 //! 5. an inert (zero-fault) spec reproduces the no-spec `ServeReport`
-//!    byte-for-byte in every mode.
+//!    byte-for-byte in every mode;
+//! 6. a 1-replica fleet reproduces the single-engine `ServeReport`
+//!    byte-for-byte in every mode (with and without faults);
+//! 7. multi-replica fleets conserve requests
+//!    (`completed + lost + shed == submitted`) under every balancer and
+//!    replica count, and every replica's KV peak respects the per-engine
+//!    budget.
 //!
 //! One shared `Simulator` keeps mapper searches cached across trials, so
 //! hundreds of random schedules cost oracle-cache lookups, not searches.
@@ -104,6 +110,7 @@ fn gen_fault_spec(g: &mut Gen) -> FaultSpec {
         events,
         mtbf_s: if g.u64(0, 2) == 0 { Some(g.f64(0.2, 2.0)) } else { None },
         mttr_s: g.f64(0.05, 0.5),
+        correlated_fraction: if g.u64(0, 2) == 0 { g.f64(0.0, 1.0) } else { 0.0 },
         recovery: RecoveryPolicy {
             max_retries: g.u64(0, 3),
             retry_backoff_s: g.f64(0.0, 0.3),
@@ -259,6 +266,91 @@ fn fault_accounting_conserves_requests_under_any_spec() {
                 dec_cap
             ),
             conserved && survivors_sane && counters_bounded && kv_ok,
+        )
+    });
+}
+
+#[test]
+fn single_replica_fleet_reproduces_serve_once_byte_for_byte() {
+    let sim = Simulator::new();
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    forall("1-replica fleet ⇒ byte-identical report", 15, |g| {
+        let trace = gen_trace(g, 16);
+        let mut cfg = gen_cfg(g, sys.device_count, &trace);
+        if g.u64(0, 1) == 0 {
+            cfg.faults = Some(gen_fault_spec(g));
+        }
+        let slo = serve::Slo::relaxed();
+        let (base, _) = serve::serve_once(&sim, &sys, &model, &cfg, &trace, &slo);
+        let (fleet, _) = serve::serve_fleet(
+            &sim,
+            &sys,
+            &model,
+            &cfg,
+            &serve::FleetConfig::single(),
+            &trace,
+            &slo,
+        );
+        let (a, b) = (base.to_json().to_string_pretty(), fleet.to_json().to_string_pretty());
+        (
+            format!(
+                "mode {:?} faults {}: single-engine report {} 1-replica fleet report",
+                cfg.mode,
+                cfg.faults.is_some(),
+                if a == b { "==" } else { "!=" },
+            ),
+            a == b,
+        )
+    });
+}
+
+#[test]
+fn fleet_conserves_requests_and_respects_per_replica_kv() {
+    let sim = Simulator::new();
+    let sys = presets::system("a100x4").unwrap();
+    let model = ModelConfig::gpt_small();
+    forall("fleet conservation + per-replica KV", 20, |g| {
+        let trace = gen_trace(g, 24);
+        let mut cfg = gen_cfg(g, sys.device_count, &trace);
+        if g.u64(0, 1) == 0 {
+            cfg.faults = Some(gen_fault_spec(g));
+        }
+        let fleet = serve::FleetConfig {
+            replicas: g.u64(2, 4),
+            balancer: *g.pick(&[
+                serve::Balancer::RoundRobin,
+                serve::Balancer::LeastKvPressure,
+                serve::Balancer::SessionAffinity,
+            ]),
+        };
+        let (pre_cap, dec_cap) = cfg.pool_budgets(sys.device_count);
+        let (report, metrics) =
+            serve::serve_fleet(&sim, &sys, &model, &cfg, &fleet, &trace, &serve::Slo::relaxed());
+        let stats = &report.stats;
+        let submitted = trace.len() as u64;
+        let conserved =
+            metrics.len() as u64 + stats.requests_lost + stats.requests_shed == submitted;
+        let per_replica = report.replica_stats.len() == fleet.replicas as usize;
+        // The fleet's per-engine KV budgets are identical across replicas.
+        let kv_ok = report
+            .replica_stats
+            .iter()
+            .all(|rs| rs.peak_kv_tokens <= dec_cap && rs.prefill_peak_kv_tokens <= pre_cap);
+        let availability_ok = (0.0..=1.0).contains(&stats.availability);
+        (
+            format!(
+                "{:?} x{}: {} completed + {} lost + {} shed of {submitted}, \
+                 replica KV peaks {:?} (≤ {dec_cap}), availability {:.4}",
+                fleet.balancer,
+                fleet.replicas,
+                metrics.len(),
+                stats.requests_lost,
+                stats.requests_shed,
+                report.replica_stats.iter().map(|rs| rs.peak_kv_tokens).collect::<Vec<_>>(),
+                stats.availability
+            ),
+            conserved && per_replica && kv_ok && availability_ok,
         )
     });
 }
