@@ -165,6 +165,41 @@ else
         || { echo "fleet smoke shows no downtime" >&2; exit 1; }
 fi
 
+# Sweep smoke through the real CLI: a 2-fleet-size x 2-mode sweep on one
+# system, where every cell shares the same (hardware, model) latency
+# oracle. The parseable `oracle:` stats line must show cross-cell reuse
+# (hits > 0) against exactly one cached oracle — the raw-speed pass's
+# sharing, observable from the outside.
+echo "== llmcompass serve --sweep (shared oracle across cells) =="
+target/release/llmcompass serve --sweep --model gpt-small \
+    --requests 40 --seed 42 \
+    --systems a100x4 --modes monolithic,chunked --fleet-sizes 1,4 \
+    | tee /tmp/llmcompass_sweep_smoke.txt
+if command -v python3 > /dev/null 2>&1; then
+    python3 -c '
+import re
+out = open("/tmp/llmcompass_sweep_smoke.txt").read()
+oracle = re.search(r"oracle: sim_calls=(\d+) hits=(\d+) misses=(\d+) "
+                   r"decode_fits=(\d+) prefill_points=(\d+) oracles=(\d+)", out)
+assert oracle, "no parseable oracle line in sweep output"
+sim_calls, hits, misses, fits, points, oracles = (int(oracle.group(i)) for i in range(1, 7))
+assert oracles == 1, f"identical cells must share one oracle, got {oracles}"
+assert hits > 0, "sweep cells produced no cross-cell oracle hits"
+assert hits > misses, f"a warm sweep must hit more than it misses ({hits} vs {misses})"
+assert sim_calls == 2 * fits + points, \
+    f"counter identity broken: {sim_calls} != 2*{fits} + {points}"
+print(f"sweep smoke OK: {hits} hits / {misses} misses, "
+      f"{sim_calls} simulator calls into {oracles} oracle(s)")
+'
+else
+    # No python3: at least require the oracle line with nonzero hits and
+    # a single cached oracle.
+    grep -Eq "oracle: sim_calls=[0-9]+ hits=[1-9]" /tmp/llmcompass_sweep_smoke.txt \
+        || { echo "sweep smoke shows no oracle hits" >&2; exit 1; }
+    grep -Eq "oracles=1$" /tmp/llmcompass_sweep_smoke.txt \
+        || { echo "sweep smoke cells did not share one oracle" >&2; exit 1; }
+fi
+
 # The shipped faulty samples run through the suite smoke above; run the
 # serving/property fault suites explicitly so a filtered `cargo test`
 # invocation can never skip them.

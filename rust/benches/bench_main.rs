@@ -78,6 +78,23 @@ fn write_mapper_baseline(rows: Vec<Json>) {
     }
 }
 
+/// Record the serving rows in BENCH_serve.json at the repo root — wall
+/// time plus the shared latency oracle's deterministic simulator-call
+/// count (the raw-speed pass's perf baseline: the counters move only if
+/// the bucketing or sharing changes, so they regress loudly).
+fn write_serve_baseline(rows: Vec<Json>) {
+    let doc = obj(vec![
+        ("generated_by", s("cargo bench (benches/bench_main.rs)")),
+        ("device", s("a100")),
+        ("benches", Json::Arr(rows)),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => eprintln!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  warning: could not write {}: {e}", path.display()),
+    }
+}
+
 fn main() {
     let mut b = Bench::new();
     eprintln!("llmcompass benchmarks (criterion-lite)");
@@ -242,6 +259,50 @@ fn main() {
                 std::hint::black_box(ev.evaluate(sc).unwrap());
             }
         });
+    }
+
+    // Raw-speed pass baseline: 10k Poisson requests across a 4-replica
+    // fleet, where all four replica engines resolve to the same warm
+    // SharedOracle — wall time plus the oracle's deterministic
+    // simulator-call count go into BENCH_serve.json. sim_calls is a pure
+    // function of the request mix and bucketing (no timing noise), so the
+    // snapshot doubles as a regression tripwire for the sharing itself.
+    {
+        use llmcompass::serve::{
+            self, Balancer, FleetConfig, Policy, SchedulerConfig, Slo, WorkloadSpec,
+        };
+        let small = ModelConfig::gpt_small();
+        let sys1 = presets::system("a100").unwrap();
+        let cfg = SchedulerConfig::for_system(&sys1, &small, Policy::Fcfs);
+        let fleet = FleetConfig { replicas: 4, balancer: Balancer::RoundRobin };
+        let reqs = serve::workload::generate(&WorkloadSpec::poisson(120.0, 10_000, 42));
+        let fresh = Simulator::pooled();
+        b.run("serve_10k_fleet4", "10k Poisson requests, 4 replicas", 0, 3, || {
+            std::hint::black_box(serve::serve_fleet(
+                &fresh,
+                &sys1,
+                &small,
+                &cfg,
+                &fleet,
+                &reqs,
+                &Slo::interactive(),
+            ));
+        });
+        let osnap = fresh.oracles.snapshot();
+        let (_, mean, sd, iters, _) = b.rows.last().unwrap();
+        write_serve_baseline(vec![obj(vec![
+            ("bench", s("serve_10k_fleet4")),
+            ("requests", num(10_000.0)),
+            ("replicas", num(4.0)),
+            ("mean_s", num(*mean)),
+            ("sigma_s", num(*sd)),
+            ("iters", num(*iters as f64)),
+            ("oracle_sim_calls", num(osnap.sim_calls as f64)),
+            ("oracle_hits", num(osnap.hits as f64)),
+            ("oracle_misses", num(osnap.misses as f64)),
+            ("oracle_decode_fits", num(osnap.decode_fits as f64)),
+            ("oracle_prefill_points", num(osnap.prefill_points as f64)),
+        ])]);
     }
 
     b.run("json_parse_device", "hardware description", 10, 100_000, || {

@@ -236,6 +236,16 @@ pub struct TelemetrySummary {
     /// Systolic-array timing LUT hits / misses.
     pub lut_hits: u64,
     pub lut_misses: u64,
+    /// Serving latency-oracle activity (shared-oracle cache): bucket hits
+    /// and misses, unique decode fits / prefill points simulated, and the
+    /// underlying analytical-simulator calls those cost. Deltas around
+    /// this evaluation, like the mapper counters above; all zero for
+    /// scenarios with no serving output.
+    pub oracle_hits: u64,
+    pub oracle_misses: u64,
+    pub oracle_decode_fits: u64,
+    pub oracle_prefill_points: u64,
+    pub oracle_sim_calls: u64,
     /// Host wall-clock seconds this evaluation took.
     pub eval_wall_s: f64,
 }
@@ -254,6 +264,16 @@ impl TelemetrySummary {
                     ("cache_hits", num(self.mapper_cache_hits as f64)),
                     ("lut_hits", num(self.lut_hits as f64)),
                     ("lut_misses", num(self.lut_misses as f64)),
+                ]),
+            ),
+            (
+                "oracle",
+                obj(vec![
+                    ("hits", num(self.oracle_hits as f64)),
+                    ("misses", num(self.oracle_misses as f64)),
+                    ("decode_fits", num(self.oracle_decode_fits as f64)),
+                    ("prefill_points", num(self.oracle_prefill_points as f64)),
+                    ("sim_calls", num(self.oracle_sim_calls as f64)),
                 ]),
             ),
             ("host", obj(vec![("eval_wall_s", num(self.eval_wall_s))])),
@@ -373,6 +393,7 @@ impl Evaluator {
         let wall = Instant::now();
         let host_t0 = self.sim.recorder.host_now_s();
         let (lut_hits0, lut_misses0) = self.sim.mapper.lut_stats();
+        let oracle0 = self.sim.oracles.snapshot();
         let searches0 = self.sim.mapper.searches();
         let rounds0 = self.sim.mapper.total_rounds();
         let candidates0 = self.sim.mapper.total_candidates();
@@ -401,6 +422,7 @@ impl Evaluator {
             results.push(r);
         }
         let (lut_hits, lut_misses) = self.sim.mapper.lut_stats();
+        let oracle = self.sim.oracles.snapshot();
         let telemetry = TelemetrySummary {
             mapper_searches: self.sim.mapper.searches() - searches0,
             mapper_rounds: self.sim.mapper.total_rounds() - rounds0,
@@ -410,6 +432,11 @@ impl Evaluator {
             mapper_cache_hits: self.sim.mapper.cache_hits() - cache_hits0,
             lut_hits: lut_hits - lut_hits0,
             lut_misses: lut_misses - lut_misses0,
+            oracle_hits: oracle.hits - oracle0.hits,
+            oracle_misses: oracle.misses - oracle0.misses,
+            oracle_decode_fits: oracle.decode_fits - oracle0.decode_fits,
+            oracle_prefill_points: oracle.prefill_points - oracle0.prefill_points,
+            oracle_sim_calls: oracle.sim_calls - oracle0.sim_calls,
             eval_wall_s: wall.elapsed().as_secs_f64(),
         };
         let rec = &self.sim.recorder;
@@ -675,7 +702,7 @@ pub fn scheduler_config_for(
     }
     if let Some(spec) = &t.faults {
         spec.validate()?;
-        cfg.faults = Some(spec.clone());
+        cfg.faults = Some(Arc::new(spec.clone()));
     }
     Ok(cfg)
 }

@@ -18,6 +18,7 @@ use crate::perf::graph_sched::{self, Schedule};
 use crate::perf::mapper::Mapper;
 use crate::perf::matmul::Shape;
 use crate::perf::{comm, vecop, Op, OpResult};
+use crate::serve::oracle::OracleCache;
 use crate::util::telemetry::Recorder;
 use std::sync::Arc;
 
@@ -47,6 +48,10 @@ pub struct Simulator {
     /// mapper holds a clone for its host-clock search spans). Disabled
     /// by default — every record call is then a no-op branch.
     pub recorder: Arc<Recorder>,
+    /// Shared quantizing latency oracles for the serving layer, deduped
+    /// by hardware+model fingerprint so fleet replicas and sweep cells
+    /// over unchanged systems reuse one warm cache (see `serve::oracle`).
+    pub oracles: OracleCache,
 }
 
 impl Default for Simulator {
@@ -79,7 +84,11 @@ impl Simulator {
     /// A simulator around a caller-built mapper (e.g.
     /// [`Mapper::with_cache`] for the persistent on-disk mapping cache).
     pub fn with_mapper(mapper: Mapper) -> Self {
-        Simulator { mapper, recorder: Arc::new(Recorder::disabled()) }
+        Simulator {
+            mapper,
+            recorder: Arc::new(Recorder::disabled()),
+            oracles: OracleCache::new(),
+        }
     }
 
     /// Attach a telemetry recorder (builder style). The mapper shares

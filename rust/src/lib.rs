@@ -51,7 +51,11 @@
 //!   outages), cross-replica re-dispatch of crash losses, diurnal +
 //!   flash-crowd arrival modulation, and a fleet-size axis on the cost
 //!   sweep; `replicas = 1` reproduces the single-engine reports byte
-//!   for byte.
+//!   for byte. All iteration pricing flows through a shared, sharded
+//!   latency-oracle cache ([`serve::oracle`]): one warm oracle per
+//!   (hardware, model) fingerprint reused across replicas and sweep
+//!   cells, with deterministic hit/miss/simulator-call counters —
+//!   sharing is byte-invisible in the reports.
 //! * [`eval`] — the unified scenario API: one typed, JSON-serializable
 //!   [`eval::Scenario`] (hardware target + workload — operator, layer,
 //!   request, arbitrary operator DAG, or traffic — + optional

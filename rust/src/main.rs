@@ -977,6 +977,12 @@ fn cmd_serve(raw: &[String]) -> R {
             "sweep: comma-separated replica counts to add as a fleet-size axis \
              (cluster cost scales with the count; default 1)",
         )
+        .opt(
+            "systems",
+            None,
+            "sweep: comma-separated system presets to sweep instead of the \
+             paper's preset ladder",
+        )
         .flag("pooled", "use the pooled (multi-threaded) mapper search")
         .opt("mapper-cache", None, MAPPER_CACHE_HELP)
         .opt("trace", None, TRACE_HELP);
@@ -1050,6 +1056,9 @@ fn cmd_serve(raw: &[String]) -> R {
                 })
                 .collect::<Result<Vec<_>, _>>()?;
         }
+        if let Some(list) = a.get("systems") {
+            cfg.systems = list.split(',').map(|s| s.trim().to_string()).collect();
+        }
         let rows = llmcompass::serve::sweep::run_sweep(&ev.sim, &model, &cfg)?;
         let mut t = Table::new(&[
             "system", "mode", "repl", "rate/s", "MTBF h", "avail %", "TTFT mean",
@@ -1094,6 +1103,18 @@ fn cmd_serve(raw: &[String]) -> R {
                 b.rate_per_s
             );
         }
+        // Key=value so scripts (and the CI sweep smoke) can grep the fields;
+        // cross-cell reuse of the shared oracle shows up as hits > 0.
+        let osnap = ev.sim.oracles.snapshot();
+        println!(
+            "oracle: sim_calls={} hits={} misses={} decode_fits={} prefill_points={} oracles={}",
+            osnap.sim_calls,
+            osnap.hits,
+            osnap.misses,
+            osnap.decode_fits,
+            osnap.prefill_points,
+            ev.sim.oracles.len()
+        );
         println!("[swept in {}]", llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()));
         write_trace(rec.as_ref(), a.get("trace"))?;
         persist_mapper_cache(&ev);
@@ -1273,6 +1294,17 @@ fn cmd_serve(raw: &[String]) -> R {
             stats.availability
         );
     }
+    // Key=value like the faults line above, so scripts can grep the fields.
+    let osnap = ev.sim.oracles.snapshot();
+    println!(
+        "oracle: sim_calls={} hits={} misses={} decode_fits={} prefill_points={} oracles={}",
+        osnap.sim_calls,
+        osnap.hits,
+        osnap.misses,
+        osnap.decode_fits,
+        osnap.prefill_points,
+        ev.sim.oracles.len()
+    );
     println!(
         "[simulated in {} wall-clock | mapper: {} rounds, {} cached shapes]",
         llmcompass::util::fmt_seconds(start.elapsed().as_secs_f64()),

@@ -65,6 +65,7 @@ use crate::graph::ModelConfig;
 use crate::hardware::SystemSpec;
 use crate::util::json::num;
 use crate::util::telemetry::{Recorder, ScopedRecorder};
+use std::sync::Arc;
 
 #[cfg(doc)]
 use super::fault::FaultSpec;
@@ -279,7 +280,7 @@ pub fn serve_fleet(
             let faults = cfg.faults.as_ref().map(|s| {
                 let mut proj = s.for_replica(r as u64, fleet.replicas);
                 proj.recovery.max_retries = 0;
-                proj
+                Arc::new(proj)
             });
             SchedulerConfig { faults, ..cfg.clone() }
         })
@@ -537,7 +538,7 @@ mod tests {
         });
         spec.recovery.max_retries = 2;
         spec.recovery.retry_backoff_s = 0.05;
-        cfg.faults = Some(spec);
+        cfg.faults = Some(Arc::new(spec));
         let reqs = generate(&WorkloadSpec::poisson(40.0, 60, 9));
         let fleet = FleetConfig { replicas: 3, balancer: Balancer::RoundRobin };
         let (report, per_req) =
@@ -579,7 +580,7 @@ mod tests {
             duration_s: 1.0,
             target: FaultTarget::Replica(7),
         });
-        faulty.faults = Some(spec);
+        faulty.faults = Some(Arc::new(spec));
         let fleet = FleetConfig { replicas: 4, balancer: Balancer::RoundRobin };
         let err = validate_fleet(&faulty, sys.device_count, &fleet, &[]).unwrap_err();
         assert!(err.contains("replica:7"), "unhelpful error: {err}");

@@ -19,7 +19,11 @@
 //!   prefill pool, surfaced as `handoff_stall_s`) — each with
 //!   conservative or eviction-based ([`Preemption`]) KV admission. All
 //!   iteration latencies come from the graph-lowered layer costs of the
-//!   analytical simulator through the quantizing [`IterOracle`].
+//!   analytical simulator through the quantizing [`SharedOracle`].
+//! * [`oracle`] — the shared, sharded, lock-light latency oracle cache:
+//!   one warm [`SharedOracle`] per (hardware, model) fingerprint reused
+//!   across fleet replicas and sweep cells, with deterministic hit/miss/
+//!   simulator-call counters surfaced in telemetry and the CLI summary.
 //! * [`fault`] — seeded, deterministic fault injection (crash / drain /
 //!   slowdown / link degradation) plus the recovery policy (bounded retry
 //!   with backoff, timeouts, admission shedding, degraded chunk sizes)
@@ -46,6 +50,7 @@ pub mod events;
 pub mod fault;
 pub mod fleet;
 pub mod metrics;
+pub mod oracle;
 pub mod scheduler;
 pub mod sweep;
 pub mod workload;
@@ -53,8 +58,9 @@ pub mod workload;
 pub use fault::{FaultEvent, FaultKind, FaultSpec, FaultTarget, RecoveryPolicy};
 pub use fleet::{serve_fleet, validate_fleet, Balancer, FleetConfig};
 pub use metrics::{RequestMetrics, Slo, Summary};
+pub use oracle::{OracleCache, OracleSnapshot, SharedOracle};
 pub use scheduler::{
-    kv_capacity_tokens, IterOracle, Policy, Preemption, RunStats, SchedulerConfig, ServeMode,
+    kv_capacity_tokens, Policy, Preemption, RunStats, SchedulerConfig, ServeMode,
 };
 pub use workload::{Arrival, Diurnal, FlashCrowd, LengthDist, Request, WorkloadSpec};
 

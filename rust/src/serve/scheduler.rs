@@ -37,23 +37,26 @@
 //! Preemption counters are surfaced in [`RunStats`] and therefore in every
 //! `ServeReport`/`EvalReport`.
 //!
-//! Iteration latencies come from the analytical simulator through a
-//! quantizing [`IterOracle`], so a million-token trace touches only a
-//! handful of unique mapper shapes, and the clock only ever advances by
-//! iteration latencies, transfer completions, or idle gaps to the next
-//! arrival.
+//! Iteration latencies come from the analytical simulator through the
+//! quantizing [`SharedOracle`](super::oracle::SharedOracle) (resolved via
+//! the simulator's [`OracleCache`](super::oracle::OracleCache), so fleet
+//! replicas and sweep cells over unchanged hardware+model share one warm
+//! cache), so a million-token trace touches only a handful of unique
+//! mapper shapes, and the clock only ever advances by iteration
+//! latencies, transfer completions, or idle gaps to the next arrival.
 
 use super::events::EventHeap;
 use super::fault::{FaultSpec, Faults, RecoveryPolicy, POOL_DECODE, POOL_PREFILL};
 use super::metrics::RequestMetrics;
+use super::oracle::SharedOracle;
 use super::workload::Request;
 use crate::graph::inference::Simulator;
 use crate::graph::ModelConfig;
 use crate::hardware::SystemSpec;
 use crate::util::json::num;
 use crate::util::telemetry::ScopedRecorder;
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Admission-ordering policy for the waiting queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -200,8 +203,10 @@ pub struct SchedulerConfig {
     /// budget measured in mean-trace-length sequences.
     pub handoff_capacity: Option<u64>,
     /// Fault-injection schedule + recovery policy (`None`: a perfect
-    /// fleet — identical behavior to a zero-event [`FaultSpec`]).
-    pub faults: Option<FaultSpec>,
+    /// fleet — identical behavior to a zero-event [`FaultSpec`]). Behind
+    /// an `Arc` so fleet replicas and sweep cells share one parsed spec
+    /// instead of deep-cloning it per engine run.
+    pub faults: Option<Arc<FaultSpec>>,
 }
 
 impl SchedulerConfig {
@@ -313,80 +318,6 @@ pub fn validate(
         }
     }
     Ok(())
-}
-
-/// Quantizing latency oracle over the analytical simulator.
-///
-/// Decode latency is affine in the KV length at fixed batch (weights
-/// dominate, attention reads grow linearly), so per power-of-two batch
-/// bucket the oracle samples two KV points and interpolates. Prefill is
-/// cached per (batch bucket, power-of-two sequence bucket). This bounds
-/// the number of distinct mapper searches for an arbitrarily long trace.
-pub struct IterOracle<'a> {
-    sim: &'a Simulator,
-    sys: &'a SystemSpec,
-    model: &'a ModelConfig,
-    /// batch bucket → (latency at KV_LO, slope per KV token).
-    decode_fit: Mutex<HashMap<u64, (f64, f64)>>,
-    /// (batch bucket, seq bucket) → prefill seconds.
-    prefill_cache: Mutex<HashMap<(u64, u64), f64>>,
-}
-
-/// KV sample points for the affine decode fit.
-const KV_LO: u64 = 64;
-const KV_HI: u64 = 4096;
-
-fn pow2_bucket(v: u64) -> u64 {
-    v.max(1).next_power_of_two()
-}
-
-impl<'a> IterOracle<'a> {
-    pub fn new(sim: &'a Simulator, sys: &'a SystemSpec, model: &'a ModelConfig) -> Self {
-        IterOracle {
-            sim,
-            sys,
-            model,
-            decode_fit: Mutex::new(HashMap::new()),
-            prefill_cache: Mutex::new(HashMap::new()),
-        }
-    }
-
-    /// Latency of one decode iteration for `batch` sequences at mean KV
-    /// length `kv_len`.
-    pub fn decode(&self, batch: u64, kv_len: u64) -> f64 {
-        let b = pow2_bucket(batch);
-        // Take the guard in its own statement so it drops before the
-        // (slow) simulator calls and before re-locking to insert.
-        let cached = self.decode_fit.lock().unwrap().get(&b).copied();
-        let (lo, slope) = match cached {
-            Some(fit) => fit,
-            None => {
-                let l_lo = self.sim.decode(self.sys, self.model, b, KV_LO, self.model.layers);
-                let l_hi = self.sim.decode(self.sys, self.model, b, KV_HI, self.model.layers);
-                let fit = (l_lo, (l_hi - l_lo) / (KV_HI - KV_LO) as f64);
-                self.decode_fit.lock().unwrap().insert(b, fit);
-                fit
-            }
-        };
-        (lo + slope * (kv_len.max(KV_LO) - KV_LO) as f64).max(0.0)
-    }
-
-    /// Latency of one prefill iteration: `batch` prompts padded to the
-    /// bucketed `seq` length.
-    pub fn prefill(&self, batch: u64, seq: u64) -> f64 {
-        let key = (pow2_bucket(batch), pow2_bucket(seq));
-        if let Some(&s) = self.prefill_cache.lock().unwrap().get(&key) {
-            return s;
-        }
-        let s = self.sim.prefill(self.sys, self.model, key.0, key.1, self.model.layers);
-        self.prefill_cache.lock().unwrap().insert(key, s);
-        s
-    }
-
-    /// Number of unique (batch, seq/kv) points simulated so far.
-    pub fn cached_points(&self) -> usize {
-        self.decode_fit.lock().unwrap().len() * 2 + self.prefill_cache.lock().unwrap().len()
-    }
 }
 
 /// Per-iteration accounting of the simulated run. All fields are part of
@@ -504,21 +435,122 @@ pub(crate) enum Outcome {
     Shed { at_s: f64 },
 }
 
-/// One request in flight on the decode side.
-struct Running {
-    idx: usize,
+/// The decode-side in-flight set, in SoA layout: parallel columns keyed
+/// by position, so the hot per-iteration scans (KV totals, youngest-
+/// serial eviction, completion sweeps) stream dense `u64` vectors
+/// instead of striding through structs. Mutators keep the columns in
+/// lockstep; position-based `remove`/`swap_remove` mirror the `Vec`
+/// methods the AoS version used, byte for byte in iteration order.
+#[derive(Default)]
+struct RunningSet {
+    /// Request index into the trace.
+    idx: Vec<usize>,
     /// Current KV footprint in tokens.
-    kv_tokens: u64,
+    kv_tokens: Vec<u64>,
     /// Monotone admission serial — eviction targets the youngest.
-    serial: u64,
+    serial: Vec<u64>,
 }
 
-/// One request part-way through a chunked prefill.
-struct Prefilling {
-    idx: usize,
+impl RunningSet {
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    fn push(&mut self, idx: usize, kv_tokens: u64, serial: u64) {
+        self.idx.push(idx);
+        self.kv_tokens.push(kv_tokens);
+        self.serial.push(serial);
+    }
+
+    /// Remove position `j` preserving order, returning its columns.
+    fn remove(&mut self, j: usize) -> (usize, u64, u64) {
+        (self.idx.remove(j), self.kv_tokens.remove(j), self.serial.remove(j))
+    }
+
+    /// O(1) removal for completion sweeps (matches the AoS
+    /// `Vec::swap_remove` scan order exactly).
+    fn swap_remove(&mut self, j: usize) -> (usize, u64, u64) {
+        (self.idx.swap_remove(j), self.kv_tokens.swap_remove(j), self.serial.swap_remove(j))
+    }
+
+    fn clear(&mut self) {
+        self.idx.clear();
+        self.kv_tokens.clear();
+        self.serial.clear();
+    }
+
+    fn kv_total(&self) -> u64 {
+        self.kv_tokens.iter().sum()
+    }
+
+    /// Position and serial of the youngest-admitted sequence. Ties keep
+    /// the *last* maximum, mirroring `Iterator::max_by_key` (serials are
+    /// unique in practice, but the tie-break is part of the byte-identity
+    /// contract).
+    fn youngest_with_serial(&self) -> Option<(usize, u64)> {
+        let mut best: Option<(usize, u64)> = None;
+        for (j, &s) in self.serial.iter().enumerate() {
+            if best.map_or(true, |(_, bs)| s >= bs) {
+                best = Some((j, s));
+            }
+        }
+        best
+    }
+
+    fn youngest(&self) -> Option<usize> {
+        self.youngest_with_serial().map(|(j, _)| j)
+    }
+}
+
+/// Requests part-way through a chunked prefill, in the same SoA layout.
+#[derive(Default)]
+struct PrefillSet {
+    idx: Vec<usize>,
     /// Context tokens processed so far (target: `prompt + generated`).
-    done: u64,
-    serial: u64,
+    done: Vec<u64>,
+    serial: Vec<u64>,
+}
+
+impl PrefillSet {
+    fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    fn push(&mut self, idx: usize, done: u64, serial: u64) {
+        self.idx.push(idx);
+        self.done.push(done);
+        self.serial.push(serial);
+    }
+
+    fn remove(&mut self, j: usize) -> (usize, u64, u64) {
+        (self.idx.remove(j), self.done.remove(j), self.serial.remove(j))
+    }
+
+    fn clear(&mut self) {
+        self.idx.clear();
+        self.done.clear();
+        self.serial.clear();
+    }
+
+    /// Last-max-serial position, mirroring `max_by_key` (see
+    /// [`RunningSet::youngest_with_serial`]).
+    fn youngest_with_serial(&self) -> Option<(usize, u64)> {
+        let mut best: Option<(usize, u64)> = None;
+        for (j, &s) in self.serial.iter().enumerate() {
+            if best.map_or(true, |(_, bs)| s >= bs) {
+                best = Some((j, s));
+            }
+        }
+        best
+    }
 }
 
 /// Shared per-run state: request-indexed progress that survives
@@ -850,15 +882,17 @@ impl<'a> RunState<'a> {
 
 /// Policy-ordered waiting queue of request indices. Preempted requests
 /// resume through a separate FIFO that admission always drains first.
+/// Both lanes are ring buffers: `pop` is O(1) instead of the O(n)
+/// front-shift a `Vec::remove(0)` pays on every admission.
 struct WaitQueue {
     policy: Policy,
-    waiting: Vec<usize>,
-    resume: Vec<usize>,
+    waiting: VecDeque<usize>,
+    resume: VecDeque<usize>,
 }
 
 impl WaitQueue {
     fn new(policy: Policy) -> Self {
-        WaitQueue { policy, waiting: Vec::new(), resume: Vec::new() }
+        WaitQueue { policy, waiting: VecDeque::new(), resume: VecDeque::new() }
     }
 
     /// Enqueue a fresh arrival, keeping `waiting` in policy order as it
@@ -867,7 +901,7 @@ impl WaitQueue {
     /// would give, without re-sorting the backlog every iteration.
     fn arrive(&mut self, idx: usize, requests: &[Request]) {
         match self.policy {
-            Policy::Fcfs => self.waiting.push(idx),
+            Policy::Fcfs => self.waiting.push_back(idx),
             Policy::ShortestPromptFirst => {
                 let key = (requests[idx].prompt_tokens, idx);
                 let pos =
@@ -878,7 +912,7 @@ impl WaitQueue {
     }
 
     fn requeue_preempted(&mut self, idx: usize) {
-        self.resume.push(idx);
+        self.resume.push_back(idx);
     }
 
     fn is_empty(&self) -> bool {
@@ -892,10 +926,16 @@ impl WaitQueue {
     }
 
     /// Drop every queued request whose time since arrival exceeds
-    /// `timeout` (the recovery policy's per-request deadline). Returns
-    /// the dropped indices.
-    fn drop_timed_out(&mut self, t: f64, timeout: f64, requests: &[Request]) -> Vec<usize> {
-        let mut dropped = Vec::new();
+    /// `timeout` (the recovery policy's per-request deadline), appending
+    /// the dropped indices to `dropped` (a caller-owned buffer reused
+    /// across iterations instead of a fresh allocation per call).
+    fn drop_timed_out(
+        &mut self,
+        t: f64,
+        timeout: f64,
+        requests: &[Request],
+        dropped: &mut Vec<usize>,
+    ) {
         self.waiting.retain(|&i| {
             let keep = t - requests[i].arrival_s <= timeout;
             if !keep {
@@ -910,21 +950,14 @@ impl WaitQueue {
             }
             keep
         });
-        dropped
     }
 
     fn peek(&self) -> Option<usize> {
-        self.resume.first().copied().or_else(|| self.waiting.first().copied())
+        self.resume.front().copied().or_else(|| self.waiting.front().copied())
     }
 
     fn pop(&mut self) -> Option<usize> {
-        if !self.resume.is_empty() {
-            Some(self.resume.remove(0))
-        } else if !self.waiting.is_empty() {
-            Some(self.waiting.remove(0))
-        } else {
-            None
-        }
+        self.resume.pop_front().or_else(|| self.waiting.pop_front())
     }
 }
 
@@ -946,29 +979,24 @@ fn drain_retries(retry_q: &mut Vec<(f64, usize)>, t: f64, queue: &mut WaitQueue)
 /// Evict the youngest-admitted sequences until the batch's decode growth
 /// (+1 KV token per surviving sequence) fits `capacity`, leaving at least
 /// one sequence running. The growth re-shrinks with every eviction, so
-/// the bound is recomputed each pass. Returns the evicted indices
-/// (pushed to the resume queue by the caller).
+/// the bound is recomputed each pass. Evicted indices are appended to
+/// `evicted` (a caller-owned buffer; the caller pushes them to the
+/// resume queue).
 fn evict_for(
     state: &mut RunState<'_>,
-    running: &mut Vec<Running>,
+    running: &mut RunningSet,
     kv_reserved: &mut u64,
     capacity: u64,
     t: f64,
-) -> Vec<usize> {
-    let mut evicted = Vec::new();
+    evicted: &mut Vec<usize>,
+) {
     while *kv_reserved + running.len() as u64 > capacity && running.len() > 1 {
-        let j = running
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, r)| r.serial)
-            .map(|(j, _)| j)
-            .unwrap();
-        let victim = running.remove(j);
-        *kv_reserved -= victim.kv_tokens;
-        state.note_preemption(victim.idx, victim.kv_tokens, t);
-        evicted.push(victim.idx);
+        let j = running.youngest().unwrap();
+        let (idx, kv, _) = running.remove(j);
+        *kv_reserved -= kv;
+        state.note_preemption(idx, kv, t);
+        evicted.push(idx);
     }
-    evicted
 }
 
 /// Simulate serving `requests` (sorted by arrival) on the cluster.
@@ -1023,12 +1051,12 @@ pub(crate) fn simulate_scoped(
     }
     match mode {
         ServeMode::Monolithic => {
-            let oracle = IterOracle::new(sim, sys, model);
-            run_monolithic(&oracle, cfg, requests, rec)
+            let oracle = sim.oracles.for_system(sys, model);
+            run_monolithic(sim, &oracle, cfg, requests, rec)
         }
         ServeMode::Chunked { chunk_tokens } => {
-            let oracle = IterOracle::new(sim, sys, model);
-            run_chunked(&oracle, cfg, requests, chunk_tokens, rec)
+            let oracle = sim.oracles.for_system(sys, model);
+            run_chunked(sim, &oracle, cfg, requests, chunk_tokens, rec)
         }
         ServeMode::Disaggregated { prefill_devices, transfer_base_s } => run_disaggregated(
             sim,
@@ -1053,20 +1081,29 @@ fn sub_system(sys: &SystemSpec, device_count: u64) -> SystemSpec {
 // ---------------------------------------------------------------------------
 
 fn run_monolithic(
-    oracle: &IterOracle<'_>,
+    sim: &Simulator,
+    oracle: &SharedOracle,
     cfg: &SchedulerConfig,
     requests: &[Request],
     rec: &ScopedRecorder<'_>,
 ) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
-    let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
-    let mut f = Faults::new(&spec, true);
+    // Borrow the fault spec through the Arc instead of deep-cloning the
+    // whole schedule per engine run (fleets run one engine per replica).
+    let no_faults = FaultSpec::none();
+    let spec: &FaultSpec = cfg.faults.as_deref().unwrap_or(&no_faults);
+    let mut f = Faults::new(spec, true);
     let mut retry_q: Vec<(f64, usize)> = Vec::new();
     let mut state = RunState::new(cfg, requests, rec);
     let mut queue = WaitQueue::new(cfg.policy);
-    let mut running: Vec<Running> = Vec::new();
+    let mut running = RunningSet::default();
     let mut kv_reserved = 0u64;
     let mut t = 0.0f64;
     let mut next_arrival = 0usize;
+    // Scratch buffers reused across iterations (cleared, never
+    // reallocated on the hot path).
+    let mut admitted: Vec<usize> = Vec::new();
+    let mut dropped: Vec<usize> = Vec::new();
+    let mut evicted: Vec<usize> = Vec::new();
 
     while state.settled() < requests.len() {
         // 0. Faults: crashes land at iteration boundaries — the in-flight
@@ -1078,9 +1115,17 @@ fn run_monolithic(
                 rec.instant_sim("faults", "crash", tc, &[]);
                 rec.span_sim("faults", "downtime", tc, rec_end, &[]);
             }
-            for r in running.drain(..) {
-                state.crash_request(r.idx, r.kv_tokens, tc, rec_end, &f.recovery, &mut retry_q);
+            for j in 0..running.len() {
+                state.crash_request(
+                    running.idx[j],
+                    running.kv_tokens[j],
+                    tc,
+                    rec_end,
+                    &f.recovery,
+                    &mut retry_q,
+                );
             }
+            running.clear();
             kv_reserved = 0;
             state.stats.idle_s += (rec_end - t).max(0.0);
             t = t.max(rec_end);
@@ -1109,7 +1154,9 @@ fn run_monolithic(
         }
         drain_retries(&mut retry_q, t, &mut queue);
         if let Some(timeout) = f.recovery.request_timeout_s {
-            for idx in queue.drop_timed_out(t, timeout, requests) {
+            dropped.clear();
+            queue.drop_timed_out(t, timeout, requests, &mut dropped);
+            for &idx in &dropped {
                 state.lose_to_timeout(idx, t);
             }
         }
@@ -1120,7 +1167,7 @@ fn run_monolithic(
         //    part of what the policy choice is about). Preempted requests
         //    resume first. A crash/drain window suspends admission.
         let can_admit = f.admitting(t, POOL_PREFILL);
-        let mut admitted: Vec<usize> = Vec::new();
+        admitted.clear();
         while can_admit
             && admitted.len() < cfg.max_prefill_batch as usize
             && running.len() + admitted.len() < cfg.max_batch as usize
@@ -1152,7 +1199,7 @@ fn run_monolithic(
             let batch = admitted.len() as u64;
             let max_ctx = admitted.iter().map(|&i| state.prefill_target(i)).max().unwrap();
             let t0 = t;
-            let dt = oracle.prefill(batch, max_ctx) * f.latency_mult(t0, POOL_PREFILL);
+            let dt = oracle.prefill(sim, batch, max_ctx) * f.latency_mult(t0, POOL_PREFILL);
             t += dt;
             state.stats.prefill_iterations += 1;
             state.stats.prefill_busy_s += dt;
@@ -1175,7 +1222,7 @@ fn run_monolithic(
                             cfg.preemption == Preemption::Conservative || reserved == kv_tokens
                         );
                         let serial = state.next_serial();
-                        running.push(Running { idx: i, kv_tokens, serial });
+                        running.push(i, kv_tokens, serial);
                     }
                     None => kv_reserved -= reserved.min(kv_reserved),
                 }
@@ -1185,20 +1232,23 @@ fn run_monolithic(
             // eviction, first make room for this step's +1-token-per-
             // sequence KV growth by preempting the youngest sequences.
             if cfg.preemption == Preemption::Evict {
-                for idx in evict_for(
+                evicted.clear();
+                evict_for(
                     &mut state,
                     &mut running,
                     &mut kv_reserved,
                     cfg.kv_capacity_tokens,
                     t,
-                ) {
+                    &mut evicted,
+                );
+                for &idx in &evicted {
                     queue.requeue_preempted(idx);
                 }
             }
             let batch = running.len() as u64;
-            let mean_kv = running.iter().map(|r| r.kv_tokens).sum::<u64>() / batch;
+            let mean_kv = running.kv_total() / batch;
             let t0 = t;
-            let dt = oracle.decode(batch, mean_kv) * f.latency_mult(t0, POOL_PREFILL);
+            let dt = oracle.decode(sim, batch, mean_kv) * f.latency_mult(t0, POOL_PREFILL);
             t += dt;
             state.stats.decode_iterations += 1;
             state.stats.decode_busy_s += dt;
@@ -1217,15 +1267,15 @@ fn run_monolithic(
             }
             let mut i = 0;
             while i < running.len() {
-                let idx = running[i].idx;
+                let idx = running.idx[i];
                 state.generated[idx] += 1;
-                running[i].kv_tokens += 1;
+                running.kv_tokens[i] += 1;
                 if state.generated[idx] >= requests[idx].output_tokens {
-                    let done = running.swap_remove(i);
-                    state.metrics[done.idx].finish_s = t;
+                    let (done_idx, _, _) = running.swap_remove(i);
+                    state.metrics[done_idx].finish_s = t;
                     state.completed += 1;
-                    state.emit_done(done.idx, t);
-                    kv_reserved -= state.release_on_completion(done.idx).min(kv_reserved);
+                    state.emit_done(done_idx, t);
+                    kv_reserved -= state.release_on_completion(done_idx).min(kv_reserved);
                 } else {
                     i += 1;
                 }
@@ -1271,22 +1321,27 @@ fn run_monolithic(
 // ---------------------------------------------------------------------------
 
 fn run_chunked(
-    oracle: &IterOracle<'_>,
+    sim: &Simulator,
+    oracle: &SharedOracle,
     cfg: &SchedulerConfig,
     requests: &[Request],
     chunk_tokens: u64,
     rec: &ScopedRecorder<'_>,
 ) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
-    let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
-    let mut f = Faults::new(&spec, true);
+    let no_faults = FaultSpec::none();
+    let spec: &FaultSpec = cfg.faults.as_deref().unwrap_or(&no_faults);
+    let mut f = Faults::new(spec, true);
     let mut retry_q: Vec<(f64, usize)> = Vec::new();
     let mut state = RunState::new(cfg, requests, rec);
     let mut queue = WaitQueue::new(cfg.policy);
-    let mut prefilling: Vec<Prefilling> = Vec::new();
-    let mut running: Vec<Running> = Vec::new();
+    let mut prefilling = PrefillSet::default();
+    let mut running = RunningSet::default();
     let mut kv_reserved = 0u64;
     let mut t = 0.0f64;
     let mut next_arrival = 0usize;
+    // Scratch buffers reused across iterations.
+    let mut dropped: Vec<usize> = Vec::new();
+    let mut advanced: Vec<(usize, u64)> = Vec::new();
 
     while state.settled() < requests.len() {
         // Faults: crashes land at iteration boundaries and wipe both the
@@ -1297,12 +1352,28 @@ fn run_chunked(
                 rec.instant_sim("faults", "crash", tc, &[]);
                 rec.span_sim("faults", "downtime", tc, rec_end, &[]);
             }
-            for r in running.drain(..) {
-                state.crash_request(r.idx, r.kv_tokens, tc, rec_end, &f.recovery, &mut retry_q);
+            for j in 0..running.len() {
+                state.crash_request(
+                    running.idx[j],
+                    running.kv_tokens[j],
+                    tc,
+                    rec_end,
+                    &f.recovery,
+                    &mut retry_q,
+                );
             }
-            for pf in prefilling.drain(..) {
-                state.crash_request(pf.idx, pf.done, tc, rec_end, &f.recovery, &mut retry_q);
+            running.clear();
+            for j in 0..prefilling.len() {
+                state.crash_request(
+                    prefilling.idx[j],
+                    prefilling.done[j],
+                    tc,
+                    rec_end,
+                    &f.recovery,
+                    &mut retry_q,
+                );
             }
+            prefilling.clear();
             kv_reserved = 0;
             state.stats.idle_s += (rec_end - t).max(0.0);
             t = t.max(rec_end);
@@ -1327,7 +1398,9 @@ fn run_chunked(
         }
         drain_retries(&mut retry_q, t, &mut queue);
         if let Some(timeout) = f.recovery.request_timeout_s {
-            for idx in queue.drop_timed_out(t, timeout, requests) {
+            dropped.clear();
+            queue.drop_timed_out(t, timeout, requests, &mut dropped);
+            for &idx in &dropped {
                 state.lose_to_timeout(idx, t);
             }
         }
@@ -1356,7 +1429,7 @@ fn run_chunked(
             queue.pop();
             let serial = state.next_serial();
             state.emit_admitted(cand, t);
-            prefilling.push(Prefilling { idx: cand, done: 0, serial });
+            prefilling.push(cand, 0, serial);
         }
 
         state.stats.peak_kv_tokens = state.stats.peak_kv_tokens.max(kv_reserved);
@@ -1406,13 +1479,8 @@ fn run_chunked(
                 {
                     break;
                 }
-                let run_j: Option<(usize, u64)> =
-                    running.iter().enumerate().map(|(j, r)| (j, r.serial)).max_by_key(|&(_, s)| s);
-                let pf_j: Option<(usize, u64)> = prefilling
-                    .iter()
-                    .enumerate()
-                    .map(|(j, p)| (j, p.serial))
-                    .max_by_key(|&(_, s)| s);
+                let run_j = running.youngest_with_serial();
+                let pf_j = prefilling.youngest_with_serial();
                 let take_pf = running.len() <= 1
                     || match (run_j, pf_j) {
                         (Some((_, rs)), Some((_, ps))) => ps > rs,
@@ -1421,16 +1489,16 @@ fn run_chunked(
                     };
                 if take_pf {
                     let (j, _) = pf_j.unwrap();
-                    let pf = prefilling.remove(j);
-                    kv_reserved -= state.admit_need(pf.idx).min(kv_reserved);
-                    state.note_preemption(pf.idx, pf.done, t);
-                    queue.requeue_preempted(pf.idx);
+                    let (pf_idx, pf_done, _) = prefilling.remove(j);
+                    kv_reserved -= state.admit_need(pf_idx).min(kv_reserved);
+                    state.note_preemption(pf_idx, pf_done, t);
+                    queue.requeue_preempted(pf_idx);
                 } else {
                     let (j, _) = run_j.unwrap();
-                    let victim = running.remove(j);
-                    kv_reserved -= victim.kv_tokens.min(kv_reserved);
-                    state.note_preemption(victim.idx, victim.kv_tokens, t);
-                    queue.requeue_preempted(victim.idx);
+                    let (v_idx, v_kv, _) = running.remove(j);
+                    kv_reserved -= v_kv.min(kv_reserved);
+                    state.note_preemption(v_idx, v_kv, t);
+                    queue.requeue_preempted(v_idx);
                 }
             }
         }
@@ -1448,28 +1516,30 @@ fn run_chunked(
         let mut chunk = 0u64;
         // (request, tokens) advanced this iteration — for the chunk trace
         // spans, which can only be emitted once the latency is known.
-        let mut advanced: Vec<(usize, u64)> = Vec::new();
-        for pf in prefilling.iter_mut() {
+        advanced.clear();
+        for j in 0..prefilling.len() {
             if budget == 0 {
                 break;
             }
-            let need = state.requests[pf.idx].prompt_tokens + state.generated[pf.idx] - pf.done;
+            let idx = prefilling.idx[j];
+            let need = state.requests[idx].prompt_tokens + state.generated[idx]
+                - prefilling.done[j];
             let give = need.min(budget);
-            pf.done += give;
+            prefilling.done[j] += give;
             budget -= give;
             chunk += give;
             if rec.is_enabled() && give > 0 {
-                advanced.push((pf.idx, give));
+                advanced.push((idx, give));
             }
         }
 
         // Fused-iteration latency: the chunk's compute and the decode
         // batch's weight/KV traffic share one pass, so the iteration pays
         // the greater of the two legs.
-        let lat_p = if chunk > 0 { oracle.prefill(1, chunk) } else { 0.0 };
+        let lat_p = if chunk > 0 { oracle.prefill(sim, 1, chunk) } else { 0.0 };
         let lat_d = if decode_b > 0 {
-            let mean_kv = running.iter().map(|r| r.kv_tokens).sum::<u64>() / decode_b;
-            oracle.decode(decode_b, mean_kv)
+            let mean_kv = running.kv_total() / decode_b;
+            oracle.decode(sim, decode_b, mean_kv)
         } else {
             0.0
         };
@@ -1515,15 +1585,15 @@ fn run_chunked(
         }
         let mut i = 0;
         while i < running.len() {
-            let idx = running[i].idx;
+            let idx = running.idx[i];
             state.generated[idx] += 1;
-            running[i].kv_tokens += 1;
+            running.kv_tokens[i] += 1;
             if state.generated[idx] >= requests[idx].output_tokens {
-                let done = running.swap_remove(i);
-                state.metrics[done.idx].finish_s = t;
+                let (done_idx, _, _) = running.swap_remove(i);
+                state.metrics[done_idx].finish_s = t;
                 state.completed += 1;
-                state.emit_done(done.idx, t);
-                kv_reserved -= state.release_on_completion(done.idx).min(kv_reserved);
+                state.emit_done(done_idx, t);
+                kv_reserved -= state.release_on_completion(done_idx).min(kv_reserved);
             } else {
                 i += 1;
             }
@@ -1532,15 +1602,13 @@ fn run_chunked(
         // Prefill completions: emit the first token, move into decode.
         let mut j = 0;
         while j < prefilling.len() {
-            let target =
-                state.requests[prefilling[j].idx].prompt_tokens + state.generated[prefilling[j].idx];
-            if prefilling[j].done >= target {
-                let pf = prefilling.remove(j);
-                let reserved = state.admit_need(pf.idx);
-                match state.finish_prefill(pf.idx, t) {
-                    Some(kv_tokens) => {
-                        running.push(Running { idx: pf.idx, kv_tokens, serial: pf.serial })
-                    }
+            let idx = prefilling.idx[j];
+            let target = state.requests[idx].prompt_tokens + state.generated[idx];
+            if prefilling.done[j] >= target {
+                let (pf_idx, _, pf_serial) = prefilling.remove(j);
+                let reserved = state.admit_need(pf_idx);
+                match state.finish_prefill(pf_idx, t) {
+                    Some(kv_tokens) => running.push(pf_idx, kv_tokens, pf_serial),
                     None => kv_reserved -= reserved.min(kv_reserved),
                 }
             } else {
@@ -1604,8 +1672,10 @@ fn run_disaggregated(
 ) -> (Vec<RequestMetrics>, RunStats, Vec<Outcome>) {
     let sys_p = sub_system(sys, prefill_devices);
     let sys_d = sub_system(sys, sys.device_count - prefill_devices);
-    let oracle_p = IterOracle::new(sim, &sys_p, model);
-    let oracle_d = IterOracle::new(sim, &sys_d, model);
+    // Sub-pool oracles key apart by device_count, so every run (and every
+    // sweep cell) at the same pool split shares the same two warm caches.
+    let oracle_p = sim.oracles.for_system(&sys_p, model);
+    let oracle_d = sim.oracles.for_system(&sys_d, model);
     let resolved = SchedulerConfig {
         mode: ServeMode::Disaggregated { prefill_devices, transfer_base_s },
         ..cfg.clone()
@@ -1621,10 +1691,13 @@ fn run_disaggregated(
         .unwrap_or_else(|| default_handoff_capacity(dec_cap, requests))
         .max(1);
 
-    let spec = cfg.faults.clone().unwrap_or_else(FaultSpec::none);
+    // Borrow the fault spec through the Arc instead of deep-cloning the
+    // whole schedule per engine run (fleets run one engine per replica).
+    let no_faults = FaultSpec::none();
+    let spec: &FaultSpec = cfg.faults.as_deref().unwrap_or(&no_faults);
     // Two pools: `prefill`/`decode` fault targets strike one of them,
     // `all` (and every MTBF crash) strikes both.
-    let mut f = Faults::new(&spec, false);
+    let mut f = Faults::new(spec, false);
     // The global event heap orders the two pool clocks: each pass
     // schedules both pools' next useful-work times and pops the earliest
     // (prefill priority wins ties, as the old clock comparison did).
@@ -1639,10 +1712,14 @@ fn run_disaggregated(
     let mut next_arrival = 0usize;
     // Decode side.
     let mut handoff: Vec<Handoff> = Vec::new();
-    let mut running: Vec<Running> = Vec::new();
+    let mut running = RunningSet::default();
     let mut kv_d = 0u64;
     let mut t_d = 0.0f64;
     let mut last_finish = 0.0f64;
+    // Scratch buffers reused across iterations.
+    let mut admitted: Vec<usize> = Vec::new();
+    let mut dropped: Vec<usize> = Vec::new();
+    let mut evicted: Vec<usize> = Vec::new();
     // Time since when the prefill pool has been blocked on a full handoff
     // queue (None: not blocked).
     let mut blocked_since: Option<f64> = None;
@@ -1735,7 +1812,9 @@ fn run_disaggregated(
             }
             drain_retries(&mut retry_q, t_p, &mut queue);
             if let Some(timeout) = f.recovery.request_timeout_s {
-                for idx in queue.drop_timed_out(t_p, timeout, requests) {
+                dropped.clear();
+                queue.drop_timed_out(t_p, timeout, requests, &mut dropped);
+                for &idx in &dropped {
                     state.lose_to_timeout(idx, t_p);
                 }
             }
@@ -1747,7 +1826,7 @@ fn run_disaggregated(
             // Admit a prefill batch under the prefill-pool KV budget (the
             // pool holds a batch's context KV only for the duration of
             // its iteration + transfer, modeled as iteration-scoped).
-            let mut admitted: Vec<usize> = Vec::new();
+            admitted.clear();
             let mut kv_p = 0u64;
             while admitted.len() < cfg.max_prefill_batch as usize
                 && (handoff.len() + admitted.len()) < handoff_cap as usize
@@ -1772,7 +1851,7 @@ fn run_disaggregated(
             let batch = admitted.len() as u64;
             let max_ctx = admitted.iter().map(|&i| state.prefill_target(i)).max().unwrap();
             let t_p0 = t_p;
-            let dt = oracle_p.prefill(batch, max_ctx) * f.latency_mult(t_p0, POOL_PREFILL);
+            let dt = oracle_p.prefill(sim, batch, max_ctx) * f.latency_mult(t_p0, POOL_PREFILL);
             t_p += dt;
             state.stats.prefill_iterations += 1;
             state.stats.prefill_busy_s += dt;
@@ -1832,16 +1911,17 @@ fn run_disaggregated(
                     rec.instant_sim("faults", "crash", tc, &[]);
                     rec.span_sim("faults", "downtime", tc, rec_end, &[]);
                 }
-                for r in running.drain(..) {
+                for j in 0..running.len() {
                     state.crash_request(
-                        r.idx,
-                        r.kv_tokens,
+                        running.idx[j],
+                        running.kv_tokens[j],
                         tc,
                         rec_end,
                         &f.recovery,
                         &mut retry_q,
                     );
                 }
+                running.clear();
                 let mut k = 0;
                 while k < handoff.len() {
                     if handoff[k].ready_at < rec_end {
@@ -1900,11 +1980,7 @@ fn run_disaggregated(
                 }
                 state.decode_from[idx] = t_d;
                 kv_d += need;
-                running.push(Running {
-                    idx,
-                    kv_tokens: state.prefill_target(idx),
-                    serial: h.serial,
-                });
+                running.push(idx, state.prefill_target(idx), h.serial);
                 // `remove(k)` slid the next entry into position k.
             }
             // Draining below the bound releases the prefill pool; it lost
@@ -1927,15 +2003,17 @@ fn run_disaggregated(
             // empty batch here would loop forever — fail loud instead.
             assert!(!running.is_empty(), "decode pool woke with nothing admittable");
             if cfg.preemption == Preemption::Evict {
-                for idx in evict_for(&mut state, &mut running, &mut kv_d, dec_cap, t_d) {
+                evicted.clear();
+                evict_for(&mut state, &mut running, &mut kv_d, dec_cap, t_d, &mut evicted);
+                for &idx in &evicted {
                     // Recompute happens back on the prefill pool.
                     resume_avail.push((idx, t_d));
                 }
             }
             let batch = running.len() as u64;
-            let mean_kv = running.iter().map(|r| r.kv_tokens).sum::<u64>() / batch;
+            let mean_kv = running.kv_total() / batch;
             let t_d0 = t_d;
-            let dt = oracle_d.decode(batch, mean_kv) * f.latency_mult(t_d0, POOL_DECODE);
+            let dt = oracle_d.decode(sim, batch, mean_kv) * f.latency_mult(t_d0, POOL_DECODE);
             t_d += dt;
             state.stats.decode_iterations += 1;
             state.stats.decode_busy_s += dt;
@@ -1954,16 +2032,16 @@ fn run_disaggregated(
             }
             let mut i = 0;
             while i < running.len() {
-                let idx = running[i].idx;
+                let idx = running.idx[i];
                 state.generated[idx] += 1;
-                running[i].kv_tokens += 1;
+                running.kv_tokens[i] += 1;
                 if state.generated[idx] >= requests[idx].output_tokens {
-                    let done = running.swap_remove(i);
-                    state.metrics[done.idx].finish_s = t_d;
+                    let (done_idx, _, _) = running.swap_remove(i);
+                    state.metrics[done_idx].finish_s = t_d;
                     state.completed += 1;
                     last_finish = last_finish.max(t_d);
-                    state.emit_done(done.idx, t_d);
-                    kv_d -= state.release_on_completion(done.idx).min(kv_d);
+                    state.emit_done(done_idx, t_d);
+                    kv_d -= state.release_on_completion(done_idx).min(kv_d);
                 } else {
                     i += 1;
                 }
@@ -2000,25 +2078,6 @@ mod tests {
         assert!((tokens as f64 - expect).abs() < 2.0, "{tokens} vs {expect:.0}");
         // One A100 cannot even hold the weights.
         assert_eq!(kv_capacity_tokens(&presets::system("a100").unwrap(), &m), 0);
-    }
-
-    #[test]
-    fn oracle_decode_affine_and_monotone_in_kv() {
-        let (sim, sys, model) = small_setup();
-        let oracle = IterOracle::new(&sim, &sys, &model);
-        let l1 = oracle.decode(8, 256);
-        let l2 = oracle.decode(8, 1024);
-        let l3 = oracle.decode(8, 4096);
-        assert!(l1 > 0.0);
-        assert!(l2 >= l1 && l3 >= l2, "decode not monotone: {l1} {l2} {l3}");
-        // Affine: midpoint interpolates exactly.
-        let mid = oracle.decode(8, (256 + 4096) / 2);
-        let lin = l1 + (l3 - l1) * ((256 + 4096) / 2 - 256) as f64 / (4096 - 256) as f64;
-        assert!((mid - lin).abs() < 1e-12);
-        // Bucketing: batches 5..8 share a fit.
-        assert_eq!(oracle.decode(5, 1024), oracle.decode(8, 1024));
-        // Quantization keeps the simulated shape set tiny.
-        assert!(oracle.cached_points() >= 2 && oracle.cached_points() < 8);
     }
 
     #[test]
@@ -2345,7 +2404,7 @@ mod tests {
         let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
         let mut spec = FaultSpec::none();
         spec.events.push(event(FaultKind::Crash, 1.0, 5.0));
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let (_, stats) = simulate(&sim, &sys, &model, &cfg, &[]);
         assert_eq!(stats.availability, 1.0);
         assert!(stats.availability.is_finite());
@@ -2364,7 +2423,7 @@ mod tests {
         spec.events.push(event(FaultKind::Crash, 0.05, 2.0));
         spec.recovery.max_retries = 0;
         spec.recovery.request_timeout_s = Some(0.5);
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let reqs: Vec<Request> = (0..6u64)
             .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 64, output_tokens: 400 })
             .collect();
@@ -2386,7 +2445,7 @@ mod tests {
             let mut base = cfg_for(&sys, &model, Policy::Fcfs);
             base.mode = mode;
             let mut zero = base.clone();
-            zero.faults = Some(FaultSpec::none());
+            zero.faults = Some(std::sync::Arc::new(FaultSpec::none()));
             let reqs = generate(&WorkloadSpec::poisson(15.0, 60, 11));
             let (am, astats) = simulate(&sim, &sys, &model, &base, &reqs);
             let (bm, bstats) = simulate(&sim, &sys, &model, &zero, &reqs);
@@ -2413,7 +2472,7 @@ mod tests {
         let mut spec = FaultSpec::none();
         spec.events.push(event(FaultKind::Crash, 0.05, 2.0));
         spec.recovery.max_retries = 0;
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         // Everything in flight at t=0.05 with long decodes: the crash hits.
         let reqs: Vec<Request> = (0..8u64)
             .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 64, output_tokens: 400 })
@@ -2442,7 +2501,7 @@ mod tests {
         spec.events.push(event(FaultKind::Crash, 0.05, 0.5));
         spec.recovery.max_retries = 3;
         spec.recovery.retry_backoff_s = 0.1;
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let reqs: Vec<Request> = (0..8u64)
             .map(|i| Request { id: i, arrival_s: 0.0, prompt_tokens: 64, output_tokens: 64 })
             .collect();
@@ -2463,7 +2522,7 @@ mod tests {
         let mut cfg = cfg_for(&sys, &model, Policy::Fcfs);
         let mut spec = FaultSpec::none();
         spec.events.push(event(FaultKind::Drain, 0.0, 1.0));
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let reqs = generate(&WorkloadSpec::poisson(30.0, 24, 7));
         let (metrics, stats) = simulate(&sim, &sys, &model, &cfg, &reqs);
         assert_eq!(metrics.len(), reqs.len());
@@ -2491,7 +2550,7 @@ mod tests {
         let mut spec = FaultSpec::none();
         spec.events
             .push(event(FaultKind::Slowdown { multiplier: 4.0 }, 0.0, 1e9));
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let (metrics, slow) = simulate(&sim, &sys, &model, &cfg, &reqs);
         assert_eq!(metrics.len(), reqs.len());
         assert!(
@@ -2516,7 +2575,7 @@ mod tests {
         let mut spec = FaultSpec::none();
         spec.events
             .push(event(FaultKind::LinkDegrade { factor: 8.0 }, 0.0, 1e9));
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let (metrics, degraded) = simulate(&sim, &sys, &model, &cfg, &reqs);
         assert_eq!(metrics.len(), reqs.len());
         assert!(
@@ -2539,7 +2598,7 @@ mod tests {
         spec.events.push(event(FaultKind::Drain, 0.0, 5.0));
         spec.recovery.shed_queue_depth = Some(4);
         spec.recovery.request_timeout_s = Some(2.0);
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let reqs: Vec<Request> = (0..30u64)
             .map(|i| Request {
                 id: i,
@@ -2569,7 +2628,7 @@ mod tests {
             // struck several times within its few-second makespan.
             let mut spec = FaultSpec::mtbf(33, 0.5, 0.2);
             spec.recovery.max_retries = 2;
-            cfg.faults = Some(spec);
+            cfg.faults = Some(std::sync::Arc::new(spec));
             let reqs = generate(&WorkloadSpec::poisson(15.0, 60, 13));
             let (am, astats) = simulate(&sim, &sys, &model, &cfg, &reqs);
             let (bm, bstats) = simulate(&sim, &sys, &model, &cfg, &reqs);
@@ -2605,7 +2664,7 @@ mod tests {
         spec.events
             .push(event(FaultKind::Slowdown { multiplier: 1.0 }, 0.0, 1e9));
         spec.recovery.degraded_chunk_tokens = Some(64);
-        cfg.faults = Some(spec);
+        cfg.faults = Some(std::sync::Arc::new(spec));
         let (metrics, deg) = simulate(&sim, &sys, &model, &cfg, &reqs);
         assert_eq!(metrics.len(), reqs.len());
         assert!(

@@ -22,6 +22,7 @@ use crate::cost::{device_cost, CostParams};
 use crate::graph::inference::Simulator;
 use crate::graph::ModelConfig;
 use crate::hardware::presets;
+use std::sync::Arc;
 
 /// Hardware amortization window for $/token: a 3-year depreciation of the
 /// die + memory cost (hosting, power, and interconnect excluded, as the
@@ -144,15 +145,42 @@ pub struct SweepRow {
     pub requests_lost: u64,
 }
 
+/// The sweep's fault axis, parsed once up front: the implicit fault-free
+/// point, then one seeded MTBF crash process per requested value. Every
+/// (system, mode, rate) cell shares the same `Arc`'d spec instead of
+/// rebuilding and deep-cloning it per cell.
+fn fault_axis(cfg: &SweepConfig) -> Result<Vec<(Option<f64>, Option<Arc<FaultSpec>>)>, String> {
+    let mut points: Vec<(Option<f64>, Option<Arc<FaultSpec>>)> = vec![(None, None)];
+    for &h in &cfg.fault_mtbf_hours {
+        if !(h > 0.0) || !h.is_finite() {
+            return Err(format!("sweep fault MTBF must be finite and > 0 hours, got {h}"));
+        }
+        let spec = FaultSpec::mtbf(cfg.seed, h * 3600.0, cfg.fault_mttr_s);
+        points.push((Some(h), Some(Arc::new(spec))));
+    }
+    Ok(points)
+}
+
+/// One cell's scheduler configuration: the (system, mode) base with the
+/// cell's shared fault spec swapped in — the only per-cell divergence,
+/// made explicit here instead of scattered mutation of the base config.
+fn cell_config(base: &SchedulerConfig, faults: Option<&Arc<FaultSpec>>) -> SchedulerConfig {
+    SchedulerConfig { faults: faults.cloned(), ..base.clone() }
+}
+
 /// Run the sweep for one model across all (system, mode, rate) points. The
-/// `sim`'s mapper caches persist across points (shapes recur), which is
-/// what makes a full sweep take seconds.
+/// `sim`'s mapper caches *and* its shared latency-oracle cache persist
+/// across points (shapes and hardware recur), which is what makes a full
+/// sweep take seconds: every cell over unchanged hardware+model replays
+/// the same warm oracle instead of re-simulating its buckets.
 pub fn run_sweep(
     sim: &Simulator,
     model: &ModelConfig,
     cfg: &SweepConfig,
 ) -> Result<Vec<SweepRow>, String> {
     let cost_params = CostParams::default();
+    // The fault axis is cell-independent — parse and validate it once.
+    let fault_points = fault_axis(cfg)?;
     let mut rows = Vec::new();
     for name in &cfg.systems {
         let sys = presets::system(name)
@@ -163,19 +191,15 @@ pub fn run_sweep(
             let Ok(resolved) = mode.resolved(sys.device_count) else {
                 continue; // e.g. disaggregation on a single device
             };
-            let mut sched = SchedulerConfig::for_system(&sys, model, cfg.policy);
-            sched.mode = resolved;
-            sched.preemption = cfg.preemption;
-            if sched.kv_capacity_tokens == 0 {
+            let mut base = SchedulerConfig::for_system(&sys, model, cfg.policy);
+            base.mode = resolved;
+            base.preemption = cfg.preemption;
+            if base.kv_capacity_tokens == 0 {
                 return Err(format!(
                     "model `{}` does not fit `{name}` (parameters exceed memory capacity)",
                     model.name
                 ));
             }
-            // The fault axis: the implicit fault-free point, then one
-            // seeded MTBF crash process per requested value.
-            let mut fault_points: Vec<Option<f64>> = vec![None];
-            fault_points.extend(cfg.fault_mtbf_hours.iter().map(|&h| Some(h)));
             for &replicas in &cfg.fleet_sizes {
                 if replicas == 0 {
                     return Err("sweep fleet_sizes entries must be ≥ 1".to_string());
@@ -187,18 +211,9 @@ pub fn run_sweep(
                     // Same seed across systems, modes, and rates: identical
                     // request lengths, only the arrival spacing scales.
                     let requests = generate(&WorkloadSpec::poisson(rate, cfg.requests, cfg.seed));
-                    for &mtbf_hours in &fault_points {
-                        sched.faults = match mtbf_hours {
-                            None => None,
-                            Some(h) => {
-                                if !(h > 0.0) || !h.is_finite() {
-                                    return Err(format!(
-                                        "sweep fault MTBF must be finite and > 0 hours, got {h}"
-                                    ));
-                                }
-                                Some(FaultSpec::mtbf(cfg.seed, h * 3600.0, cfg.fault_mttr_s))
-                            }
-                        };
+                    for (mtbf_hours, spec) in &fault_points {
+                        let mtbf_hours = *mtbf_hours;
+                        let sched = cell_config(&base, spec.as_ref());
                         validate_fleet(&sched, sys.device_count, &fleet, &requests)?;
                         let (report, _) =
                             serve_fleet(sim, &sys, model, &sched, &fleet, &requests, &cfg.slo);

@@ -347,6 +347,52 @@ fn deterministic_replay_is_byte_identical() {
     }
 }
 
+/// The raw-speed pass's headline number, locked by counters instead of a
+/// stopwatch: a 4-replica sweep over two scheduler modes (2 cells × 4
+/// engines = 8 engine runs on identical hardware+model) must resolve to
+/// ONE shared oracle, so its total analytical-simulator calls stay at
+/// ≤ 1/4 of the per-engine baseline where sharing is disabled and every
+/// engine re-simulates its own buckets. The counters are deterministic
+/// (pure functions of the request mix and pow2 bucketing), so this
+/// asserts exact reuse, not a flaky timing ratio.
+#[test]
+fn shared_oracle_cuts_sweep_simulator_calls_at_least_4x() {
+    let model = ModelConfig::gpt_small();
+    let mut cfg = serve::sweep::SweepConfig::paper_default(40, Slo::relaxed());
+    cfg.systems = vec!["a100x4".into()];
+    cfg.modes = vec![ServeMode::Monolithic, ServeMode::Chunked { chunk_tokens: 1024 }];
+    cfg.rates = vec![20.0];
+    cfg.fleet_sizes = vec![4];
+
+    let shared_sim = Simulator::new();
+    let rows = serve::sweep::run_sweep(&shared_sim, &model, &cfg).unwrap();
+    assert_eq!(rows.len(), 2, "expected exactly the 2 (mode) cells");
+    let shared = shared_sim.oracles.snapshot();
+
+    let private_sim = Simulator::new();
+    private_sim.oracles.set_shared(false);
+    let private_rows = serve::sweep::run_sweep(&private_sim, &model, &cfg).unwrap();
+    let private = private_sim.oracles.snapshot();
+
+    // Correctness first: sharing must not change a byte of any cell.
+    for (a, b) in rows.iter().zip(&private_rows) {
+        assert_eq!(
+            a.summary.to_json().to_string_pretty(),
+            b.summary.to_json().to_string_pretty(),
+            "shared-oracle sweep diverged from private-oracle sweep"
+        );
+    }
+    // All 8 engine runs share one (hardware, model) fingerprint.
+    assert_eq!(shared_sim.oracles.len(), 1, "cells must resolve to one shared oracle");
+    assert!(shared.hits > 0, "cross-cell reuse produced no bucket hits");
+    assert!(
+        shared.sim_calls * 4 <= private.sim_calls,
+        "shared oracle made {} simulator calls; per-engine baseline {} is less than 4x that",
+        shared.sim_calls,
+        private.sim_calls
+    );
+}
+
 #[test]
 fn trace_replay_drives_the_scheduler() {
     let sim = Simulator::new();

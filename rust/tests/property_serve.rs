@@ -17,7 +17,11 @@
 //! 7. multi-replica fleets conserve requests
 //!    (`completed + lost + shed == submitted`) under every balancer and
 //!    replica count, and every replica's KV peak respects the per-engine
-//!    budget.
+//!    budget;
+//! 8. the shared latency-oracle cache is invisible to results: a fleet
+//!    run whose replicas share one warm `SharedOracle` is byte-identical
+//!    to the same run with sharing disabled (every engine gets a private
+//!    cold oracle), in every mode × replica count × faults combination.
 //!
 //! One shared `Simulator` keeps mapper searches cached across trials, so
 //! hundreds of random schedules cost oracle-cache lookups, not searches.
@@ -230,7 +234,7 @@ fn fault_accounting_conserves_requests_under_any_spec() {
     forall("completed + lost + shed == submitted", 40, |g| {
         let trace = gen_trace(g, 24);
         let mut cfg = gen_cfg(g, sys.device_count, &trace);
-        cfg.faults = Some(gen_fault_spec(g));
+        cfg.faults = Some(std::sync::Arc::new(gen_fault_spec(g)));
         let (pre_cap, dec_cap) = cfg.pool_budgets(sys.device_count);
         let (metrics, stats) = scheduler::simulate(&sim, &sys, &model, &cfg, &trace);
         let submitted = trace.len() as u64;
@@ -279,7 +283,7 @@ fn single_replica_fleet_reproduces_serve_once_byte_for_byte() {
         let trace = gen_trace(g, 16);
         let mut cfg = gen_cfg(g, sys.device_count, &trace);
         if g.u64(0, 1) == 0 {
-            cfg.faults = Some(gen_fault_spec(g));
+            cfg.faults = Some(std::sync::Arc::new(gen_fault_spec(g)));
         }
         let slo = serve::Slo::relaxed();
         let (base, _) = serve::serve_once(&sim, &sys, &model, &cfg, &trace, &slo);
@@ -314,7 +318,7 @@ fn fleet_conserves_requests_and_respects_per_replica_kv() {
         let trace = gen_trace(g, 24);
         let mut cfg = gen_cfg(g, sys.device_count, &trace);
         if g.u64(0, 1) == 0 {
-            cfg.faults = Some(gen_fault_spec(g));
+            cfg.faults = Some(std::sync::Arc::new(gen_fault_spec(g)));
         }
         let fleet = serve::FleetConfig {
             replicas: g.u64(2, 4),
@@ -364,7 +368,7 @@ fn inert_fault_spec_reproduces_the_no_spec_report_byte_for_byte() {
         let trace = gen_trace(g, 16);
         let cfg = gen_cfg(g, sys.device_count, &trace);
         let mut faulted = cfg.clone();
-        faulted.faults = Some(FaultSpec::none());
+        faulted.faults = Some(std::sync::Arc::new(FaultSpec::none()));
         let slo = serve::Slo::relaxed();
         let (base, _) = serve::serve_once(&sim, &sys, &model, &cfg, &trace, &slo);
         let (inert, _) = serve::serve_once(&sim, &sys, &model, &faulted, &trace, &slo);
@@ -378,6 +382,57 @@ fn inert_fault_spec_reproduces_the_no_spec_report_byte_for_byte() {
                 a.len()
             ),
             a == b && inert.stats.faults_injected == 0 && inert.stats.availability == 1.0,
+        )
+    });
+}
+
+#[test]
+fn shared_oracle_fleet_reproduces_private_oracle_run_byte_for_byte() {
+    // The raw-speed pass's correctness lock: sharing one warm oracle
+    // across fleet replicas must not change a single byte of the report
+    // relative to every engine simulating with its own cold oracle.
+    // Oracle values are pure functions of (hardware, model, bucket), so
+    // any divergence here means the cache leaked state between keys.
+    let model = ModelConfig::gpt_small();
+    let sys = presets::system("a100x4").unwrap();
+    forall("shared oracle ⇒ byte-identical fleet report", 12, |g| {
+        let trace = gen_trace(g, 16);
+        let mut cfg = gen_cfg(g, sys.device_count, &trace);
+        if g.u64(0, 1) == 0 {
+            cfg.faults = Some(std::sync::Arc::new(gen_fault_spec(g)));
+        }
+        let fleet = serve::FleetConfig {
+            replicas: g.u64(2, 4),
+            balancer: serve::Balancer::RoundRobin,
+        };
+        let slo = serve::Slo::relaxed();
+        // Fresh simulators on both sides so neither run sees warm state
+        // the other did not; only the sharing policy differs.
+        let shared_sim = Simulator::new();
+        let (shared, _) =
+            serve::serve_fleet(&shared_sim, &sys, &model, &cfg, &fleet, &trace, &slo);
+        let private_sim = Simulator::new();
+        private_sim.oracles.set_shared(false);
+        let (private_, _) =
+            serve::serve_fleet(&private_sim, &sys, &model, &cfg, &fleet, &trace, &slo);
+        let (a, b) = (shared.to_json().to_string_pretty(), private_.to_json().to_string_pretty());
+        // With sharing on, replicas hit the same warm buckets; with it
+        // off, every engine re-simulates its own — so the private run can
+        // only ever cost more simulator calls, never fewer.
+        let calls_ok = private_sim.oracles.snapshot().sim_calls
+            >= shared_sim.oracles.snapshot().sim_calls;
+        (
+            format!(
+                "mode {:?} x{} faults {}: shared report {} private report \
+                 (sim_calls shared {} vs private {})",
+                cfg.mode,
+                fleet.replicas,
+                cfg.faults.is_some(),
+                if a == b { "==" } else { "!=" },
+                shared_sim.oracles.snapshot().sim_calls,
+                private_sim.oracles.snapshot().sim_calls,
+            ),
+            a == b && calls_ok,
         )
     });
 }
